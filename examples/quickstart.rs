@@ -1,0 +1,71 @@
+//! Quickstart: load the tiny preset, serve a small trace offline with
+//! vanilla routing and with XShare's batch-aware selection (Algorithm 2),
+//! and compare activated experts / simulated OTPS / output fidelity.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use xshare::config::ServeConfig;
+use xshare::coordinator::{compare, Request, Scheduler};
+use xshare::gen::{TraceDomain, TraceGenerator};
+use xshare::model::MoeModel;
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+use xshare::selection::PolicyKind;
+
+fn main() -> Result<()> {
+    let preset = "tiny";
+    let manifest = Manifest::load(&artifacts_root().join(preset))?;
+    let vocab = manifest.model.vocab;
+    let mut model = MoeModel::new(Engine::load(manifest)?)?;
+    println!("loaded preset '{preset}' ({} experts, top-{})",
+        model.dims().n_experts, model.dims().top_k);
+
+    // A small trace over the synthetic evaluation domains.
+    let trace = TraceGenerator::new(vocab, 42).generate(&TraceDomain::standard_suite(), 8);
+    let requests: Vec<Request> = trace
+        .into_iter()
+        .map(|t| {
+            let mut r = Request::new(t.id, t.prompt, 8);
+            r.domain = t.domain;
+            r
+        })
+        .collect();
+
+    let mut cfg = ServeConfig {
+        preset: preset.into(),
+        batch_size: 4,
+        ..Default::default()
+    };
+
+    // Baseline: vanilla top-k routing.
+    let base = Scheduler::new(&mut model, cfg.clone())?.run(requests.clone())?;
+    println!(
+        "vanilla      : otps={:8.1}  activated/layer={:5.2}  tokens={}",
+        base.metrics.otps(),
+        base.metrics.mean_activated(),
+        base.metrics.tokens_out
+    );
+
+    // XShare Algorithm 2: warm-up top-1 per token + greedy budget 2.
+    cfg.policy = PolicyKind::parse("batch:2:1").unwrap();
+    let xs = Scheduler::new(&mut model, cfg)?.run(requests)?;
+    let fidelity = compare(&base.outputs, &xs.outputs);
+    println!(
+        "batch:2:1    : otps={:8.1}  activated/layer={:5.2}  tokens={}",
+        xs.metrics.otps(),
+        xs.metrics.mean_activated(),
+        xs.metrics.tokens_out
+    );
+    println!(
+        "fidelity     : token match {:.1}%  ({} requests compared)",
+        fidelity.token_match * 100.0,
+        fidelity.n_requests
+    );
+    println!(
+        "expert saving: {:.1}% fewer activated experts, {:+.1}% OTPS",
+        (1.0 - xs.metrics.mean_activated() / base.metrics.mean_activated()) * 100.0,
+        (xs.metrics.otps() / base.metrics.otps() - 1.0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,320 @@
+"""AOT driver: lower every L2 program to HLO text + dump weights + manifest.
+
+Run once per preset (``make artifacts``); the rust binary is self-contained
+afterwards. Interchange is HLO **text**, not ``.serialize()``: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per preset, under ``artifacts/<preset>/``:
+
+  manifest.json        model geometry, program signatures (ordered param
+                       names + shapes + dtypes), weight inventory
+  <program>.hlo.txt    embed, attn_router, moe_layer, lm_head[, draft_step]
+  weights/<name>.bin   raw little-endian f32, row-major
+
+Usage:  python -m compile.aot --preset all --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.configs import PRESETS, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Weight generation (seeded, deterministic per preset)
+# ---------------------------------------------------------------------------
+
+
+def make_weights(cfg: ModelConfig) -> dict:
+    """Seeded random weights. Scales chosen so the residual stream stays
+    O(1) through n_layers and router logits have std ~2-3 (peaked-but-not-
+    degenerate softmax, matching the gating-score profiles of trained MoEs).
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+
+    def nxt():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    d, f, N, V = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.vocab
+    w = {}
+    w["emb"] = jax.random.normal(nxt(), (V, d)) * 1.0
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        w[p + "ln1"] = jnp.ones((d,))
+        w[p + "ln2"] = jnp.ones((d,))
+        for name in ("wq", "wk", "wv"):
+            w[p + name] = jax.random.normal(nxt(), (d, d)) * (d ** -0.5)
+        w[p + "wo"] = jax.random.normal(nxt(), (d, d)) * 0.5 * (d ** -0.5)
+        w[p + "wg"] = jax.random.normal(nxt(), (N, d)) * (2.5 * d ** -0.5)
+        w[p + "w1"] = jax.random.normal(nxt(), (N, d, f)) * (d ** -0.5)
+        w[p + "w2"] = jax.random.normal(nxt(), (N, f, d)) * 0.5 * (f ** -0.5)
+        if cfg.n_shared > 0:
+            w[p + "ws1"] = jax.random.normal(nxt(), (d, f)) * (d ** -0.5)
+            w[p + "ws2"] = jax.random.normal(nxt(), (f, d)) * 0.5 * (f ** -0.5)
+        else:
+            w[p + "ws1"] = jnp.zeros((d, f))
+            w[p + "ws2"] = jnp.zeros((f, d))
+    w["lnf"] = jnp.ones((d,))
+    w["unembed"] = jax.random.normal(nxt(), (d, V)) * (d ** -0.5)
+
+    if cfg.draft_layers > 0:
+        Ld, dd, fd = cfg.draft_layers, cfg.draft_d_model, cfg.draft_d_ff
+        w["draft.emb"] = jax.random.normal(nxt(), (V, dd)) * 1.0
+        w["draft.ln1s"] = jnp.ones((Ld, dd))
+        w["draft.ln2s"] = jnp.ones((Ld, dd))
+        for name in ("wqs", "wks", "wvs"):
+            w["draft." + name] = jax.random.normal(nxt(), (Ld, dd, dd)) * (dd ** -0.5)
+        w["draft.wos"] = jax.random.normal(nxt(), (Ld, dd, dd)) * 0.5 * (dd ** -0.5)
+        w["draft.wf1s"] = jax.random.normal(nxt(), (Ld, dd, fd)) * (dd ** -0.5)
+        w["draft.wf2s"] = jax.random.normal(nxt(), (Ld, fd, dd)) * 0.5 * (fd ** -0.5)
+        w["draft.lnf"] = jnp.ones((dd,))
+        w["draft.unembed"] = jax.random.normal(nxt(), (dd, V)) * (dd ** -0.5)
+    return {k: np.asarray(v, np.float32) for k, v in w.items()}
+
+
+# ---------------------------------------------------------------------------
+# Program signatures
+# ---------------------------------------------------------------------------
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def program_signatures(cfg: ModelConfig) -> dict:
+    """Ordered (name, shape, dtype) per program. The manifest serializes this
+    so the rust runtime feeds buffers in exactly this order."""
+    B, d, N, f = cfg.max_batch, cfg.d_model, cfg.n_experts, cfg.d_ff
+    H, S, hd, V = cfg.n_heads, cfg.max_seq, cfg.head_dim, cfg.vocab
+    sigs = {
+        "embed": {
+            "fn": M.embed,
+            "params": [
+                ("tokens", (B,), "i32"),
+                ("emb", (V, d), "f32"),
+            ],
+            "outputs": [("hidden", (B, d), "f32")],
+        },
+        "attn_router": {
+            "fn": M.attn_router,
+            "params": [
+                ("hidden", (B, d), "f32"),
+                ("pos", (B,), "i32"),
+                ("active", (B,), "f32"),
+                ("k_cache", (B, H, S, hd), "f32"),
+                ("v_cache", (B, H, S, hd), "f32"),
+                ("ln1", (d,), "f32"),
+                ("wq", (d, d), "f32"),
+                ("wk", (d, d), "f32"),
+                ("wv", (d, d), "f32"),
+                ("wo", (d, d), "f32"),
+                ("ln2", (d,), "f32"),
+                ("wg", (N, d), "f32"),
+            ],
+            "outputs": [
+                ("hidden2", (B, d), "f32"),
+                ("logits", (B, N), "f32"),
+                ("probs", (B, N), "f32"),
+                ("colsum", (N,), "f32"),
+                ("k_cache", (B, H, S, hd), "f32"),
+                ("v_cache", (B, H, S, hd), "f32"),
+            ],
+        },
+        "moe_layer": {
+            "fn": M.moe_layer,
+            "params": [
+                ("hidden2", (B, d), "f32"),
+                ("gates", (B, N), "f32"),
+                ("ln2", (d,), "f32"),
+                ("w1", (N, d, f), "f32"),
+                ("w2", (N, f, d), "f32"),
+                ("ws1", (d, f), "f32"),
+                ("ws2", (f, d), "f32"),
+                ("shared_flag", (1,), "f32"),
+            ],
+            "outputs": [("hidden3", (B, d), "f32")],
+        },
+        "lm_head": {
+            "fn": M.lm_head,
+            "params": [
+                ("hidden", (B, d), "f32"),
+                ("lnf", (d,), "f32"),
+                ("unembed", (d, V), "f32"),
+            ],
+            "outputs": [("logits", (B, V), "f32")],
+        },
+    }
+    if cfg.draft_layers > 0:
+        Ld, dd, fd = cfg.draft_layers, cfg.draft_d_model, cfg.draft_d_ff
+        Hd, hdd = cfg.draft_n_heads, cfg.draft_head_dim
+        sigs["draft_step"] = {
+            "fn": M.draft_step,
+            "params": [
+                ("tokens", (B,), "i32"),
+                ("pos", (B,), "i32"),
+                ("k_cache", (Ld, B, Hd, S, hdd), "f32"),
+                ("v_cache", (Ld, B, Hd, S, hdd), "f32"),
+                ("emb", (V, dd), "f32"),
+                ("ln1s", (Ld, dd), "f32"),
+                ("wqs", (Ld, dd, dd), "f32"),
+                ("wks", (Ld, dd, dd), "f32"),
+                ("wvs", (Ld, dd, dd), "f32"),
+                ("wos", (Ld, dd, dd), "f32"),
+                ("ln2s", (Ld, dd), "f32"),
+                ("wf1s", (Ld, dd, fd), "f32"),
+                ("wf2s", (Ld, fd, dd), "f32"),
+                ("lnf", (dd,), "f32"),
+                ("unembed", (dd, V), "f32"),
+            ],
+            "outputs": [
+                ("logits", (B, V), "f32"),
+                ("k_cache", (Ld, B, Hd, S, hdd), "f32"),
+                ("v_cache", (Ld, B, Hd, S, hdd), "f32"),
+            ],
+        }
+    return sigs
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def lower_program(sig) -> str:
+    specs = [_spec(shape, _DTYPES[dt]) for _, shape, dt in sig["params"]]
+    lowered = jax.jit(sig["fn"]).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def make_selftest_inputs(cfg: ModelConfig, sig, rng: np.random.RandomState):
+    """Seeded runtime inputs for a program's selftest vector."""
+    vals = []
+    for name, shape, dt in sig["params"]:
+        if dt == "i32":
+            hi = cfg.vocab if name == "tokens" else max(cfg.max_seq - 1, 1)
+            vals.append(rng.randint(0, hi, size=shape).astype(np.int32))
+        elif name == "shared_flag":
+            vals.append(np.asarray([float(cfg.n_shared > 0)], np.float32))
+        elif name == "active":
+            v = np.ones(shape, np.float32)
+            v[shape[0] // 2 :] = 0.0
+            vals.append(v)
+        else:
+            vals.append(rng.standard_normal(shape).astype(np.float32) * 0.5)
+    return vals
+
+
+def write_selftests(cfg: ModelConfig, sigs, out_dir: str) -> dict:
+    """Run every program in python on seeded inputs; dump inputs and outputs
+    as raw .bin. The rust integration suite replays these through the PJRT
+    runtime and asserts allclose — the cross-language numerics anchor."""
+    st_dir = os.path.join(out_dir, "selftest")
+    os.makedirs(st_dir, exist_ok=True)
+    rng = np.random.RandomState(cfg.seed + 99)
+    meta = {}
+    for name, sig in sigs.items():
+        inputs = make_selftest_inputs(cfg, sig, rng)
+        outputs = jax.jit(sig["fn"])(*[jnp.asarray(v) for v in inputs])
+        if not isinstance(outputs, (tuple, list)):
+            outputs = (outputs,)
+        entry = {"inputs": [], "outputs": []}
+        for i, v in enumerate(inputs):
+            fname = os.path.join("selftest", f"{name}.in{i}.bin")
+            np.asarray(v).tofile(os.path.join(out_dir, fname))
+            entry["inputs"].append(fname)
+        for i, v in enumerate(outputs):
+            fname = os.path.join("selftest", f"{name}.out{i}.bin")
+            np.asarray(v, np.float32).tofile(os.path.join(out_dir, fname))
+            entry["outputs"].append(fname)
+        meta[name] = entry
+    return meta
+
+
+def build_preset(cfg: ModelConfig, out_root: str, skip_weights=False) -> dict:
+    out_dir = os.path.join(out_root, cfg.name)
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+
+    sigs = program_signatures(cfg)
+    programs = {}
+    for name, sig in sigs.items():
+        text = lower_program(sig)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        programs[name] = {
+            "file": fname,
+            "params": [
+                {"name": n, "shape": list(s), "dtype": dt}
+                for n, s, dt in sig["params"]
+            ],
+            "outputs": [
+                {"name": n, "shape": list(s), "dtype": dt}
+                for n, s, dt in sig["outputs"]
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"  [{cfg.name}] {name}: {len(text)} chars")
+
+    weights_meta = []
+    if not skip_weights:
+        weights = make_weights(cfg)
+        for name, arr in sorted(weights.items()):
+            fname = os.path.join("weights", name + ".bin")
+            arr.astype("<f4").tofile(os.path.join(out_dir, fname))
+            weights_meta.append(
+                {"name": name, "shape": list(arr.shape), "file": fname, "dtype": "f32"}
+            )
+
+    selftests = write_selftests(cfg, sigs, out_dir)
+
+    manifest = {
+        "format_version": 1,
+        "model": cfg.to_dict(),
+        "programs": programs,
+        "weights": weights_meta,
+        "selftests": selftests,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="all", help="preset name or 'all'")
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    names = list(PRESETS) if args.preset == "all" else [args.preset]
+    for name in names:
+        print(f"building preset {name}")
+        build_preset(PRESETS[name], args.out_dir)
+    print("artifacts done")
+
+
+if __name__ == "__main__":
+    main()

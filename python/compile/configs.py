@@ -1,0 +1,120 @@
+"""Model presets shared between the AOT pipeline and the rust coordinator.
+
+The rust side never imports this module: `aot.py` serializes everything it
+needs into ``artifacts/<preset>/manifest.json``.
+
+Presets mirror the geometry of the paper's evaluation models:
+
+* ``gptoss-mini``  — GPT-OSS-120B geometry (N=128 routed experts, top-4,
+  no shared expert) scaled to laptop size.
+* ``dsr1-mini``    — DeepSeek-R1 geometry (N=256 routed experts, top-8,
+  one shared expert) scaled down; used for the expert-parallel (Table 2)
+  experiments.
+* ``tiny``         — a minimal preset for fast unit tests of the whole
+  AOT → rust round trip.
+
+The selection algorithms only consume gate-score *distributions*, so keeping
+(N, k, shared-expert) geometry identical to the paper's models preserves the
+batch-activation and selection behaviour (DESIGN.md §4).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    # transformer geometry
+    d_model: int
+    n_heads: int
+    d_ff: int            # per-expert FFN hidden size
+    n_layers: int
+    vocab: int
+    max_seq: int         # KV-cache capacity S
+    # MoE geometry
+    n_experts: int       # N routed experts
+    top_k: int           # k
+    n_shared: int        # shared experts (DeepSeek-style), 0 or 1
+    # serving geometry
+    max_batch: int       # B_max baked into the compiled programs
+    # draft model (dense) for speculative decoding; 0 layers = no draft
+    draft_layers: int = 0
+    draft_d_model: int = 0
+    draft_n_heads: int = 0
+    draft_d_ff: int = 0
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def draft_head_dim(self) -> int:
+        if self.draft_layers == 0:
+            return 0
+        assert self.draft_d_model % self.draft_n_heads == 0
+        return self.draft_d_model // self.draft_n_heads
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["draft_head_dim"] = self.draft_head_dim
+        return d
+
+
+GPTOSS_MINI = ModelConfig(
+    name="gptoss-mini",
+    d_model=64,
+    n_heads=4,
+    d_ff=128,
+    n_layers=4,
+    vocab=512,
+    max_seq=160,
+    n_experts=128,
+    top_k=4,
+    n_shared=0,
+    max_batch=16,
+    draft_layers=2,
+    draft_d_model=32,
+    draft_n_heads=2,
+    draft_d_ff=64,
+    seed=1234,
+)
+
+DSR1_MINI = ModelConfig(
+    name="dsr1-mini",
+    d_model=32,
+    n_heads=2,
+    d_ff=64,
+    n_layers=2,
+    vocab=256,
+    max_seq=96,
+    n_experts=256,
+    top_k=8,
+    n_shared=1,
+    max_batch=16,
+    draft_layers=0,
+    seed=4321,
+)
+
+TINY = ModelConfig(
+    name="tiny",
+    d_model=16,
+    n_heads=2,
+    d_ff=32,
+    n_layers=2,
+    vocab=64,
+    max_seq=32,
+    n_experts=8,
+    top_k=2,
+    n_shared=1,
+    max_batch=4,
+    draft_layers=1,
+    draft_d_model=16,
+    draft_n_heads=2,
+    draft_d_ff=32,
+    seed=7,
+)
+
+PRESETS = {c.name: c for c in (GPTOSS_MINI, DSR1_MINI, TINY)}

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: single-token decode attention over a padded KV cache.
+
+One grid step per attention head: the head's K/V cache slab ([B, S, hd]) is
+VMEM-resident while its B queries attend over it. Padding beyond each row's
+current position ``pos[b]`` is masked to -1e30 before the softmax.
+
+VMEM per step at the largest preset (gptoss-mini, B=32, S=160, hd=16):
+K+V slabs 2×32×160×16×4B = 640 KiB plus [B, S] scores — comfortably inside
+the ~16 MiB budget (see DESIGN.md §8). interpret=True as everywhere.
+
+``pos`` arrives as f32 (compare-only use) because mixed-dtype scalar blocks
+complicate BlockSpecs under interpret mode; the model layer casts.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+    q = q_ref[:, 0, :]            # [B, hd]
+    k = k_ref[:, 0, :, :]         # [B, S, hd]
+    v = v_ref[:, 0, :, :]         # [B, S, hd]
+    pos = pos_ref[...]            # [B, 1] f32
+    hd = q.shape[-1]
+    scale = jax.lax.rsqrt(jnp.asarray(hd, q.dtype))
+    scores = jnp.einsum("bd,bsd->bs", q, k) * scale          # [B, S]
+    s_idx = jax.lax.broadcasted_iota(jnp.float32, scores.shape, 1)
+    scores = jnp.where(s_idx <= pos, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[:, 0, :] = jnp.einsum("bs,bsd->bd", attn, v)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Pallas decode attention. Shapes as in ``ref.decode_attention_ref``
+    (``pos`` is i32 [B]; cast internally)."""
+    B, H, hd = q.shape
+    S = k_cache.shape[2]
+    posf = pos.astype(jnp.float32)
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((B, 1, hd), lambda h: (0, h, 0)),
+            pl.BlockSpec((B, 1, S, hd), lambda h: (0, h, 0, 0)),
+            pl.BlockSpec((B, 1, S, hd), lambda h: (0, h, 0, 0)),
+            pl.BlockSpec((B, 1), lambda h: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, 1, hd), lambda h: (0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, posf[:, None])

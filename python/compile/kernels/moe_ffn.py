@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: masked grouped expert FFN — the MoE decode hot spot.
+
+This is the compute the paper optimizes around: for every activated expert j,
+stream its weights (w1[j], w2[j]) from HBM once per batch, apply it to every
+token that routed to it, and accumulate ``gates[:, j] * FFN_j(x)`` into the
+output. XShare's contribution is to make ``|{j : gates[:, j] != 0}|`` small;
+the kernel's job is to make each surviving expert's pass efficient.
+
+Hardware adaptation (DESIGN.md §3): the paper's vLLM/H100 implementation
+tiles tokens across threadblocks with expert weights in shared memory. On
+TPU the analogue is an **expert-major grid**: grid=(N,), each step holds one
+expert's (d×f + f×d) weights in VMEM (BlockSpec blocks below) and the whole
+token tile. For the mini presets a block is
+
+    gptoss-mini: x[32,64] + w1[64,128] + w2[128,64] + out[32,64] ≈ 82 KiB
+
+far under the ~16 MiB VMEM budget; the schedule streams each expert's
+weights HBM→VMEM exactly once per layer call — the same "load each activated
+expert once" property the paper's memory model assumes. On a real TPU the
+per-expert step would be predicated off for masked experts (scalar-prefetch
+of the expert mask); under interpret=True every step executes and masked
+experts contribute exactly zero (gates column is zero), so numerics are
+identical and the IO saving is accounted by the rust `memsim` layer.
+
+interpret=True is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_ffn_kernel(x_ref, g_ref, w1_ref, w2_ref, o_ref):
+    """One grid step = one block of EB experts:
+    o += Σ_{e∈block} g[:, e] · silu(x @ w1[e]) @ w2[e].
+
+    Perf note (EXPERIMENTS.md §Perf, L1 iterations 1-5): the first version
+    used EB=1 (one expert per step); 128 serial grid steps of tiny matmuls
+    left the CPU backend at ~0.7 GFLOP/s (185 ms/call on gptoss-mini).
+    Blocking EB experts per step turns the inner work into batched
+    [EB×T×f] einsums: 26.8 ms (EB=8) → 15.8 (16) → 9.8 (32) → 7.1 (64) →
+    4.0 (128). EB=64 is the shipped default: its 4 MiB weight block still
+    double-buffers inside a 16 MiB TPU VMEM (the HBM→VMEM streaming
+    schedule the paper's memory model needs), while EB=128 would hold the
+    whole expert bank resident and abandon streaming."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]            # [T, d]    (same block every step)
+    w1 = w1_ref[...]          # [EB, d, f] (expert-major block)
+    w2 = w2_ref[...]          # [EB, f, d]
+    g = g_ref[...]            # [T, EB]   this block's gate columns
+
+    h = jax.nn.silu(jnp.einsum("td,edf->etf", x, w1))
+    y = jnp.einsum("etf,efd->etd", h, w2)
+    o_ref[...] += jnp.einsum("te,etd->td", g, y)
+
+
+def expert_block(n_experts: int, max_block: int = 64) -> int:
+    """Largest divisor of N not exceeding max_block (grid must tile N)."""
+    for eb in range(min(max_block, n_experts), 0, -1):
+        if n_experts % eb == 0:
+            return eb
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=())
+def moe_ffn(x, gates, w1, w2):
+    """Pallas grouped expert FFN. Shapes as in ``ref.moe_ffn_ref``."""
+    T, d = x.shape
+    N = w1.shape[0]
+    f = w1.shape[2]
+    eb = expert_block(N)
+    return pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=(N // eb,),
+        in_specs=[
+            pl.BlockSpec((T, d), lambda j: (0, 0)),        # x: whole tile
+            pl.BlockSpec((T, eb), lambda j: (0, j)),       # gate columns
+            pl.BlockSpec((eb, d, f), lambda j: (j, 0, 0)),  # w1 block
+            pl.BlockSpec((eb, f, d), lambda j: (j, 0, 0)),  # w2 block
+        ],
+        out_specs=pl.BlockSpec((T, d), lambda j: (0, 0)),  # accumulate in place
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        interpret=True,
+    )(x, gates, w1, w2)
+
+
+def vmem_bytes(T, d, f, eb=8, dtype_bytes=4):
+    """Static VMEM footprint of one grid step (perf-model helper; see
+    DESIGN.md §8 and EXPERIMENTS.md §Perf)."""
+    x = T * d
+    g = T * eb
+    w = eb * (d * f + f * d)
+    o = T * d
+    return (x + g + w + o) * dtype_bytes

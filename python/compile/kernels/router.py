@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: router post-processing (softmax + batch utility).
+
+Computes, in one VMEM-resident pass over the router logits:
+
+  * ``probs``  — full-N softmax per token: the gate-score matrix G^{(l)}
+    every XShare selection algorithm consumes, and
+  * ``colsum`` — the batch utility vector  u_j = Σ_i active_i · probs[i, j],
+    which is exactly the modular marginal gain f_l({e_j}) of
+    Proposition 3.2. Shipping it pre-reduced from the accelerator lets the
+    rust coordinator run Algorithm 1 (sort by u_j) without touching the
+    [T×N] matrix in the common no-warm-up path.
+
+``active`` masks padded batch rows (the compiled programs have a fixed B_max;
+the coordinator pads short batches) so padding never leaks into selection.
+
+Sized for VMEM: [T, N] at the largest preset is 32×256 f32 = 32 KiB.
+interpret=True for the CPU PJRT plugin (see moe_ffn.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(logits_ref, active_ref, probs_ref, colsum_ref):
+    logits = logits_ref[...]                       # [T, N]
+    active = active_ref[...]                       # [T, 1]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    probs_ref[...] = probs
+    colsum_ref[...] = jnp.sum(probs * active, axis=0, keepdims=True)  # [1, N]
+
+
+def router_postprocess(logits, active):
+    """Pallas router post-processing.
+
+    Args:
+      logits: [T, N] raw router logits.
+      active: [T]    1.0 live rows / 0.0 padding.
+    Returns:
+      (probs [T, N], colsum [N]) — see ``ref.router_ref``.
+    """
+    T, N = logits.shape
+    probs, colsum = pl.pallas_call(
+        _router_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((T, N), logits.dtype),
+            jax.ShapeDtypeStruct((1, N), logits.dtype),
+        ),
+        interpret=True,
+    )(logits, active[:, None])
+    return probs, colsum[0]

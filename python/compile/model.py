@@ -1,0 +1,180 @@
+"""L2: the JAX MoE transformer decode step, built on the L1 Pallas kernels.
+
+The model is split into the four programs the rust coordinator calls per
+decode step (see DESIGN.md §2 — the split is what lets XShare's selection
+logic sit *between* routing and expert compute, on the rust side):
+
+  embed        tokens[B] i32, emb[V,d]                      -> hidden[B,d]
+  attn_router  hidden, attn weights, router weights, caches -> hidden2,
+               logits[B,N], probs[B,N], colsum[N], new caches
+  moe_ffn      hidden2, refined gates[B,N], expert weights  -> hidden3
+  lm_head      hidden[B,d], ln scale, unembed               -> logits[B,V]
+
+plus ``draft_step`` — a complete dense decode step (embed → L_d dense layers
+→ logits) for the speculative-decoding draft model.
+
+All weights are runtime parameters (never baked into the HLO) so one compiled
+program serves every layer; the rust side keeps them as device-resident
+PJRT buffers, uploaded once at startup.
+
+Everything here runs ONLY at build time (`make artifacts`): `aot.py` lowers
+each program to HLO text. Python is never on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.moe_ffn import moe_ffn
+from compile.kernels.router import router_postprocess
+
+_EPS = 1e-6
+
+
+def rmsnorm(x, scale):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * scale * jax.lax.rsqrt(var + _EPS)
+
+
+def rope(x, pos, base=10000.0):
+    """Rotary position embedding. x: [B, H, hd], pos: [B] i32."""
+    B, H, hd = x.shape
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(base) * jnp.arange(half, dtype=jnp.float32) / half
+    )  # [half]
+    angles = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # [B, half]
+    cos = jnp.cos(angles)[:, None, :]  # [B, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _update_cache(cache, new, pos):
+    """Write this step's K or V into the padded cache.
+
+    cache: [B, H, S, hd], new: [B, H, hd], pos: [B] i32."""
+
+    def upd(cache_b, new_b, p):
+        return jax.lax.dynamic_update_slice(cache_b, new_b[:, None, :], (0, p, 0))
+
+    return jax.vmap(upd)(cache, new, pos)
+
+
+# ---------------------------------------------------------------------------
+# Programs
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens, emb):
+    """tokens: [B] i32, emb: [V, d] -> [B, d]."""
+    return (jnp.take(emb, tokens, axis=0),)
+
+
+def attn_router(
+    hidden,      # [B, d]  residual stream
+    pos,         # [B] i32 current position per row
+    active,      # [B] f32 1.0 live / 0.0 padded
+    k_cache,     # [B, H, S, hd]
+    v_cache,     # [B, H, S, hd]
+    ln1,         # [d]
+    wq, wk, wv, wo,  # [d, d] each
+    ln2,         # [d]
+    wg,          # [N, d] router
+):
+    """Attention half of a layer + router scoring of the post-attn stream.
+
+    Returns (hidden2, logits, probs, colsum, k_cache', v_cache').
+    The router sees rmsnorm(hidden2, ln2) — the same normalized input the
+    MoE half will use — so gate scores and expert inputs are consistent.
+    """
+    B, d = hidden.shape
+    H = k_cache.shape[1]
+    hd = d // H
+
+    x = rmsnorm(hidden, ln1)
+    q = (x @ wq).reshape(B, H, hd)
+    k = (x @ wk).reshape(B, H, hd)
+    v = (x @ wv).reshape(B, H, hd)
+    q = rope(q, pos)
+    k = rope(k, pos)
+    k_cache = _update_cache(k_cache, k, pos)
+    v_cache = _update_cache(v_cache, v, pos)
+    ctx = decode_attention(q, k_cache, v_cache, pos).reshape(B, d)
+    hidden2 = hidden + ctx @ wo
+
+    x2 = rmsnorm(hidden2, ln2)
+    logits = x2 @ wg.T                            # [B, N]
+    probs, colsum = router_postprocess(logits, active)
+    return hidden2, logits, probs, colsum, k_cache, v_cache
+
+
+def moe_layer(
+    hidden2,     # [B, d]  residual stream (post attention)
+    gates,       # [B, N]  refined gate weights from the coordinator
+    ln2,         # [d]
+    w1,          # [N, d, f]
+    w2,          # [N, f, d]
+    ws1,         # [d, fs]   shared expert up (fs=f; zero-sized presets pass f)
+    ws2,         # [fs, d]   shared expert down
+    shared_flag,  # [1] f32   1.0 when the preset has a shared expert
+):
+    """MoE half of a layer: routed experts (Pallas kernel) + optional
+    DeepSeek-style shared expert + residual."""
+    x2 = rmsnorm(hidden2, ln2)
+    y = moe_ffn(x2, gates, w1, w2)
+    shared = jax.nn.silu(x2 @ ws1) @ ws2
+    y = y + shared_flag * shared
+    return (hidden2 + y,)
+
+
+def lm_head(hidden, lnf, unembed):
+    """hidden: [B, d], lnf: [d], unembed: [d, V] -> logits [B, V]."""
+    return (rmsnorm(hidden, lnf) @ unembed,)
+
+
+def draft_step(
+    tokens,      # [B] i32
+    pos,         # [B] i32
+    k_cache,     # [Ld, B, Hd, S, hdd]
+    v_cache,     # [Ld, B, Hd, S, hdd]
+    emb,         # [V, dd]
+    ln1s,        # [Ld, dd]
+    wqs, wks, wvs, wos,  # [Ld, dd, dd]
+    ln2s,        # [Ld, dd]
+    wf1s,        # [Ld, dd, fd]
+    wf2s,        # [Ld, fd, dd]
+    lnf,         # [dd]
+    unembed,     # [dd, V]
+):
+    """One decode step of the dense draft model (speculative decoding).
+
+    The layer loop is unrolled at trace time (Ld is small); caches are
+    stacked per layer so the rust side round-trips two buffers only.
+    Returns (logits [B, V], k_cache', v_cache').
+    """
+    Ld = k_cache.shape[0]
+    B = tokens.shape[0]
+    Hd = k_cache.shape[2]
+    dd = emb.shape[1]
+    hdd = dd // Hd
+
+    hidden = jnp.take(emb, tokens, axis=0)
+    new_k, new_v = [], []
+    for l in range(Ld):
+        x = rmsnorm(hidden, ln1s[l])
+        q = (x @ wqs[l]).reshape(B, Hd, hdd)
+        k = (x @ wks[l]).reshape(B, Hd, hdd)
+        v = (x @ wvs[l]).reshape(B, Hd, hdd)
+        q = rope(q, pos)
+        k = rope(k, pos)
+        kc = _update_cache(k_cache[l], k, pos)
+        vc = _update_cache(v_cache[l], v, pos)
+        ctx = decode_attention(q, kc, vc, pos).reshape(B, dd)
+        hidden = hidden + ctx @ wos[l]
+        x2 = rmsnorm(hidden, ln2s[l])
+        hidden = hidden + jax.nn.silu(x2 @ wf1s[l]) @ wf2s[l]
+        new_k.append(kc)
+        new_v.append(vc)
+    logits = rmsnorm(hidden, lnf) @ unembed
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

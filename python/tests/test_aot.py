@@ -1,0 +1,99 @@
+"""AOT pipeline tests: manifest consistency, weight files, HLO text sanity,
+and regeneration determinism — everything the rust runtime assumes."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.aot import build_preset, make_weights
+from compile.configs import TINY, PRESETS
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    root = tmp_path_factory.mktemp("artifacts")
+    manifest = build_preset(TINY, str(root))
+    return str(root / TINY.name), manifest
+
+
+def test_manifest_written_and_loadable(built):
+    out_dir, manifest = built
+    with open(os.path.join(out_dir, "manifest.json")) as fh:
+        on_disk = json.load(fh)
+    assert on_disk == manifest
+    assert on_disk["format_version"] == 1
+    assert on_disk["model"]["name"] == "tiny"
+
+
+def test_all_program_files_exist_with_entry(built):
+    out_dir, manifest = built
+    for name, prog in manifest["programs"].items():
+        path = os.path.join(out_dir, prog["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert "ENTRY" in text, f"{name}: not HLO text"
+        assert "main" in text
+
+
+def test_weight_files_match_declared_shapes(built):
+    out_dir, manifest = built
+    assert manifest["weights"], "no weights dumped"
+    for wmeta in manifest["weights"]:
+        path = os.path.join(out_dir, wmeta["file"])
+        n = int(np.prod(wmeta["shape"]))
+        arr = np.fromfile(path, "<f4")
+        assert arr.size == n, wmeta["name"]
+
+
+def test_weights_deterministic_per_seed():
+    w1 = make_weights(TINY)
+    w2 = make_weights(TINY)
+    assert set(w1) == set(w2)
+    for k in w1:
+        np.testing.assert_array_equal(w1[k], w2[k])
+
+
+def test_weights_differ_across_presets():
+    names = {TINY.name}
+    w_tiny = make_weights(TINY)
+    for preset in PRESETS.values():
+        if preset.name in names or preset.n_experts != TINY.n_experts:
+            continue
+        w_other = make_weights(preset)
+        assert not np.array_equal(w_tiny["emb"], w_other["emb"])
+
+
+def test_selftest_vectors_exist_and_sized(built):
+    out_dir, manifest = built
+    assert manifest["selftests"]
+    for name, entry in manifest["selftests"].items():
+        prog = manifest["programs"][name]
+        assert len(entry["inputs"]) == len(prog["params"])
+        assert len(entry["outputs"]) == len(prog["outputs"])
+        for fname, out_meta in zip(entry["outputs"], prog["outputs"]):
+            arr = np.fromfile(os.path.join(out_dir, fname), "<f4")
+            assert arr.size == int(np.prod(out_meta["shape"])), (name, fname)
+
+
+def test_program_params_cover_model_geometry(built):
+    """attn_router must expose exactly the shapes the rust side derives from
+    the manifest's model block."""
+    _, manifest = built
+    m = manifest["model"]
+    params = {p["name"]: p["shape"] for p in manifest["programs"]["attn_router"]["params"]}
+    B, d, N = m["max_batch"], m["d_model"], m["n_experts"]
+    assert params["hidden"] == [B, d]
+    assert params["wg"] == [N, d]
+    assert params["k_cache"] == [B, m["n_heads"], m["max_seq"], m["head_dim"]]
+
+
+def test_shared_flag_constant_matches_preset(built):
+    out_dir, manifest = built
+    entry = manifest["selftests"]["moe_layer"]
+    idx = [p["name"] for p in manifest["programs"]["moe_layer"]["params"]].index(
+        "shared_flag"
+    )
+    val = np.fromfile(os.path.join(out_dir, entry["inputs"][idx]), "<f4")
+    assert val[0] == (1.0 if manifest["model"]["n_shared"] > 0 else 0.0)

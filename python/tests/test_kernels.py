@@ -1,0 +1,197 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed seeds keep runs deterministic. Tolerances are
+loose-ish (2e-5) because interpret-mode pallas and the dense einsum oracle
+accumulate in different orders.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention
+from compile.kernels.moe_ffn import moe_ffn, vmem_bytes
+from compile.kernels.router import router_postprocess
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# moe_ffn
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    T=st.integers(1, 12),
+    d=st.sampled_from([8, 16, 32]),
+    N=st.sampled_from([2, 8, 17]),
+    f=st.sampled_from([8, 24]),
+    seed=st.integers(0, 2**16),
+)
+def test_moe_ffn_matches_ref(T, d, N, f, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (T, d))
+    gates = jax.random.uniform(ks[1], (T, N))
+    w1 = jax.random.normal(ks[2], (N, d, f)) * 0.2
+    w2 = jax.random.normal(ks[3], (N, f, d)) * 0.2
+    got = moe_ffn(x, gates, w1, w2)
+    want = ref.moe_ffn_ref(x, gates, w1, w2)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_moe_ffn_zero_gates_is_zero():
+    x = rand(0, 4, 8)
+    w1 = rand(1, 6, 8, 16, scale=0.2)
+    w2 = rand(2, 6, 16, 8, scale=0.2)
+    out = moe_ffn(x, jnp.zeros((4, 6)), w1, w2)
+    np.testing.assert_allclose(out, jnp.zeros((4, 8)), atol=1e-7)
+
+
+def test_moe_ffn_one_hot_gate_selects_single_expert():
+    """A token whose gate row is one-hot on expert j must get exactly
+    FFN_j(x) — the masked-expert-skipping equivalence the coordinator
+    relies on."""
+    T, d, N, f = 3, 8, 5, 16
+    x = rand(3, T, d)
+    w1 = rand(4, N, d, f, scale=0.2)
+    w2 = rand(5, N, f, d, scale=0.2)
+    j = 2
+    gates = jnp.zeros((T, N)).at[:, j].set(1.0)
+    got = moe_ffn(x, gates, w1, w2)
+    want = jax.nn.silu(x @ w1[j]) @ w2[j]
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_moe_ffn_linear_in_gates():
+    """Modularity at the kernel level: output is linear in the gate matrix
+    (mirrors Proposition 3.2's modularity of the proxy)."""
+    T, d, N, f = 4, 8, 6, 12
+    x = rand(6, T, d)
+    w1 = rand(7, N, d, f, scale=0.2)
+    w2 = rand(8, N, f, d, scale=0.2)
+    g1 = jax.random.uniform(jax.random.PRNGKey(9), (T, N))
+    g2 = jax.random.uniform(jax.random.PRNGKey(10), (T, N))
+    lhs = moe_ffn(x, g1 + g2, w1, w2)
+    rhs = moe_ffn(x, g1, w1, w2) + moe_ffn(x, g2, w1, w2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_ffn_vmem_budget_gptoss():
+    """Structural perf check (interpret mode gives no TPU timing): the
+    expert-major block for the largest preset must fit VMEM comfortably."""
+    assert vmem_bytes(T=32, d=64, f=128) < 16 * 2**20 / 8
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    T=st.integers(1, 16),
+    N=st.sampled_from([4, 64, 256]),
+    n_pad=st.integers(0, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_router_matches_ref(T, N, n_pad, seed):
+    n_pad = min(n_pad, T - 1) if T > 1 else 0
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (T, N)) * 3
+    active = jnp.ones((T,)).at[T - n_pad :].set(0.0) if n_pad else jnp.ones((T,))
+    p, c = router_postprocess(logits, active)
+    pr, cr = ref.router_ref(logits, active)
+    np.testing.assert_allclose(p, pr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(c, cr, rtol=1e-6, atol=1e-6)
+
+
+def test_router_probs_rows_sum_to_one():
+    logits = rand(11, 8, 32, scale=4.0)
+    p, _ = router_postprocess(logits, jnp.ones((8,)))
+    np.testing.assert_allclose(p.sum(-1), jnp.ones(8), rtol=1e-6)
+
+
+def test_router_colsum_ignores_padded_rows():
+    """Padding must never leak into the batch utility — selection would
+    otherwise see ghost tokens."""
+    logits = rand(12, 6, 16, scale=2.0)
+    full = jnp.ones((6,))
+    half = jnp.array([1, 1, 1, 0, 0, 0], jnp.float32)
+    _, c_half = router_postprocess(logits, half)
+    _, c_live = router_postprocess(logits[:3], jnp.ones((3,)))
+    np.testing.assert_allclose(c_half, c_live, rtol=1e-6, atol=1e-6)
+    _, c_full = router_postprocess(logits, full)
+    assert not np.allclose(c_half, c_full)
+
+
+def test_router_colsum_mass_equals_live_rows():
+    """Each live row contributes exactly probability mass 1."""
+    logits = rand(13, 10, 64, scale=2.0)
+    active = jnp.ones((10,)).at[7:].set(0.0)
+    _, c = router_postprocess(logits, active)
+    np.testing.assert_allclose(c.sum(), 7.0, rtol=1e-5)
+
+
+def test_router_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4, 0.0, 1e4]])
+    p, c = router_postprocess(logits, jnp.ones((1,)))
+    assert np.isfinite(np.asarray(p)).all()
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    B=st.integers(1, 6),
+    H=st.sampled_from([1, 2, 4]),
+    S=st.sampled_from([4, 16, 33]),
+    hd=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(B, H, S, hd, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, H, S, hd))
+    vc = jax.random.normal(ks[2], (B, H, S, hd))
+    pos = jax.random.randint(ks[3], (B,), 0, S)
+    got = decode_attention(q, kc, vc, pos)
+    want = ref.decode_attention_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_attention_pos_zero_attends_only_first():
+    """pos=0 must return v_cache[:, :, 0] exactly (only one unmasked slot)."""
+    B, H, S, hd = 2, 2, 8, 4
+    q = rand(20, B, H, hd)
+    kc = rand(21, B, H, S, hd)
+    vc = rand(22, B, H, S, hd)
+    pos = jnp.zeros((B,), jnp.int32)
+    got = decode_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(got, vc[:, :, 0], **TOL)
+
+
+def test_attention_garbage_beyond_pos_is_ignored():
+    """Stale cache slots past pos[b] must not affect the output."""
+    B, H, S, hd = 2, 2, 10, 4
+    q = rand(23, B, H, hd)
+    kc = rand(24, B, H, S, hd)
+    vc = rand(25, B, H, S, hd)
+    pos = jnp.array([4, 7], jnp.int32)
+    base = decode_attention(q, kc, vc, pos)
+    kc2 = kc.at[0, :, 5:].set(99.0).at[1, :, 8:].set(-99.0)
+    vc2 = vc.at[0, :, 5:].set(99.0).at[1, :, 8:].set(-99.0)
+    got = decode_attention(q, kc2, vc2, pos)
+    np.testing.assert_allclose(got, base, **TOL)

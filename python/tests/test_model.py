@@ -1,0 +1,270 @@
+"""L2 correctness: decode-step program semantics.
+
+These tests exercise the *traced functions* directly (not the HLO artifacts —
+that round-trip is covered by the rust integration suite against the
+selftest vectors).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import make_weights, program_signatures, make_selftest_inputs
+from compile.configs import TINY, PRESETS
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = TINY
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return {k: jnp.asarray(v) for k, v in make_weights(CFG).items()}
+
+
+def layer_w(weights, l):
+    p = f"layer{l}."
+    return {k: weights[p + k] for k in
+            ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "w1", "w2", "ws1", "ws2")}
+
+
+def fresh_caches(cfg, B):
+    return (
+        jnp.zeros((B, cfg.n_heads, cfg.max_seq, cfg.head_dim)),
+        jnp.zeros((B, cfg.n_heads, cfg.max_seq, cfg.head_dim)),
+    )
+
+
+def run_attn(weights, hidden, pos, active, kc, vc, l=0):
+    w = layer_w(weights, l)
+    return M.attn_router(
+        hidden, pos, active, kc, vc,
+        w["ln1"], w["wq"], w["wk"], w["wv"], w["wo"], w["ln2"], w["wg"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# rope / rmsnorm primitives
+# ---------------------------------------------------------------------------
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 2, 8))
+    pos = jnp.array([0, 5, 11], jnp.int32)
+    y = M.rope(x, pos)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5
+    )
+
+
+def test_rope_pos_zero_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 8))
+    y = M.rope(x, jnp.zeros((2,), jnp.int32))
+    np.testing.assert_allclose(y, x, atol=1e-6)
+
+
+def test_rope_relative_shift_invariance():
+    """<rope(q,p), rope(k,p)> depends only on the content for equal
+    positions: dot products are invariant to a common position shift."""
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 8))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 8))
+    d0 = jnp.sum(M.rope(q, jnp.array([3])) * M.rope(k, jnp.array([3])))
+    d1 = jnp.sum(M.rope(q, jnp.array([9])) * M.rope(k, jnp.array([9])))
+    np.testing.assert_allclose(d0, d1, rtol=1e-5)
+
+
+def test_rmsnorm_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, 16)) * 3
+    s = jax.random.normal(jax.random.PRNGKey(5), (16,))
+    np.testing.assert_allclose(M.rmsnorm(x, s), ref.rmsnorm_ref(x, s), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attn_router program
+# ---------------------------------------------------------------------------
+
+
+def test_attn_router_shapes(weights):
+    B, cfg = CFG.max_batch, CFG
+    kc, vc = fresh_caches(cfg, B)
+    hidden = jax.random.normal(jax.random.PRNGKey(6), (B, cfg.d_model))
+    pos = jnp.zeros((B,), jnp.int32)
+    active = jnp.ones((B,))
+    h2, logits, probs, colsum, kc2, vc2 = run_attn(weights, hidden, pos, active, kc, vc)
+    assert h2.shape == (B, cfg.d_model)
+    assert logits.shape == (B, cfg.n_experts)
+    assert probs.shape == (B, cfg.n_experts)
+    assert colsum.shape == (cfg.n_experts,)
+    assert kc2.shape == kc.shape and vc2.shape == vc.shape
+
+
+def test_attn_router_probs_consistent_with_logits(weights):
+    B, cfg = 4, CFG
+    kc, vc = fresh_caches(cfg, B)
+    hidden = jax.random.normal(jax.random.PRNGKey(7), (B, cfg.d_model))
+    _, logits, probs, colsum, _, _ = run_attn(
+        weights, hidden, jnp.zeros((B,), jnp.int32), jnp.ones((B,)), kc, vc
+    )
+    want, want_cs = ref.router_ref(logits, jnp.ones((B,)))
+    np.testing.assert_allclose(probs, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(colsum, want_cs, rtol=1e-5, atol=1e-6)
+
+
+def test_attn_router_cache_write_at_pos(weights):
+    """The step's K/V must land at pos[b] and leave other slots untouched."""
+    B, cfg = 2, CFG
+    kc, vc = fresh_caches(cfg, B)
+    kc = kc + 0.123  # sentinel
+    hidden = jax.random.normal(jax.random.PRNGKey(8), (B, cfg.d_model))
+    pos = jnp.array([0, 3], jnp.int32)
+    _, _, _, _, kc2, _ = run_attn(weights, hidden, pos, jnp.ones((B,)), kc, vc)
+    changed0 = np.any(np.asarray(kc2[0]) != 0.123, axis=(0, 2))
+    changed1 = np.any(np.asarray(kc2[1]) != 0.123, axis=(0, 2))
+    assert changed0.tolist() == [i == 0 for i in range(cfg.max_seq)]
+    assert changed1.tolist() == [i == 3 for i in range(cfg.max_seq)]
+
+
+def test_attn_router_step_determinism(weights):
+    B, cfg = 3, CFG
+    kc, vc = fresh_caches(cfg, B)
+    hidden = jax.random.normal(jax.random.PRNGKey(9), (B, cfg.d_model))
+    args = (weights, hidden, jnp.zeros((B,), jnp.int32), jnp.ones((B,)), kc, vc)
+    a = run_attn(*args)
+    b = run_attn(*args)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# moe_layer program
+# ---------------------------------------------------------------------------
+
+
+def test_moe_layer_matches_manual(weights):
+    B, cfg = 4, CFG
+    w = layer_w(weights, 0)
+    hidden2 = jax.random.normal(jax.random.PRNGKey(10), (B, cfg.d_model))
+    gates = jax.random.uniform(jax.random.PRNGKey(11), (B, cfg.n_experts))
+    (out,) = M.moe_layer(
+        hidden2, gates, w["ln2"], w["w1"], w["w2"], w["ws1"], w["ws2"],
+        jnp.asarray([1.0]),
+    )
+    x2 = ref.rmsnorm_ref(hidden2, w["ln2"])
+    want = (
+        hidden2
+        + ref.moe_ffn_ref(x2, gates, w["w1"], w["w2"])
+        + jax.nn.silu(x2 @ w["ws1"]) @ w["ws2"]
+    )
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_moe_layer_shared_flag_off(weights):
+    """shared_flag=0 must silence the shared expert exactly."""
+    B, cfg = 3, CFG
+    w = layer_w(weights, 1)
+    hidden2 = jax.random.normal(jax.random.PRNGKey(12), (B, cfg.d_model))
+    gates = jax.random.uniform(jax.random.PRNGKey(13), (B, cfg.n_experts))
+    (off,) = M.moe_layer(
+        hidden2, gates, w["ln2"], w["w1"], w["w2"], w["ws1"], w["ws2"],
+        jnp.asarray([0.0]),
+    )
+    x2 = ref.rmsnorm_ref(hidden2, w["ln2"])
+    want = hidden2 + ref.moe_ffn_ref(x2, gates, w["w1"], w["w2"])
+    np.testing.assert_allclose(off, want, rtol=2e-5, atol=2e-5)
+
+
+def test_moe_layer_restricted_gates_changes_output_smoothly(weights):
+    """Zeroing the lowest-gate expert of each token perturbs the output much
+    less than zeroing the highest-gate expert — the monotonicity Assumption
+    3.1 (router score reliability) needs from the substrate."""
+    B, cfg = 6, CFG
+    w = layer_w(weights, 0)
+    hidden2 = jax.random.normal(jax.random.PRNGKey(14), (B, cfg.d_model))
+    logits = jax.random.normal(jax.random.PRNGKey(15), (B, cfg.n_experts)) * 2
+    probs, _ = ref.router_ref(logits, jnp.ones((B,)))
+    topk = ref.topk_mask_ref(probs, CFG.top_k)
+    gates = jnp.where(topk, probs, 0.0)
+
+    def out(g):
+        (o,) = M.moe_layer(
+            hidden2, g, w["ln2"], w["w1"], w["w2"], w["ws1"], w["ws2"],
+            jnp.asarray([1.0]),
+        )
+        return o
+
+    base = out(gates)
+    # drop per-token weakest selected expert vs strongest
+    sel = np.asarray(jnp.where(topk, probs, jnp.inf))
+    weakest = sel.argmin(axis=1)
+    strongest = np.asarray(jnp.where(topk, probs, -jnp.inf)).argmax(axis=1)
+    g_weak = gates.at[jnp.arange(B), weakest].set(0.0)
+    g_strong = gates.at[jnp.arange(B), strongest].set(0.0)
+    d_weak = float(jnp.linalg.norm(out(g_weak) - base))
+    d_strong = float(jnp.linalg.norm(out(g_strong) - base))
+    assert d_weak < d_strong
+
+
+# ---------------------------------------------------------------------------
+# lm_head / embed / draft
+# ---------------------------------------------------------------------------
+
+
+def test_embed_lookup(weights):
+    toks = jnp.array([0, 1, 5, 5], jnp.int32)
+    (h,) = M.embed(toks, weights["emb"])
+    np.testing.assert_allclose(h, weights["emb"][toks])
+    np.testing.assert_array_equal(np.asarray(h[2]), np.asarray(h[3]))
+
+
+def test_lm_head_shapes(weights):
+    h = jax.random.normal(jax.random.PRNGKey(16), (5, CFG.d_model))
+    (logits,) = M.lm_head(h, weights["lnf"], weights["unembed"])
+    assert logits.shape == (5, CFG.vocab)
+
+
+def test_draft_step_runs_and_updates_cache(weights):
+    cfg = CFG
+    B, Ld = 3, cfg.draft_layers
+    Hd, hdd, S = cfg.draft_n_heads, cfg.draft_head_dim, cfg.max_seq
+    kc = jnp.zeros((Ld, B, Hd, S, hdd))
+    vc = jnp.zeros((Ld, B, Hd, S, hdd))
+    toks = jnp.array([1, 2, 3], jnp.int32)
+    pos = jnp.array([0, 0, 1], jnp.int32)
+    dw = {k.split("draft.")[1]: v for k, v in weights.items() if k.startswith("draft.")}
+    logits, kc2, vc2 = M.draft_step(
+        toks, pos, kc, vc, dw["emb"], dw["ln1s"], dw["wqs"], dw["wks"], dw["wvs"],
+        dw["wos"], dw["ln2s"], dw["wf1s"], dw["wf2s"], dw["lnf"], dw["unembed"],
+    )
+    assert logits.shape == (B, cfg.vocab)
+    assert np.any(np.asarray(kc2) != 0)
+    # row 2 wrote at position 1, not 0
+    assert np.any(np.asarray(kc2[0, 2, :, 1]) != 0)
+    assert not np.any(np.asarray(kc2[0, 2, :, 0]) != 0)
+
+
+# ---------------------------------------------------------------------------
+# signatures / selftest plumbing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("preset", list(PRESETS))
+def test_signatures_shapes_consistent(preset):
+    cfg = PRESETS[preset]
+    sigs = program_signatures(cfg)
+    for name, sig in sigs.items():
+        rng = np.random.RandomState(0)
+        vals = make_selftest_inputs(cfg, sig, rng)
+        assert len(vals) == len(sig["params"])
+        for v, (pname, shape, dt) in zip(vals, sig["params"]):
+            assert v.shape == tuple(shape), (name, pname)
+
+
+def test_selftest_inputs_respect_dtypes():
+    sigs = program_signatures(CFG)
+    rng = np.random.RandomState(1)
+    vals = make_selftest_inputs(CFG, sigs["attn_router"], rng)
+    assert vals[1].dtype == np.int32  # pos
+    assert vals[0].dtype == np.float32  # hidden

@@ -1,0 +1,132 @@
+//! Ablations called out in DESIGN.md §6:
+//!   A. warm-up depth k0 sweep at fixed greedy budget (Algorithm 2);
+//!   B. EP placement policy (contiguous / round-robin / random) under
+//!      Algorithm 6;
+//!   C. batch-size sweep under speculation (paper App. B mention);
+//!   D. baseline comparison — LYNX-Lat, Dynamic-Skipping, Opportunistic vs
+//!      Algorithm 2 at comparable activation levels.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{domain_requests, load_model, pct, sweep, Table};
+use xshare::config::{EpConfig, ServeConfig};
+use xshare::ep::PlacementKind;
+
+fn main() {
+    let mut model = load_model("gptoss-mini");
+    let vocab = model.dims().vocab;
+
+    // ---- A: warm-up sweep ------------------------------------------------
+    {
+        let cfg = ServeConfig {
+            preset: "gptoss-mini".into(),
+            batch_size: 16,
+            max_new_tokens: 8,
+            ..Default::default()
+        };
+        let reqs = domain_requests("gpqa", vocab, 16, 10, 8, 11);
+        let policies =
+            ["vanilla", "batch:12:0", "batch:12:1", "batch:12:2", "batch:12:3"];
+        let results = sweep(&mut model, &cfg, &policies, &reqs);
+        let mut t = Table::new(&["k0 (m=12)", "OTPS", "activated", "fidelity"]);
+        for r in &results {
+            let fid = r.fidelity.as_ref().map(|f| f.token_match).unwrap_or(1.0);
+            t.row(&[
+                r.policy.clone(),
+                format!("{:.1}", r.report.metrics.otps()),
+                format!("{:.1}", r.report.metrics.mean_activated()),
+                format!("{:.1}%", fid * 100.0),
+            ]);
+        }
+        t.print("Ablation A — warm-up depth (fidelity should rise with k0)");
+        common::save_report("ablation_warmup.csv", &t.to_csv());
+    }
+
+    // ---- D: baselines at comparable activation ---------------------------
+    {
+        let cfg = ServeConfig {
+            preset: "gptoss-mini".into(),
+            batch_size: 16,
+            max_new_tokens: 8,
+            ..Default::default()
+        };
+        let reqs = domain_requests("mmlu-pro", vocab, 16, 10, 8, 13);
+        let policies =
+            ["vanilla", "batch:16:1", "lynx:16", "skip:0.3", "opp:2"];
+        let results = sweep(&mut model, &cfg, &policies, &reqs);
+        let mut t = Table::new(&["method", "OTPS", "ΔOTPS", "activated", "fidelity"]);
+        let base = results[0].report.metrics.otps();
+        for r in &results {
+            let fid = r.fidelity.as_ref().map(|f| f.token_match).unwrap_or(1.0);
+            t.row(&[
+                r.policy.clone(),
+                format!("{:.1}", r.report.metrics.otps()),
+                format!("{:+.1}%", pct(r.report.metrics.otps(), base)),
+                format!("{:.1}", r.report.metrics.mean_activated()),
+                format!("{:.1}%", fid * 100.0),
+            ]);
+        }
+        t.print("Ablation D — baselines (Lynx/Dynamic-Skip/Opportunistic) vs Algorithm 2");
+        common::save_report("ablation_baselines.csv", &t.to_csv());
+    }
+
+    // ---- C: batch-size sweep under speculation ----------------------------
+    {
+        let mut t = Table::new(&["BS", "policy", "OTPS", "activated", "fidelity"]);
+        for bs in [2usize, 4, 8] {
+            let cfg = ServeConfig {
+                preset: "gptoss-mini".into(),
+                batch_size: bs,
+                spec_len: 3,
+                max_new_tokens: 6,
+                ..Default::default()
+            };
+            let reqs = domain_requests("aime2025", vocab, bs, 8, 6, 17);
+            let results = sweep(&mut model, &cfg, &["vanilla", "spec:1:0:4"], &reqs);
+            for r in &results {
+                let fid = r.fidelity.as_ref().map(|f| f.token_match).unwrap_or(1.0);
+                t.row(&[
+                    bs.to_string(),
+                    r.policy.clone(),
+                    format!("{:.1}", r.report.metrics.otps()),
+                    format!("{:.1}", r.report.metrics.mean_activated()),
+                    format!("{:.1}%", fid * 100.0),
+                ]);
+            }
+        }
+        t.print("Ablation C — batch-size sweep under speculation (App. B)");
+        common::save_report("ablation_bs_spec.csv", &t.to_csv());
+    }
+
+    // ---- B: EP placement (dsr1-mini) --------------------------------------
+    {
+        let mut ep_model = load_model("dsr1-mini");
+        let vocab = ep_model.dims().vocab;
+        let mut t = Table::new(&["placement", "activated", "max/GPU", "sim-otps"]);
+        for (name, kind) in [
+            ("contiguous", PlacementKind::Contiguous),
+            ("round_robin", PlacementKind::RoundRobin),
+            ("random:1", PlacementKind::Random(1)),
+        ] {
+            let cfg = ServeConfig {
+                preset: "dsr1-mini".into(),
+                batch_size: 8,
+                max_new_tokens: 6,
+                ep: Some(EpConfig { n_gpus: 8, placement: kind }),
+                ..Default::default()
+            };
+            let reqs = domain_requests("ifeval", vocab, 8, 8, 6, 19);
+            let results = sweep(&mut ep_model, &cfg, &["gpu:1:5"], &reqs);
+            let m = &results[0].report.metrics;
+            t.row(&[
+                name.to_string(),
+                format!("{:.1}", m.mean_activated()),
+                format!("{:.2}", m.max_gpu_load.mean()),
+                format!("{:.1}", m.otps()),
+            ]);
+        }
+        t.print("Ablation B — expert placement under Algorithm 6 (G=8)");
+        common::save_report("ablation_placement.csv", &t.to_csv());
+    }
+}

@@ -1,0 +1,106 @@
+//! Shared harness for the paper-reproduction benches: model loading, trace
+//! construction, policy sweeps and table emission. Each bench binary
+//! regenerates one table/figure of the paper (see DESIGN.md §6).
+
+#![allow(dead_code)]
+#![allow(unused_imports)]
+
+use std::collections::BTreeMap;
+
+use xshare::config::ServeConfig;
+use xshare::coordinator::{compare, Fidelity, Request, RunReport, Scheduler};
+use xshare::gen::{TraceDomain, TraceGenerator};
+use xshare::model::MoeModel;
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+use xshare::selection::PolicyKind;
+
+pub use xshare::util::benchkit::{bench, save_report, Table};
+
+pub fn load_model(preset: &str) -> MoeModel {
+    let manifest = Manifest::load(&artifacts_root().join(preset)).unwrap_or_else(|e| {
+        panic!("artifacts for '{preset}' missing ({e:#}) — run `make artifacts`")
+    });
+    MoeModel::new(Engine::load(manifest).expect("engine load")).expect("model")
+}
+
+/// Requests for one domain: `n` requests, prompts truncated to `prompt_len`.
+pub fn domain_requests(
+    domain: &str,
+    vocab: usize,
+    n: usize,
+    prompt_len: usize,
+    max_new: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let d = TraceDomain::by_name(domain).unwrap_or_else(|| panic!("unknown domain {domain}"));
+    TraceGenerator::new(vocab, seed)
+        .generate(&[d], n)
+        .into_iter()
+        .map(|t| {
+            let mut prompt = t.prompt;
+            prompt.truncate(prompt_len.max(1));
+            let mut r = Request::new(t.id, prompt, max_new);
+            r.domain = t.domain;
+            r
+        })
+        .collect()
+}
+
+/// One request from each of the paper's §6.3 mixed datasets.
+pub fn mixed_requests(vocab: usize, prompt_len: usize, max_new: usize, seed: u64) -> Vec<Request> {
+    TraceGenerator::new(vocab, seed)
+        .mixed_batch()
+        .into_iter()
+        .map(|t| {
+            let mut prompt = t.prompt;
+            prompt.truncate(prompt_len.max(1));
+            let mut r = Request::new(t.id, prompt, max_new);
+            r.domain = t.domain;
+            r
+        })
+        .collect()
+}
+
+pub struct SweepResult {
+    pub policy: String,
+    pub report: RunReport,
+    pub fidelity: Option<Fidelity>,
+}
+
+/// Run `policies` (strings) over the same requests; the first is the
+/// baseline all others are compared against.
+pub fn sweep(
+    model: &mut MoeModel,
+    base_cfg: &ServeConfig,
+    policies: &[&str],
+    requests: &[Request],
+) -> Vec<SweepResult> {
+    let mut results: Vec<SweepResult> = Vec::new();
+    let mut baseline: Option<BTreeMap<u64, Vec<u32>>> = None;
+    for &policy in policies {
+        let mut cfg = base_cfg.clone();
+        cfg.policy = PolicyKind::parse(policy).expect("policy");
+        let report = Scheduler::new(model, cfg)
+            .expect("scheduler")
+            .run(requests.to_vec())
+            .expect("run");
+        let fidelity = baseline.as_ref().map(|b| compare(b, &report.outputs));
+        if baseline.is_none() {
+            baseline = Some(report.outputs.clone());
+        }
+        results.push(SweepResult { policy: policy.into(), report, fidelity });
+    }
+    results
+}
+
+pub fn pct(new: f64, base: f64) -> f64 {
+    if base == 0.0 {
+        0.0
+    } else {
+        (new / base - 1.0) * 100.0
+    }
+}
+
+pub fn fmt(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}

@@ -1,0 +1,67 @@
+//! **Figure 8**: OTPS vs number of activated experts under speculative
+//! decoding (BS=4, L_s=3) — the Figure-5 sweep along the activation axis.
+//! Shape target: same memory-bound roofline as Figure 7, shifted by the
+//! draft-model overhead; hierarchical (m_r>0) points reach lower activation
+//! than batch-budget (m>0) points.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{domain_requests, load_model, sweep, Table};
+use xshare::config::ServeConfig;
+
+fn main() {
+    println!("# Figure 8 — OTPS vs activated experts (BS=4, L_s=3)");
+    let mut model = load_model("gptoss-mini");
+    let vocab = model.dims().vocab;
+    let cfg = ServeConfig {
+        preset: "gptoss-mini".into(),
+        batch_size: 4,
+        spec_len: 3,
+        max_new_tokens: 8,
+        ..Default::default()
+    };
+    let policies = [
+        "vanilla",
+        "spec:0:16:4",
+        "spec:1:0:4",
+        "spec:1:0:5",
+        "spec:2:0:4",
+        "spec:1:24:0",
+        "spec:1:32:0",
+        "spec:2:10:0",
+        "spec:0:0:8",
+    ];
+    let reqs = domain_requests("gpqa", vocab, 4, 10, 8, 88);
+    let results = sweep(&mut model, &cfg, &policies, &reqs);
+
+    let mut series: Vec<(f64, f64, String)> = results
+        .iter()
+        .map(|r| {
+            (r.report.metrics.mean_activated(), r.report.metrics.otps(), r.policy.clone())
+        })
+        .collect();
+    series.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    let mut table = Table::new(&["activated/layer", "OTPS", "config"]);
+    for (act, otps, policy) in &series {
+        table.row(&[format!("{act:.1}"), format!("{otps:.1}"), policy.clone()]);
+    }
+    table.print("speculative sweep sorted by activation (gpqa)");
+    common::save_report("fig8.csv", &table.to_csv());
+
+    let violations = series.windows(2).filter(|w| w[1].1 > w[0].1 * 1.05).count();
+    println!(
+        "\nroofline direction under speculation: {violations} violations of {}",
+        series.len() - 1
+    );
+    // hierarchical-vs-batch activation comparison
+    let act_of = |name: &str| {
+        series.iter().find(|(_, _, p)| p == name).map(|(a, _, _)| *a).unwrap_or(f64::NAN)
+    };
+    println!(
+        "hierarchical spec:1:0:4 activation {:.1} vs batch-budget spec:1:24:0 {:.1}",
+        act_of("spec:1:0:4"),
+        act_of("spec:1:24:0")
+    );
+}

@@ -1,0 +1,90 @@
+//! L3 micro-benchmarks: the per-layer cost of every selection policy on
+//! synthetic score matrices, against the memsim layer time it must undercut.
+//!
+//! The paper claims its selection adds "one additional top-k call,
+//! negligible in a memory-bound regime" — this bench quantifies that for
+//! our implementation: policy cost per layer vs the ~350 µs the H100 model
+//! charges for one gptoss layer at 99 activated experts.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench, Table};
+use xshare::gen::{batch_scores, Domain, GatingParams};
+use xshare::memsim::{CostGeometry, DecodeCostModel, HardwareProfile};
+use xshare::selection::{PolicyKind, ScoreMatrix, SelectionContext};
+use xshare::ep::{Placement, PlacementKind};
+
+fn make_scores(n_experts: usize, requests: usize, toks_per_req: usize) -> (ScoreMatrix, ScoreMatrix, Vec<Vec<usize>>) {
+    let params = GatingParams::default_for(n_experts);
+    let domains: Vec<Domain> =
+        (0..4).map(|d| Domain::new(&format!("d{d}"), n_experts, d as u64)).collect();
+    let refs: Vec<&Domain> = (0..requests).map(|i| &domains[i % 4]).collect();
+    batch_scores(&params, &refs, toks_per_req, 9)
+}
+
+fn main() {
+    println!("# selection_micro — per-layer policy cost (L3 hot path)");
+
+    // gptoss geometry, BS=16 no spec (16 rows) and BS=4 Ls=3 (16 rows, 4 groups)
+    let (logits, probs, groups) = make_scores(128, 4, 4);
+    let rows: Vec<usize> = (0..probs.n_tokens()).collect();
+    let placement = Placement::new(128, 8, PlacementKind::Contiguous);
+
+    let policies = [
+        "vanilla",
+        "batch:24:1",
+        "batch:0:1",
+        "spec:1:0:4",
+        "gpu:1:5",
+        "lynx:16",
+        "skip:0.3",
+        "opp:2",
+    ];
+
+    let mut table = Table::new(&["policy", "mean µs/layer", "|S| selected"]);
+    for name in policies {
+        let policy = PolicyKind::parse(name).unwrap().build();
+        let ctx = SelectionContext {
+            probs: &probs,
+            logits: &logits,
+            rows: &rows,
+            requests: &groups,
+            colsum_hint: None,
+            placement: Some(&placement),
+            top_k: 4,
+        };
+        let sel_size = policy.route(&ctx).n_activated();
+        let stats = bench(&format!("route/{name}"), 50, 400, || {
+            let ctx = SelectionContext {
+                probs: &probs,
+                logits: &logits,
+                rows: &rows,
+                requests: &groups,
+                colsum_hint: None,
+                placement: Some(&placement),
+                top_k: 4,
+            };
+            policy.route(&ctx)
+        });
+        table.row(&[
+            name.to_string(),
+            format!("{:.1}", stats.mean_us()),
+            sel_size.to_string(),
+        ]);
+    }
+    table.print("per-layer routing cost (T=16, N=128)");
+    common::save_report("selection_micro.csv", &table.to_csv());
+
+    // Compare against the memory-bound layer time the policy must undercut.
+    let cost = DecodeCostModel::new(
+        HardwareProfile::by_name("h100").unwrap(),
+        CostGeometry::for_preset("gptoss-mini").unwrap(),
+    );
+    let step = cost.target_step(&vec![99; 36], 16);
+    let per_layer_us = step.total_seconds / 36.0 * 1e6;
+    println!(
+        "\nmemsim H100 layer time at 99 activated experts: {per_layer_us:.0} µs — \
+         selection must stay well below this (paper: 'negligible')."
+    );
+}

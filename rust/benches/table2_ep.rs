@@ -1,0 +1,87 @@
+//! **Table 2**: expert parallelism on DeepSeek-R1 geometry (dsr1-mini:
+//! N=256, top-8, 1 shared expert) over G=8 GPU groups — vanilla routing vs
+//! Algorithm 6 (k0=1, m_g=5), at batch sizes 8 and 16.
+//!
+//! Paper shape targets: ≈70% drop in activated experts at BS=16 and ≈3×
+//! lower peak per-GPU load (25.6 → 8.6 in the paper), with fidelity close
+//! to baseline.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{domain_requests, load_model, sweep, Table};
+use xshare::config::{EpConfig, ServeConfig};
+use xshare::ep::PlacementKind;
+
+fn main() {
+    println!("# Table 2 — expert parallelism (dsr1-mini, G=8)");
+    let mut model = load_model("dsr1-mini");
+    let vocab = model.dims().vocab;
+
+    let mut table = Table::new(&[
+        "setting",
+        "method",
+        "fidelity",
+        "# experts (mean/layer)",
+        "max/GPU",
+        "sim-otps",
+    ]);
+
+    // Paper rows: GSM-8K @ BS=8 and IFEval @ BS=16. GSM-8K maps to the
+    // math-flavoured aime2025 domain; the BS=16 row mixes domains the way
+    // the paper's production batches do (higher token diversity → higher
+    // baseline activation, the regime Table 2 reports).
+    for (label, domain, bs) in
+        [("GSM-8K-like (BS=8)", "aime2025", 8usize), ("IFEval-like (BS=16)", "mixed", 16)]
+    {
+        let cfg = ServeConfig {
+            preset: "dsr1-mini".into(),
+            batch_size: bs,
+            max_new_tokens: 8,
+            ep: Some(EpConfig { n_gpus: 8, placement: PlacementKind::Contiguous }),
+            ..Default::default()
+        };
+        let reqs = if domain == "mixed" {
+            use xshare::gen::{TraceDomain, TraceGenerator};
+            TraceGenerator::new(vocab, 55)
+                .generate(&TraceDomain::standard_suite(), bs)
+                .into_iter()
+                .map(|t| {
+                    let mut prompt = t.prompt;
+                    prompt.truncate(8);
+                    let mut r = xshare::coordinator::Request::new(t.id, prompt, 8);
+                    r.domain = t.domain;
+                    r
+                })
+                .collect()
+        } else {
+            domain_requests(domain, vocab, bs, 8, 8, 55)
+        };
+        let results = sweep(&mut model, &cfg, &["vanilla", "gpu:1:5"], &reqs);
+        for r in &results {
+            let m = &r.report.metrics;
+            let fid = r.fidelity.as_ref().map(|f| f.token_match).unwrap_or(1.0);
+            table.row(&[
+                label.to_string(),
+                r.policy.clone(),
+                format!("{:.1}%", fid * 100.0),
+                format!("{:.1}", m.mean_activated()),
+                format!("{:.2}", m.max_gpu_load.mean()),
+                format!("{:.1}", m.otps()),
+            ]);
+        }
+        let base = &results[0].report.metrics;
+        let ours = &results[1].report.metrics;
+        println!(
+            "{label}: activated -{:.0}%  max/GPU {:.2} -> {:.2} ({:.1}x)",
+            100.0 * (1.0 - ours.mean_activated() / base.mean_activated()),
+            base.max_gpu_load.mean(),
+            ours.max_gpu_load.mean(),
+            base.max_gpu_load.mean() / ours.max_gpu_load.mean().max(1e-9),
+        );
+    }
+    table.print("DS-R1 geometry, accuracy/load (paper Table 2)");
+    common::save_report("table2_ep.csv", &table.to_csv());
+    println!("\npaper shape: ~73% activated-expert drop at BS=16, ~3x lower max/GPU,");
+    println!("fidelity within ~1% of baseline.");
+}

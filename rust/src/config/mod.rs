@@ -1,0 +1,265 @@
+//! Configuration system: JSON config files + CLI overrides + named presets.
+//!
+//! A `ServeConfig` fully determines a serving deployment: which artifact
+//! preset to load, the selection policy, batching/speculation geometry, the
+//! hardware cost profile and (optionally) the expert-parallel topology.
+//! Everything is overridable from the launcher CLI (`xshare serve --policy
+//! batch:24:1 --batch 16 …`) and loadable from a JSON file (`--config
+//! deploy.json`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ep::PlacementKind;
+use crate::selection::PolicyKind;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Expert-parallel topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpConfig {
+    pub n_gpus: usize,
+    pub placement: PlacementKind,
+}
+
+/// A full serving deployment description.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Artifact preset directory name under `artifacts/`.
+    pub preset: String,
+    /// Expert selection policy (the paper's algorithms or a baseline).
+    pub policy: PolicyKind,
+    /// Target decode batch size (requests per step, ≤ manifest max_batch).
+    pub batch_size: usize,
+    /// Speculative length L_s (0 = speculation off).
+    pub spec_len: usize,
+    /// Hardware cost profile for OTPS accounting.
+    pub hardware: String,
+    /// Expert-parallel topology (None = single GPU).
+    pub ep: Option<EpConfig>,
+    /// Server bind address.
+    pub addr: String,
+    /// Global seed (sampling, workload).
+    pub seed: u64,
+    /// Max new tokens per request default.
+    pub max_new_tokens: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            preset: "gptoss-mini".into(),
+            policy: PolicyKind::Vanilla,
+            batch_size: 16,
+            spec_len: 0,
+            hardware: "h100".into(),
+            ep: None,
+            addr: "127.0.0.1:7431".into(),
+            seed: 0,
+            max_new_tokens: 32,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON file. Unknown keys are rejected (typos should fail
+    /// loudly, not silently deploy a default).
+    pub fn from_json_file(path: &Path) -> Result<ServeConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let root = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let obj = root.as_obj().context("config root must be an object")?;
+
+        let known = [
+            "preset", "policy", "batch_size", "spec_len", "hardware", "ep", "addr",
+            "seed", "max_new_tokens",
+        ];
+        for key in obj.keys() {
+            if !known.contains(&key.as_str()) {
+                bail!("unknown config key '{key}' (known: {known:?})");
+            }
+        }
+
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = root.get("preset") {
+            cfg.preset = v.as_str().context("preset")?.to_string();
+        }
+        if let Some(v) = root.get("policy") {
+            cfg.policy = PolicyKind::parse(v.as_str().context("policy")?)
+                .map_err(anyhow::Error::msg)?;
+        }
+        if let Some(v) = root.get("batch_size") {
+            cfg.batch_size = v.as_usize().context("batch_size")?;
+        }
+        if let Some(v) = root.get("spec_len") {
+            cfg.spec_len = v.as_usize().context("spec_len")?;
+        }
+        if let Some(v) = root.get("hardware") {
+            cfg.hardware = v.as_str().context("hardware")?.to_string();
+        }
+        if let Some(v) = root.get("addr") {
+            cfg.addr = v.as_str().context("addr")?.to_string();
+        }
+        if let Some(v) = root.get("seed") {
+            cfg.seed = v.as_i64().context("seed")? as u64;
+        }
+        if let Some(v) = root.get("max_new_tokens") {
+            cfg.max_new_tokens = v.as_usize().context("max_new_tokens")?;
+        }
+        if let Some(v) = root.get("ep") {
+            if *v != Json::Null {
+                cfg.ep = Some(EpConfig {
+                    n_gpus: v.req("n_gpus")?.as_usize().context("ep.n_gpus")?,
+                    placement: parse_placement(
+                        v.get("placement").and_then(|p| p.as_str()).unwrap_or("contiguous"),
+                    )?,
+                });
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides on top of this config.
+    pub fn apply_args(mut self, args: &Args) -> Result<ServeConfig> {
+        if let Some(v) = args.get("preset") {
+            self.preset = v.to_string();
+        }
+        if let Some(v) = args.get("policy") {
+            self.policy = PolicyKind::parse(v).map_err(anyhow::Error::msg)?;
+        }
+        if args.has("batch") {
+            self.batch_size = args.usize_or("batch", self.batch_size);
+        }
+        if args.has("spec-len") {
+            self.spec_len = args.usize_or("spec-len", self.spec_len);
+        }
+        if let Some(v) = args.get("hardware") {
+            self.hardware = v.to_string();
+        }
+        if let Some(v) = args.get("addr") {
+            self.addr = v.to_string();
+        }
+        if args.has("seed") {
+            self.seed = args.usize_or("seed", self.seed as usize) as u64;
+        }
+        if args.has("max-new-tokens") {
+            self.max_new_tokens = args.usize_or("max-new-tokens", self.max_new_tokens);
+        }
+        if args.has("ep-gpus") {
+            self.ep = Some(EpConfig {
+                n_gpus: args.usize_or("ep-gpus", 8),
+                placement: parse_placement(&args.str_or("ep-placement", "contiguous"))?,
+            });
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_size == 0 {
+            bail!("batch_size must be ≥ 1");
+        }
+        if self.batch_size * (1 + self.spec_len) > 1024 {
+            bail!("effective batch {} too large", self.batch_size * (1 + self.spec_len));
+        }
+        if let Some(ep) = &self.ep {
+            if ep.n_gpus == 0 {
+                bail!("ep.n_gpus must be ≥ 1");
+            }
+        }
+        if matches!(self.policy, PolicyKind::GpuAware { .. }) && self.ep.is_none() {
+            bail!("gpu-aware policy requires an EP topology (--ep-gpus N)");
+        }
+        Ok(())
+    }
+
+    /// Effective tokens per verify step: B × (1 + L_s).
+    pub fn effective_batch(&self) -> usize {
+        self.batch_size * (1 + self.spec_len)
+    }
+}
+
+pub fn parse_placement(s: &str) -> Result<PlacementKind> {
+    match s {
+        "contiguous" => Ok(PlacementKind::Contiguous),
+        "round_robin" | "round-robin" => Ok(PlacementKind::RoundRobin),
+        other => {
+            if let Some(seed) = other.strip_prefix("random:") {
+                Ok(PlacementKind::Random(seed.parse().context("random:<seed>")?))
+            } else {
+                bail!("unknown placement '{other}' (contiguous | round_robin | random:<seed>)")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("xshare_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn default_is_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_file_roundtrip() {
+        let p = write_tmp(
+            "a.json",
+            r#"{"preset":"dsr1-mini","policy":"gpu:1:5","batch_size":8,
+               "ep":{"n_gpus":8,"placement":"round_robin"},"seed":7}"#,
+        );
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.preset, "dsr1-mini");
+        assert_eq!(cfg.policy, PolicyKind::GpuAware { k0: 1, per_gpu_budget: 5 });
+        assert_eq!(cfg.ep.as_ref().unwrap().n_gpus, 8);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let p = write_tmp("b.json", r#"{"presett":"oops"}"#);
+        let err = ServeConfig::from_json_file(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("presett"));
+    }
+
+    #[test]
+    fn gpu_policy_without_ep_rejected() {
+        let p = write_tmp("c.json", r#"{"policy":"gpu:1:5"}"#);
+        assert!(ServeConfig::from_json_file(&p).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            "--policy spec:1:0:4 --batch 4 --spec-len 3 --seed 9"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert_eq!(
+            cfg.policy,
+            PolicyKind::SpecAware { k0: 1, batch_budget: 0, req_budget: 4 }
+        );
+        assert_eq!(cfg.effective_batch(), 16);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn placement_parsing() {
+        assert_eq!(parse_placement("contiguous").unwrap(), PlacementKind::Contiguous);
+        assert_eq!(parse_placement("round-robin").unwrap(), PlacementKind::RoundRobin);
+        assert_eq!(parse_placement("random:5").unwrap(), PlacementKind::Random(5));
+        assert!(parse_placement("diagonal").is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Continuous batcher: a bounded pool of batch slots fed from a FIFO
+//! admission queue. Finished sequences free their slot immediately; the
+//! next queued request is admitted the same step (vLLM-style continuous
+//! batching, constrained to the padded `max_batch` of the compiled
+//! artifacts).
+
+use std::collections::VecDeque;
+
+use super::request::{Request, SeqState};
+
+pub struct Batcher {
+    slots: Vec<Option<SeqState>>,
+    queue: VecDeque<Request>,
+    /// Cap on concurrently running sequences (≤ slots.len()).
+    pub max_running: usize,
+}
+
+impl Batcher {
+    pub fn new(n_slots: usize, max_running: usize) -> Batcher {
+        assert!(max_running >= 1 && max_running <= n_slots);
+        Batcher { slots: (0..n_slots).map(|_| None).collect(), queue: VecDeque::new(), max_running }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn submit_all<I: IntoIterator<Item = Request>>(&mut self, reqs: I) {
+        for r in reqs {
+            self.submit(r);
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.running() > 0 || !self.queue.is_empty()
+    }
+
+    /// Fill free slots from the queue; returns newly admitted slot indices.
+    pub fn admit(&mut self) -> Vec<usize> {
+        let mut admitted = Vec::new();
+        while self.running() < self.max_running && !self.queue.is_empty() {
+            let slot = self
+                .slots
+                .iter()
+                .position(Option::is_none)
+                .expect("running < max_running <= n_slots implies a free slot");
+            let req = self.queue.pop_front().unwrap();
+            self.slots[slot] = Some(SeqState::new(req));
+            admitted.push(slot);
+        }
+        admitted
+    }
+
+    /// Live slot indices, ascending.
+    pub fn live_slots(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect()
+    }
+
+    pub fn seq(&self, slot: usize) -> &SeqState {
+        self.slots[slot].as_ref().expect("slot not occupied")
+    }
+
+    pub fn seq_mut(&mut self, slot: usize) -> &mut SeqState {
+        self.slots[slot].as_mut().expect("slot not occupied")
+    }
+
+    /// Free a slot, returning the finished sequence.
+    pub fn release(&mut self, slot: usize) -> SeqState {
+        self.slots[slot].take().expect("releasing empty slot")
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2], 4)
+    }
+
+    #[test]
+    fn admission_fills_up_to_cap() {
+        let mut b = Batcher::new(4, 2);
+        b.submit_all((0..5).map(req));
+        let admitted = b.admit();
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(b.running(), 2);
+        assert_eq!(b.queued(), 3);
+    }
+
+    #[test]
+    fn release_frees_slot_for_next() {
+        let mut b = Batcher::new(2, 2);
+        b.submit_all((0..3).map(req));
+        b.admit();
+        assert_eq!(b.running(), 2);
+        let done = b.release(0);
+        assert_eq!(done.req.id, 0);
+        assert_eq!(b.running(), 1);
+        let admitted = b.admit();
+        assert_eq!(admitted, vec![0]);
+        assert_eq!(b.seq(0).req.id, 2);
+    }
+
+    #[test]
+    fn live_slots_sorted() {
+        let mut b = Batcher::new(4, 4);
+        b.submit_all((0..3).map(req));
+        b.admit();
+        b.release(1);
+        assert_eq!(b.live_slots(), vec![0, 2]);
+        assert!(b.has_work());
+        b.release(0);
+        b.release(2);
+        assert!(!b.has_work());
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_release_panics() {
+        let mut b = Batcher::new(2, 2);
+        b.submit(req(0));
+        b.admit();
+        b.release(0);
+        b.release(0);
+    }
+}

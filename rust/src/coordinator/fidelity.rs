@@ -1,0 +1,129 @@
+//! Fidelity: the accuracy substitute (DESIGN.md §4).
+//!
+//! The paper measures task accuracy (AIME %, GPQA %) of the restricted
+//! model vs the vanilla baseline. The mini models are untrained, so task
+//! accuracy is undefined; what expert restriction actually causes is
+//! *routing distortion*, which we measure directly: run the same trace
+//! under the baseline and the policy and compare the generated token
+//! streams. `token_match` plays the role of accuracy (1.0 = identical
+//! behaviour, i.e. zero accuracy drop); "accuracy drop" in the reproduced
+//! tables is `(match - 1) × 100` percentage points of behavioural agreement.
+
+use std::collections::BTreeMap;
+
+/// Agreement between two output maps (request id → tokens).
+#[derive(Debug, Clone, Default)]
+pub struct Fidelity {
+    /// Fraction of positions (across all shared requests) with identical
+    /// tokens — positional exact match.
+    pub token_match: f64,
+    /// Mean normalized longest common prefix.
+    pub prefix_match: f64,
+    /// Fraction of requests with fully identical outputs.
+    pub exact_requests: f64,
+    pub n_requests: usize,
+}
+
+impl Fidelity {
+    /// Paper-style "accuracy drop" in points (0 = none, negative = drop).
+    pub fn accuracy_drop_pts(&self) -> f64 {
+        (self.token_match - 1.0) * 100.0
+    }
+}
+
+pub fn compare(
+    baseline: &BTreeMap<u64, Vec<u32>>,
+    candidate: &BTreeMap<u64, Vec<u32>>,
+) -> Fidelity {
+    let mut pos_total = 0usize;
+    let mut pos_match = 0usize;
+    let mut prefix_sum = 0.0f64;
+    let mut exact = 0usize;
+    let mut n = 0usize;
+    for (id, base) in baseline {
+        let Some(cand) = candidate.get(id) else { continue };
+        n += 1;
+        let len = base.len().max(cand.len()).max(1);
+        pos_total += len;
+        let mut prefix = 0usize;
+        let mut still_prefix = true;
+        for i in 0..len {
+            let same = base.get(i).is_some() && base.get(i) == cand.get(i);
+            if same {
+                pos_match += 1;
+                if still_prefix {
+                    prefix += 1;
+                }
+            } else {
+                still_prefix = false;
+            }
+        }
+        prefix_sum += prefix as f64 / len as f64;
+        if base == cand {
+            exact += 1;
+        }
+    }
+    if n == 0 {
+        return Fidelity::default();
+    }
+    Fidelity {
+        token_match: pos_match as f64 / pos_total as f64,
+        prefix_match: prefix_sum / n as f64,
+        exact_requests: exact as f64 / n as f64,
+        n_requests: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(v: Vec<(u64, Vec<u32>)>) -> BTreeMap<u64, Vec<u32>> {
+        v.into_iter().collect()
+    }
+
+    #[test]
+    fn identical_outputs_are_perfect() {
+        let a = map(vec![(1, vec![1, 2, 3]), (2, vec![4])]);
+        let f = compare(&a, &a.clone());
+        assert_eq!(f.token_match, 1.0);
+        assert_eq!(f.prefix_match, 1.0);
+        assert_eq!(f.exact_requests, 1.0);
+        assert_eq!(f.accuracy_drop_pts(), 0.0);
+    }
+
+    #[test]
+    fn partial_divergence_measured() {
+        let a = map(vec![(1, vec![1, 2, 3, 4])]);
+        let b = map(vec![(1, vec![1, 2, 9, 4])]);
+        let f = compare(&a, &b);
+        assert!((f.token_match - 0.75).abs() < 1e-12);
+        assert!((f.prefix_match - 0.5).abs() < 1e-12);
+        assert_eq!(f.exact_requests, 0.0);
+        assert!(f.accuracy_drop_pts() < 0.0);
+    }
+
+    #[test]
+    fn length_mismatch_penalized() {
+        let a = map(vec![(1, vec![1, 2, 3, 4])]);
+        let b = map(vec![(1, vec![1, 2])]);
+        let f = compare(&a, &b);
+        assert!((f.token_match - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_requests_skipped() {
+        let a = map(vec![(1, vec![1]), (2, vec![2])]);
+        let b = map(vec![(1, vec![1])]);
+        let f = compare(&a, &b);
+        assert_eq!(f.n_requests, 1);
+        assert_eq!(f.token_match, 1.0);
+    }
+
+    #[test]
+    fn empty_maps_yield_default() {
+        let f = compare(&BTreeMap::new(), &BTreeMap::new());
+        assert_eq!(f.n_requests, 0);
+        assert_eq!(f.token_match, 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! The L3 coordinator: request lifecycle, continuous batching, the decode
+//! scheduler with XShare selection on the request path, speculative
+//! decoding, and the fidelity comparator used as the accuracy substitute.
+
+pub mod batcher;
+pub mod fidelity;
+pub mod request;
+pub mod scheduler;
+pub mod speculative;
+
+pub use batcher::Batcher;
+pub use fidelity::{compare, Fidelity};
+pub use request::{Phase, Request, SeqState};
+pub use scheduler::{RunReport, Scheduler};
+pub use speculative::{effective_batch_scores, greedy_accept};

@@ -1,0 +1,130 @@
+//! Request lifecycle types: what enters the queue, how a running sequence
+//! tracks its prompt/decode progress inside a batch slot.
+
+/// An inference request as submitted by a client or a trace.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub domain: String,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request { id, domain: String::new(), prompt, max_new_tokens }
+    }
+}
+
+/// Phase of a sequence occupying a slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Feeding prompt tokens (one per step — decode-style prefill).
+    Prefill,
+    /// Generating new tokens.
+    Decode,
+}
+
+/// A sequence bound to a batch slot.
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub req: Request,
+    /// Next KV position to write (= tokens processed so far).
+    pub pos: usize,
+    /// Next prompt index to feed (prefill).
+    pub prompt_idx: usize,
+    /// Tokens generated so far.
+    pub generated: Vec<u32>,
+    /// Token to feed at the next step.
+    pub next_token: u32,
+    pub phase: Phase,
+}
+
+impl SeqState {
+    pub fn new(req: Request) -> SeqState {
+        assert!(!req.prompt.is_empty(), "empty prompt");
+        let first = req.prompt[0];
+        SeqState {
+            req,
+            pos: 0,
+            prompt_idx: 0,
+            generated: Vec::new(),
+            next_token: first,
+            phase: Phase::Prefill,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Decode && self.generated.len() >= self.req.max_new_tokens
+    }
+
+    /// Remaining budget of new tokens.
+    pub fn remaining(&self) -> usize {
+        self.req.max_new_tokens.saturating_sub(self.generated.len())
+    }
+
+    /// Commit one generated token (decode phase).
+    pub fn commit(&mut self, tok: u32) {
+        debug_assert_eq!(self.phase, Phase::Decode);
+        self.generated.push(tok);
+        self.next_token = tok;
+        self.pos += 1;
+    }
+
+    /// Advance after a prefill step; returns true if the prompt is finished
+    /// and the given first generated token was committed.
+    pub fn advance_prefill(&mut self, logits_argmax: u32) -> bool {
+        debug_assert_eq!(self.phase, Phase::Prefill);
+        self.pos += 1;
+        self.prompt_idx += 1;
+        if self.prompt_idx < self.req.prompt.len() {
+            self.next_token = self.req.prompt[self.prompt_idx];
+            false
+        } else {
+            // prompt exhausted: this step's logits predict the first output
+            self.phase = Phase::Decode;
+            self.generated.push(logits_argmax);
+            self.next_token = logits_argmax;
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_walks_prompt_then_decodes() {
+        let req = Request::new(1, vec![10, 11, 12], 2);
+        let mut s = SeqState::new(req);
+        assert_eq!(s.phase, Phase::Prefill);
+        assert_eq!(s.next_token, 10);
+        assert!(!s.advance_prefill(99));
+        assert_eq!(s.next_token, 11);
+        assert!(!s.advance_prefill(99));
+        assert_eq!(s.next_token, 12);
+        assert!(s.advance_prefill(42)); // prompt done, first token committed
+        assert_eq!(s.phase, Phase::Decode);
+        assert_eq!(s.generated, vec![42]);
+        assert_eq!(s.pos, 3);
+        assert!(!s.is_done());
+        s.commit(7);
+        assert!(s.is_done());
+        assert_eq!(s.generated, vec![42, 7]);
+        assert_eq!(s.pos, 4);
+    }
+
+    #[test]
+    fn remaining_budget() {
+        let mut s = SeqState::new(Request::new(1, vec![1], 3));
+        assert!(s.advance_prefill(5));
+        assert_eq!(s.remaining(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn rejects_empty_prompt() {
+        SeqState::new(Request::new(1, vec![], 1));
+    }
+}

@@ -1,0 +1,105 @@
+//! Speculative-decoding primitives: greedy acceptance and per-layer
+//! effective-batch score assembly. The verify-cycle orchestration lives in
+//! [`super::scheduler`]; the logic here is pure and unit-tested.
+
+use crate::selection::ScoreMatrix;
+
+/// Greedy acceptance: compare draft tokens against the target's argmax at
+/// each position. Returns the committed tokens: the accepted prefix of the
+/// drafts plus one bonus/correction token from the target.
+///
+/// `target_argmax[j]` = target's argmax after processing verify token j
+/// (j=0 is the last committed token, j=1..=L_s are the drafts).
+pub fn greedy_accept(drafts: &[u32], target_argmax: &[u32]) -> (usize, Vec<u32>) {
+    assert_eq!(target_argmax.len(), drafts.len() + 1);
+    let mut committed = Vec::with_capacity(drafts.len() + 1);
+    let mut n_acc = 0;
+    for (j, &d) in drafts.iter().enumerate() {
+        if target_argmax[j] == d {
+            committed.push(d);
+            n_acc += 1;
+        } else {
+            break;
+        }
+    }
+    // bonus (all accepted) or correction (first mismatch) token
+    committed.push(target_argmax[n_acc]);
+    (n_acc, committed)
+}
+
+/// Assemble the effective-batch score matrix for one layer from the
+/// per-sub-step padded matrices of the scoring pass.
+///
+/// `per_step[j]` is the padded `[B_max × N]` matrix of verify sub-step j;
+/// `slots` are the live row indices. Output rows are ordered
+/// (slot-major): request q's tokens occupy rows `q*(1+L_s) .. (q+1)*(1+L_s)`,
+/// and the returned groups encode exactly that — the structure Algorithm 4
+/// exploits.
+pub fn effective_batch_scores(
+    per_step: &[&ScoreMatrix],
+    slots: &[usize],
+) -> (ScoreMatrix, Vec<Vec<usize>>) {
+    assert!(!per_step.is_empty());
+    let n = per_step[0].n_experts();
+    let steps = per_step.len();
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(slots.len() * steps);
+    let mut groups = Vec::with_capacity(slots.len());
+    for &slot in slots {
+        let mut group = Vec::with_capacity(steps);
+        for m in per_step {
+            assert_eq!(m.n_experts(), n);
+            group.push(rows.len());
+            rows.push(m.row(slot).to_vec());
+        }
+        groups.push(group);
+    }
+    (ScoreMatrix::from_rows(&rows), groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_accepted_gets_bonus() {
+        let (n, committed) = greedy_accept(&[5, 6, 7], &[5, 6, 7, 8]);
+        assert_eq!(n, 3);
+        assert_eq!(committed, vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn first_mismatch_corrects_and_stops() {
+        let (n, committed) = greedy_accept(&[5, 6, 7], &[5, 9, 7, 8]);
+        assert_eq!(n, 1);
+        assert_eq!(committed, vec![5, 9]);
+    }
+
+    #[test]
+    fn immediate_mismatch_commits_one() {
+        let (n, committed) = greedy_accept(&[5], &[4, 0]);
+        assert_eq!(n, 0);
+        assert_eq!(committed, vec![4]);
+    }
+
+    #[test]
+    fn empty_drafts_commit_target_token() {
+        let (n, committed) = greedy_accept(&[], &[3]);
+        assert_eq!(n, 0);
+        assert_eq!(committed, vec![3]);
+    }
+
+    #[test]
+    fn effective_scores_group_per_slot() {
+        let a = ScoreMatrix::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0], vec![3.0, 0.0]]);
+        let b = ScoreMatrix::from_rows(&[vec![0.0, 1.0], vec![0.0, 2.0], vec![0.0, 3.0]]);
+        let (m, groups) = effective_batch_scores(&[&a, &b], &[0, 2]);
+        assert_eq!(m.n_tokens(), 4);
+        assert_eq!(groups, vec![vec![0, 1], vec![2, 3]]);
+        // slot 0: rows from a then b
+        assert_eq!(m.row(0), &[1.0, 0.0]);
+        assert_eq!(m.row(1), &[0.0, 1.0]);
+        // slot 2
+        assert_eq!(m.row(2), &[3.0, 0.0]);
+        assert_eq!(m.row(3), &[0.0, 3.0]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Expert-parallelism substrate (§5 of the paper): expert→GPU placement,
+//! per-GPU load accounting, and the interconnect/straggler model that turns
+//! MaxLoad into layer latency.
+
+pub mod comm;
+pub mod placement;
+
+pub use comm::EpCostModel;
+pub use placement::{Placement, PlacementKind};

@@ -1,0 +1,156 @@
+//! Expert → GPU placement for expert-parallel (EP) deployments (§5).
+//!
+//! The experts of each layer form a partition E = ∪_g E_g across G GPU
+//! groups. Serving systems place experts contiguously (DeepSeek-style),
+//! round-robin, or randomly (after load-balancing shuffles); the placement
+//! policy is an ablation axis in `benches/ablations.rs`.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Experts [0, N/G) on GPU 0, [N/G, 2N/G) on GPU 1, …
+    Contiguous,
+    /// Expert j on GPU j mod G.
+    RoundRobin,
+    /// Seeded random permutation, then contiguous blocks.
+    Random(u64),
+}
+
+/// An expert → GPU-group assignment.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    n_experts: usize,
+    n_gpus: usize,
+    /// gpu_of[j] = GPU group hosting expert j.
+    gpu_of: Vec<usize>,
+    /// experts_of[g] = experts hosted on GPU g (ascending).
+    experts_of: Vec<Vec<usize>>,
+}
+
+impl Placement {
+    pub fn new(n_experts: usize, n_gpus: usize, kind: PlacementKind) -> Placement {
+        assert!(n_gpus > 0 && n_experts >= n_gpus, "need n_experts >= n_gpus >= 1");
+        let order: Vec<usize> = match kind {
+            PlacementKind::Contiguous | PlacementKind::RoundRobin => (0..n_experts).collect(),
+            PlacementKind::Random(seed) => {
+                let mut idx: Vec<usize> = (0..n_experts).collect();
+                Rng::new(seed).shuffle(&mut idx);
+                idx
+            }
+        };
+        let mut gpu_of = vec![0usize; n_experts];
+        match kind {
+            PlacementKind::RoundRobin => {
+                for (pos, &j) in order.iter().enumerate() {
+                    gpu_of[j] = pos % n_gpus;
+                }
+            }
+            _ => {
+                // contiguous blocks over `order` (balanced sizes, remainder
+                // spread over the first GPUs)
+                let base = n_experts / n_gpus;
+                let extra = n_experts % n_gpus;
+                let mut pos = 0;
+                for g in 0..n_gpus {
+                    let take = base + usize::from(g < extra);
+                    for &j in &order[pos..pos + take] {
+                        gpu_of[j] = g;
+                    }
+                    pos += take;
+                }
+            }
+        }
+        let mut experts_of = vec![Vec::new(); n_gpus];
+        for (j, &g) in gpu_of.iter().enumerate() {
+            experts_of[g].push(j);
+        }
+        Placement { n_experts, n_gpus, gpu_of, experts_of }
+    }
+
+    #[inline]
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    #[inline]
+    pub fn n_gpus(&self) -> usize {
+        self.n_gpus
+    }
+
+    #[inline]
+    pub fn gpu_of(&self, expert: usize) -> usize {
+        self.gpu_of[expert]
+    }
+
+    pub fn experts_on(&self, gpu: usize) -> &[usize] {
+        &self.experts_of[gpu]
+    }
+
+    /// Per-GPU load Load_g(S) = |S ∩ E_g| for a selected set.
+    pub fn loads(&self, selected: &crate::selection::ExpertSet) -> Vec<usize> {
+        let mut loads = vec![0usize; self.n_gpus];
+        for j in selected.iter() {
+            loads[self.gpu_of[j]] += 1;
+        }
+        loads
+    }
+
+    /// MaxLoad(S) — the synchronization straggler (§5.1).
+    pub fn max_load(&self, selected: &crate::selection::ExpertSet) -> usize {
+        self.loads(selected).into_iter().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::ExpertSet;
+
+    #[test]
+    fn contiguous_blocks() {
+        let p = Placement::new(8, 2, PlacementKind::Contiguous);
+        assert_eq!(p.experts_on(0), &[0, 1, 2, 3]);
+        assert_eq!(p.experts_on(1), &[4, 5, 6, 7]);
+        assert_eq!(p.gpu_of(5), 1);
+    }
+
+    #[test]
+    fn round_robin() {
+        let p = Placement::new(6, 3, PlacementKind::RoundRobin);
+        assert_eq!(p.gpu_of(0), 0);
+        assert_eq!(p.gpu_of(1), 1);
+        assert_eq!(p.gpu_of(5), 2);
+        assert_eq!(p.experts_on(1), &[1, 4]);
+    }
+
+    #[test]
+    fn uneven_split_is_balanced() {
+        let p = Placement::new(10, 3, PlacementKind::Contiguous);
+        let sizes: Vec<usize> = (0..3).map(|g| p.experts_on(g).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn random_is_seeded_partition() {
+        let a = Placement::new(32, 4, PlacementKind::Random(1));
+        let b = Placement::new(32, 4, PlacementKind::Random(1));
+        let c = Placement::new(32, 4, PlacementKind::Random(2));
+        assert_eq!(a.gpu_of, b.gpu_of);
+        assert_ne!(a.gpu_of, c.gpu_of);
+        // still a partition with balanced sizes
+        let mut all: Vec<usize> = (0..4).flat_map(|g| a.experts_on(g).to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn loads_and_max_load() {
+        let p = Placement::new(8, 2, PlacementKind::Contiguous);
+        let s = ExpertSet::from_indices(8, &[0, 1, 2, 4]);
+        assert_eq!(p.loads(&s), vec![3, 1]);
+        assert_eq!(p.max_load(&s), 3);
+        assert_eq!(p.max_load(&ExpertSet::empty(8)), 0);
+    }
+}

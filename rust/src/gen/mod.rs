@@ -1,0 +1,17 @@
+//! Synthetic workload substrate.
+//!
+//! The paper evaluates on proprietary-infrastructure runs over public
+//! datasets; this repo substitutes (DESIGN.md §4):
+//!
+//! * [`gating`] — a controlled-correlation gate-score generator (domain
+//!   affinity + request preference + AR(1) token noise) for the activation
+//!   and overlap studies (Fig 1, Fig 3) and for large selection sweeps.
+//! * [`trace`]  — request traces over five synthetic "datasets" with
+//!   distinct vocabulary regions and length profiles, replayed through the
+//!   real mini model for the OTPS/fidelity experiments (Fig 4-8, Tables).
+
+pub mod gating;
+pub mod trace;
+
+pub use gating::{batch_scores, mean_topk_overlap, Domain, GatingParams, RequestGating};
+pub use trace::{TraceDomain, TraceGenerator, TraceRequest};

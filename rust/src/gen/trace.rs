@@ -1,0 +1,204 @@
+//! Request-trace generator: the workloads the benches and the E2E driver
+//! replay against the server.
+//!
+//! Domains play the role of the paper's evaluation datasets (AIME2025,
+//! GPQA, MMLU-Pro, IFEval, AA-LCR): each domain biases its prompts toward a
+//! distinct region of the vocabulary, which gives the *real* mini model
+//! domain-clustered routing, and carries its own length profile (AA-LCR =
+//! long prompts, AIME = long generations, …).
+
+use crate::util::rng::Rng;
+
+/// A synthetic evaluation domain.
+#[derive(Debug, Clone)]
+pub struct TraceDomain {
+    pub name: String,
+    /// Center of this domain's token distribution in [0, 1) vocab space.
+    pub vocab_center: f64,
+    /// Spread of the token distribution.
+    pub vocab_spread: f64,
+    /// Prompt length range.
+    pub prompt_len: (usize, usize),
+    /// Generation length range.
+    pub gen_len: (usize, usize),
+}
+
+impl TraceDomain {
+    pub fn standard_suite() -> Vec<TraceDomain> {
+        vec![
+            TraceDomain {
+                name: "aime2025".into(),
+                vocab_center: 0.15,
+                vocab_spread: 0.08,
+                prompt_len: (8, 16),
+                gen_len: (24, 48),
+            },
+            TraceDomain {
+                name: "gpqa".into(),
+                vocab_center: 0.40,
+                vocab_spread: 0.10,
+                prompt_len: (12, 24),
+                gen_len: (12, 32),
+            },
+            TraceDomain {
+                name: "mmlu-pro".into(),
+                vocab_center: 0.65,
+                vocab_spread: 0.12,
+                prompt_len: (8, 20),
+                gen_len: (8, 24),
+            },
+            TraceDomain {
+                name: "ifeval".into(),
+                vocab_center: 0.85,
+                vocab_spread: 0.08,
+                prompt_len: (10, 18),
+                gen_len: (16, 32),
+            },
+            TraceDomain {
+                name: "aa-lcr".into(),
+                vocab_center: 0.55,
+                vocab_spread: 0.25,
+                prompt_len: (24, 48),
+                gen_len: (16, 40),
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<TraceDomain> {
+        Self::standard_suite().into_iter().find(|d| d.name == name)
+    }
+
+    /// Sample one prompt token id.
+    fn sample_token(&self, vocab: usize, rng: &mut Rng) -> u32 {
+        loop {
+            let x = self.vocab_center + self.vocab_spread * rng.normal();
+            if (0.0..1.0).contains(&x) {
+                return (x * vocab as f64) as u32;
+            }
+        }
+    }
+}
+
+/// One request of a trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub id: u64,
+    pub domain: String,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Arrival offset from trace start, seconds (Poisson arrivals).
+    pub arrival_s: f64,
+}
+
+/// Generate a trace of `n` requests over the given domains.
+pub struct TraceGenerator {
+    pub vocab: usize,
+    pub seed: u64,
+    /// Mean request arrival rate (req/s); 0 = all arrive at t=0.
+    pub arrival_rate: f64,
+}
+
+impl TraceGenerator {
+    pub fn new(vocab: usize, seed: u64) -> TraceGenerator {
+        TraceGenerator { vocab, seed, arrival_rate: 0.0 }
+    }
+
+    /// `mix[i]` = domain of request i (cycled if shorter than `n`).
+    pub fn generate(&self, domains: &[TraceDomain], n: usize) -> Vec<TraceRequest> {
+        assert!(!domains.is_empty());
+        let mut rng = Rng::new(self.seed ^ 0x7ACE);
+        let mut t = 0.0f64;
+        (0..n)
+            .map(|i| {
+                let d = &domains[i % domains.len()];
+                let plen = d.prompt_len.0 + rng.below(d.prompt_len.1 - d.prompt_len.0 + 1);
+                let glen = d.gen_len.0 + rng.below(d.gen_len.1 - d.gen_len.0 + 1);
+                let prompt = (0..plen).map(|_| d.sample_token(self.vocab, &mut rng)).collect();
+                if self.arrival_rate > 0.0 {
+                    t += rng.exp(self.arrival_rate);
+                }
+                TraceRequest {
+                    id: i as u64,
+                    domain: d.name.clone(),
+                    prompt,
+                    max_new_tokens: glen,
+                    arrival_s: t,
+                }
+            })
+            .collect()
+    }
+
+    /// The paper's §6.3 mixed batch: one request from each of GPQA,
+    /// AIME2025, MMLU-Pro, AA-LCR.
+    pub fn mixed_batch(&self) -> Vec<TraceRequest> {
+        let order = ["gpqa", "aime2025", "mmlu-pro", "aa-lcr"];
+        let domains: Vec<TraceDomain> =
+            order.iter().map(|n| TraceDomain::by_name(n).unwrap()).collect();
+        self.generate(&domains, 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_in_vocab() {
+        let g = TraceGenerator::new(512, 42);
+        let doms = TraceDomain::standard_suite();
+        let a = g.generate(&doms, 20);
+        let b = g.generate(&doms, 20);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert!(x.prompt.iter().all(|&t| (t as usize) < 512));
+            assert!(x.max_new_tokens > 0);
+        }
+    }
+
+    #[test]
+    fn domains_have_distinct_token_profiles() {
+        let g = TraceGenerator::new(512, 7);
+        let aime = TraceDomain::by_name("aime2025").unwrap();
+        let ifeval = TraceDomain::by_name("ifeval").unwrap();
+        let a = g.generate(&[aime], 50);
+        let b = g.generate(&[ifeval], 50);
+        let mean = |rs: &[TraceRequest]| {
+            let (s, n) = rs.iter().flat_map(|r| &r.prompt).fold((0.0, 0usize), |(s, n), &t| {
+                (s + t as f64, n + 1)
+            });
+            s / n as f64
+        };
+        assert!(mean(&a) + 100.0 < mean(&b), "domains overlap in vocab space");
+    }
+
+    #[test]
+    fn mixed_batch_covers_four_datasets() {
+        let g = TraceGenerator::new(512, 0);
+        let batch = g.mixed_batch();
+        let names: Vec<&str> = batch.iter().map(|r| r.domain.as_str()).collect();
+        assert_eq!(names, vec!["gpqa", "aime2025", "mmlu-pro", "aa-lcr"]);
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let mut g = TraceGenerator::new(512, 3);
+        g.arrival_rate = 10.0;
+        let trace = g.generate(&TraceDomain::standard_suite(), 30);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        assert!(trace.last().unwrap().arrival_s > 0.0);
+    }
+
+    #[test]
+    fn aalcr_prompts_are_longest() {
+        let g = TraceGenerator::new(512, 11);
+        let lcr = g.generate(&[TraceDomain::by_name("aa-lcr").unwrap()], 30);
+        let aime = g.generate(&[TraceDomain::by_name("aime2025").unwrap()], 30);
+        let avg = |rs: &[TraceRequest]| {
+            rs.iter().map(|r| r.prompt.len()).sum::<usize>() as f64 / rs.len() as f64
+        };
+        assert!(avg(&lcr) > avg(&aime));
+    }
+}

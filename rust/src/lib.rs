@@ -1,0 +1,44 @@
+//! # XShare — collaborative in-batch expert sharing for faster MoE inference
+//!
+//! Rust/JAX/Pallas reproduction of *XShare: Collaborative in-Batch Expert
+//! Sharing for Faster MoE Inference* (Vankov et al., 2026).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack
+//! (see `DESIGN.md`): JAX+Pallas author the model at build time and AOT-lower
+//! it to HLO text; this crate loads the artifacts via the PJRT C API and owns
+//! the entire request path — admission, continuous batching, speculative
+//! decoding, KV-cache state, and, at its heart, the paper's contribution:
+//! **batch-aware expert selection** ([`selection`]).
+//!
+//! Module map:
+//!
+//! * [`selection`] — Algorithms 1–6 from the paper plus published baselines.
+//! * [`runtime`]   — PJRT client wrapper: load/compile/execute HLO artifacts.
+//! * [`model`]     — decode-step walker: embed → L×(attn+router → select →
+//!   MoE) → lm_head, KV caches, sampling, draft model.
+//! * [`coordinator`] — request lifecycle: queues, continuous batcher,
+//!   decode scheduler, speculative verify loop.
+//! * [`server`]    — JSON-lines TCP front-end + client.
+//! * [`memsim`]    — H100/TPU memory-hierarchy cost model → OTPS estimates.
+//! * [`ep`]        — expert-parallel placement and per-GPU load accounting.
+//! * [`gen`]       — synthetic workload generator (domain-clustered gate
+//!   scores, speculative correlation, request traces).
+//! * [`metrics`]   — counters, histograms, OTPS accounting, report dumps.
+//! * [`config`]    — presets + file/CLI configuration.
+//! * [`util`]      — offline substrates: JSON codec, PRNG, math helpers,
+//!   property-test harness (the baked registry carries no serde/rand/etc.,
+//!   so these are implemented in-tree; DESIGN.md §Offline-substrates).
+
+pub mod config;
+pub mod coordinator;
+pub mod ep;
+pub mod gen;
+pub mod memsim;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod selection;
+pub mod server;
+pub mod util;
+
+pub use selection::{ScoreMatrix, SelectionPolicy};

@@ -1,0 +1,166 @@
+//! `xshare` — launcher CLI for the XShare serving stack.
+//!
+//! Subcommands:
+//!   serve   --preset gptoss-mini --policy batch:24:1 [--addr HOST:PORT] …
+//!   run     --preset tiny --policy spec:1:0:4 --requests 16 [--spec-len 3] …
+//!           offline trace run; prints the metrics JSON
+//!   client  --addr HOST:PORT --prompt 1,2,3 --max-new-tokens 8
+//!   info    --preset tiny    print the manifest summary
+//!
+//! Any flag of `ServeConfig` can also come from `--config file.json`
+//! (CLI flags win).
+
+use anyhow::{bail, Context, Result};
+
+use xshare::config::ServeConfig;
+use xshare::coordinator::{Request, Scheduler};
+use xshare::gen::{TraceDomain, TraceGenerator};
+use xshare::model::MoeModel;
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+use xshare::server::{Client, Server};
+use xshare::util::cli::Args;
+use xshare::util::json::Json;
+
+const USAGE: &str = "usage: xshare <serve|run|client|info> [--flags]
+  serve  --preset P --policy POL [--batch N] [--spec-len L] [--addr A] [--config F]
+  run    --preset P --policy POL --requests N [--batch N] [--spec-len L] [--seed S]
+  client --addr A --prompt 1,2,3 [--max-new-tokens N] [--id I]
+  info   --preset P
+policies: vanilla | batch:<m>:<k0> | spec:<k0>:<m>:<mr> | gpu:<k0>:<mg> |
+          lynx:<drop> | skip:<beta> | opp:<k'>";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<ServeConfig> {
+    let base = match args.get("config") {
+        Some(path) => ServeConfig::from_json_file(std::path::Path::new(path))?,
+        None => ServeConfig::default(),
+    };
+    base.apply_args(args)
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "serve" => serve(&args),
+        "run" => run_offline(&args),
+        "client" => client(&args),
+        "info" => info(&args),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dir = artifacts_root().join(&cfg.preset);
+    eprintln!("loading preset '{}' from {dir:?} …", cfg.preset);
+    let server = Server::start_from_dir(dir, cfg.clone())?;
+    println!("xshare serving preset={} policy={} on {}", cfg.preset, cfg.policy, server.addr);
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn run_offline(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n_requests = args.usize_or("requests", 8);
+    let dir = artifacts_root().join(&cfg.preset);
+    let manifest = Manifest::load(&dir)?;
+    let vocab = manifest.model.vocab;
+    let mut model = MoeModel::new(Engine::load(manifest)?)?;
+
+    let mut gen = TraceGenerator::new(vocab, cfg.seed);
+    gen.arrival_rate = 0.0;
+    let trace = gen.generate(&TraceDomain::standard_suite(), n_requests);
+    let requests: Vec<Request> = trace
+        .into_iter()
+        .map(|t| {
+            let mut r =
+                Request::new(t.id, t.prompt, cfg.max_new_tokens.min(t.max_new_tokens));
+            r.domain = t.domain;
+            r
+        })
+        .collect();
+
+    let report = Scheduler::new(&mut model, cfg.clone())?.run(requests)?;
+    println!("{}", report.metrics.to_json().dump());
+    if args.bool("profile") {
+        let st = model.engine().stats();
+        for (name, (calls, secs)) in &st.per_program {
+            eprintln!(
+                "  {name:<12} {calls:>5} calls  {:>8.1} ms total  {:>7.2} ms/call",
+                secs * 1e3,
+                secs * 1e3 / *calls as f64
+            );
+        }
+    }
+    eprintln!(
+        "policy={} requests={} otps={:.2} mean_activated={:.1} wall={:.2}s",
+        cfg.policy,
+        report.outputs.len(),
+        report.metrics.otps(),
+        report.metrics.mean_activated(),
+        report.metrics.wall_seconds
+    );
+    Ok(())
+}
+
+fn client(args: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr =
+        args.get("addr").context("--addr required")?.parse().context("bad --addr")?;
+    let prompt: Vec<u32> = args
+        .get("prompt")
+        .context("--prompt required (comma-separated token ids)")?
+        .split(',')
+        .map(|t| t.trim().parse().context("bad token id"))
+        .collect::<Result<_>>()?;
+    let mut req = Request::new(
+        args.usize_or("id", 0) as u64,
+        prompt,
+        args.usize_or("max-new-tokens", 16),
+    );
+    req.domain = args.str_or("domain", "");
+    let mut client = Client::connect(&addr)?;
+    let resp = client.generate(&req)?;
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("id", Json::num(resp.id as f64)),
+            ("tokens", Json::arr(resp.tokens.iter().map(|&t| Json::num(t as f64)))),
+        ])
+        .dump()
+    );
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "tiny");
+    let manifest = Manifest::load(&artifacts_root().join(&preset))?;
+    let m = &manifest.model;
+    println!("preset          {}", m.name);
+    println!(
+        "geometry        d={} heads={} ff={} layers={} vocab={}",
+        m.d_model, m.n_heads, m.d_ff, m.n_layers, m.vocab
+    );
+    println!("moe             N={} top-k={} shared={}", m.n_experts, m.top_k, m.n_shared);
+    println!("serving         max_batch={} max_seq={}", m.max_batch, m.max_seq);
+    println!("draft           layers={} d={}", m.draft_layers, m.draft_d_model);
+    println!(
+        "programs        {}",
+        manifest.programs.keys().cloned().collect::<Vec<_>>().join(", ")
+    );
+    println!("weights         {} tensors", manifest.weights.len());
+    println!("selftests       {}", manifest.selftests.len());
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Memory-hierarchy cost model → simulated decode latency and OTPS.
+//!
+//! The paper's effect lives in the memory-bandwidth-bound decode regime of
+//! H100s: every activated expert's weights must stream from HBM each step,
+//! so step latency — and therefore output-tokens-per-second — tracks the
+//! *union* of activated experts. This box cannot reproduce that regime
+//! natively (CPU PJRT, fp32, interpret-mode kernels), so OTPS is produced by
+//! a calibrated analytic model fed with the **exactly measured** per-layer
+//! expert activations from the real decode loop (DESIGN.md §3/§4).
+//!
+//! * [`profiles`] — hardware profiles (H100 SXM, TPU-v4-ish) and cost
+//!   geometries of the paper's evaluation models at full scale
+//!   (GPT-OSS-120B in MXFP4, DeepSeek-R1 in FP8).
+//! * [`decode_cost`] — per-step latency: fixed overheads + weight streaming
+//!   (attention & shared + activated experts) + MXU/tensor-core compute,
+//!   plus the draft-model and EP variants.
+
+pub mod decode_cost;
+pub mod profiles;
+
+pub use decode_cost::{DecodeCostModel, StepBreakdown};
+pub use profiles::{CostGeometry, HardwareProfile};

@@ -1,0 +1,177 @@
+//! Hardware profiles and full-scale model cost geometries.
+//!
+//! The *routing decisions* in this repo come from the mini presets (same
+//! N/k geometry as the paper's models); the *cost* of a decode step is
+//! computed against the paper's models at full scale, so simulated OTPS
+//! lands in the same regime the paper reports (85–200 OTPS for GPT-OSS-120B
+//! on one H100). Calibration notes live in EXPERIMENTS.md §Calibration.
+
+use anyhow::{bail, Result};
+
+/// An accelerator profile (decode-relevant parameters only).
+#[derive(Debug, Clone)]
+pub struct HardwareProfile {
+    pub name: String,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Dense matmul throughput, FLOP/s (bf16 tensor-core / MXU).
+    pub flops: f64,
+    /// Per-kernel-launch / per-layer fixed overhead, seconds.
+    pub layer_overhead_s: f64,
+    /// Per-step scheduler+sampler overhead, seconds.
+    pub step_overhead_s: f64,
+}
+
+impl HardwareProfile {
+    pub fn by_name(name: &str) -> Result<HardwareProfile> {
+        match name {
+            // H100 SXM5: 3.35 TB/s HBM3, ~990 TFLOPS bf16 dense.
+            "h100" => Ok(HardwareProfile {
+                name: "h100".into(),
+                hbm_bw: 3.35e12,
+                flops: 989e12,
+                layer_overhead_s: 6e-6,
+                step_overhead_s: 150e-6,
+            }),
+            // TPU v4: 1.2 TB/s HBM2e, 275 TFLOPS bf16 MXU. The Pallas
+            // kernel's BlockSpec schedule targets this memory hierarchy.
+            "tpuv4" => Ok(HardwareProfile {
+                name: "tpuv4".into(),
+                hbm_bw: 1.2e12,
+                flops: 275e12,
+                layer_overhead_s: 10e-6,
+                step_overhead_s: 200e-6,
+            }),
+            other => bail!("unknown hardware profile '{other}' (h100 | tpuv4)"),
+        }
+    }
+}
+
+/// Decode-cost geometry of one evaluation model at full scale.
+#[derive(Debug, Clone)]
+pub struct CostGeometry {
+    pub name: String,
+    /// MoE layers.
+    pub n_layers: usize,
+    /// Routed experts per layer.
+    pub n_experts: usize,
+    /// Native top-k.
+    pub top_k: usize,
+    /// Bytes of one routed expert's weights (quantized serving format).
+    pub expert_bytes: f64,
+    /// Bytes per layer that load regardless of routing: attention weights,
+    /// norms, router, shared experts.
+    pub dense_bytes_per_layer: f64,
+    /// KV-cache bytes read per token per layer (grows with context; fixed
+    /// at a representative 2k context here).
+    pub kv_bytes_per_token: f64,
+    /// FLOPs per token per activated expert (up+down projections ×2).
+    pub flops_per_token_expert: f64,
+    /// FLOPs per token per layer for attention+dense parts.
+    pub flops_per_token_dense: f64,
+    /// Draft model: bytes streamed per draft decode step (0 = no draft).
+    pub draft_bytes_per_step: f64,
+}
+
+impl CostGeometry {
+    /// Map an artifact preset to its full-scale cost geometry.
+    pub fn for_preset(preset: &str) -> Result<CostGeometry> {
+        match preset {
+            // GPT-OSS-120B: 36 layers, 128 experts (top-4), d=2880,
+            // expert FFN (SwiGLU) ≈ 24.9M params, served in MXFP4
+            // (~0.53 B/param incl. scales) ⇒ ~13 MB/expert.
+            // Attention+router+norms ≈ 38M params/layer in bf16.
+            "gptoss-mini" | "gptoss" => Ok(CostGeometry {
+                name: "gpt-oss-120b".into(),
+                n_layers: 36,
+                n_experts: 128,
+                top_k: 4,
+                expert_bytes: 13.2e6,
+                dense_bytes_per_layer: 76e6,
+                kv_bytes_per_token: 2.0 * 2048.0 * 8.0 * 64.0 * 2.0 / 36.0, // GQA, 2k ctx
+                flops_per_token_expert: 2.0 * 24.9e6,
+                flops_per_token_dense: 2.0 * 38e6,
+                // EAGLE-3 head ≈ 1 layer of the target (~1.5 GB bf16 total)
+                draft_bytes_per_step: 3.0e9 / 36.0,
+            }),
+            // DeepSeek-R1: 58 MoE layers, 256 routed experts (top-8) + 1
+            // shared, d=7168, expert FFN 2048 (gate/up/down) ≈ 44M params,
+            // FP8 serving ⇒ ~44 MB/expert.
+            "dsr1-mini" | "dsr1" => Ok(CostGeometry {
+                name: "deepseek-r1".into(),
+                n_layers: 58,
+                n_experts: 256,
+                top_k: 8,
+                expert_bytes: 44.0e6,
+                dense_bytes_per_layer: 190e6, // MLA attn + shared expert (fp8)
+                kv_bytes_per_token: 2.0 * 2048.0 * 576.0 / 58.0, // MLA compressed
+                flops_per_token_expert: 2.0 * 44.0e6,
+                flops_per_token_dense: 2.0 * 95e6,
+                draft_bytes_per_step: 0.0,
+            }),
+            // The tiny test preset costs out at its literal (fp32) size.
+            "tiny" => Ok(CostGeometry {
+                name: "tiny".into(),
+                n_layers: 2,
+                n_experts: 8,
+                top_k: 2,
+                expert_bytes: (16.0 * 32.0 * 2.0) * 4.0,
+                dense_bytes_per_layer: 4.0 * 16.0 * 16.0 * 4.0,
+                kv_bytes_per_token: 2.0 * 32.0 * 16.0 * 4.0 / 2.0,
+                flops_per_token_expert: 2.0 * 2.0 * 16.0 * 32.0 * 2.0,
+                flops_per_token_dense: 2.0 * 4.0 * 16.0 * 16.0,
+                draft_bytes_per_step: 16.0 * 64.0 * 4.0,
+            }),
+            other => bail!("no cost geometry for preset '{other}'"),
+        }
+    }
+
+    /// Bytes streamed for one decode step given per-layer activated-expert
+    /// counts (the quantity XShare minimizes).
+    pub fn step_bytes(&self, activated_per_layer: &[usize], n_tokens: usize) -> f64 {
+        let expert_bytes: f64 =
+            activated_per_layer.iter().map(|&a| a as f64 * self.expert_bytes).sum();
+        let dense = self.n_layers as f64 * self.dense_bytes_per_layer;
+        let kv = self.n_layers as f64 * self.kv_bytes_per_token * n_tokens as f64;
+        expert_bytes + dense + kv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_resolve() {
+        assert!(HardwareProfile::by_name("h100").is_ok());
+        assert!(HardwareProfile::by_name("tpuv4").is_ok());
+        assert!(HardwareProfile::by_name("a100x").is_err());
+    }
+
+    #[test]
+    fn geometry_matches_paper_models() {
+        let g = CostGeometry::for_preset("gptoss-mini").unwrap();
+        assert_eq!(g.n_experts, 128);
+        assert_eq!(g.top_k, 4);
+        // total routed weight bytes ≈ 60 GB (MXFP4 119B-param model)
+        let total = g.expert_bytes * (g.n_layers * g.n_experts) as f64;
+        assert!((55e9..70e9).contains(&total), "{total}");
+
+        let d = CostGeometry::for_preset("dsr1-mini").unwrap();
+        assert_eq!(d.n_experts, 256);
+        assert_eq!(d.top_k, 8);
+        let total = d.expert_bytes * (d.n_layers * d.n_experts) as f64;
+        assert!((580e9..700e9).contains(&total), "{total}"); // ~653 GB fp8
+    }
+
+    #[test]
+    fn step_bytes_monotone_in_activation() {
+        let g = CostGeometry::for_preset("gptoss-mini").unwrap();
+        let lo = g.step_bytes(&vec![20; 36], 16);
+        let hi = g.step_bytes(&vec![90; 36], 16);
+        assert!(hi > lo);
+        // and the delta is exactly the expert stream
+        let want = (90.0 - 20.0) * 36.0 * g.expert_bytes;
+        assert!(((hi - lo) - want).abs() < 1.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Serving metrics: expert-activation accounting, latency histograms, OTPS,
+//! and report emission for the benches.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Streaming mean/min/max accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn add(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Fixed-boundary latency histogram (µs buckets, log-spaced).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    bounds_us: Vec<f64>,
+    counts: Vec<u64>,
+    summary: Summary,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1µs … ~100s, quarter-decade steps
+        let bounds_us: Vec<f64> = (0..33).map(|i| 10f64.powf(i as f64 / 4.0)).collect();
+        let counts = vec![0; bounds_us.len() + 1];
+        LatencyHistogram { bounds_us, counts, summary: Summary::default() }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record_seconds(&mut self, s: f64) {
+        let us = s * 1e6;
+        let idx = self.bounds_us.partition_point(|&b| b < us);
+        self.counts[idx] += 1;
+        self.summary.add(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.summary.n
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.summary.n;
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i == 0 {
+                    self.bounds_us[0]
+                } else if i >= self.bounds_us.len() {
+                    self.summary.max
+                } else {
+                    self.bounds_us[i]
+                };
+            }
+        }
+        self.summary.max
+    }
+}
+
+/// Everything a serving run reports — the benches print these as the
+/// paper-table rows.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    /// Output tokens produced (committed, not speculative-rejected).
+    pub tokens_out: u64,
+    /// Requests completed.
+    pub requests_done: u64,
+    /// Simulated time (memsim) spent, seconds.
+    pub sim_seconds: f64,
+    /// Wall-clock spent in PJRT execution, seconds.
+    pub wall_seconds: f64,
+    /// Decode steps taken.
+    pub steps: u64,
+    /// Per-layer activated-expert summaries (mini-model layer index).
+    pub activated: Vec<Summary>,
+    /// Max per-GPU load summary (EP runs).
+    pub max_gpu_load: Summary,
+    /// Speculative: proposed / accepted bonus counts.
+    pub spec_proposed: u64,
+    pub spec_accepted: u64,
+    /// Per-step simulated latency histogram.
+    pub step_latency: LatencyHistogram,
+}
+
+impl ServeMetrics {
+    pub fn new(n_layers: usize) -> ServeMetrics {
+        ServeMetrics { activated: vec![Summary::default(); n_layers], ..Default::default() }
+    }
+
+    pub fn record_step(&mut self, activated_per_layer: &[usize], sim_s: f64, tokens: u64) {
+        assert_eq!(activated_per_layer.len(), self.activated.len());
+        for (s, &a) in self.activated.iter_mut().zip(activated_per_layer) {
+            s.add(a as f64);
+        }
+        self.sim_seconds += sim_s;
+        self.step_latency.record_seconds(sim_s);
+        self.steps += 1;
+        self.tokens_out += tokens;
+    }
+
+    /// Simulated output tokens per second — the paper's OTPS.
+    pub fn otps(&self) -> f64 {
+        if self.sim_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / self.sim_seconds
+    }
+
+    /// Mean activated experts per layer, averaged over layers.
+    pub fn mean_activated(&self) -> f64 {
+        if self.activated.is_empty() {
+            return 0.0;
+        }
+        self.activated.iter().map(Summary::mean).sum::<f64>() / self.activated.len() as f64
+    }
+
+    /// Speculative acceptance rate.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_proposed as f64
+    }
+
+    /// JSON dump for reports.
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("tokens_out".into(), Json::num(self.tokens_out as f64));
+        m.insert("requests_done".into(), Json::num(self.requests_done as f64));
+        m.insert("sim_seconds".into(), Json::num(self.sim_seconds));
+        m.insert("wall_seconds".into(), Json::num(self.wall_seconds));
+        m.insert("steps".into(), Json::num(self.steps as f64));
+        m.insert("otps".into(), Json::num(self.otps()));
+        m.insert("mean_activated".into(), Json::num(self.mean_activated()));
+        m.insert("acceptance_rate".into(), Json::num(self.acceptance_rate()));
+        m.insert("max_gpu_load_mean".into(), Json::num(self.max_gpu_load.mean()));
+        m.insert("p50_step_us".into(), Json::num(self.step_latency.quantile_us(0.5)));
+        m.insert("p99_step_us".into(), Json::num(self.step_latency.quantile_us(0.99)));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_tracks_moments() {
+        let mut s = Summary::default();
+        for v in [2.0, 4.0, 6.0] {
+            s.add(v);
+        }
+        assert_eq!(s.mean(), 4.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 6.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000 {
+            h.record_seconds(i as f64 * 1e-6);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!((300.0..3000.0).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn serve_metrics_otps_and_activation() {
+        let mut m = ServeMetrics::new(2);
+        m.record_step(&[10, 20], 0.5, 8);
+        m.record_step(&[30, 40], 0.5, 8);
+        assert_eq!(m.otps(), 16.0);
+        assert_eq!(m.mean_activated(), 25.0);
+        assert_eq!(m.steps, 2);
+    }
+
+    #[test]
+    fn acceptance_rate() {
+        let mut m = ServeMetrics::new(1);
+        m.spec_proposed = 10;
+        m.spec_accepted = 7;
+        assert!((m.acceptance_rate() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_dump_has_headline_fields() {
+        let m = ServeMetrics::new(1);
+        let j = m.to_json();
+        assert!(j.get("otps").is_some());
+        assert!(j.get("mean_activated").is_some());
+    }
+}

@@ -1,0 +1,74 @@
+//! The dense draft model for speculative decoding (EAGLE-style role: small,
+//! fast, same vocabulary). One `draft_step` artifact call advances all rows
+//! by one token; caches are stacked per layer and round-trip as two tensors.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Arg, Engine, HostTensor};
+
+pub struct DraftModel {
+    k_cache: HostTensor,
+    v_cache: HostTensor,
+}
+
+impl DraftModel {
+    /// The engine is passed per call (not stored) so the coordinator can
+    /// keep one engine shared between target and draft without lifetime
+    /// gymnastics.
+    pub fn new(engine: &Engine) -> Result<DraftModel> {
+        let m = &engine.manifest().model;
+        if !engine.manifest().has_draft() {
+            bail!("preset '{}' has no draft model", m.name);
+        }
+        let shape = vec![m.draft_layers, m.max_batch, m.draft_n_heads, m.max_seq, m.draft_head_dim];
+        Ok(DraftModel {
+            k_cache: HostTensor::zeros_f32(shape.clone()),
+            v_cache: HostTensor::zeros_f32(shape),
+        })
+    }
+
+    pub fn reset(&mut self) {
+        for t in [&mut self.k_cache, &mut self.v_cache] {
+            if let HostTensor::F32 { data, .. } = t {
+                data.fill(0.0);
+            }
+        }
+    }
+
+    /// Advance every row by one token; returns lm logits `[B × V]`.
+    pub fn step(&mut self, engine: &Engine, tokens: &[i32], pos: &[i32]) -> Result<HostTensor> {
+        let m = &engine.manifest().model;
+        let b = m.max_batch;
+        if tokens.len() != b || pos.len() != b {
+            bail!("draft step inputs must be padded to max_batch={b}");
+        }
+        let tokens = HostTensor::i32(vec![b], tokens.to_vec());
+        let pos_t = HostTensor::i32(vec![b], pos.to_vec());
+        let mut outs = engine.execute(
+            "draft_step",
+            &[
+                Arg::Host(&tokens),
+                Arg::Host(&pos_t),
+                Arg::Host(&self.k_cache),
+                Arg::Host(&self.v_cache),
+                Arg::Weight("draft.emb"),
+                Arg::Weight("draft.ln1s"),
+                Arg::Weight("draft.wqs"),
+                Arg::Weight("draft.wks"),
+                Arg::Weight("draft.wvs"),
+                Arg::Weight("draft.wos"),
+                Arg::Weight("draft.ln2s"),
+                Arg::Weight("draft.wf1s"),
+                Arg::Weight("draft.wf2s"),
+                Arg::Weight("draft.lnf"),
+                Arg::Weight("draft.unembed"),
+            ],
+        )?;
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        self.k_cache = k_new;
+        self.v_cache = v_new;
+        Ok(logits)
+    }
+}

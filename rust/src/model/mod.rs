@@ -1,0 +1,10 @@
+//! Model execution layer: the decode-step walker over the AOT artifacts,
+//! the dense draft model, and token sampling.
+
+pub mod draft;
+pub mod moe_model;
+pub mod sampler;
+
+pub use draft::DraftModel;
+pub use moe_model::{MoeModel, RoutingMode, StepInput, StepOutput};
+pub use sampler::{argmax, sample, Sampling};

@@ -1,0 +1,224 @@
+//! The target-model decode walker: one token per live row per step,
+//! embed → L × (attn_router → **expert selection** → moe_layer) → lm_head.
+//!
+//! This is where the three layers meet: the attn_router artifact produces
+//! router logits/probs/colsum for the padded batch; the [`crate::selection`]
+//! policy (running in rust, on the request path) decides the expert set; the
+//! moe_layer artifact consumes the refined gate matrix. KV caches live here
+//! as persistent padded host tensors — stale cache slots beyond each row's
+//! `pos` are masked inside the attention kernel (verified by the kernel test
+//! suite), which is what makes slot reuse and speculative rejection free.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Arg, Engine, HostTensor};
+use crate::selection::{
+    refine, ExpertSet, Routing, ScoreMatrix, SelectionContext, SelectionPolicy,
+};
+use crate::ep::Placement;
+
+/// How a step routes tokens to experts.
+pub enum RoutingMode<'a> {
+    /// Online per-layer selection by a policy (the serving path).
+    Policy(&'a dyn SelectionPolicy),
+    /// Restrict every layer to a precomputed set (speculative pass 2:
+    /// selection was made on the effective batch's scores).
+    Restricted(&'a [ExpertSet]),
+}
+
+/// Inputs for one decode step over the padded batch.
+pub struct StepInput<'a> {
+    /// Token per row (padded rows: 0).
+    pub tokens: &'a [i32],
+    /// Position per row.
+    pub pos: &'a [i32],
+    /// Live row indices.
+    pub rows: &'a [usize],
+    /// Request grouping of rows (speculative selection context).
+    pub requests: &'a [Vec<usize>],
+    pub mode: RoutingMode<'a>,
+    /// Record per-layer probs matrices (speculative pass 1).
+    pub collect_probs: bool,
+}
+
+/// Outputs of one decode step.
+pub struct StepOutput {
+    /// LM-head logits `[B × V]`.
+    pub logits: HostTensor,
+    /// Per-layer number of activated experts (|union of routed|).
+    pub activated: Vec<usize>,
+    /// Per-layer selected sets (|S_l|; for EP accounting).
+    pub selected: Vec<ExpertSet>,
+    /// Per-layer (logits, probs) score matrices, if requested.
+    pub scores: Option<Vec<(ScoreMatrix, ScoreMatrix)>>,
+}
+
+pub struct MoeModel {
+    engine: Engine,
+    /// Per-layer K/V caches `[B, H, S, hd]`.
+    k_cache: Vec<HostTensor>,
+    v_cache: Vec<HostTensor>,
+    /// Reusable active-mask buffer.
+    active: Vec<f32>,
+    /// EP placement (only consulted by GPU-aware policies).
+    pub placement: Option<Placement>,
+}
+
+impl MoeModel {
+    pub fn new(engine: Engine) -> Result<MoeModel> {
+        engine.manifest().validate_serving()?;
+        let m = engine.manifest().model.clone();
+        let cache_shape = vec![m.max_batch, m.n_heads, m.max_seq, m.head_dim];
+        let k_cache =
+            (0..m.n_layers).map(|_| HostTensor::zeros_f32(cache_shape.clone())).collect();
+        let v_cache =
+            (0..m.n_layers).map(|_| HostTensor::zeros_f32(cache_shape.clone())).collect();
+        Ok(MoeModel {
+            engine,
+            k_cache,
+            v_cache,
+            active: vec![0.0; m.max_batch],
+            placement: None,
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn dims(&self) -> &crate::runtime::ModelDims {
+        &self.engine.manifest().model
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.dims().max_batch
+    }
+
+    /// Forget all cache state (fresh serving run).
+    pub fn reset(&mut self) {
+        // Positions are authoritative; caches need no zeroing (masked), but
+        // zero them anyway so resets are bit-deterministic.
+        for t in self.k_cache.iter_mut().chain(self.v_cache.iter_mut()) {
+            if let HostTensor::F32 { data, .. } = t {
+                data.fill(0.0);
+            }
+        }
+    }
+
+    /// One decode step.
+    pub fn step(&mut self, input: &StepInput) -> Result<StepOutput> {
+        let m = self.dims().clone();
+        let b = m.max_batch;
+        if input.tokens.len() != b || input.pos.len() != b {
+            bail!("step inputs must be padded to max_batch={b}");
+        }
+        for (&i, name) in input.rows.iter().zip(std::iter::repeat("row")) {
+            if i >= b {
+                bail!("{name} {i} out of range");
+            }
+        }
+        self.active.fill(0.0);
+        for &i in input.rows {
+            self.active[i] = 1.0;
+        }
+
+        let tokens = HostTensor::i32(vec![b], input.tokens.to_vec());
+        let pos = HostTensor::i32(vec![b], input.pos.to_vec());
+        let active = HostTensor::f32(vec![b], self.active.clone());
+
+        let mut out = self.engine.execute("embed", &[Arg::Host(&tokens), Arg::Weight("emb")])?;
+        let mut hidden = out.remove(0);
+
+        let mut activated = Vec::with_capacity(m.n_layers);
+        let mut selected = Vec::with_capacity(m.n_layers);
+        let mut scores_acc = if input.collect_probs { Some(Vec::new()) } else { None };
+        let shared_flag =
+            HostTensor::f32(vec![1], vec![if m.n_shared > 0 { 1.0 } else { 0.0 }]);
+
+        for l in 0..m.n_layers {
+            let p = |s: &str| format!("layer{l}.{s}");
+            let mut outs = self.engine.execute(
+                "attn_router",
+                &[
+                    Arg::Host(&hidden),
+                    Arg::Host(&pos),
+                    Arg::Host(&active),
+                    Arg::Host(&self.k_cache[l]),
+                    Arg::Host(&self.v_cache[l]),
+                    Arg::Weight(&p("ln1")),
+                    Arg::Weight(&p("wq")),
+                    Arg::Weight(&p("wk")),
+                    Arg::Weight(&p("wv")),
+                    Arg::Weight(&p("wo")),
+                    Arg::Weight(&p("ln2")),
+                    Arg::Weight(&p("wg")),
+                ],
+            )?;
+            // outputs: hidden2, logits, probs, colsum, k_cache, v_cache
+            let v_new = outs.pop().unwrap();
+            let k_new = outs.pop().unwrap();
+            let colsum_t = outs.pop().unwrap();
+            let probs_t = outs.pop().unwrap();
+            let logits_t = outs.pop().unwrap();
+            let hidden2 = outs.pop().unwrap();
+            self.k_cache[l] = k_new;
+            self.v_cache[l] = v_new;
+
+            let logits_m =
+                ScoreMatrix::from_flat(b, m.n_experts, logits_t.as_f32()?.to_vec());
+            let probs_m =
+                ScoreMatrix::from_flat(b, m.n_experts, probs_t.as_f32()?.to_vec());
+            let colsum = colsum_t.as_f32()?;
+
+            let routing: Routing = match &input.mode {
+                RoutingMode::Policy(policy) => {
+                    let ctx = SelectionContext {
+                        probs: &probs_m,
+                        logits: &logits_m,
+                        rows: input.rows,
+                        requests: input.requests,
+                        colsum_hint: Some(colsum),
+                        placement: self.placement.as_ref(),
+                        top_k: m.top_k,
+                    };
+                    policy.route(&ctx)
+                }
+                RoutingMode::Restricted(sets) => {
+                    refine(&logits_m, input.rows, &sets[l], m.top_k)
+                }
+            };
+            activated.push(routing.n_activated());
+            // Always the *actually routed* union (metrics & EP accounting
+            // count experts that serve ≥1 token, as the paper does).
+            selected.push(routing.activated.clone());
+            if let Some(acc) = scores_acc.as_mut() {
+                acc.push((logits_m, probs_m));
+            }
+
+            let gates =
+                HostTensor::f32(vec![b, m.n_experts], routing.gates.flat().to_vec());
+            let mut mo = self.engine.execute(
+                "moe_layer",
+                &[
+                    Arg::Host(&hidden2),
+                    Arg::Host(&gates),
+                    Arg::Weight(&p("ln2")),
+                    Arg::Weight(&p("w1")),
+                    Arg::Weight(&p("w2")),
+                    Arg::Weight(&p("ws1")),
+                    Arg::Weight(&p("ws2")),
+                    Arg::Host(&shared_flag),
+                ],
+            )?;
+            hidden = mo.remove(0);
+        }
+
+        let mut ho = self.engine.execute(
+            "lm_head",
+            &[Arg::Host(&hidden), Arg::Weight("lnf"), Arg::Weight("unembed")],
+        )?;
+        let logits = ho.remove(0);
+
+        Ok(StepOutput { logits, activated, selected, scores: scores_acc })
+    }
+}

@@ -1,0 +1,71 @@
+//! Token sampling from lm_head logits. Greedy is the default everywhere
+//! (deterministic — fidelity experiments compare token streams across
+//! policies); temperature sampling is available for the server API.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub enum Sampling {
+    Greedy,
+    Temperature(f32),
+}
+
+/// Argmax with lowest-index tie-break (matches python/jnp argmax).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+pub fn sample(logits: &[f32], mode: Sampling, rng: &mut Rng) -> usize {
+    match mode {
+        Sampling::Greedy => argmax(logits),
+        Sampling::Temperature(t) => {
+            let t = t.max(1e-4);
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let weights: Vec<f32> = logits.iter().map(|&v| ((v - m) / t).exp()).collect();
+            rng.categorical(&weights)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_ties_prefer_lowest() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn greedy_matches_argmax() {
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&[0.0, 3.0, 1.0], Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0, 5.0, 1.0];
+        for _ in 0..50 {
+            assert_eq!(sample(&logits, Sampling::Temperature(0.01), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0, 1.0, 0.5];
+        let mut seen = [false; 3];
+        for _ in 0..300 {
+            seen[sample(&logits, Sampling::Temperature(5.0), &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

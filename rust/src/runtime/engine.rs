@@ -1,0 +1,218 @@
+//! The PJRT execution engine: compiles every HLO artifact once at startup,
+//! uploads weights to device-resident buffers once, then serves
+//! `execute(program, args)` calls from the decode hot path.
+//!
+//! Argument binding: each program parameter is fed either a [`Arg::Host`]
+//! tensor (dynamic per-call data — hidden states, gates, caches, positions)
+//! or a [`Arg::Weight`] reference into the persistent weight buffers. On
+//! this CPU PJRT build, outputs come back as a single tuple buffer which we
+//! copy to host and decompose; a real accelerator deployment would donate
+//! the KV-cache buffers instead (see DESIGN.md §Hardware-Adaptation).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, ProgramMeta};
+use super::tensor::{DType, HostTensor};
+
+/// One bound argument for a program call.
+pub enum Arg<'a> {
+    /// Dynamic host data, uploaded for this call.
+    Host(&'a HostTensor),
+    /// Named persistent weight (uploaded once at engine construction).
+    Weight(&'a str),
+}
+
+struct LoadedProgram {
+    meta: ProgramMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Counters the perf pass and metrics layer read.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub calls: u64,
+    pub host_bytes_in: u64,
+    pub host_bytes_out: u64,
+    pub exec_seconds: f64,
+    /// Per-program (calls, exec seconds) — the L2/L3 profiling signal.
+    pub per_program: std::collections::BTreeMap<String, (u64, f64)>,
+}
+
+pub struct Engine {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    programs: BTreeMap<String, LoadedProgram>,
+    weights: BTreeMap<String, xla::PjRtBuffer>,
+    /// host copies kept for weight-free reconstruction in tests/tools
+    weight_shapes: BTreeMap<String, Vec<usize>>,
+    stats: std::cell::RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Compile all programs of a manifest and upload its weights.
+    pub fn load(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut programs = BTreeMap::new();
+        for (name, meta) in &manifest.programs {
+            let path = manifest.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling program '{name}'"))?;
+            programs.insert(name.clone(), LoadedProgram { meta: meta.clone(), exe });
+        }
+
+        let mut weights = BTreeMap::new();
+        let mut weight_shapes = BTreeMap::new();
+        for w in &manifest.weights {
+            let host = HostTensor::read_bin(&manifest.dir.join(&w.file), w.shape.clone(), DType::F32)
+                .with_context(|| format!("loading weight '{}'", w.name))?;
+            let dims: Vec<usize> = host.shape().to_vec();
+            let buf = client
+                .buffer_from_host_buffer(host.as_f32()?, &dims, None)
+                .with_context(|| format!("uploading weight '{}'", w.name))?;
+            weights.insert(w.name.clone(), buf);
+            weight_shapes.insert(w.name.clone(), w.shape.clone());
+        }
+
+        Ok(Engine {
+            manifest,
+            client,
+            programs,
+            weights,
+            weight_shapes,
+            stats: std::cell::RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn has_weight(&self, name: &str) -> bool {
+        self.weights.contains_key(name)
+    }
+
+    /// Execute `program` with ordered `args` (must match the manifest
+    /// signature). Returns the decomposed output tensors.
+    pub fn execute(&self, program: &str, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let lp = self
+            .programs
+            .get(program)
+            .with_context(|| format!("program '{program}' not loaded"))?;
+        if args.len() != lp.meta.params.len() {
+            bail!(
+                "program '{program}': {} args given, signature wants {}",
+                args.len(),
+                lp.meta.params.len()
+            );
+        }
+
+        // Bind: temp buffers for host args, references for weights.
+        let mut temps: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut temp_idx: Vec<Option<usize>> = Vec::with_capacity(args.len());
+        let mut in_bytes = 0u64;
+        for (arg, param) in args.iter().zip(&lp.meta.params) {
+            match arg {
+                Arg::Host(t) => {
+                    if t.shape() != param.shape.as_slice() {
+                        bail!(
+                            "program '{program}' param '{}': shape {:?} != declared {:?}",
+                            param.name,
+                            t.shape(),
+                            param.shape
+                        );
+                    }
+                    if t.dtype() != param.dtype {
+                        bail!(
+                            "program '{program}' param '{}': dtype mismatch",
+                            param.name
+                        );
+                    }
+                    let dims: Vec<usize> = t.shape().to_vec();
+                    let buf = match t {
+                        HostTensor::F32 { data, .. } => {
+                            self.client.buffer_from_host_buffer(data, &dims, None)?
+                        }
+                        HostTensor::I32 { data, .. } => {
+                            self.client.buffer_from_host_buffer(data, &dims, None)?
+                        }
+                    };
+                    in_bytes += (t.len() * 4) as u64;
+                    temps.push(buf);
+                    temp_idx.push(Some(temps.len() - 1));
+                }
+                Arg::Weight(name) => {
+                    if !self.weights.contains_key(*name) {
+                        bail!("program '{program}': unknown weight '{name}'");
+                    }
+                    // shape check against signature
+                    let ws = &self.weight_shapes[*name];
+                    if ws != &param.shape {
+                        bail!(
+                            "program '{program}' param '{}': weight '{name}' shape {ws:?} != declared {:?}",
+                            param.name,
+                            param.shape
+                        );
+                    }
+                    temp_idx.push(None);
+                }
+            }
+        }
+        let bound: Vec<&xla::PjRtBuffer> = args
+            .iter()
+            .zip(&temp_idx)
+            .map(|(arg, ti)| match (arg, ti) {
+                (Arg::Host(_), Some(i)) => &temps[*i],
+                (Arg::Weight(name), None) => &self.weights[*name],
+                _ => unreachable!(),
+            })
+            .collect();
+
+        let t0 = std::time::Instant::now();
+        let result = lp
+            .exe
+            .execute_b(&bound)
+            .with_context(|| format!("executing '{program}'"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("copying result tuple to host")?;
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let leaves = tuple.to_tuple().context("decomposing result tuple")?;
+        if leaves.len() != lp.meta.outputs.len() {
+            bail!(
+                "program '{program}': {} outputs, manifest declares {}",
+                leaves.len(),
+                lp.meta.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(leaves.len());
+        let mut out_bytes = 0u64;
+        for (lit, meta) in leaves.iter().zip(&lp.meta.outputs) {
+            let t = HostTensor::from_literal(lit, meta.shape.clone(), meta.dtype)?;
+            out_bytes += (t.len() * 4) as u64;
+            out.push(t);
+        }
+
+        let mut st = self.stats.borrow_mut();
+        st.calls += 1;
+        st.host_bytes_in += in_bytes;
+        st.host_bytes_out += out_bytes;
+        st.exec_seconds += elapsed;
+        let entry = st.per_program.entry(program.to_string()).or_insert((0, 0.0));
+        entry.0 += 1;
+        entry.1 += elapsed;
+        Ok(out)
+    }
+}

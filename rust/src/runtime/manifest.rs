@@ -1,0 +1,263 @@
+//! Typed view of `artifacts/<preset>/manifest.json` — the contract between
+//! `python/compile/aot.py` and this runtime. Parsing is strict: a manifest
+//! the rust side only half-understands is a deployment bug.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::DType;
+use crate::util::json::Json;
+
+/// Model geometry (mirrors `python/compile/configs.py::ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub max_batch: usize,
+    pub draft_layers: usize,
+    pub draft_d_model: usize,
+    pub draft_n_heads: usize,
+    pub draft_head_dim: usize,
+    pub draft_d_ff: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramMeta {
+    pub file: String,
+    pub params: Vec<ParamMeta>,
+    pub outputs: Vec<ParamMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct SelftestMeta {
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from (file paths are relative).
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub programs: BTreeMap<String, ProgramMeta>,
+    pub weights: Vec<WeightMeta>,
+    pub selftests: BTreeMap<String, SelftestMeta>,
+}
+
+fn usize_field(obj: &Json, key: &str) -> Result<usize> {
+    obj.req(key)?
+        .as_usize()
+        .with_context(|| format!("field '{key}' is not a non-negative integer"))
+}
+
+fn params_from(arr: &Json) -> Result<Vec<ParamMeta>> {
+    arr.as_arr()
+        .context("params/outputs not an array")?
+        .iter()
+        .map(|p| {
+            Ok(ParamMeta {
+                name: p.req("name")?.as_str().context("param name")?.to_string(),
+                shape: p
+                    .req("shape")?
+                    .as_usize_vec()
+                    .context("param shape")?,
+                dtype: DType::parse(p.req("dtype")?.as_str().context("param dtype")?)?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let fv = usize_field(&root, "format_version")?;
+        if fv != 1 {
+            bail!("manifest format_version {fv} unsupported (want 1)");
+        }
+
+        let m = root.req("model")?;
+        let model = ModelDims {
+            name: m.req("name")?.as_str().context("model name")?.to_string(),
+            d_model: usize_field(m, "d_model")?,
+            n_heads: usize_field(m, "n_heads")?,
+            head_dim: usize_field(m, "head_dim")?,
+            d_ff: usize_field(m, "d_ff")?,
+            n_layers: usize_field(m, "n_layers")?,
+            vocab: usize_field(m, "vocab")?,
+            max_seq: usize_field(m, "max_seq")?,
+            n_experts: usize_field(m, "n_experts")?,
+            top_k: usize_field(m, "top_k")?,
+            n_shared: usize_field(m, "n_shared")?,
+            max_batch: usize_field(m, "max_batch")?,
+            draft_layers: usize_field(m, "draft_layers")?,
+            draft_d_model: usize_field(m, "draft_d_model")?,
+            draft_n_heads: usize_field(m, "draft_n_heads")?,
+            draft_head_dim: usize_field(m, "draft_head_dim")?,
+            draft_d_ff: usize_field(m, "draft_d_ff")?,
+        };
+
+        let mut programs = BTreeMap::new();
+        for (name, p) in root.req("programs")?.as_obj().context("programs")? {
+            programs.insert(
+                name.clone(),
+                ProgramMeta {
+                    file: p.req("file")?.as_str().context("program file")?.to_string(),
+                    params: params_from(p.req("params")?)?,
+                    outputs: params_from(p.req("outputs")?)?,
+                },
+            );
+        }
+        if programs.is_empty() {
+            bail!("manifest has no programs");
+        }
+
+        let mut weights = Vec::new();
+        for w in root.req("weights")?.as_arr().context("weights")? {
+            weights.push(WeightMeta {
+                name: w.req("name")?.as_str().context("weight name")?.to_string(),
+                shape: w.req("shape")?.as_usize_vec().context("weight shape")?,
+                file: w.req("file")?.as_str().context("weight file")?.to_string(),
+            });
+        }
+
+        let mut selftests = BTreeMap::new();
+        if let Some(sts) = root.get("selftests").and_then(|v| v.as_obj()) {
+            for (name, st) in sts {
+                let strings = |key: &str| -> Result<Vec<String>> {
+                    st.req(key)?
+                        .as_arr()
+                        .context("selftest list")?
+                        .iter()
+                        .map(|v| Ok(v.as_str().context("selftest path")?.to_string()))
+                        .collect()
+                };
+                selftests.insert(
+                    name.clone(),
+                    SelftestMeta { inputs: strings("inputs")?, outputs: strings("outputs")? },
+                );
+            }
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), model, programs, weights, selftests })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramMeta> {
+        self.programs
+            .get(name)
+            .with_context(|| format!("program '{name}' not in manifest"))
+    }
+
+    /// Required core programs for the serving path.
+    pub fn validate_serving(&self) -> Result<()> {
+        for required in ["embed", "attn_router", "moe_layer", "lm_head"] {
+            if !self.programs.contains_key(required) {
+                bail!("manifest missing required program '{required}'");
+            }
+        }
+        // weight inventory must cover every layer
+        for l in 0..self.model.n_layers {
+            for suffix in ["wq", "wk", "wv", "wo", "ln1", "ln2", "wg", "w1", "w2", "ws1", "ws2"] {
+                let want = format!("layer{l}.{suffix}");
+                if !self.weights.iter().any(|w| w.name == want) {
+                    bail!("manifest missing weight '{want}'");
+                }
+            }
+        }
+        for global in ["emb", "lnf", "unembed"] {
+            if !self.weights.iter().any(|w| w.name == global) {
+                bail!("manifest missing weight '{global}'");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn has_draft(&self) -> bool {
+        self.model.draft_layers > 0 && self.programs.contains_key("draft_step")
+    }
+}
+
+/// Resolve the artifacts root: `$XSHARE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("XSHARE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "format_version": 1,
+      "model": {"name":"t","d_model":4,"n_heads":2,"head_dim":2,"d_ff":8,
+        "n_layers":1,"vocab":16,"max_seq":8,"n_experts":4,"top_k":2,
+        "n_shared":0,"max_batch":2,"draft_layers":0,"draft_d_model":0,
+        "draft_n_heads":0,"draft_head_dim":0,"draft_d_ff":0,"seed":0},
+      "programs": {"embed": {"file":"embed.hlo.txt","sha256":"x",
+        "params":[{"name":"tokens","shape":[2],"dtype":"i32"}],
+        "outputs":[{"name":"hidden","shape":[2,4],"dtype":"f32"}]}},
+      "weights": [{"name":"emb","shape":[16,4],"file":"weights/emb.bin","dtype":"f32"}],
+      "selftests": {"embed":{"inputs":["selftest/embed.in0.bin"],"outputs":["selftest/embed.out0.bin"]}}
+    }"#;
+
+    fn write_mini(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), MINI).unwrap();
+    }
+
+    #[test]
+    fn parses_mini_manifest() {
+        let dir = std::env::temp_dir().join("xshare_manifest_test");
+        write_mini(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.n_experts, 4);
+        assert_eq!(m.program("embed").unwrap().params[0].dtype, DType::I32);
+        assert_eq!(m.weights[0].shape, vec![16, 4]);
+        assert_eq!(m.selftests["embed"].inputs.len(), 1);
+        assert!(m.program("nope").is_err());
+    }
+
+    #[test]
+    fn validate_serving_catches_missing_programs() {
+        let dir = std::env::temp_dir().join("xshare_manifest_test2");
+        write_mini(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.validate_serving().is_err()); // no attn_router etc.
+    }
+
+    #[test]
+    fn missing_file_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent/nowhere")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

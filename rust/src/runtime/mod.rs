@@ -1,0 +1,15 @@
+//! PJRT runtime: load HLO-text artifacts produced by `python/compile/aot.py`
+//! and execute them on the CPU PJRT client from the decode hot path.
+//!
+//! * [`manifest`] — typed `manifest.json` (the python↔rust contract).
+//! * [`tensor`]   — host tensors + `.bin` weight IO + literal conversion.
+//! * [`engine`]   — compile-once / execute-many with persistent device
+//!   weights.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Arg, Engine, EngineStats};
+pub use manifest::{artifacts_root, Manifest, ModelDims};
+pub use tensor::{DType, HostTensor};

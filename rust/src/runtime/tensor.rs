@@ -1,0 +1,183 @@
+//! Host-side tensors: the typed bridge between rust buffers, weight files
+//! and PJRT literals.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Read a raw little-endian `.bin` file with a known shape/dtype.
+    pub fn read_bin(path: &std::path::Path, shape: Vec<usize>, dtype: DType) -> Result<HostTensor> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("{path:?}: {} bytes, expected {} for shape {shape:?}", bytes.len(), n * 4);
+        }
+        match dtype {
+            DType::F32 => {
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(HostTensor::F32 { shape, data })
+            }
+            DType::I32 => {
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(HostTensor::I32 { shape, data })
+            }
+        }
+    }
+
+    /// Convert to a PJRT literal (host copy; used for per-call inputs).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Convert from a PJRT literal, given the declared shape (tuple leaves
+    /// arrive with their own shape; we trust the manifest's).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>, dtype: DType) -> Result<HostTensor> {
+        match dtype {
+            DType::F32 => {
+                let data: Vec<f32> = lit.to_vec()?;
+                if data.len() != shape.iter().product::<usize>() {
+                    bail!("literal size {} != shape {shape:?}", data.len());
+                }
+                Ok(HostTensor::F32 { shape, data })
+            }
+            DType::I32 => {
+                let data: Vec<i32> = lit.to_vec()?;
+                Ok(HostTensor::I32 { shape, data })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.as_f32().unwrap().len(), 6);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_bad_shape() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let dir = std::env::temp_dir().join("xshare_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let vals = [1.5f32, -2.0, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = HostTensor::read_bin(&path, vec![3], DType::F32).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &vals);
+        // wrong size errors
+        assert!(HostTensor::read_bin(&path, vec![4], DType::F32).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,356 @@
+//! Published baselines the paper compares against (or discusses):
+//!
+//! * [`Vanilla`] — unrestricted per-token top-k (the serving baseline).
+//! * [`LynxLat`] — Lynx's latency policy (Gupta et al. 2024): aggregate
+//!   per-token expert *requests* across the batch, drop a fixed number of
+//!   the least-used experts. The paper notes Lynx is described only
+//!   conceptually; this implementation follows the description literally:
+//!   usage = how many tokens put the expert in their top-k, drop the `drop`
+//!   lowest-usage experts of the batch union.
+//! * [`DynamicSkip`] — Dynamic Skipping (Lu et al. 2024): token-local —
+//!   keep the top-1 expert always, keep expert ranked r iff
+//!   g_r ≥ β · g_0. No batch awareness.
+//! * [`Opportunistic`] — concurrent work (Oncescu et al. 2025): every token
+//!   contributes its top-k' (k' < k) to a shared pool, then fills its
+//!   remaining k−k' slots with its best experts *from the pool*.
+
+use super::expert_set::ExpertSet;
+use super::policy::{SelectionContext, SelectionPolicy};
+use super::refine::{refine, vanilla_topk, Routing};
+use super::scores::{topk_indices, ScoreMatrix};
+
+// ---------------------------------------------------------------------------
+// Vanilla
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+pub struct Vanilla;
+
+impl SelectionPolicy for Vanilla {
+    fn name(&self) -> String {
+        "vanilla".into()
+    }
+
+    fn select(&self, ctx: &SelectionContext) -> ExpertSet {
+        // Union of per-token top-k — restriction to it is a no-op.
+        let mut s = ExpertSet::empty(ctx.probs.n_experts());
+        for &i in ctx.rows {
+            for j in topk_indices(ctx.probs.row(i), ctx.top_k) {
+                s.insert(j);
+            }
+        }
+        s
+    }
+
+    fn route(&self, ctx: &SelectionContext) -> Routing {
+        vanilla_topk(ctx.logits, ctx.rows, ctx.top_k)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LYNX-Lat
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+pub struct LynxLat {
+    /// Number of experts to drop from the batch union (tuned offline in the
+    /// original; a sweep parameter here).
+    pub drop: usize,
+}
+
+impl SelectionPolicy for LynxLat {
+    fn name(&self) -> String {
+        format!("lynx_lat(drop={})", self.drop)
+    }
+
+    fn select(&self, ctx: &SelectionContext) -> ExpertSet {
+        let n = ctx.probs.n_experts();
+        // usage[j] = #tokens with j in their top-k
+        let mut usage = vec![0u32; n];
+        for &i in ctx.rows {
+            for j in topk_indices(ctx.probs.row(i), ctx.top_k) {
+                usage[j] += 1;
+            }
+        }
+        let mut used: Vec<usize> = (0..n).filter(|&j| usage[j] > 0).collect();
+        // least-used first; ties by higher index dropped first (arbitrary
+        // but fixed)
+        used.sort_by(|&a, &b| usage[a].cmp(&usage[b]).then(b.cmp(&a)));
+        let keep = used.len().saturating_sub(self.drop);
+        // keep the most-used `keep` experts
+        let mut s = ExpertSet::empty(n);
+        for &j in used.iter().rev().take(keep) {
+            s.insert(j);
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic Skipping
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+pub struct DynamicSkip {
+    /// β: skip expert ranked r (r ≥ 1) when g_r < β · g_0.
+    pub beta: f32,
+}
+
+impl SelectionPolicy for DynamicSkip {
+    fn name(&self) -> String {
+        format!("dynamic_skip(beta={})", self.beta)
+    }
+
+    fn select(&self, ctx: &SelectionContext) -> ExpertSet {
+        // Union of per-token kept experts (for activation accounting).
+        let mut s = ExpertSet::empty(ctx.probs.n_experts());
+        for &i in ctx.rows {
+            for j in self.kept_for(ctx.probs.row(i), ctx.top_k) {
+                s.insert(j);
+            }
+        }
+        s
+    }
+
+    fn route(&self, ctx: &SelectionContext) -> Routing {
+        // Token-local: each token routes to its own kept set; build the gate
+        // matrix directly (renormalized over kept experts).
+        let n = ctx.logits.n_experts();
+        let mut gates = ScoreMatrix::zeros(ctx.logits.n_tokens(), n);
+        let mut chosen = vec![Vec::new(); ctx.logits.n_tokens()];
+        let mut activated = ExpertSet::empty(n);
+        for &i in ctx.rows {
+            let kept = self.kept_for(ctx.probs.row(i), ctx.top_k);
+            let row = ctx.logits.row(i);
+            let m = kept.iter().map(|&j| row[j]).fold(f32::NEG_INFINITY, f32::max);
+            let mut exps: Vec<f32> = kept.iter().map(|&j| (row[j] - m).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            for e in &mut exps {
+                *e /= sum;
+            }
+            let out = gates.row_mut(i);
+            for (&j, &g) in kept.iter().zip(&exps) {
+                out[j] = g;
+                activated.insert(j);
+            }
+            chosen[i] = kept;
+        }
+        Routing { gates, chosen, activated }
+    }
+}
+
+impl DynamicSkip {
+    fn kept_for(&self, probs_row: &[f32], k: usize) -> Vec<usize> {
+        let top = topk_indices(probs_row, k);
+        if top.is_empty() {
+            return top;
+        }
+        let g0 = probs_row[top[0]];
+        top.into_iter()
+            .enumerate()
+            .filter(|&(rank, j)| rank == 0 || probs_row[j] >= self.beta * g0)
+            .map(|(_, j)| j)
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Opportunistic (Oncescu et al.)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+pub struct Opportunistic {
+    /// k': guaranteed own experts per token (k' < k); the pool is the union
+    /// of everyone's top-k'.
+    pub k_prime: usize,
+}
+
+impl SelectionPolicy for Opportunistic {
+    fn name(&self) -> String {
+        format!("opportunistic(k'={})", self.k_prime)
+    }
+
+    fn select(&self, ctx: &SelectionContext) -> ExpertSet {
+        let mut pool = ExpertSet::empty(ctx.probs.n_experts());
+        for &i in ctx.rows {
+            for j in topk_indices(ctx.probs.row(i), self.k_prime) {
+                pool.insert(j);
+            }
+        }
+        pool
+    }
+
+    fn route(&self, ctx: &SelectionContext) -> Routing {
+        // Each token: top-k within the pool. Since its own top-k' is in the
+        // pool by construction, this reproduces "own k' + piggyback k−k'".
+        let pool = self.select(ctx);
+        refine(ctx.logits, ctx.rows, &pool, ctx.top_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::scores::softmax_in_place;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn ctx<'a>(
+        probs: &'a ScoreMatrix,
+        rows: &'a [usize],
+        top_k: usize,
+    ) -> SelectionContext<'a> {
+        SelectionContext {
+            probs,
+            logits: probs,
+            rows,
+            requests: &[],
+            colsum_hint: None,
+            placement: None,
+            top_k,
+        }
+    }
+
+    fn demo_probs() -> ScoreMatrix {
+        ScoreMatrix::from_rows(&[
+            vec![0.50, 0.30, 0.10, 0.05, 0.05],
+            vec![0.45, 0.35, 0.10, 0.05, 0.05],
+            vec![0.05, 0.05, 0.10, 0.50, 0.30],
+        ])
+    }
+
+    #[test]
+    fn vanilla_activates_union_of_topk() {
+        let p = demo_probs();
+        let rows = [0, 1, 2];
+        let r = Vanilla.route(&ctx(&p, &rows, 2));
+        assert_eq!(r.activated.to_vec(), vec![0, 1, 3, 4]);
+        assert_eq!(r.chosen[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn lynx_drops_least_used() {
+        let p = demo_probs();
+        let rows = [0, 1, 2];
+        // usage with k=2: e0:2, e1:2, e3:1, e4:1
+        let s = LynxLat { drop: 2 }.select(&ctx(&p, &rows, 2));
+        assert_eq!(s.to_vec(), vec![0, 1]);
+    }
+
+    #[test]
+    fn lynx_drop_zero_equals_vanilla_union() {
+        let p = demo_probs();
+        let rows = [0, 1, 2];
+        let s = LynxLat { drop: 0 }.select(&ctx(&p, &rows, 2));
+        assert_eq!(s, Vanilla.select(&ctx(&p, &rows, 2)));
+    }
+
+    #[test]
+    fn lynx_can_hurt_a_tokens_top_expert() {
+        // The failure mode the paper calls out: a dropped expert can be some
+        // token's #1. Token 2's top expert (3) has usage 1 and gets dropped.
+        let p = demo_probs();
+        let rows = [0, 1, 2];
+        let s = LynxLat { drop: 2 }.select(&ctx(&p, &rows, 2));
+        assert!(!s.contains(3));
+        let routed = refine(&p, &rows, &s, 2);
+        // token 2 is forced onto experts {0,1} despite preferring {3,4}
+        assert_eq!(routed.chosen[2], vec![0, 1]);
+        for &j in &routed.chosen[2] {
+            assert!(s.contains(j));
+        }
+    }
+
+    #[test]
+    fn dynamic_skip_keeps_top1_always() {
+        let p = ScoreMatrix::from_rows(&[vec![0.97, 0.01, 0.01, 0.01]]);
+        let r = DynamicSkip { beta: 0.5 }.route(&ctx(&p, &[0], 3));
+        assert_eq!(r.chosen[0], vec![0]);
+        assert!((r.gates.get(0, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dynamic_skip_beta_zero_equals_vanilla() {
+        let p = demo_probs();
+        let rows = [0, 1, 2];
+        let a = DynamicSkip { beta: 0.0 }.route(&ctx(&p, &rows, 2));
+        let b = Vanilla.route(&ctx(&p, &rows, 2));
+        for i in 0..3 {
+            assert_eq!(a.chosen[i], b.chosen[i]);
+        }
+    }
+
+    #[test]
+    fn dynamic_skip_threshold_drops_weak_experts() {
+        let p = ScoreMatrix::from_rows(&[vec![0.5, 0.3, 0.15, 0.05]]);
+        let kept = DynamicSkip { beta: 0.5 }.route(&ctx(&p, &[0], 4));
+        // keep 0 (top-1), 1 (0.3 ≥ 0.25), drop 2 (0.15 < 0.25), drop 3
+        assert_eq!(kept.chosen[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn opportunistic_pool_is_topkprime_union() {
+        let p = demo_probs();
+        let rows = [0, 1, 2];
+        let pol = Opportunistic { k_prime: 1 };
+        let s = pol.select(&ctx(&p, &rows, 2));
+        assert_eq!(s.to_vec(), vec![0, 3]);
+        let r = pol.route(&ctx(&p, &rows, 2));
+        // every token still gets k experts (pool size ≥ k here)
+        assert_eq!(r.chosen[0].len(), 2);
+        // token 0's second slot piggybacks on 3 (the only other pool member)
+        assert_eq!(r.chosen[0], vec![0, 3]);
+    }
+
+    #[test]
+    fn prop_baseline_routing_stays_inside_selected() {
+        forall(
+            501,
+            100,
+            |r: &mut Rng| {
+                let t = 1 + r.below(10);
+                let n = 6 + r.below(40);
+                (t, n, r.next_u64())
+            },
+            |&(t, n, seed)| {
+                let mut r = Rng::new(seed);
+                let rows_v: Vec<Vec<f32>> = (0..t)
+                    .map(|_| {
+                        let mut row: Vec<f32> =
+                            (0..n).map(|_| r.normal_f32(0.0, 2.0)).collect();
+                        softmax_in_place(&mut row);
+                        row
+                    })
+                    .collect();
+                let probs = ScoreMatrix::from_rows(&rows_v);
+                let rows: Vec<usize> = (0..t).collect();
+                let policies: Vec<Box<dyn SelectionPolicy>> = vec![
+                    Box::new(LynxLat { drop: 3 }),
+                    Box::new(DynamicSkip { beta: 0.4 }),
+                    Box::new(Opportunistic { k_prime: 1 }),
+                ];
+                for pol in &policies {
+                    let c = ctx(&probs, &rows, 3);
+                    let routed = pol.route(&c);
+                    for (i, ch) in routed.chosen.iter().enumerate() {
+                        crate::prop_assert!(
+                            ch.len() <= 3,
+                            "{}: token {i} got {} experts",
+                            pol.name(),
+                            ch.len()
+                        );
+                        let gsum: f32 = routed.gates.row(i).iter().sum();
+                        if !ch.is_empty() {
+                            crate::prop_assert!(
+                                (gsum - 1.0).abs() < 1e-5,
+                                "{}: gates sum {gsum}",
+                                pol.name()
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! **Algorithm 2 — Batch-Aware Expert Selection (per layer).**
+//!
+//! Warm-up: include every token's top-k0 experts (a per-token quality
+//! floor). Greedy: add the `budget` highest batch-utility experts
+//! (Algorithm 1, optimal by modularity). Refinement — routing each token to
+//! its top-k within S — is the shared default `route` of the policy trait.
+//!
+//! The paper's Figure 4 / Table 3 configurations are exactly
+//! `BatchAware { budget: m_l, k0 }`.
+
+use super::expert_set::ExpertSet;
+use super::greedy::{greedy_select, warmup_set};
+use super::policy::{SelectionContext, SelectionPolicy};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchAware {
+    /// m_l: experts greedy adds on top of the warm-up set.
+    pub budget: usize,
+    /// k_0: per-token warm-up depth.
+    pub k0: usize,
+}
+
+impl SelectionPolicy for BatchAware {
+    fn name(&self) -> String {
+        format!("batch_aware(m={},k0={})", self.budget, self.k0)
+    }
+
+    fn select(&self, ctx: &SelectionContext) -> ExpertSet {
+        let warm = warmup_set(ctx.probs, ctx.rows, self.k0);
+        if self.budget == 0 {
+            return warm;
+        }
+        let utility = ctx.batch_utility();
+        greedy_select(&utility, self.budget, &warm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::scores::{topk_indices, ScoreMatrix};
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn ctx<'a>(
+        probs: &'a ScoreMatrix,
+        logits: &'a ScoreMatrix,
+        rows: &'a [usize],
+    ) -> SelectionContext<'a> {
+        SelectionContext {
+            probs,
+            logits,
+            rows,
+            requests: &[],
+            colsum_hint: None,
+            placement: None,
+            top_k: 2,
+        }
+    }
+
+    fn random_probs(r: &mut Rng, t: usize, n: usize) -> ScoreMatrix {
+        let rows: Vec<Vec<f32>> = (0..t)
+            .map(|_| {
+                let mut row: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 2.0)).collect();
+                crate::selection::scores::softmax_in_place(&mut row);
+                row
+            })
+            .collect();
+        ScoreMatrix::from_rows(&rows)
+    }
+
+    #[test]
+    fn warmup_only_config_matches_paper_zero_one() {
+        // (m_l=0, k0=1): S is exactly the union of per-token top-1.
+        let probs = ScoreMatrix::from_rows(&[
+            vec![0.7, 0.1, 0.1, 0.1],
+            vec![0.1, 0.1, 0.7, 0.1],
+        ]);
+        let rows = [0, 1];
+        let p = BatchAware { budget: 0, k0: 1 };
+        let s = p.select(&ctx(&probs, &probs, &rows));
+        assert_eq!(s.to_vec(), vec![0, 2]);
+    }
+
+    #[test]
+    fn pure_greedy_config_takes_top_colsum() {
+        // (m_l=2, k0=0): top-2 columns by batch utility.
+        let probs = ScoreMatrix::from_rows(&[
+            vec![0.4, 0.3, 0.2, 0.1],
+            vec![0.1, 0.4, 0.3, 0.2],
+        ]);
+        let p = BatchAware { budget: 2, k0: 0 };
+        let s = p.select(&ctx(&probs, &probs, &[0, 1]));
+        assert_eq!(s.to_vec(), vec![0, 1]); // colsums 0.5, 0.7, 0.5, 0.3 → ties → 0,1
+    }
+
+    #[test]
+    fn colsum_hint_is_used_verbatim() {
+        let probs = ScoreMatrix::from_rows(&[vec![0.9, 0.05, 0.05]]);
+        let hint = [0.0f32, 10.0, 0.0];
+        let c = SelectionContext {
+            probs: &probs,
+            logits: &probs,
+            rows: &[0],
+            requests: &[],
+            colsum_hint: Some(&hint),
+            placement: None,
+            top_k: 1,
+        };
+        let p = BatchAware { budget: 1, k0: 0 };
+        assert_eq!(p.select(&c).to_vec(), vec![1]);
+    }
+
+    #[test]
+    fn prop_selected_size_bound_and_warmup_included() {
+        forall(
+            201,
+            150,
+            |r: &mut Rng| {
+                let t = 1 + r.below(16);
+                let n = 4 + r.below(60);
+                let k0 = r.below(3);
+                let budget = r.below(n);
+                (t, n, k0, budget, r.next_u64())
+            },
+            |&(t, n, k0, budget, seed)| {
+                let mut r = Rng::new(seed);
+                let probs = random_probs(&mut r, t, n);
+                let rows: Vec<usize> = (0..t).collect();
+                let p = BatchAware { budget, k0 };
+                let s = p.select(&ctx(&probs, &probs, &rows));
+                let warm = warmup_set(&probs, &rows, k0);
+                crate::prop_assert!(
+                    s.len() <= warm.len() + budget,
+                    "|S|={} > |S0|+m={}",
+                    s.len(),
+                    warm.len() + budget
+                );
+                for j in warm.iter() {
+                    crate::prop_assert!(s.contains(j), "warm expert {j} dropped");
+                }
+                // every token's top-1 within S is its warm-up expert when k0>=1
+                if k0 >= 1 {
+                    for i in 0..t {
+                        let top1 = topk_indices(probs.row(i), 1)[0];
+                        crate::prop_assert!(s.contains(top1), "token {i} top-1 missing");
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_activation_never_exceeds_vanilla_when_budget_small() {
+        // The headline effect: with budget below the vanilla union size, the
+        // batch-aware policy activates fewer (or equal) experts.
+        forall(
+            202,
+            80,
+            |r: &mut Rng| (2 + r.below(12), 8 + r.below(56), r.next_u64()),
+            |&(t, n, seed)| {
+                let mut r = Rng::new(seed);
+                let probs = random_probs(&mut r, t, n);
+                let rows: Vec<usize> = (0..t).collect();
+                let c = ctx(&probs, &probs, &rows);
+                let vanilla = crate::selection::refine::vanilla_topk(&probs, &rows, 2);
+                let p = BatchAware { budget: 2, k0: 1 };
+                let routed = p.route(&c);
+                crate::prop_assert!(
+                    routed.n_activated() <= vanilla.n_activated(),
+                    "batch-aware activated {} > vanilla {}",
+                    routed.n_activated(),
+                    vanilla.n_activated()
+                );
+                Ok(())
+            },
+        );
+    }
+}

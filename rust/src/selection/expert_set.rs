@@ -1,0 +1,153 @@
+//! Compact expert subsets (S_l in the paper) as bitsets.
+//!
+//! N is at most a few hundred (256 for DeepSeek-R1 geometry), so a handful
+//! of u64 words keeps membership tests and unions branch-free on the decode
+//! hot path.
+
+/// A subset of the N experts of one layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpertSet {
+    n_experts: usize,
+    words: Vec<u64>,
+}
+
+impl ExpertSet {
+    pub fn empty(n_experts: usize) -> Self {
+        ExpertSet { n_experts, words: vec![0; n_experts.div_ceil(64)] }
+    }
+
+    pub fn full(n_experts: usize) -> Self {
+        let mut s = Self::empty(n_experts);
+        for j in 0..n_experts {
+            s.insert(j);
+        }
+        s
+    }
+
+    pub fn from_indices(n_experts: usize, idx: &[usize]) -> Self {
+        let mut s = Self::empty(n_experts);
+        for &j in idx {
+            s.insert(j);
+        }
+        s
+    }
+
+    #[inline]
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    #[inline]
+    pub fn insert(&mut self, j: usize) {
+        debug_assert!(j < self.n_experts);
+        self.words[j / 64] |= 1u64 << (j % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, j: usize) {
+        self.words[j / 64] &= !(1u64 << (j % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, j: usize) -> bool {
+        (self.words[j / 64] >> (j % 64)) & 1 == 1
+    }
+
+    /// |S| — the paper's "number of activated experts".
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn union_with(&mut self, other: &ExpertSet) {
+        debug_assert_eq!(self.n_experts, other.n_experts);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    pub fn intersection_len(&self, other: &ExpertSet) -> usize {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Ascending member indices.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(w, &bits)| {
+            let mut b = bits;
+            std::iter::from_fn(move || {
+                if b == 0 {
+                    None
+                } else {
+                    let t = b.trailing_zeros() as usize;
+                    b &= b - 1;
+                    Some(w * 64 + t)
+                }
+            })
+        })
+    }
+
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+
+    /// 0/1 mask (feeds straight into gate-matrix construction).
+    pub fn to_mask(&self) -> Vec<f32> {
+        (0..self.n_experts).map(|j| if self.contains(j) { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut s = ExpertSet::empty(130);
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(64);
+        s.insert(129);
+        assert!(s.contains(0) && s.contains(64) && s.contains(129));
+        assert!(!s.contains(1) && !s.contains(128));
+        assert_eq!(s.len(), 3);
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn union_and_intersection() {
+        let a = ExpertSet::from_indices(100, &[1, 2, 3, 70]);
+        let b = ExpertSet::from_indices(100, &[3, 70, 99]);
+        let mut u = a.clone();
+        u.union_with(&b);
+        assert_eq!(u.len(), 5);
+        assert_eq!(a.intersection_len(&b), 2);
+    }
+
+    #[test]
+    fn iter_is_sorted_and_complete() {
+        let s = ExpertSet::from_indices(200, &[199, 0, 63, 64, 65]);
+        assert_eq!(s.to_vec(), vec![0, 63, 64, 65, 199]);
+    }
+
+    #[test]
+    fn full_set() {
+        let s = ExpertSet::full(67);
+        assert_eq!(s.len(), 67);
+        assert!(s.contains(66));
+    }
+
+    #[test]
+    fn mask_matches_membership() {
+        let s = ExpertSet::from_indices(5, &[1, 4]);
+        assert_eq!(s.to_mask(), vec![0.0, 1.0, 0.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,221 @@
+//! **Algorithms 5 & 6 — Expert-Parallelism-Aware Selection.**
+//!
+//! Under EP, per-layer latency is set by the GPU with the most activated
+//! experts (all groups synchronize after the layer). Standard greedy can
+//! pile high-utility experts onto one GPU; the GPU-aware variant selects
+//! round-robin **per GPU group**: each round adds the best remaining expert
+//! of every GPU, so after any number of rounds no GPU holds more than one
+//! expert above any other (of those added by the algorithm), giving
+//! MaxLoad(S_added) ≤ ⌈|S_added|/G⌉ and overall
+//! MaxLoad(S) ≤ max_g |warm_g| + m_g.
+//!
+//! Algorithm 6 = warm-up (top-k0 per token) + Algorithm 5 + shared
+//! refinement. The paper's Table 2 configuration is (k0=1, m_g=5).
+
+use super::expert_set::ExpertSet;
+use super::greedy::warmup_set;
+use super::policy::{SelectionContext, SelectionPolicy};
+use crate::ep::Placement;
+
+#[derive(Debug, Clone, Copy)]
+pub struct GpuAware {
+    /// k_0: per-token warm-up depth.
+    pub k0: usize,
+    /// m_g: experts Algorithm 5 may add per GPU group.
+    pub per_gpu_budget: usize,
+}
+
+/// Algorithm 5: GPU-balanced greedy. Adds up to `per_gpu_budget` experts on
+/// every GPU group, each round taking the highest-utility unselected expert
+/// of each group in turn.
+pub fn gpu_aware_greedy(
+    utility: &[f32],
+    placement: &Placement,
+    per_gpu_budget: usize,
+    warm: &ExpertSet,
+) -> ExpertSet {
+    let mut selected = warm.clone();
+    // Per-GPU candidate lists sorted descending by utility; a cursor per GPU
+    // skips already-selected entries lazily.
+    let candidates: Vec<Vec<usize>> = (0..placement.n_gpus())
+        .map(|g| {
+            let mut v: Vec<usize> = placement.experts_on(g).to_vec();
+            v.sort_by(|&a, &b| {
+                utility[b]
+                    .partial_cmp(&utility[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            v
+        })
+        .collect();
+    let mut cursors = vec![0usize; placement.n_gpus()];
+
+    for _round in 0..per_gpu_budget {
+        for g in 0..placement.n_gpus() {
+            let list = &candidates[g];
+            let cur = &mut cursors[g];
+            while *cur < list.len() && selected.contains(list[*cur]) {
+                *cur += 1;
+            }
+            if *cur < list.len() {
+                selected.insert(list[*cur]);
+                *cur += 1;
+            }
+        }
+    }
+    selected
+}
+
+impl SelectionPolicy for GpuAware {
+    fn name(&self) -> String {
+        format!("gpu_aware(k0={},mg={})", self.k0, self.per_gpu_budget)
+    }
+
+    fn select(&self, ctx: &SelectionContext) -> ExpertSet {
+        let placement = ctx
+            .placement
+            .expect("GpuAware policy needs a Placement in the SelectionContext");
+        let warm = warmup_set(ctx.probs, ctx.rows, self.k0);
+        if self.per_gpu_budget == 0 {
+            return warm;
+        }
+        let utility = ctx.batch_utility();
+        gpu_aware_greedy(&utility, placement, self.per_gpu_budget, &warm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ep::PlacementKind;
+    use crate::selection::scores::{softmax_in_place, ScoreMatrix};
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn each_round_adds_one_per_gpu() {
+        // utilities: GPU0 hosts 0..4 (high), GPU1 hosts 4..8 (low)
+        let utility = [9.0, 8.0, 7.0, 6.0, 0.4, 0.3, 0.2, 0.1];
+        let p = Placement::new(8, 2, PlacementKind::Contiguous);
+        let s = gpu_aware_greedy(&utility, &p, 2, &ExpertSet::empty(8));
+        // plain greedy would take {0,1,2,3}; gpu-aware takes top-2 per GPU
+        assert_eq!(s.to_vec(), vec![0, 1, 4, 5]);
+        assert_eq!(p.max_load(&s), 2);
+    }
+
+    #[test]
+    fn warm_members_skipped_not_recounted() {
+        let utility = [9.0, 8.0, 1.0, 0.5];
+        let p = Placement::new(4, 2, PlacementKind::Contiguous);
+        let warm = ExpertSet::from_indices(4, &[0]);
+        let s = gpu_aware_greedy(&utility, &p, 1, &warm);
+        // GPU0 adds its best non-warm (1); GPU1 adds 2.
+        assert_eq!(s.to_vec(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn budget_larger_than_group_takes_whole_group() {
+        let utility = [1.0, 2.0, 3.0, 4.0];
+        let p = Placement::new(4, 2, PlacementKind::Contiguous);
+        let s = gpu_aware_greedy(&utility, &p, 10, &ExpertSet::empty(4));
+        assert_eq!(s.len(), 4);
+    }
+
+    fn random_ctx_parts(r: &mut Rng, t: usize, n: usize) -> ScoreMatrix {
+        let rows: Vec<Vec<f32>> = (0..t)
+            .map(|_| {
+                let mut row: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 2.0)).collect();
+                softmax_in_place(&mut row);
+                row
+            })
+            .collect();
+        ScoreMatrix::from_rows(&rows)
+    }
+
+    #[test]
+    fn prop_max_load_bound() {
+        // The paper's §5 design property: the greedy-added portion is
+        // balanced, so MaxLoad(S) ≤ max_g Load_g(warm) + m_g.
+        forall(
+            401,
+            150,
+            |r: &mut Rng| {
+                let g = 1 + r.below(8);
+                let n = (g * (1 + r.below(8))).max(g);
+                let t = 1 + r.below(10);
+                let k0 = r.below(3);
+                let mg = r.below(5);
+                (g, n, t, k0, mg, r.next_u64())
+            },
+            |&(g, n, t, k0, mg, seed)| {
+                let mut r = Rng::new(seed);
+                let probs = random_ctx_parts(&mut r, t, n);
+                let rows: Vec<usize> = (0..t).collect();
+                let placement = Placement::new(n, g, PlacementKind::RoundRobin);
+                let warm = warmup_set(&probs, &rows, k0);
+                let utility = probs.col_sums(Some(&rows));
+                let s = gpu_aware_greedy(&utility, &placement, mg, &warm);
+                let warm_max = placement.max_load(&warm);
+                let bound = warm_max + mg;
+                crate::prop_assert!(
+                    placement.max_load(&s) <= bound,
+                    "MaxLoad {} > bound {bound}",
+                    placement.max_load(&s)
+                );
+                // warm-up containment
+                for j in warm.iter() {
+                    crate::prop_assert!(s.contains(j), "warm expert dropped");
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_balances_vs_plain_greedy() {
+        // On skewed utilities, GPU-aware MaxLoad ≤ plain greedy MaxLoad for
+        // the same number of selected experts.
+        forall(
+            402,
+            100,
+            |r: &mut Rng| {
+                let g = 2 + r.below(6);
+                let per = 2 + r.below(6);
+                let n = g * per;
+                let hot = r.below(g);
+                (g, n, hot, r.next_u64())
+            },
+            |&(g, n, hot, seed)| {
+                let mut r = Rng::new(seed);
+                let placement = Placement::new(n, g, PlacementKind::Contiguous);
+                // utilities skewed toward GPU `hot`
+                let utility: Vec<f32> = (0..n)
+                    .map(|j| {
+                        let base = r.f32() * 0.1;
+                        if placement.gpu_of(j) == hot {
+                            base + 1.0
+                        } else {
+                            base
+                        }
+                    })
+                    .collect();
+                let mg = 1 + r.below(3);
+                let s_gpu =
+                    gpu_aware_greedy(&utility, &placement, mg, &ExpertSet::empty(n));
+                let s_plain = crate::selection::greedy::greedy_select(
+                    &utility,
+                    s_gpu.len(),
+                    &ExpertSet::empty(n),
+                );
+                crate::prop_assert!(
+                    placement.max_load(&s_gpu) <= placement.max_load(&s_plain),
+                    "gpu-aware {} > plain {}",
+                    placement.max_load(&s_gpu),
+                    placement.max_load(&s_plain)
+                );
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! **Algorithm 1 — Greedy Expert Selection (per layer).**
+//!
+//! The per-layer proxy f_l(S) = Σ_{j∈S} Σ_i g_{i,j} is *modular*
+//! (Proposition 3.2): each expert's marginal gain is its batch utility
+//! u_j = Σ_i g_{i,j}, independent of S. Greedy — repeatedly adding the
+//! highest-utility expert not yet selected — is therefore **optimal** for
+//! the budgeted subproblem (Corollary 3.3), and reduces to sorting experts
+//! by u_j.
+//!
+//! Budget convention (matches the paper's experiment grids, e.g. Fig 4's
+//! "(0,1) = warm-up only"): `budget` is the number of experts greedy ADDS on
+//! top of the warm-up set S_0, so (m_l=0, k_0=1) selects exactly the
+//! warm-up union.
+
+use super::expert_set::ExpertSet;
+use super::scores::ScoreMatrix;
+
+/// Greedily add the `budget` highest-utility experts from E \ S_0.
+///
+/// `utility[j]` is Σ_i g_{i,j} (the modular marginal gain). Returns the
+/// final set S ⊇ S_0 with |S| ≤ |S_0| + budget.
+pub fn greedy_select(utility: &[f32], budget: usize, warm: &ExpertSet) -> ExpertSet {
+    let mut selected = warm.clone();
+    if budget == 0 {
+        return selected;
+    }
+    // Modularity ⇒ one sort of the remaining experts is the full greedy run.
+    let mut rest: Vec<usize> = (0..utility.len()).filter(|&j| !warm.contains(j)).collect();
+    rest.sort_by(|&a, &b| {
+        utility[b]
+            .partial_cmp(&utility[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    for &j in rest.iter().take(budget) {
+        selected.insert(j);
+    }
+    selected
+}
+
+/// Warm-up initialization: S_0 = ∪_i Top-k0(G_i) over `rows` of the score
+/// matrix (every token's k0 highest-confidence experts are always kept).
+pub fn warmup_set(scores: &ScoreMatrix, rows: &[usize], k0: usize) -> ExpertSet {
+    let mut s = ExpertSet::empty(scores.n_experts());
+    if k0 == 0 {
+        return s;
+    }
+    for &i in rows {
+        for j in super::scores::topk_indices(scores.row(i), k0) {
+            s.insert(j);
+        }
+    }
+    s
+}
+
+/// Literal step-by-step greedy (argmax loop) — kept as an executable witness
+/// of Corollary 3.3: the tests assert it selects exactly the same set as the
+/// sort-based fast path for every input.
+pub fn greedy_select_naive(utility: &[f32], budget: usize, warm: &ExpertSet) -> ExpertSet {
+    let mut selected = warm.clone();
+    for _ in 0..budget {
+        let mut best: Option<usize> = None;
+        for j in 0..utility.len() {
+            if selected.contains(j) {
+                continue;
+            }
+            best = match best {
+                None => Some(j),
+                Some(b) if utility[j] > utility[b] => Some(j),
+                keep => keep,
+            };
+        }
+        match best {
+            Some(j) => selected.insert(j),
+            None => break,
+        }
+    }
+    selected
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn budget_zero_is_warmup_only() {
+        let warm = ExpertSet::from_indices(8, &[2, 5]);
+        let got = greedy_select(&[9.0; 8], 0, &warm);
+        assert_eq!(got, warm);
+    }
+
+    #[test]
+    fn picks_top_utility_experts() {
+        let utility = [0.1, 0.9, 0.3, 0.8, 0.2];
+        let got = greedy_select(&utility, 2, &ExpertSet::empty(5));
+        assert_eq!(got.to_vec(), vec![1, 3]);
+    }
+
+    #[test]
+    fn warmup_members_do_not_consume_budget() {
+        let utility = [0.9, 0.8, 0.7, 0.1];
+        let warm = ExpertSet::from_indices(4, &[0]);
+        let got = greedy_select(&utility, 2, &warm);
+        assert_eq!(got.to_vec(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tie_break_prefers_lower_index() {
+        let utility = [0.5, 0.5, 0.5];
+        let got = greedy_select(&utility, 2, &ExpertSet::empty(3));
+        assert_eq!(got.to_vec(), vec![0, 1]);
+    }
+
+    #[test]
+    fn budget_beyond_n_selects_all() {
+        let got = greedy_select(&[1.0, 2.0], 10, &ExpertSet::empty(2));
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn warmup_set_unions_per_token_topk() {
+        let m = ScoreMatrix::from_rows(&[
+            vec![0.9, 0.05, 0.05, 0.0],
+            vec![0.0, 0.1, 0.2, 0.7],
+        ]);
+        let s = warmup_set(&m, &[0, 1], 1);
+        assert_eq!(s.to_vec(), vec![0, 3]);
+        let s2 = warmup_set(&m, &[0, 1], 2);
+        assert_eq!(s2.to_vec(), vec![0, 1, 2, 3]);
+        assert!(warmup_set(&m, &[0, 1], 0).is_empty());
+    }
+
+    #[test]
+    fn warmup_respects_row_subset() {
+        let m = ScoreMatrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        assert_eq!(warmup_set(&m, &[1], 1).to_vec(), vec![1]);
+    }
+
+    /// Corollary 3.3 (modularity ⇒ greedy optimal): the sort-based fast path
+    /// must equal the literal argmax loop on random instances.
+    #[test]
+    fn prop_fast_greedy_equals_naive() {
+        forall(
+            101,
+            200,
+            |r: &mut Rng| {
+                let n = 1 + r.below(64);
+                let utility: Vec<f32> = (0..n).map(|_| r.f32()).collect();
+                let warm_n = r.below(n.min(8));
+                let warm_idx: Vec<usize> = r.sample_indices(n, warm_n);
+                let budget = r.below(n + 2);
+                (utility, warm_idx, budget)
+            },
+            |(utility, warm_idx, budget)| {
+                let warm = ExpertSet::from_indices(utility.len(), warm_idx);
+                let fast = greedy_select(utility, *budget, &warm);
+                let naive = greedy_select_naive(utility, *budget, &warm);
+                if fast != naive {
+                    return Err(format!(
+                        "fast {:?} != naive {:?}",
+                        fast.to_vec(),
+                        naive.to_vec()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Optimality: no other set of the same size has higher total utility.
+    #[test]
+    fn prop_greedy_is_optimal_for_modular_proxy() {
+        forall(
+            102,
+            100,
+            |r: &mut Rng| {
+                let n = 2 + r.below(12); // small n: we brute-force subsets
+                let utility: Vec<f32> = (0..n).map(|_| r.f32()).collect();
+                let budget = 1 + r.below(n);
+                (utility, budget)
+            },
+            |(utility, budget)| {
+                let n = utility.len();
+                let sel = greedy_select(utility, *budget, &ExpertSet::empty(n));
+                let value: f32 = sel.iter().map(|j| utility[j]).sum();
+                // brute force all subsets of size == sel.len()
+                let size = sel.len();
+                let mut best = f32::NEG_INFINITY;
+                for mask in 0u32..(1 << n) {
+                    if mask.count_ones() as usize != size {
+                        continue;
+                    }
+                    let v: f32 = (0..n)
+                        .filter(|j| (mask >> j) & 1 == 1)
+                        .map(|j| utility[j])
+                        .sum();
+                    best = best.max(v);
+                }
+                if value < best - 1e-5 {
+                    return Err(format!("greedy {value} < optimal {best}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! The paper's contribution: batch-aware expert selection (Algorithms 1-6)
+//! plus the published baselines it is evaluated against.
+//!
+//! Data flow per MoE layer on the decode path:
+//!
+//! ```text
+//!   attn_router artifact ──► logits [T×N], probs [T×N], colsum [N]
+//!                                  │
+//!                    SelectionPolicy::route(ctx)          (this module)
+//!                                  │
+//!             Routing { gates [T×N], chosen, activated }
+//!                                  │
+//!   moe_layer artifact ◄── gates   └─► memsim (expert-IO accounting)
+//! ```
+//!
+//! * [`greedy`] — Algorithm 1 (optimal by modularity, Corollary 3.3).
+//! * [`batch_aware`] — Algorithm 2 (warm-up + greedy + refinement).
+//! * [`spec_aware`] — Algorithms 3-4 (hierarchical, speculation-aware).
+//! * [`gpu_aware`] — Algorithms 5-6 (EP MaxLoad-balanced).
+//! * [`baselines`] — vanilla top-k, LYNX-Lat, Dynamic-Skipping,
+//!   Opportunistic.
+//! * [`refine`] — the shared refinement tail (top-k within S).
+
+pub mod baselines;
+pub mod batch_aware;
+pub mod expert_set;
+pub mod gpu_aware;
+pub mod greedy;
+pub mod policy;
+pub mod refine;
+pub mod scores;
+pub mod spec_aware;
+
+pub use expert_set::ExpertSet;
+pub use policy::{PolicyKind, SelectionContext, SelectionPolicy};
+pub use refine::{refine, vanilla_topk, Routing};
+pub use scores::{softmax_in_place, topk_indices, ScoreMatrix};

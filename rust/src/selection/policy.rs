@@ -1,0 +1,186 @@
+//! The policy abstraction every deployment scenario plugs into.
+//!
+//! A [`SelectionPolicy`] looks at one layer's router scores for the current
+//! batch and decides the expert subset S_l; the shared [`refine`] tail then
+//! routes each token to its top-k within S_l. Baselines that are not
+//! "select-then-refine" shaped (Dynamic-Skipping, Opportunistic) override
+//! [`SelectionPolicy::route`] directly.
+
+use super::expert_set::ExpertSet;
+use super::refine::{refine, Routing};
+use super::scores::ScoreMatrix;
+use crate::ep::Placement;
+
+/// Everything a policy may look at for one layer of one batch.
+pub struct SelectionContext<'a> {
+    /// Full-N softmax gate scores `[T × N]` (the paper's G^{(l)}).
+    pub probs: &'a ScoreMatrix,
+    /// Raw router logits `[T × N]` (refinement renormalizes in logit space).
+    pub logits: &'a ScoreMatrix,
+    /// Live token rows (padding rows excluded).
+    pub rows: &'a [usize],
+    /// Token rows grouped per request — set by the speculative-decoding
+    /// scheduler (each group = 1 bonus token + L_s speculative tokens).
+    pub requests: &'a [Vec<usize>],
+    /// Batch utility Σ_i probs[i,:] over `rows`, if the accelerator already
+    /// reduced it (the Pallas router kernel ships `colsum`).
+    pub colsum_hint: Option<&'a [f32]>,
+    /// Expert → GPU placement, for EP-aware selection.
+    pub placement: Option<&'a Placement>,
+    /// The model's native top-k.
+    pub top_k: usize,
+}
+
+impl<'a> SelectionContext<'a> {
+    /// Batch utility over the live rows, using the accelerator-reduced hint
+    /// when available.
+    pub fn batch_utility(&self) -> Vec<f32> {
+        match self.colsum_hint {
+            Some(c) => c.to_vec(),
+            None => self.probs.col_sums(Some(self.rows)),
+        }
+    }
+}
+
+/// A batch-aware expert selection policy (one of the paper's algorithms or
+/// a baseline).
+pub trait SelectionPolicy: Send + Sync {
+    /// Human-readable name with parameters, e.g. `batch_aware(m=24,k0=1)`.
+    fn name(&self) -> String;
+
+    /// Choose the expert subset S_l for this layer.
+    fn select(&self, ctx: &SelectionContext) -> ExpertSet;
+
+    /// Full routing decision. Default: select then refine (Algorithm 2/4/6
+    /// shape). Token-level baselines override this.
+    fn route(&self, ctx: &SelectionContext) -> Routing {
+        let selected = self.select(ctx);
+        refine(ctx.logits, ctx.rows, &selected, ctx.top_k)
+    }
+}
+
+/// Parsed policy configuration — what the config file / CLI / benches name.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    /// Unrestricted top-k routing (the paper's baseline).
+    Vanilla,
+    /// Algorithm 2: warm-up k0 + greedy budget m_l.
+    BatchAware { budget: usize, k0: usize },
+    /// Algorithm 4: hierarchical — per-request budget m_r, warm-up k0,
+    /// then batch-level greedy top-up budget m.
+    SpecAware { k0: usize, batch_budget: usize, req_budget: usize },
+    /// Algorithm 6: warm-up k0 + GPU-balanced greedy, per-GPU budget m_g.
+    GpuAware { k0: usize, per_gpu_budget: usize },
+    /// LYNX-Lat (Gupta et al. 2024): drop the `drop` least-frequently
+    /// requested experts from the batch union.
+    LynxLat { drop: usize },
+    /// Dynamic Skipping (Lu et al. 2024): per token, skip expert e_r when
+    /// g_r < beta * g_0.
+    DynamicSkip { beta: f32 },
+    /// Opportunistic (Oncescu et al. 2025): own top-k' + piggyback the
+    /// remaining k-k' slots on the batch pool.
+    Opportunistic { k_prime: usize },
+}
+
+impl PolicyKind {
+    /// Parse e.g. `vanilla`, `batch:24:1`, `spec:1:0:4`, `gpu:1:5`,
+    /// `lynx:16`, `skip:0.3`, `opp:2`.
+    pub fn parse(s: &str) -> Result<PolicyKind, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let usage = "expected vanilla | batch:<m>:<k0> | spec:<k0>:<m>:<mr> | \
+                     gpu:<k0>:<mg> | lynx:<drop> | skip:<beta> | opp:<k'>";
+        let p = |v: &str| -> Result<usize, String> {
+            v.parse().map_err(|_| format!("bad integer '{v}' in '{s}'; {usage}"))
+        };
+        match parts.as_slice() {
+            ["vanilla"] => Ok(PolicyKind::Vanilla),
+            ["batch", m, k0] => Ok(PolicyKind::BatchAware { budget: p(m)?, k0: p(k0)? }),
+            ["spec", k0, m, mr] => Ok(PolicyKind::SpecAware {
+                k0: p(k0)?,
+                batch_budget: p(m)?,
+                req_budget: p(mr)?,
+            }),
+            ["gpu", k0, mg] => {
+                Ok(PolicyKind::GpuAware { k0: p(k0)?, per_gpu_budget: p(mg)? })
+            }
+            ["lynx", d] => Ok(PolicyKind::LynxLat { drop: p(d)? }),
+            ["skip", b] => Ok(PolicyKind::DynamicSkip {
+                beta: b.parse().map_err(|_| format!("bad float '{b}'; {usage}"))?,
+            }),
+            ["opp", kp] => Ok(PolicyKind::Opportunistic { k_prime: p(kp)? }),
+            _ => Err(format!("unknown policy '{s}'; {usage}")),
+        }
+    }
+
+    /// Instantiate the policy object.
+    pub fn build(&self) -> Box<dyn SelectionPolicy> {
+        use super::{baselines, batch_aware::BatchAware, gpu_aware::GpuAware,
+                    spec_aware::SpecAware};
+        match *self {
+            PolicyKind::Vanilla => Box::new(baselines::Vanilla),
+            PolicyKind::BatchAware { budget, k0 } => Box::new(BatchAware { budget, k0 }),
+            PolicyKind::SpecAware { k0, batch_budget, req_budget } => {
+                Box::new(SpecAware { k0, batch_budget, req_budget })
+            }
+            PolicyKind::GpuAware { k0, per_gpu_budget } => {
+                Box::new(GpuAware { k0, per_gpu_budget })
+            }
+            PolicyKind::LynxLat { drop } => Box::new(baselines::LynxLat { drop }),
+            PolicyKind::DynamicSkip { beta } => {
+                Box::new(baselines::DynamicSkip { beta })
+            }
+            PolicyKind::Opportunistic { k_prime } => {
+                Box::new(baselines::Opportunistic { k_prime })
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PolicyKind::Vanilla => write!(f, "vanilla"),
+            PolicyKind::BatchAware { budget, k0 } => write!(f, "batch:{budget}:{k0}"),
+            PolicyKind::SpecAware { k0, batch_budget, req_budget } => {
+                write!(f, "spec:{k0}:{batch_budget}:{req_budget}")
+            }
+            PolicyKind::GpuAware { k0, per_gpu_budget } => {
+                write!(f, "gpu:{k0}:{per_gpu_budget}")
+            }
+            PolicyKind::LynxLat { drop } => write!(f, "lynx:{drop}"),
+            PolicyKind::DynamicSkip { beta } => write!(f, "skip:{beta}"),
+            PolicyKind::Opportunistic { k_prime } => write!(f, "opp:{k_prime}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["vanilla", "batch:24:1", "spec:1:0:4", "gpu:1:5", "lynx:16", "opp:2"] {
+            let k = PolicyKind::parse(s).unwrap();
+            assert_eq!(k.to_string(), s);
+            assert_eq!(PolicyKind::parse(&k.to_string()).unwrap(), k);
+        }
+        let k = PolicyKind::parse("skip:0.3").unwrap();
+        assert_eq!(k, PolicyKind::DynamicSkip { beta: 0.3 });
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(PolicyKind::parse("").is_err());
+        assert!(PolicyKind::parse("batch:x:1").is_err());
+        assert!(PolicyKind::parse("spec:1:2").is_err());
+        assert!(PolicyKind::parse("nope:1").is_err());
+    }
+
+    #[test]
+    fn build_produces_named_policies() {
+        let p = PolicyKind::parse("batch:12:2").unwrap().build();
+        assert!(p.name().contains("12"));
+        assert!(p.name().contains('2'));
+    }
+}

@@ -1,0 +1,199 @@
+//! Refinement step (shared tail of Algorithms 2, 4 and 6): route every token
+//! to its top-k experts **within** the selected set S_l, then renormalize the
+//! gate weights over the chosen experts (the paper's ḡ restricted to 𝒯).
+//!
+//! The output gate matrix is dense `[T × N]` with zeros outside each token's
+//! chosen experts — exactly the layout the `moe_layer` HLO artifact consumes.
+
+use super::expert_set::ExpertSet;
+use super::scores::{topk_indices_where, ScoreMatrix};
+
+/// Final routing decision for one MoE layer.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    /// Renormalized gate weights, zeros outside chosen experts. `[T × N]`.
+    pub gates: ScoreMatrix,
+    /// Chosen expert indices per token (≤ k each, descending gate order).
+    pub chosen: Vec<Vec<usize>>,
+    /// Union of experts actually used by ≥1 token — the paper's
+    /// "number of activated experts" for this layer.
+    pub activated: ExpertSet,
+}
+
+impl Routing {
+    pub fn n_activated(&self) -> usize {
+        self.activated.len()
+    }
+}
+
+/// Route each token in `rows` to its top-`k` experts within `selected`,
+/// renormalizing gates by softmax over the chosen experts' logits.
+///
+/// `logits` are the raw router outputs (renormalization must happen in logit
+/// space to match the paper's gating definition §2.2); ranking within S is
+/// identical whether done on logits or their full-N softmax.
+///
+/// Rows not listed in `rows` (padding) get all-zero gate rows.
+pub fn refine(
+    logits: &ScoreMatrix,
+    rows: &[usize],
+    selected: &ExpertSet,
+    k: usize,
+) -> Routing {
+    let n = logits.n_experts();
+    let mut gates = ScoreMatrix::zeros(logits.n_tokens(), n);
+    let mut chosen = vec![Vec::new(); logits.n_tokens()];
+    let mut activated = ExpertSet::empty(n);
+
+    for &i in rows {
+        let row = logits.row(i);
+        let top = topk_indices_where(row, k, |j| selected.contains(j));
+        if top.is_empty() {
+            continue;
+        }
+        // softmax over the chosen logits only
+        let m = top.iter().map(|&j| row[j]).fold(f32::NEG_INFINITY, f32::max);
+        let mut exps: Vec<f32> = top.iter().map(|&j| (row[j] - m).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        for e in &mut exps {
+            *e /= sum;
+        }
+        let out = gates.row_mut(i);
+        for (&j, &g) in top.iter().zip(&exps) {
+            out[j] = g;
+            activated.insert(j);
+        }
+        chosen[i] = top;
+    }
+    Routing { gates, chosen, activated }
+}
+
+/// Vanilla top-k routing (the serving baseline): refinement against the full
+/// expert set.
+pub fn vanilla_topk(logits: &ScoreMatrix, rows: &[usize], k: usize) -> Routing {
+    refine(logits, rows, &ExpertSet::full(logits.n_experts()), k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn logits_2x4() -> ScoreMatrix {
+        ScoreMatrix::from_rows(&[vec![2.0, 1.0, 0.0, -1.0], vec![-1.0, 0.0, 1.0, 2.0]])
+    }
+
+    #[test]
+    fn vanilla_selects_per_token_topk() {
+        let r = vanilla_topk(&logits_2x4(), &[0, 1], 2);
+        assert_eq!(r.chosen[0], vec![0, 1]);
+        assert_eq!(r.chosen[1], vec![3, 2]);
+        assert_eq!(r.n_activated(), 4);
+    }
+
+    #[test]
+    fn gates_rows_sum_to_one_over_chosen() {
+        let r = vanilla_topk(&logits_2x4(), &[0, 1], 2);
+        for i in 0..2 {
+            let s: f32 = r.gates.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn restriction_forces_tokens_into_selected_set() {
+        let sel = ExpertSet::from_indices(4, &[1, 2]);
+        let r = refine(&logits_2x4(), &[0, 1], &sel, 2);
+        assert_eq!(r.chosen[0], vec![1, 2]);
+        assert_eq!(r.chosen[1], vec![2, 1]);
+        assert_eq!(r.activated.to_vec(), vec![1, 2]);
+        // gate weight zero outside S
+        assert_eq!(r.gates.get(0, 0), 0.0);
+        assert_eq!(r.gates.get(1, 3), 0.0);
+    }
+
+    #[test]
+    fn renormalization_matches_restricted_softmax() {
+        let sel = ExpertSet::from_indices(4, &[0, 1]);
+        let r = refine(&logits_2x4(), &[0], &sel, 2);
+        let (a, b) = (2.0f32, 1.0f32);
+        let ea = (a - a).exp();
+        let eb = (b - a).exp();
+        assert!((r.gates.get(0, 0) - ea / (ea + eb)).abs() < 1e-6);
+        assert!((r.gates.get(0, 1) - eb / (ea + eb)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn padding_rows_left_zero() {
+        let r = refine(&logits_2x4(), &[0], &ExpertSet::full(4), 2);
+        assert!(r.gates.row(1).iter().all(|&v| v == 0.0));
+        assert!(r.chosen[1].is_empty());
+    }
+
+    #[test]
+    fn selected_smaller_than_k_uses_whole_set() {
+        let sel = ExpertSet::from_indices(4, &[2]);
+        let r = refine(&logits_2x4(), &[0, 1], &sel, 3);
+        assert_eq!(r.chosen[0], vec![2]);
+        assert!((r.gates.get(0, 2) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_refinement_invariants() {
+        forall(
+            103,
+            200,
+            |r: &mut Rng| {
+                let t = 1 + r.below(12);
+                let n = 2 + r.below(40);
+                let k = 1 + r.below(6);
+                let rows: Vec<Vec<f32>> = (0..t)
+                    .map(|_| (0..n).map(|_| r.normal_f32(0.0, 2.0)).collect())
+                    .collect();
+                let sel_count = 1 + r.below(n);
+                let sel = r.sample_indices(n, sel_count);
+                (rows, sel, k)
+            },
+            |(rows, sel, k)| {
+                let logits = ScoreMatrix::from_rows(rows);
+                let n = logits.n_experts();
+                let all_rows: Vec<usize> = (0..logits.n_tokens()).collect();
+                let selected = ExpertSet::from_indices(n, sel);
+                let r = refine(&logits, &all_rows, &selected, *k);
+                for i in 0..logits.n_tokens() {
+                    let chosen = &r.chosen[i];
+                    crate::prop_assert!(
+                        chosen.len() == (*k).min(selected.len()),
+                        "token {i}: {} chosen, want min(k={k}, |S|={})",
+                        chosen.len(),
+                        selected.len()
+                    );
+                    for &j in chosen {
+                        crate::prop_assert!(selected.contains(j), "chose outside S");
+                    }
+                    let s: f32 = r.gates.row(i).iter().sum();
+                    crate::prop_assert!((s - 1.0).abs() < 1e-5, "row sum {s}");
+                    // zero outside chosen
+                    for j in 0..n {
+                        if !chosen.contains(&j) {
+                            crate::prop_assert!(
+                                r.gates.get(i, j) == 0.0,
+                                "nonzero gate outside chosen"
+                            );
+                        }
+                    }
+                }
+                // activated == union of chosen
+                let mut want = ExpertSet::empty(n);
+                for c in &r.chosen {
+                    for &j in c {
+                        want.insert(j);
+                    }
+                }
+                crate::prop_assert!(r.activated == want, "activated mismatch");
+                Ok(())
+            },
+        );
+    }
+}

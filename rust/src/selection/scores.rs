@@ -1,0 +1,269 @@
+//! Gate-score matrices — the single input every XShare algorithm consumes.
+//!
+//! `ScoreMatrix` is a dense row-major `[T × N]` f32 matrix of router scores
+//! (full-N softmax probabilities from the `attn_router` artifact, or
+//! synthetic scores from [`crate::gen`]). Rows are tokens, columns experts.
+
+/// Dense `[n_tokens × n_experts]` row-major score matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreMatrix {
+    n_tokens: usize,
+    n_experts: usize,
+    data: Vec<f32>,
+}
+
+impl ScoreMatrix {
+    pub fn zeros(n_tokens: usize, n_experts: usize) -> Self {
+        ScoreMatrix { n_tokens, n_experts, data: vec![0.0; n_tokens * n_experts] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        assert!(!rows.is_empty(), "empty score matrix");
+        let n_experts = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * n_experts);
+        for r in rows {
+            assert_eq!(r.len(), n_experts, "ragged score rows");
+            data.extend_from_slice(r);
+        }
+        ScoreMatrix { n_tokens: rows.len(), n_experts, data }
+    }
+
+    /// Wrap an existing flat row-major buffer.
+    pub fn from_flat(n_tokens: usize, n_experts: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n_tokens * n_experts);
+        ScoreMatrix { n_tokens, n_experts, data }
+    }
+
+    #[inline]
+    pub fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    #[inline]
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n_experts..(i + 1) * self.n_experts]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.n_experts..(i + 1) * self.n_experts]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.n_experts + j]
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Batch utility u_j = Σ_i scores[i, j] over `rows` (Proposition 3.2's
+    /// marginal gains). `None` = all rows.
+    pub fn col_sums(&self, rows: Option<&[usize]>) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_experts];
+        match rows {
+            None => {
+                for i in 0..self.n_tokens {
+                    let r = self.row(i);
+                    for (o, v) in out.iter_mut().zip(r) {
+                        *o += v;
+                    }
+                }
+            }
+            Some(idx) => {
+                for &i in idx {
+                    let r = self.row(i);
+                    for (o, v) in out.iter_mut().zip(r) {
+                        *o += v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Column sums over a contiguous token range (per-request aggregation
+    /// for Algorithm 3). Accumulates into `out` (callers reuse buffers).
+    pub fn col_sums_range_into(&self, lo: usize, hi: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n_experts);
+        out.fill(0.0);
+        for i in lo..hi {
+            let r = self.row(i);
+            for (o, v) in out.iter_mut().zip(r) {
+                *o += v;
+            }
+        }
+    }
+
+    /// Row-wise softmax of a logits matrix (numerically stable).
+    pub fn softmax(logits: &ScoreMatrix) -> ScoreMatrix {
+        let mut out = logits.clone();
+        for i in 0..out.n_tokens {
+            softmax_in_place(out.row_mut(i));
+        }
+        out
+    }
+}
+
+/// Stable in-place softmax over one row.
+pub fn softmax_in_place(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+#[inline]
+fn desc_by_score(row: &[f32]) -> impl Fn(&usize, &usize) -> std::cmp::Ordering + '_ {
+    move |&a, &b| {
+        row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    }
+}
+
+/// Indices of the top-`k` entries of `row`, highest first; ties broken by
+/// lower index (matches `ref.topk_mask_ref` on the python side).
+///
+/// Perf (EXPERIMENTS.md §Perf, L3 iteration 1): this runs per token per
+/// layer on the decode hot path. A full sort of all N indices cost
+/// O(N log N); `select_nth_unstable` partitions in O(N) and only the k
+/// survivors are sorted. The comparator is a total order (score desc,
+/// index asc), so the selected set — and therefore every algorithm built
+/// on it — is unchanged (property-tested against the sort-based oracle).
+pub fn topk_indices(row: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(row.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, desc_by_score(row));
+        idx.truncate(k);
+    }
+    idx.sort_by(desc_by_score(row));
+    idx
+}
+
+/// Top-`k` restricted to experts where `allowed(j)` holds. Returns fewer
+/// than `k` if the allowed set is smaller.
+pub fn topk_indices_where(
+    row: &[f32],
+    k: usize,
+    mut allowed: impl FnMut(usize) -> bool,
+) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).filter(|&j| allowed(j)).collect();
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, desc_by_score(row));
+        idx.truncate(k);
+    }
+    idx.sort_by(desc_by_score(row));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_access_and_col_sums() {
+        let m = ScoreMatrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.col_sums(None), vec![5.0, 7.0, 9.0]);
+        assert_eq!(m.col_sums(Some(&[0])), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn col_sums_range() {
+        let m = ScoreMatrix::from_rows(&[
+            vec![1.0, 0.0],
+            vec![0.0, 2.0],
+            vec![3.0, 3.0],
+        ]);
+        let mut out = vec![0.0; 2];
+        m.col_sums_range_into(1, 3, &mut out);
+        assert_eq!(out, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let logits = ScoreMatrix::from_rows(&[vec![0.0, 1.0, 2.0], vec![-5.0, 5.0, 0.0]]);
+        let p = ScoreMatrix::softmax(&logits);
+        for i in 0..2 {
+            let s: f32 = p.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            // order preserved
+            let t = topk_indices(p.row(i), 1);
+            assert_eq!(t[0], topk_indices(logits.row(i), 1)[0]);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let mut row = vec![1e30f32, -1e30, 0.0];
+        softmax_in_place(&mut row);
+        assert!(row.iter().all(|v| v.is_finite()));
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_order_and_ties() {
+        let row = [0.1f32, 0.5, 0.5, 0.4];
+        assert_eq!(topk_indices(&row, 3), vec![1, 2, 3]); // tie 1 before 2
+        assert_eq!(topk_indices(&row, 0), Vec::<usize>::new());
+        assert_eq!(topk_indices(&row, 99).len(), 4);
+    }
+
+    #[test]
+    fn prop_partial_select_equals_full_sort() {
+        use crate::util::check::forall;
+        use crate::util::rng::Rng;
+        forall(
+            601,
+            300,
+            |r: &mut Rng| {
+                let n = 1 + r.below(300);
+                let k = r.below(n + 3);
+                // coarse values force ties
+                let row: Vec<f32> =
+                    (0..n).map(|_| (r.below(16) as f32) / 8.0).collect();
+                (row, k)
+            },
+            |(row, k)| {
+                let fast = topk_indices(row, *k);
+                let mut idx: Vec<usize> = (0..row.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    row[b]
+                        .partial_cmp(&row[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                idx.truncate((*k).min(row.len()));
+                if fast != idx {
+                    return Err(format!("fast {fast:?} != oracle {idx:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn topk_where_respects_filter() {
+        let row = [0.9f32, 0.8, 0.7, 0.6];
+        let got = topk_indices_where(&row, 2, |j| j % 2 == 1);
+        assert_eq!(got, vec![1, 3]);
+        let small = topk_indices_where(&row, 4, |j| j == 2);
+        assert_eq!(small, vec![2]);
+    }
+}

@@ -1,0 +1,267 @@
+//! **Algorithms 3 & 4 — Speculative-Decoding-Aware Expert Selection.**
+//!
+//! Speculative tokens of one request are consecutive steps of the same
+//! generation, so their expert preferences correlate strongly (the paper's
+//! Assumption 4.1 / Figure 3: 2-3× the overlap of independent tokens).
+//! The hierarchical proxy exploits that structure:
+//!
+//!   Algorithm 3 (per request r): warm-up top-k0 per token, then add the
+//!   top-m_r experts by the *request's* aggregated scores Σ_{x∈T_r} g_{x,j}.
+//!
+//!   Algorithm 4 (batch): union the per-request selections, then optionally
+//!   top-up with batch-level greedy (budget m), then refine per token.
+//!
+//! The paper's Pareto-optimal configurations (k0=1, m=0, m_r∈{4,5}) skip the
+//! batch top-up entirely — the per-request stage already captures the
+//! gating mass.
+
+use super::expert_set::ExpertSet;
+use super::greedy::greedy_select;
+use super::policy::{SelectionContext, SelectionPolicy};
+use super::scores::{topk_indices, ScoreMatrix};
+
+#[derive(Debug, Clone, Copy)]
+pub struct SpecAware {
+    /// k_0: per-token warm-up depth.
+    pub k0: usize,
+    /// m: batch-level greedy top-up budget (0 = per-request union only).
+    pub batch_budget: usize,
+    /// m_r: per-request budget on top of the warm-up.
+    pub req_budget: usize,
+}
+
+/// Algorithm 3: expert selection for one request's token group.
+pub fn per_request_select(
+    probs: &ScoreMatrix,
+    token_rows: &[usize],
+    req_budget: usize,
+    k0: usize,
+    scratch: &mut Vec<f32>,
+) -> ExpertSet {
+    let n = probs.n_experts();
+    // Warm-up: top-k0 per token.
+    let mut s = ExpertSet::empty(n);
+    for &i in token_rows {
+        for j in topk_indices(probs.row(i), k0) {
+            s.insert(j);
+        }
+    }
+    if req_budget == 0 {
+        return s;
+    }
+    // Aggregate scores across the request (the per-request proxy f_l(S;r)).
+    scratch.clear();
+    scratch.resize(n, 0.0);
+    for &i in token_rows {
+        for (acc, v) in scratch.iter_mut().zip(probs.row(i)) {
+            *acc += v;
+        }
+    }
+    greedy_select(scratch, req_budget, &s)
+}
+
+impl SelectionPolicy for SpecAware {
+    fn name(&self) -> String {
+        format!(
+            "spec_aware(k0={},m={},mr={})",
+            self.k0, self.batch_budget, self.req_budget
+        )
+    }
+
+    fn select(&self, ctx: &SelectionContext) -> ExpertSet {
+        let n = ctx.probs.n_experts();
+        let mut s_batch = ExpertSet::empty(n);
+        let mut scratch = Vec::with_capacity(n);
+
+        if ctx.requests.is_empty() {
+            // No request structure supplied (e.g. non-speculative batch):
+            // degrade gracefully to treating every token as its own request.
+            for &i in ctx.rows {
+                let sr = per_request_select(
+                    ctx.probs,
+                    std::slice::from_ref(&i),
+                    self.req_budget,
+                    self.k0,
+                    &mut scratch,
+                );
+                s_batch.union_with(&sr);
+            }
+        } else {
+            for group in ctx.requests {
+                let sr = per_request_select(
+                    ctx.probs,
+                    group,
+                    self.req_budget,
+                    self.k0,
+                    &mut scratch,
+                );
+                s_batch.union_with(&sr);
+            }
+        }
+
+        if self.batch_budget > 0 {
+            let utility = ctx.batch_utility();
+            s_batch = greedy_select(&utility, self.batch_budget, &s_batch);
+        }
+        s_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::scores::softmax_in_place;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn ctx<'a>(
+        probs: &'a ScoreMatrix,
+        rows: &'a [usize],
+        requests: &'a [Vec<usize>],
+    ) -> SelectionContext<'a> {
+        SelectionContext {
+            probs,
+            logits: probs,
+            rows,
+            requests,
+            colsum_hint: None,
+            placement: None,
+            top_k: 2,
+        }
+    }
+
+    /// Correlated request scores: tokens of one request share a dominant
+    /// expert; tokens of different requests don't.
+    fn correlated_batch() -> (ScoreMatrix, Vec<Vec<usize>>) {
+        let mk = |hot: usize| {
+            let mut row = vec![0.01f32; 16];
+            row[hot] = 5.0;
+            row[(hot + 1) % 16] = 3.0;
+            softmax_in_place(&mut row);
+            row
+        };
+        // request 0 → experts {0,1}, request 1 → experts {8,9}
+        let rows = vec![mk(0), mk(0), mk(0), mk(8), mk(8), mk(8)];
+        (ScoreMatrix::from_rows(&rows), vec![vec![0, 1, 2], vec![3, 4, 5]])
+    }
+
+    #[test]
+    fn per_request_select_warmup_and_budget() {
+        let (probs, reqs) = correlated_batch();
+        let mut scratch = Vec::new();
+        let s = per_request_select(&probs, &reqs[0], 1, 1, &mut scratch);
+        // warm-up top-1 = {0}; budget 1 adds the aggregated runner-up {1}
+        assert_eq!(s.to_vec(), vec![0, 1]);
+    }
+
+    #[test]
+    fn spec_aware_unions_per_request_sets() {
+        let (probs, reqs) = correlated_batch();
+        let rows: Vec<usize> = (0..6).collect();
+        let p = SpecAware { k0: 1, batch_budget: 0, req_budget: 1 };
+        let s = p.select(&ctx(&probs, &rows, &reqs));
+        assert_eq!(s.to_vec(), vec![0, 1, 8, 9]);
+    }
+
+    #[test]
+    fn batch_topup_adds_global_experts() {
+        let (probs, reqs) = correlated_batch();
+        let rows: Vec<usize> = (0..6).collect();
+        let none = SpecAware { k0: 1, batch_budget: 0, req_budget: 0 };
+        let some = SpecAware { k0: 1, batch_budget: 3, req_budget: 0 };
+        let s0 = none.select(&ctx(&probs, &rows, &reqs));
+        let s1 = some.select(&ctx(&probs, &rows, &reqs));
+        assert_eq!(s1.len(), s0.len() + 3);
+        for j in s0.iter() {
+            assert!(s1.contains(j));
+        }
+    }
+
+    #[test]
+    fn degrades_to_per_token_without_request_structure() {
+        let (probs, _) = correlated_batch();
+        let rows: Vec<usize> = (0..6).collect();
+        let p = SpecAware { k0: 1, batch_budget: 0, req_budget: 0 };
+        let s = p.select(&ctx(&probs, &rows, &[]));
+        assert_eq!(s.to_vec(), vec![0, 8]); // top-1 of each token
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_on_correlated_batches() {
+        // The reason Algorithm 4 exists: with per-request correlation, a
+        // per-request budget captures more gating mass per activated expert
+        // than the same total budget spent batch-wide.
+        let (probs, reqs) = correlated_batch();
+        let rows: Vec<usize> = (0..6).collect();
+        let hier = SpecAware { k0: 0, batch_budget: 0, req_budget: 2 };
+        let s_h = hier.select(&ctx(&probs, &rows, &reqs));
+        // total activated experts: 2 per request = 4; captures all hot mass
+        assert_eq!(s_h.to_vec(), vec![0, 1, 8, 9]);
+        let mass = |s: &ExpertSet| -> f32 {
+            rows.iter()
+                .map(|&i| s.iter().map(|j| probs.get(i, j)).sum::<f32>())
+                .sum()
+        };
+        assert!(mass(&s_h) > 0.9 * 6.0); // ≥90% of total gating mass with 4 experts
+    }
+
+    #[test]
+    fn prop_spec_aware_invariants() {
+        forall(
+            301,
+            120,
+            |r: &mut Rng| {
+                let b = 1 + r.below(6); // requests
+                let ls = r.below(4); // speculative length
+                let n = 8 + r.below(56);
+                let k0 = r.below(3);
+                let mr = r.below(6);
+                let m = r.below(8);
+                (b, ls, n, k0, mr, m, r.next_u64())
+            },
+            |&(b, ls, n, k0, mr, m, seed)| {
+                let mut r = Rng::new(seed);
+                let t = b * (1 + ls);
+                let rows_v: Vec<Vec<f32>> = (0..t)
+                    .map(|_| {
+                        let mut row: Vec<f32> =
+                            (0..n).map(|_| r.normal_f32(0.0, 2.0)).collect();
+                        softmax_in_place(&mut row);
+                        row
+                    })
+                    .collect();
+                let probs = ScoreMatrix::from_rows(&rows_v);
+                let rows: Vec<usize> = (0..t).collect();
+                let requests: Vec<Vec<usize>> = (0..b)
+                    .map(|q| ((q * (1 + ls))..((q + 1) * (1 + ls))).collect())
+                    .collect();
+                let p = SpecAware { k0, batch_budget: m, req_budget: mr };
+                let c = ctx(&probs, &rows, &requests);
+                let s = p.select(&c);
+                // size bound: Σ_r (|warm_r| + m_r) + m
+                let mut scratch = Vec::new();
+                let mut bound = m;
+                for g in &requests {
+                    let warm =
+                        per_request_select(&probs, g, 0, k0, &mut scratch).len();
+                    bound += warm + mr;
+                }
+                crate::prop_assert!(s.len() <= bound, "|S|={} > bound {bound}", s.len());
+                // warm-up containment: every token's top-k0 in S
+                for &i in &rows {
+                    for j in topk_indices(probs.row(i), k0) {
+                        crate::prop_assert!(s.contains(j), "warm expert missing");
+                    }
+                }
+                // routing stays inside S
+                let routing = p.route(&c);
+                for ch in &routing.chosen {
+                    for &j in ch {
+                        crate::prop_assert!(s.contains(j), "routed outside S");
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,246 @@
+//! Threaded TCP serving front-end (JSON-lines protocol) + client library.
+//!
+//! Architecture: connection threads parse requests and enqueue them with a
+//! per-request response channel; a single worker thread owns the model and
+//! drains the queue in dynamic batches (up to `batch_size`, with a short
+//! gather window — the "goodput" batching the paper's deployment setting
+//! assumes), runs the [`Scheduler`] on each batch, and routes results back.
+//!
+//! (The baked registry carries no tokio; this server uses std::net +
+//! threads, which for a CPU-bound PJRT backend is the honest design anyway —
+//! the model worker is serial either way.)
+
+pub mod protocol;
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::{Request, Scheduler};
+use crate::model::MoeModel;
+use crate::runtime::{Engine, Manifest};
+pub use protocol::{decode_response, Response};
+
+type Job = (Request, Sender<std::result::Result<Vec<u32>, String>>);
+
+/// Handle to a running server.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    worker_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving the preset at `artifacts_dir` under `cfg`.
+    /// `cfg.addr` may use port 0 to pick a free port (tests do).
+    ///
+    /// PJRT handles are not `Send`, so the worker thread constructs the
+    /// engine itself; `start` blocks until the model is loaded (or fails).
+    pub fn start_from_dir(artifacts_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr).context("binding server address")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (job_tx, job_rx) = channel::<Job>();
+
+        let accept_stop = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            accept_loop(listener, job_tx, accept_stop);
+        });
+
+        let worker_stop = stop.clone();
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let worker_thread = std::thread::spawn(move || {
+            let model = Manifest::load(&artifacts_dir)
+                .and_then(Engine::load)
+                .and_then(MoeModel::new);
+            match model {
+                Ok(model) => {
+                    let _ = ready_tx.send(Ok(()));
+                    worker_loop(model, cfg, job_rx, worker_stop);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                }
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => anyhow::bail!("server worker failed to load model: {msg}"),
+            Err(_) => anyhow::bail!("server worker died during startup"),
+        }
+
+        Ok(Server {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            worker_thread: Some(worker_thread),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.worker_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(listener: TcpListener, job_tx: Sender<Job>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = job_tx.clone();
+                std::thread::spawn(move || {
+                    let _ = connection_loop(stream, tx);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn connection_loop(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
+    let peer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut writer = peer;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match protocol::decode_request(trimmed) {
+            Ok(req) => {
+                let id = req.id;
+                let (tx, rx) = channel();
+                if job_tx.send((req, tx)).is_err() {
+                    writeln!(writer, "{}", protocol::encode_error(id, "server stopping"))?;
+                    return Ok(());
+                }
+                match rx.recv() {
+                    Ok(Ok(tokens)) => {
+                        writeln!(writer, "{}", protocol::encode_response(id, &tokens))?
+                    }
+                    Ok(Err(msg)) => writeln!(writer, "{}", protocol::encode_error(id, &msg))?,
+                    Err(_) => {
+                        writeln!(writer, "{}", protocol::encode_error(id, "worker gone"))?
+                    }
+                }
+            }
+            Err(e) => {
+                writeln!(writer, "{}", protocol::encode_error(0, &format!("{e:#}")))?;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    mut model: MoeModel,
+    cfg: ServeConfig,
+    job_rx: Receiver<Job>,
+    stop: Arc<AtomicBool>,
+) {
+    // Gather window: wait briefly after the first request so concurrent
+    // clients coalesce into one batch (dynamic batching).
+    let window = Duration::from_millis(20);
+    while !stop.load(Ordering::SeqCst) {
+        let first = match job_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(j) => j,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(_) => break,
+        };
+        let mut jobs = vec![first];
+        let deadline = std::time::Instant::now() + window;
+        while jobs.len() < cfg.batch_size {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match job_rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(_) => break,
+            }
+        }
+
+        // Remap ids to be unique within the batch (clients may collide).
+        let mut requests = Vec::with_capacity(jobs.len());
+        let mut responders: BTreeMap<
+            u64,
+            (u64, Sender<std::result::Result<Vec<u32>, String>>),
+        > = BTreeMap::new();
+        for (i, (mut req, tx)) in jobs.into_iter().enumerate() {
+            let internal = i as u64;
+            responders.insert(internal, (req.id, tx));
+            req.id = internal;
+            requests.push(req);
+        }
+
+        let result =
+            Scheduler::new(&mut model, cfg.clone()).and_then(|mut s| s.run(requests));
+        match result {
+            Ok(report) => {
+                for (internal, (_, tx)) in responders {
+                    let payload = report
+                        .outputs
+                        .get(&internal)
+                        .cloned()
+                        .ok_or_else(|| "request lost".to_string());
+                    let _ = tx.send(payload);
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for (_, (_, tx)) in responders {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Blocking client for the JSON-lines protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to server")?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Submit one request and block for its response.
+    pub fn generate(&mut self, req: &Request) -> Result<Response> {
+        writeln!(self.writer, "{}", protocol::encode_request(req))?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        protocol::decode_response(line.trim())
+    }
+}

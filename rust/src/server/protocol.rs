@@ -1,0 +1,122 @@
+//! JSON-lines wire protocol between clients and the serving front-end.
+//!
+//! Request  : {"id": 7, "prompt": [1,2,3], "max_new_tokens": 16, "domain": "gpqa"}
+//! Response : {"id": 7, "tokens": [..], "n_tokens": 16}
+//! Error    : {"id": 7, "error": "..."}
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Request;
+use crate::util::json::Json;
+
+pub fn encode_request(req: &Request) -> String {
+    Json::obj(vec![
+        ("id", Json::num(req.id as f64)),
+        ("prompt", Json::arr(req.prompt.iter().map(|&t| Json::num(t as f64)))),
+        ("max_new_tokens", Json::num(req.max_new_tokens as f64)),
+        ("domain", Json::str(req.domain.clone())),
+    ])
+    .dump()
+}
+
+pub fn decode_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line).context("parsing request line")?;
+    let id = v.req("id").map_err(anyhow::Error::msg)?.as_i64().context("id")? as u64;
+    let prompt: Vec<u32> = v
+        .req("prompt")
+        .map_err(anyhow::Error::msg)?
+        .as_arr()
+        .context("prompt must be an array")?
+        .iter()
+        .map(|t| t.as_usize().map(|u| u as u32).context("prompt token"))
+        .collect::<Result<_>>()?;
+    if prompt.is_empty() {
+        bail!("empty prompt");
+    }
+    let max_new =
+        v.req("max_new_tokens").map_err(anyhow::Error::msg)?.as_usize().context("max_new_tokens")?;
+    if max_new == 0 {
+        bail!("max_new_tokens must be ≥ 1");
+    }
+    let mut req = Request::new(id, prompt, max_new);
+    if let Some(d) = v.get("domain").and_then(|d| d.as_str()) {
+        req.domain = d.to_string();
+    }
+    Ok(req)
+}
+
+pub fn encode_response(id: u64, tokens: &[u32]) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("tokens", Json::arr(tokens.iter().map(|&t| Json::num(t as f64)))),
+        ("n_tokens", Json::num(tokens.len() as f64)),
+    ])
+    .dump()
+}
+
+pub fn encode_error(id: u64, msg: &str) -> String {
+    Json::obj(vec![("id", Json::num(id as f64)), ("error", Json::str(msg))]).dump()
+}
+
+/// Parsed response on the client side.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+}
+
+pub fn decode_response(line: &str) -> Result<Response> {
+    let v = Json::parse(line).context("parsing response line")?;
+    if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
+        bail!("server error: {err}");
+    }
+    let id = v.req("id").map_err(anyhow::Error::msg)?.as_i64().context("id")? as u64;
+    let tokens = v
+        .req("tokens")
+        .map_err(anyhow::Error::msg)?
+        .as_arr()
+        .context("tokens")?
+        .iter()
+        .map(|t| t.as_usize().map(|u| u as u32).context("token"))
+        .collect::<Result<_>>()?;
+    Ok(Response { id, tokens })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut r = Request::new(9, vec![1, 2, 3], 8);
+        r.domain = "gpqa".into();
+        let line = encode_request(&r);
+        let back = decode_request(&line).unwrap();
+        assert_eq!(back.id, 9);
+        assert_eq!(back.prompt, vec![1, 2, 3]);
+        assert_eq!(back.max_new_tokens, 8);
+        assert_eq!(back.domain, "gpqa");
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let line = encode_response(4, &[7, 8]);
+        let r = decode_response(&line).unwrap();
+        assert_eq!(r, Response { id: 4, tokens: vec![7, 8] });
+    }
+
+    #[test]
+    fn error_response_propagates() {
+        let line = encode_error(4, "boom");
+        let err = decode_response(&line).unwrap_err();
+        assert!(format!("{err:#}").contains("boom"));
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(decode_request("{}").is_err());
+        assert!(decode_request(r#"{"id":1,"prompt":[],"max_new_tokens":4}"#).is_err());
+        assert!(decode_request(r#"{"id":1,"prompt":[1],"max_new_tokens":0}"#).is_err());
+        assert!(decode_request("not json").is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Miniature criterion (offline substrate): warmup + timed iterations with
+//! mean / p50 / p99 reporting, plus a tiny table printer used by the
+//! paper-reproduction benches to emit the same rows the paper's tables show.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  p50 {:>10.3?}  p99 {:>10.3?}  min {:>10.3?}  ({} iters)",
+            self.mean, self.p50, self.p99, self.min, self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs followed by `iters` measured runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let stats = Stats {
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p99: samples[(iters * 99 / 100).min(iters - 1)],
+        min: samples[0],
+    };
+    println!("{name:<48} {stats}");
+    stats
+}
+
+/// Time `f` until roughly `budget` wall time is spent (at least 5 iters).
+pub fn bench_for<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> Stats {
+    // One calibration run decides the iteration count.
+    let t0 = Instant::now();
+    black_box(f());
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = ((budget.as_secs_f64() / once.as_secs_f64()) as usize).clamp(5, 100_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Markdown-ish table printer for paper-reproduction rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n## {title}");
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line
+        };
+        println!("{}", fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write bench output under `target/bench-reports/` (best-effort).
+pub fn save_report(name: &str, contents: &str) {
+    let dir = std::path::Path::new("target/bench-reports");
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join(name), contents);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop", 2, 50, || 1 + 1);
+        assert_eq!(s.iters, 50);
+        assert!(s.min <= s.p50 && s.p50 <= s.p99);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["config", "otps", "drop"]);
+        t.row(&["(12,1)".into(), "102.3".into(), "-4.17".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("config,otps,drop\n"));
+        assert!(csv.contains("(12,1),102.3,-4.17"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

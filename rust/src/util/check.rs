@@ -1,0 +1,105 @@
+//! Miniature property-testing harness (offline substrate for `proptest`).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` against `cases` random
+//! inputs drawn by `gen`. On failure it retries the failing case with a
+//! fresh debug formatting and panics with the case index, the per-case seed
+//! (so `forall_one` can replay it) and the input.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Run `prop` on `cases` generated inputs; panic with a replayable seed on
+/// the first failure.
+pub fn forall<T: Debug>(
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed}):\n  \
+                 reason: {msg}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by its seed (printed by a failing `forall`).
+pub fn forall_one<T: Debug>(
+    case_seed: u64,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(case_seed);
+    let input = generate(&mut rng);
+    if let Err(msg) = prop(&input) {
+        panic!("replayed property failed: {msg}\n  input: {input:#?}");
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall(
+            1,
+            50,
+            |r| r.below(100),
+            |_| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        forall(2, 100, |r| r.below(10), |&v| {
+            if v < 9 {
+                Ok(())
+            } else {
+                Err("hit nine".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let mut a = Vec::new();
+        forall(3, 10, |r| r.next_u64(), |&v| {
+            a.push(v);
+            Ok(())
+        });
+        let mut b = Vec::new();
+        forall(3, 10, |r| r.next_u64(), |&v| {
+            b.push(v);
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

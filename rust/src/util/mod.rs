@@ -1,0 +1,21 @@
+//! Offline substrates.
+//!
+//! The build environment's baked crate registry carries only the `xla`
+//! dependency tree — no serde, rand, clap, criterion or proptest. Everything
+//! the coordinator needs beyond that is implemented here from scratch:
+//!
+//! * [`json`]  — a complete JSON parser/serializer (manifest files, the
+//!   server wire protocol, metric dumps).
+//! * [`rng`]   — a seedable SplitMix64/xoshiro256** PRNG with the sampling
+//!   helpers the workload generator needs (normal, Dirichlet-ish, categorical).
+//! * [`check`] — a miniature property-testing harness (randomized cases +
+//!   failure reporting) used by the selection invariant suites.
+//! * [`benchkit`] — a miniature criterion: warmup + timed iterations +
+//!   mean/p50/p99 reporting, used by every `cargo bench` target.
+//! * [`cli`]   — flag parsing for the launcher binary and examples.
+
+pub mod benchkit;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;

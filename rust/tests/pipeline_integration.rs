@@ -1,0 +1,222 @@
+//! Model-walker integration over the tiny preset: step semantics, routing
+//! modes, cache behaviour and score plumbing — the contract the scheduler
+//! builds on.
+
+use xshare::model::{MoeModel, RoutingMode, StepInput};
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+use xshare::selection::{baselines::Vanilla, ExpertSet, PolicyKind};
+
+fn tiny_model() -> MoeModel {
+    let manifest = Manifest::load(&artifacts_root().join("tiny"))
+        .expect("tiny artifacts missing — run `make artifacts`");
+    MoeModel::new(Engine::load(manifest).unwrap()).unwrap()
+}
+
+fn step_tokens(model: &MoeModel) -> (Vec<i32>, Vec<i32>, Vec<usize>) {
+    let b = model.max_batch();
+    let tokens: Vec<i32> = (0..b as i32).map(|i| (i + 3) % 60).collect();
+    let pos = vec![0i32; b];
+    let rows: Vec<usize> = (0..b).collect();
+    (tokens, pos, rows)
+}
+
+#[test]
+fn step_is_deterministic_after_reset() {
+    let mut model = tiny_model();
+    let (tokens, pos, rows) = step_tokens(&model);
+    let groups: Vec<Vec<usize>> = rows.iter().map(|&r| vec![r]).collect();
+    let vanilla = Vanilla;
+    let mk_input = || StepInput {
+        tokens: &tokens,
+        pos: &pos,
+        rows: &rows,
+        requests: &groups,
+        mode: RoutingMode::Policy(&vanilla),
+        collect_probs: false,
+    };
+    let a = model.step(&mk_input()).unwrap();
+    model.reset();
+    let b = model.step(&mk_input()).unwrap();
+    assert_eq!(a.logits.as_f32().unwrap(), b.logits.as_f32().unwrap());
+    assert_eq!(a.activated, b.activated);
+}
+
+#[test]
+fn restricted_to_full_set_equals_vanilla() {
+    let mut model = tiny_model();
+    let n = model.dims().n_experts;
+    let n_layers = model.dims().n_layers;
+    let (tokens, pos, rows) = step_tokens(&model);
+    let groups: Vec<Vec<usize>> = rows.iter().map(|&r| vec![r]).collect();
+    let vanilla = Vanilla;
+
+    let a = model
+        .step(&StepInput {
+            tokens: &tokens,
+            pos: &pos,
+            rows: &rows,
+            requests: &groups,
+            mode: RoutingMode::Policy(&vanilla),
+            collect_probs: false,
+        })
+        .unwrap();
+    model.reset();
+    let full: Vec<ExpertSet> = (0..n_layers).map(|_| ExpertSet::full(n)).collect();
+    let b = model
+        .step(&StepInput {
+            tokens: &tokens,
+            pos: &pos,
+            rows: &rows,
+            requests: &groups,
+            mode: RoutingMode::Restricted(&full),
+            collect_probs: false,
+        })
+        .unwrap();
+    assert_eq!(a.logits.as_f32().unwrap(), b.logits.as_f32().unwrap());
+}
+
+#[test]
+fn restriction_changes_output_and_activation() {
+    let mut model = tiny_model();
+    let n = model.dims().n_experts;
+    let n_layers = model.dims().n_layers;
+    let (tokens, pos, rows) = step_tokens(&model);
+    let groups: Vec<Vec<usize>> = rows.iter().map(|&r| vec![r]).collect();
+    let vanilla = Vanilla;
+    let a = model
+        .step(&StepInput {
+            tokens: &tokens,
+            pos: &pos,
+            rows: &rows,
+            requests: &groups,
+            mode: RoutingMode::Policy(&vanilla),
+            collect_probs: false,
+        })
+        .unwrap();
+    model.reset();
+    // restrict every layer to experts {0, 1}
+    let small: Vec<ExpertSet> =
+        (0..n_layers).map(|_| ExpertSet::from_indices(n, &[0, 1])).collect();
+    let b = model
+        .step(&StepInput {
+            tokens: &tokens,
+            pos: &pos,
+            rows: &rows,
+            requests: &groups,
+            mode: RoutingMode::Restricted(&small),
+            collect_probs: false,
+        })
+        .unwrap();
+    assert!(b.activated.iter().all(|&a| a <= 2));
+    assert_ne!(a.logits.as_f32().unwrap(), b.logits.as_f32().unwrap());
+}
+
+#[test]
+fn policy_mode_respects_batch_aware_budget() {
+    let mut model = tiny_model();
+    let (tokens, pos, rows) = step_tokens(&model);
+    let groups: Vec<Vec<usize>> = rows.iter().map(|&r| vec![r]).collect();
+    let policy = PolicyKind::parse("batch:1:1").unwrap().build();
+    let out = model
+        .step(&StepInput {
+            tokens: &tokens,
+            pos: &pos,
+            rows: &rows,
+            requests: &groups,
+            mode: RoutingMode::Policy(policy.as_ref()),
+            collect_probs: false,
+        })
+        .unwrap();
+    // |S| ≤ |warm-up (≤ B distinct)| + 1
+    let b = model.max_batch();
+    for &a in &out.activated {
+        assert!(a <= b + 1, "activated {a} exceeds warmup+budget bound");
+    }
+}
+
+#[test]
+fn collect_probs_returns_layer_scores() {
+    let mut model = tiny_model();
+    let n = model.dims().n_experts;
+    let n_layers = model.dims().n_layers;
+    let (tokens, pos, rows) = step_tokens(&model);
+    let groups: Vec<Vec<usize>> = rows.iter().map(|&r| vec![r]).collect();
+    let vanilla = Vanilla;
+    let out = model
+        .step(&StepInput {
+            tokens: &tokens,
+            pos: &pos,
+            rows: &rows,
+            requests: &groups,
+            mode: RoutingMode::Policy(&vanilla),
+            collect_probs: true,
+        })
+        .unwrap();
+    let scores = out.scores.expect("scores requested");
+    assert_eq!(scores.len(), n_layers);
+    for (logits, probs) in &scores {
+        assert_eq!(logits.n_experts(), n);
+        assert_eq!(probs.n_experts(), n);
+        for i in &rows {
+            let s: f32 = probs.row(*i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "probs row sums to {s}");
+        }
+    }
+}
+
+#[test]
+fn padding_rows_do_not_affect_live_rows() {
+    let mut model = tiny_model();
+    let b = model.max_batch();
+    let vanilla = Vanilla;
+    // run with only row 0 live; padding tokens vary wildly
+    let rows = vec![0usize];
+    let groups = vec![vec![0usize]];
+    let pos = vec![0i32; b];
+    let mut t1 = vec![0i32; b];
+    t1[0] = 5;
+    let a = model
+        .step(&StepInput {
+            tokens: &t1,
+            pos: &pos,
+            rows: &rows,
+            requests: &groups,
+            mode: RoutingMode::Policy(&vanilla),
+            collect_probs: false,
+        })
+        .unwrap();
+    model.reset();
+    let mut t2 = vec![42i32; b];
+    t2[0] = 5;
+    let c = model
+        .step(&StepInput {
+            tokens: &t2,
+            pos: &pos,
+            rows: &rows,
+            requests: &groups,
+            mode: RoutingMode::Policy(&vanilla),
+            collect_probs: false,
+        })
+        .unwrap();
+    let v = model.dims().vocab;
+    assert_eq!(
+        &a.logits.as_f32().unwrap()[0..v],
+        &c.logits.as_f32().unwrap()[0..v],
+        "padding rows leaked into live row 0"
+    );
+}
+
+#[test]
+fn step_rejects_bad_shapes() {
+    let mut model = tiny_model();
+    let vanilla = Vanilla;
+    let err = model.step(&StepInput {
+        tokens: &[0],
+        pos: &[0],
+        rows: &[0],
+        requests: &[],
+        mode: RoutingMode::Policy(&vanilla),
+        collect_probs: false,
+    });
+    assert!(err.is_err());
+}

@@ -1,0 +1,153 @@
+//! Cross-language numerics anchor: replay the selftest vectors that
+//! `python/compile/aot.py` computed with JAX through the rust PJRT engine
+//! and assert allclose. This is the proof that the AOT bridge (HLO text →
+//! xla_extension 0.5.1) preserves the model's semantics end to end.
+//!
+//! Requires `make artifacts` (tiny preset). Tests panic with a clear
+//! message if artifacts are missing.
+
+use xshare::runtime::{artifacts_root, Arg, DType, Engine, HostTensor, Manifest};
+
+fn load_tiny() -> Engine {
+    let dir = artifacts_root().join("tiny");
+    let manifest = Manifest::load(&dir)
+        .expect("tiny artifacts missing — run `make artifacts` before cargo test");
+    Engine::load(manifest).expect("engine load")
+}
+
+fn assert_allclose(name: &str, got: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length mismatch");
+    let mut worst = 0.0f32;
+    let mut worst_i = 0;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        let err = (g - w).abs();
+        if err > tol && err > worst {
+            worst = err;
+            worst_i = i;
+        }
+    }
+    assert!(
+        worst == 0.0,
+        "{name}: worst |err|={worst} at {worst_i}: got {} want {}",
+        got[worst_i],
+        want[worst_i]
+    );
+}
+
+fn replay(engine: &Engine, program: &str) {
+    let manifest = engine.manifest();
+    let meta = manifest.program(program).unwrap().clone();
+    let st = manifest.selftests.get(program).expect("selftest entry").clone();
+    let dir = manifest.dir.clone();
+
+    let inputs: Vec<HostTensor> = st
+        .inputs
+        .iter()
+        .zip(&meta.params)
+        .map(|(f, p)| HostTensor::read_bin(&dir.join(f), p.shape.clone(), p.dtype).unwrap())
+        .collect();
+    let args: Vec<Arg> = inputs.iter().map(Arg::Host).collect();
+    let outputs = engine.execute(program, &args).unwrap();
+
+    assert_eq!(outputs.len(), meta.outputs.len());
+    for ((out, f), om) in outputs.iter().zip(&st.outputs).zip(&meta.outputs) {
+        let want = HostTensor::read_bin(&dir.join(f), om.shape.clone(), DType::F32).unwrap();
+        let got = match out {
+            HostTensor::F32 { data, .. } => data.clone(),
+            HostTensor::I32 { data, .. } => data.iter().map(|&v| v as f32).collect(),
+        };
+        assert_allclose(
+            &format!("{program}:{}", om.name),
+            &got,
+            want.as_f32().unwrap(),
+            1e-5,
+            1e-4,
+        );
+    }
+}
+
+#[test]
+fn selftest_embed() {
+    replay(&load_tiny(), "embed");
+}
+
+#[test]
+fn selftest_attn_router() {
+    replay(&load_tiny(), "attn_router");
+}
+
+#[test]
+fn selftest_moe_layer() {
+    replay(&load_tiny(), "moe_layer");
+}
+
+#[test]
+fn selftest_lm_head() {
+    replay(&load_tiny(), "lm_head");
+}
+
+#[test]
+fn selftest_draft_step() {
+    let engine = load_tiny();
+    if engine.manifest().has_draft() {
+        replay(&engine, "draft_step");
+    }
+}
+
+#[test]
+fn engine_rejects_shape_mismatch() {
+    let engine = load_tiny();
+    let meta = engine.manifest().program("embed").unwrap().clone();
+    // wrong-shaped tokens
+    let bad = HostTensor::i32(vec![meta.params[0].shape[0] + 1], vec![0; meta.params[0].shape[0] + 1]);
+    let emb_meta = &meta.params[1];
+    let emb = HostTensor::zeros_f32(emb_meta.shape.clone());
+    let err = engine.execute("embed", &[Arg::Host(&bad), Arg::Host(&emb)]);
+    assert!(err.is_err());
+    assert!(format!("{:#}", err.unwrap_err()).contains("shape"));
+}
+
+#[test]
+fn engine_rejects_wrong_arity() {
+    let engine = load_tiny();
+    let err = engine.execute("embed", &[]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn engine_rejects_unknown_program() {
+    let engine = load_tiny();
+    assert!(engine.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn weights_bind_by_name() {
+    // embed called with Arg::Weight("emb") must equal the selftest path when
+    // given the same tokens as the vector... the selftest used random emb,
+    // so here we just check the call succeeds and output shape is right.
+    let engine = load_tiny();
+    assert!(engine.has_weight("emb"));
+    let b = engine.manifest().model.max_batch;
+    let toks = HostTensor::i32(vec![b], vec![1; b]);
+    let out = engine.execute("embed", &[Arg::Host(&toks), Arg::Weight("emb")]).unwrap();
+    assert_eq!(out[0].shape(), &[b, engine.manifest().model.d_model]);
+    // rows are identical since all tokens equal
+    let d = engine.manifest().model.d_model;
+    let data = out[0].as_f32().unwrap();
+    assert_eq!(&data[0..d], &data[d..2 * d]);
+}
+
+#[test]
+fn engine_stats_accumulate() {
+    let engine = load_tiny();
+    let b = engine.manifest().model.max_batch;
+    let toks = HostTensor::i32(vec![b], vec![0; b]);
+    let before = engine.stats().calls;
+    engine.execute("embed", &[Arg::Host(&toks), Arg::Weight("emb")]).unwrap();
+    engine.execute("embed", &[Arg::Host(&toks), Arg::Weight("emb")]).unwrap();
+    let st = engine.stats();
+    assert_eq!(st.calls, before + 2);
+    assert!(st.host_bytes_in > 0 && st.host_bytes_out > 0);
+    assert!(st.exec_seconds > 0.0);
+}

@@ -1,0 +1,149 @@
+//! Cross-algorithm properties on realistic (generator-produced) gate
+//! scores — relations between the paper's algorithms that no single-module
+//! unit test covers.
+
+use xshare::ep::{Placement, PlacementKind};
+use xshare::gen::{batch_scores, Domain, GatingParams};
+use xshare::selection::{
+    PolicyKind, ScoreMatrix, SelectionContext, SelectionPolicy,
+};
+
+fn scores(n_experts: usize, requests: usize, toks: usize, seed: u64)
+    -> (ScoreMatrix, ScoreMatrix, Vec<Vec<usize>>)
+{
+    let params = GatingParams::default_for(n_experts);
+    let domains: Vec<Domain> =
+        (0..3).map(|d| Domain::new(&format!("d{d}"), n_experts, 40 + d as u64)).collect();
+    let refs: Vec<&Domain> = (0..requests).map(|i| &domains[i % 3]).collect();
+    batch_scores(&params, &refs, toks, seed)
+}
+
+fn ctx<'a>(
+    probs: &'a ScoreMatrix,
+    logits: &'a ScoreMatrix,
+    rows: &'a [usize],
+    groups: &'a [Vec<usize>],
+    placement: Option<&'a Placement>,
+) -> SelectionContext<'a> {
+    SelectionContext {
+        probs,
+        logits,
+        rows,
+        requests: groups,
+        colsum_hint: None,
+        placement,
+        top_k: 4,
+    }
+}
+
+#[test]
+fn activation_monotone_in_batch_budget() {
+    for seed in 0..10 {
+        let (logits, probs, groups) = scores(128, 4, 4, seed);
+        let rows: Vec<usize> = (0..probs.n_tokens()).collect();
+        let mut last = 0usize;
+        for m in [0usize, 8, 16, 32, 64] {
+            let p = PolicyKind::BatchAware { budget: m, k0: 1 }.build();
+            let sel = p.select(&ctx(&probs, &logits, &rows, &groups, None));
+            assert!(sel.len() >= last, "budget {m}: |S| shrank");
+            last = sel.len();
+        }
+    }
+}
+
+#[test]
+fn spec_aware_with_zero_request_budget_contains_warmup_of_batch_aware() {
+    // With m_r=0 and m=0, Algorithm 4 degenerates to the union of per-token
+    // warm-ups — identical to Algorithm 2's warm-up-only configuration.
+    for seed in 10..20 {
+        let (logits, probs, groups) = scores(64, 3, 4, seed);
+        let rows: Vec<usize> = (0..probs.n_tokens()).collect();
+        let spec = PolicyKind::SpecAware { k0: 1, batch_budget: 0, req_budget: 0 }.build();
+        let batch = PolicyKind::BatchAware { budget: 0, k0: 1 }.build();
+        let s1 = spec.select(&ctx(&probs, &logits, &rows, &groups, None));
+        let s2 = batch.select(&ctx(&probs, &logits, &rows, &groups, None));
+        assert_eq!(s1.to_vec(), s2.to_vec(), "seed {seed}");
+    }
+}
+
+#[test]
+fn hierarchical_budget_never_exceeds_flat_budget_activation() {
+    // Per-request budgets concentrate on shared experts within requests:
+    // |S(hier, mr)| ≤ requests × (warm + mr), and on correlated scores the
+    // hierarchical set captures more per-request mass than the flat set of
+    // the same size (checked as average over seeds).
+    let mut hier_mass = 0.0f64;
+    let mut flat_mass = 0.0f64;
+    for seed in 20..40 {
+        let (logits, probs, groups) = scores(128, 4, 4, seed);
+        let rows: Vec<usize> = (0..probs.n_tokens()).collect();
+        let hier = PolicyKind::SpecAware { k0: 0, batch_budget: 0, req_budget: 4 }.build();
+        let s_h = hier.select(&ctx(&probs, &logits, &rows, &groups, None));
+        let flat = PolicyKind::BatchAware { budget: s_h.len(), k0: 0 }.build();
+        let s_f = flat.select(&ctx(&probs, &logits, &rows, &groups, None));
+        assert!(s_f.len() >= s_h.len());
+        // per-request captured mass
+        let mass = |s: &xshare::selection::ExpertSet| -> f64 {
+            groups
+                .iter()
+                .flat_map(|g| g.iter())
+                .map(|&i| s.iter().map(|j| probs.get(i, j) as f64).sum::<f64>())
+                .sum()
+        };
+        hier_mass += mass(&s_h);
+        flat_mass += mass(&s_f) * s_h.len() as f64 / s_f.len() as f64;
+    }
+    // hierarchical should be competitive per selected expert
+    assert!(
+        hier_mass > 0.8 * flat_mass,
+        "hierarchical mass {hier_mass:.2} vs size-normalized flat {flat_mass:.2}"
+    );
+}
+
+#[test]
+fn gpu_aware_never_worse_maxload_than_batch_aware_same_size() {
+    for seed in 40..55 {
+        let (logits, probs, groups) = scores(128, 4, 4, seed);
+        let rows: Vec<usize> = (0..probs.n_tokens()).collect();
+        let placement = Placement::new(128, 8, PlacementKind::Contiguous);
+        let gpu = PolicyKind::GpuAware { k0: 1, per_gpu_budget: 3 }.build();
+        let s_g = gpu.select(&ctx(&probs, &logits, &rows, &groups, Some(&placement)));
+        let batch = PolicyKind::BatchAware { budget: s_g.len(), k0: 1 }.build();
+        let s_b = batch.select(&ctx(&probs, &logits, &rows, &groups, Some(&placement)));
+        assert!(
+            placement.max_load(&s_g) <= placement.max_load(&s_b).max(1),
+            "seed {seed}: gpu-aware {} > batch-aware {}",
+            placement.max_load(&s_g),
+            placement.max_load(&s_b)
+        );
+    }
+}
+
+#[test]
+fn all_policies_route_within_their_selection_and_deterministically() {
+    let (logits, probs, groups) = scores(64, 3, 3, 99);
+    let rows: Vec<usize> = (0..probs.n_tokens()).collect();
+    let placement = Placement::new(64, 4, PlacementKind::RoundRobin);
+    for spec in [
+        "vanilla",
+        "batch:8:1",
+        "spec:1:4:2",
+        "gpu:1:3",
+        "lynx:4",
+        "skip:0.5",
+        "opp:2",
+    ] {
+        let policy = PolicyKind::parse(spec).unwrap().build();
+        let c = ctx(&probs, &logits, &rows, &groups, Some(&placement));
+        let r1 = policy.route(&c);
+        let c2 = ctx(&probs, &logits, &rows, &groups, Some(&placement));
+        let r2 = policy.route(&c2);
+        assert_eq!(r1.gates.flat(), r2.gates.flat(), "{spec}: nondeterministic");
+        for (i, chosen) in r1.chosen.iter().enumerate() {
+            assert!(chosen.len() <= 4, "{spec}: token {i} over top-k");
+            for &j in chosen {
+                assert!(r1.activated.contains(j));
+            }
+        }
+    }
+}

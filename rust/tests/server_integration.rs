@@ -1,0 +1,74 @@
+//! TCP server round-trip tests over the tiny preset: one client, many
+//! concurrent clients (dynamic batching), malformed input handling.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use xshare::config::ServeConfig;
+use xshare::coordinator::Request;
+use xshare::runtime::artifacts_root;
+use xshare::server::{Client, Server};
+
+fn start_tiny_server() -> Server {
+    let cfg = ServeConfig {
+        preset: "tiny".into(),
+        batch_size: 4,
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    Server::start_from_dir(artifacts_root().join("tiny"), cfg).unwrap()
+}
+
+#[test]
+fn single_client_roundtrip() {
+    let server = start_tiny_server();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let resp = client.generate(&Request::new(1, vec![3, 4, 5], 4)).unwrap();
+    assert_eq!(resp.id, 1);
+    assert_eq!(resp.tokens.len(), 4);
+    assert!(resp.tokens.iter().all(|&t| (t as usize) < 64));
+    // second request on the same connection
+    let resp2 = client.generate(&Request::new(2, vec![3, 4, 5], 4)).unwrap();
+    assert_eq!(resp2.tokens, resp.tokens, "same prompt → same greedy tokens");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_are_batched() {
+    let server = start_tiny_server();
+    let addr = server.addr;
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let prompt = vec![1 + i as u32, 2, 3];
+                client.generate(&Request::new(i as u64, prompt, 5)).unwrap()
+            })
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.tokens.len(), 5);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn malformed_line_gets_error_not_hang() {
+    let server = start_tiny_server();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "this is not json").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+    // connection still usable
+    writeln!(writer, r#"{{"id":5,"prompt":[1,2],"max_new_tokens":3}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"id\":5"), "{line}");
+    assert!(line.contains("tokens"), "{line}");
+    server.shutdown();
+}
