@@ -1,0 +1,9 @@
+"""Test bootstrap: make `compile.*` importable no matter where pytest is
+invoked from (repo root, python/, or python/tests/)."""
+
+import sys
+from pathlib import Path
+
+_PKG_ROOT = Path(__file__).resolve().parents[1]
+if str(_PKG_ROOT) not in sys.path:
+    sys.path.insert(0, str(_PKG_ROOT))

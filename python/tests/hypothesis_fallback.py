@@ -1,0 +1,73 @@
+"""Deterministic stand-in for the `hypothesis` API surface the kernel tests
+use (`given`, `settings`, `strategies.integers/sampled_from`).
+
+The container image does not ship hypothesis and the test environment is
+offline, so rather than skipping the property sweeps entirely we replay
+them against seeded pseudo-random draws: every test function gets its own
+RNG seeded from its qualified name, so runs are reproducible and
+independent of execution order. When real hypothesis is installed the
+tests import it instead (see test_kernels.py) and this module is unused.
+"""
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mirrors `hypothesis.strategies` module name
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        opts = list(elements)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def settings(max_examples=100, deadline=None, **_ignored):
+    """Records the example budget on the decorated (given-wrapped) test."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Runs the test once per drawn example, like hypothesis but with a
+    fixed per-test seed instead of shrinking/coverage search."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 100)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = {name: s.draw(rng) for name, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest must not mistake the drawn parameters for fixtures: hide
+        # the inner signature (functools.wraps copies it via __wrapped__).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

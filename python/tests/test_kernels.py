@@ -9,7 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline image has no hypothesis — see fallback
+    from hypothesis_fallback import given, settings, strategies as st
 
 from compile.kernels import ref
 from compile.kernels.attention import decode_attention

@@ -4,13 +4,21 @@
 //! batching, constrained to the padded `max_batch` of the compiled
 //! artifacts).
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::request::{Request, SeqState};
 
 pub struct Batcher {
     slots: Vec<Option<SeqState>>,
     queue: VecDeque<Request>,
+    /// Free slot indices as a min-heap: admission always reuses the lowest
+    /// free index, keeping slot assignment (and thus row order) identical
+    /// to the old linear scan while making admission O(log slots) instead
+    /// of O(slots) per admitted request.
+    free: BinaryHeap<Reverse<usize>>,
+    /// Count of occupied slots (kept in sync by admit/release).
+    n_running: usize,
     /// Cap on concurrently running sequences (≤ slots.len()).
     pub max_running: usize,
 }
@@ -18,7 +26,13 @@ pub struct Batcher {
 impl Batcher {
     pub fn new(n_slots: usize, max_running: usize) -> Batcher {
         assert!(max_running >= 1 && max_running <= n_slots);
-        Batcher { slots: (0..n_slots).map(|_| None).collect(), queue: VecDeque::new(), max_running }
+        Batcher {
+            slots: (0..n_slots).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            free: (0..n_slots).map(Reverse).collect(),
+            n_running: 0,
+            max_running,
+        }
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -36,24 +50,25 @@ impl Batcher {
     }
 
     pub fn running(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.n_running
     }
 
     pub fn has_work(&self) -> bool {
-        self.running() > 0 || !self.queue.is_empty()
+        self.n_running > 0 || !self.queue.is_empty()
     }
 
     /// Fill free slots from the queue; returns newly admitted slot indices.
     pub fn admit(&mut self) -> Vec<usize> {
         let mut admitted = Vec::new();
-        while self.running() < self.max_running && !self.queue.is_empty() {
-            let slot = self
-                .slots
-                .iter()
-                .position(Option::is_none)
+        while self.n_running < self.max_running && !self.queue.is_empty() {
+            let Reverse(slot) = self
+                .free
+                .pop()
                 .expect("running < max_running <= n_slots implies a free slot");
+            debug_assert!(self.slots[slot].is_none());
             let req = self.queue.pop_front().unwrap();
             self.slots[slot] = Some(SeqState::new(req));
+            self.n_running += 1;
             admitted.push(slot);
         }
         admitted
@@ -74,7 +89,10 @@ impl Batcher {
 
     /// Free a slot, returning the finished sequence.
     pub fn release(&mut self, slot: usize) -> SeqState {
-        self.slots[slot].take().expect("releasing empty slot")
+        let seq = self.slots[slot].take().expect("releasing empty slot");
+        self.n_running -= 1;
+        self.free.push(Reverse(slot));
+        seq
     }
 
     pub fn n_slots(&self) -> usize {
@@ -135,5 +153,40 @@ mod tests {
         b.admit();
         b.release(0);
         b.release(0);
+    }
+
+    #[test]
+    fn admission_reuses_lowest_free_slot() {
+        // The free-list must preserve the linear-scan policy: lowest free
+        // index first (slot order determines batch row order).
+        let mut b = Batcher::new(4, 4);
+        b.submit_all((0..4).map(req));
+        b.admit();
+        b.release(2);
+        b.release(0);
+        b.release(3);
+        b.submit_all((4..6).map(req));
+        assert_eq!(b.admit(), vec![0, 2]);
+        assert_eq!(b.seq(0).req.id, 4);
+        assert_eq!(b.seq(2).req.id, 5);
+    }
+
+    #[test]
+    fn running_count_stays_consistent_under_churn() {
+        let mut b = Batcher::new(8, 8);
+        b.submit_all((0..32).map(req));
+        let mut next_release = 0usize;
+        while b.has_work() {
+            b.admit();
+            assert_eq!(b.running(), b.live_slots().len(), "counter drifted from slot scan");
+            if b.running() > 0 {
+                let live = b.live_slots();
+                let victim = live[next_release % live.len()];
+                next_release += 1;
+                b.release(victim);
+            }
+        }
+        assert_eq!(b.running(), 0);
+        assert_eq!(b.queued(), 0);
     }
 }

@@ -1,15 +1,19 @@
-//! The L3 coordinator: request lifecycle, continuous batching, the decode
-//! scheduler with XShare selection on the request path, speculative
-//! decoding, and the fidelity comparator used as the accuracy substitute.
+//! The L3 coordinator: request lifecycle, continuous batching, the stepped
+//! serving core ([`ServeLoop`]) with XShare selection on the request path,
+//! speculative decoding, and the fidelity comparator used as the accuracy
+//! substitute. [`Scheduler`] is the batch-at-a-time wrapper (submit-all +
+//! step-until-done) that offline runs, benches and the fidelity harness use.
 
 pub mod batcher;
 pub mod fidelity;
 pub mod request;
 pub mod scheduler;
+pub mod serve_loop;
 pub mod speculative;
 
 pub use batcher::Batcher;
 pub use fidelity::{compare, Fidelity};
 pub use request::{Phase, Request, SeqState};
-pub use scheduler::{RunReport, Scheduler};
+pub use scheduler::Scheduler;
+pub use serve_loop::{RunReport, ServeLoop, StepOutcome};
 pub use speculative::{effective_batch_scores, greedy_accept};

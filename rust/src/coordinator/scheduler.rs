@@ -1,425 +1,41 @@
-//! The decode scheduler: continuous batching, the speculative verify cycle,
-//! per-step expert selection and cost accounting. This is the L3 "leader"
-//! loop — everything on the request path runs here, in rust.
+//! Batch-at-a-time wrapper over the stepped serving core.
 //!
-//! ## Speculative verify emulation (DESIGN.md §4)
-//!
-//! The compiled decode-step artifact advances one token per row, so a verify
-//! forward over B×(1+L_s) tokens is emulated in two passes of (1+L_s)
-//! sub-steps each:
-//!
-//!  * **pass 1 (scoring)**: vanilla routing, records every layer's gate
-//!    scores for all verify tokens — the effective-batch G^{(l)};
-//!  * **selection**: the policy picks S_l once per layer from those scores
-//!    (with per-request grouping, exactly Algorithm 4's input);
-//!  * **pass 2 (restricted)**: re-runs the sub-steps with every layer
-//!    restricted to S_l; its logits drive acceptance and its KV writes are
-//!    the ones that persist (positions beyond the accepted prefix are
-//!    garbage-but-masked, verified by the kernel tests).
-//!
-//! The cost model charges one draft step per speculative token plus ONE
-//! target forward over the effective batch — the two passes are an artifact
-//! of the one-token-per-row compilation, not of the system being modeled.
-
-use std::collections::BTreeMap;
+//! `Scheduler::run` is submit-all-upfront + step-until-done on a fresh
+//! [`ServeLoop`] — byte-identical to the old monolithic run loop, and what
+//! the benches, examples, offline CLI and the fidelity harness drive. Live
+//! serving (the TCP worker) talks to [`ServeLoop`] directly so requests can
+//! join mid-flight; see [`super::serve_loop`] for the step semantics and
+//! the speculative verify emulation notes.
 
 use anyhow::Result;
 
-use super::batcher::Batcher;
-use super::request::{Phase, Request};
-use super::speculative::{effective_batch_scores, greedy_accept};
+use super::request::Request;
+use super::serve_loop::{RunReport, ServeLoop};
 use crate::config::ServeConfig;
-use crate::ep::{EpCostModel, Placement};
-use crate::memsim::{CostGeometry, DecodeCostModel, HardwareProfile};
-use crate::metrics::ServeMetrics;
-use crate::model::{argmax, MoeModel, RoutingMode, StepInput};
-use crate::selection::{baselines::Vanilla, ExpertSet, ScoreMatrix, SelectionPolicy};
-
-/// Result of one serving run.
-#[derive(Debug)]
-pub struct RunReport {
-    pub metrics: ServeMetrics,
-    /// request id → generated tokens.
-    pub outputs: BTreeMap<u64, Vec<u32>>,
-    /// request id → domain (for per-dataset reporting).
-    pub domains: BTreeMap<u64, String>,
-}
+use crate::model::MoeModel;
 
 pub struct Scheduler<'m> {
-    model: &'m mut MoeModel,
-    cfg: ServeConfig,
-    policy: Box<dyn SelectionPolicy>,
-    cost: DecodeCostModel,
-    ep_cost: EpCostModel,
+    core: ServeLoop<'m>,
 }
 
 impl<'m> Scheduler<'m> {
     pub fn new(model: &'m mut MoeModel, cfg: ServeConfig) -> Result<Scheduler<'m>> {
-        let cost = DecodeCostModel::new(
-            HardwareProfile::by_name(&cfg.hardware)?,
-            CostGeometry::for_preset(&cfg.preset)?,
-        );
-        let policy = cfg.policy.build();
-        if let Some(ep) = &cfg.ep {
-            model.placement = Some(Placement::new(
-                model.dims().n_experts,
-                ep.n_gpus,
-                ep.placement,
-            ));
-        }
-        Ok(Scheduler { model, cfg, policy, cost, ep_cost: EpCostModel::default() })
+        Ok(Scheduler { core: ServeLoop::new(model, cfg)? })
     }
 
     /// Serve a list of requests to completion; returns metrics + outputs.
     pub fn run(&mut self, requests: Vec<Request>) -> Result<RunReport> {
-        let n_layers = self.model.dims().n_layers;
-        let b_max = self.model.max_batch();
-        let mut batcher = Batcher::new(b_max, self.cfg.batch_size.min(b_max));
-        let mut domains = BTreeMap::new();
-        for r in &requests {
-            domains.insert(r.id, r.domain.clone());
+        self.core.reset()?;
+        for r in requests {
+            self.core.submit(r);
         }
-        batcher.submit_all(requests);
-        let mut metrics = ServeMetrics::new(n_layers);
-        let mut outputs = BTreeMap::new();
-        self.model.reset();
-
-        let mut draft = if self.cfg.spec_len > 0 {
-            Some(DraftState::new(
-                crate::model::DraftModel::new(self.model.engine())?,
-                b_max,
-            ))
-        } else {
-            None
-        };
-
-        let wall0 = std::time::Instant::now();
-        while batcher.has_work() {
-            batcher.admit();
-            let slots = batcher.live_slots();
-            debug_assert!(!slots.is_empty());
-
-            let all_decode =
-                slots.iter().all(|&s| batcher.seq(s).phase == Phase::Decode);
-            if self.cfg.spec_len > 0 && all_decode {
-                self.spec_cycle(&mut batcher, &slots, draft.as_mut().unwrap(), &mut metrics, &mut outputs)?;
-            } else {
-                self.plain_step(&mut batcher, &slots, draft.as_mut(), &mut metrics, &mut outputs)?;
-            }
-        }
-        metrics.wall_seconds = wall0.elapsed().as_secs_f64();
-        metrics.requests_done = outputs.len() as u64;
-        Ok(RunReport { metrics, outputs, domains })
+        self.core.drain()?;
+        Ok(self.core.report())
     }
 
-    /// One ordinary continuous-batching step (prefill and/or decode rows).
-    fn plain_step(
-        &mut self,
-        batcher: &mut Batcher,
-        slots: &[usize],
-        draft: Option<&mut DraftState>,
-        metrics: &mut ServeMetrics,
-        outputs: &mut BTreeMap<u64, Vec<u32>>,
-    ) -> Result<()> {
-        let b_max = self.model.max_batch();
-        let vocab = self.model.dims().vocab;
-        let mut tokens = vec![0i32; b_max];
-        let mut pos = vec![0i32; b_max];
-        for &s in slots {
-            let seq = batcher.seq(s);
-            tokens[s] = seq.next_token as i32;
-            pos[s] = seq.pos as i32;
-        }
-        let groups: Vec<Vec<usize>> = slots.iter().map(|&s| vec![s]).collect();
-        let out = self.model.step(&StepInput {
-            tokens: &tokens,
-            pos: &pos,
-            rows: slots,
-            requests: &groups,
-            mode: RoutingMode::Policy(self.policy.as_ref()),
-            collect_probs: false,
-        })?;
-
-        // The draft model shadows the token stream so its cache stays warm
-        // for upcoming speculative cycles.
-        if let Some(d) = draft {
-            d.shadow_step(self.model.engine(), &tokens, &pos)?;
-        }
-
-        let logits = out.logits.as_f32()?;
-        let mut committed = 0u64;
-        for &s in slots {
-            let am = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
-            let seq = batcher.seq_mut(s);
-            match seq.phase {
-                Phase::Prefill => {
-                    if seq.advance_prefill(am) {
-                        committed += 1;
-                    }
-                }
-                Phase::Decode => {
-                    seq.commit(am);
-                    committed += 1;
-                }
-            }
-            if seq.is_done() {
-                let done = batcher.release(s);
-                outputs.insert(done.req.id, done.generated);
-            }
-        }
-
-        let sim_s = self.charge_step(&out.activated, &out.selected, slots.len(), 0, metrics);
-        metrics.record_step(&out.activated, sim_s, committed);
-        Ok(())
-    }
-
-    /// One speculative verify cycle (all rows in decode phase).
-    fn spec_cycle(
-        &mut self,
-        batcher: &mut Batcher,
-        slots: &[usize],
-        draft: &mut DraftState,
-        metrics: &mut ServeMetrics,
-        outputs: &mut BTreeMap<u64, Vec<u32>>,
-    ) -> Result<()> {
-        let ls = self.cfg.spec_len;
-        let b_max = self.model.max_batch();
-        let vocab = self.model.dims().vocab;
-        let n_layers = self.model.dims().n_layers;
-        let n_experts = self.model.dims().n_experts;
-
-        // ---- draft proposals (plus catch-up for fully-accepted rows) ----
-        draft.catch_up(self.model.engine(), batcher, slots)?;
-        let mut proposals: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
-        {
-            let mut dtok = vec![0i32; b_max];
-            let mut dpos = vec![0i32; b_max];
-            for &s in slots {
-                let seq = batcher.seq(s);
-                dtok[s] = seq.next_token as i32;
-                dpos[s] = seq.pos as i32;
-                proposals.insert(s, Vec::with_capacity(ls));
-            }
-            for _ in 0..ls {
-                let logits_t = draft.model.step(self.model.engine(), &dtok, &dpos)?;
-                let logits = logits_t.as_f32()?;
-                for &s in slots {
-                    let d = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
-                    proposals.get_mut(&s).unwrap().push(d);
-                    dtok[s] = d as i32;
-                    dpos[s] += 1;
-                }
-            }
-            for &s in slots {
-                draft.pos[s] = batcher.seq(s).pos + ls; // processed up to pos+ls-1
-            }
-        }
-
-        // verify inputs per sub-step j: j=0 → next_token, j>=1 → draft j-1
-        let verify_tok = |batcher: &Batcher, s: usize, j: usize| -> u32 {
-            if j == 0 {
-                batcher.seq(s).next_token
-            } else {
-                proposals[&s][j - 1]
-            }
-        };
-
-        // ---- pass 1: scoring (vanilla routing, collect per-layer probs) --
-        let vanilla = Vanilla;
-        let groups_single: Vec<Vec<usize>> = slots.iter().map(|&s| vec![s]).collect();
-        let mut pass1_scores: Vec<Vec<(ScoreMatrix, ScoreMatrix)>> = Vec::with_capacity(ls + 1);
-        for j in 0..=ls {
-            let mut tokens = vec![0i32; b_max];
-            let mut pos = vec![0i32; b_max];
-            for &s in slots {
-                tokens[s] = verify_tok(batcher, s, j) as i32;
-                pos[s] = (batcher.seq(s).pos + j) as i32;
-            }
-            let out = self.model.step(&StepInput {
-                tokens: &tokens,
-                pos: &pos,
-                rows: slots,
-                requests: &groups_single,
-                mode: RoutingMode::Policy(&vanilla),
-                collect_probs: true,
-            })?;
-            pass1_scores.push(out.scores.unwrap());
-        }
-
-        // ---- per-layer selection over the effective batch ---------------
-        let mut sets: Vec<ExpertSet> = Vec::with_capacity(n_layers);
-        for l in 0..n_layers {
-            let logits_steps: Vec<&ScoreMatrix> =
-                pass1_scores.iter().map(|layers| &layers[l].0).collect();
-            let probs_steps: Vec<&ScoreMatrix> =
-                pass1_scores.iter().map(|layers| &layers[l].1).collect();
-            let (eff_logits, _) = effective_batch_scores(&logits_steps, slots);
-            let (eff_probs, groups) = effective_batch_scores(&probs_steps, slots);
-            let rows: Vec<usize> = (0..eff_probs.n_tokens()).collect();
-            let ctx = crate::selection::SelectionContext {
-                probs: &eff_probs,
-                logits: &eff_logits,
-                rows: &rows,
-                requests: &groups,
-                colsum_hint: None,
-                placement: self.model.placement.as_ref(),
-                top_k: self.model.dims().top_k,
-            };
-            sets.push(self.policy.select(&ctx));
-        }
-
-        // ---- pass 2: restricted run; drives acceptance -------------------
-        let mut target_argmax: BTreeMap<usize, Vec<u32>> =
-            slots.iter().map(|&s| (s, Vec::with_capacity(ls + 1))).collect();
-        let mut union_activated: Vec<ExpertSet> =
-            (0..n_layers).map(|_| ExpertSet::empty(n_experts)).collect();
-        let mut acts = vec![0usize; n_layers];
-        for j in 0..=ls {
-            let mut tokens = vec![0i32; b_max];
-            let mut pos = vec![0i32; b_max];
-            for &s in slots {
-                tokens[s] = verify_tok(batcher, s, j) as i32;
-                pos[s] = (batcher.seq(s).pos + j) as i32;
-            }
-            let out = self.model.step(&StepInput {
-                tokens: &tokens,
-                pos: &pos,
-                rows: slots,
-                requests: &groups_single,
-                mode: RoutingMode::Restricted(&sets),
-                collect_probs: false,
-            })?;
-            let logits = out.logits.as_f32()?;
-            for &s in slots {
-                let am = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
-                target_argmax.get_mut(&s).unwrap().push(am);
-            }
-            for (u, sel) in union_activated.iter_mut().zip(&out.selected) {
-                u.union_with(sel);
-            }
-        }
-        for (a, u) in acts.iter_mut().zip(&union_activated) {
-            *a = u.len();
-        }
-
-        // ---- acceptance & commit -----------------------------------------
-        let mut committed_total = 0u64;
-        for &s in slots {
-            let (n_acc, committed) = greedy_accept(&proposals[&s], &target_argmax[&s]);
-            metrics.spec_proposed += ls as u64;
-            metrics.spec_accepted += n_acc as u64;
-            let seq = batcher.seq_mut(s);
-            let take = committed.len().min(seq.remaining());
-            for &tok in committed.iter().take(take) {
-                seq.commit(tok);
-                committed_total += 1;
-            }
-            // full acceptance leaves the draft cache one input behind
-            draft.lag_token[s] = if n_acc == ls && ls > 0 {
-                Some(proposals[&s][ls - 1])
-            } else {
-                None
-            };
-            if seq.is_done() {
-                let done = batcher.release(s);
-                outputs.insert(done.req.id, done.generated);
-                draft.lag_token[s] = None;
-            }
-        }
-
-        let sim_s = self.charge_step(
-            &acts,
-            &union_activated,
-            slots.len() * (1 + ls),
-            ls, // draft steps
-            metrics,
-        );
-        metrics.record_step(&acts, sim_s, committed_total);
-        Ok(())
-    }
-
-    /// Simulated cost of one target forward (+ draft steps) and EP load
-    /// accounting. Returns simulated seconds.
-    fn charge_step(
-        &self,
-        activated: &[usize],
-        selected: &[ExpertSet],
-        n_tokens: usize,
-        draft_steps: usize,
-        metrics: &mut ServeMetrics,
-    ) -> f64 {
-        let mut sim = draft_steps as f64 * self.cost.draft_step();
-        if let Some(pl) = &self.model.placement {
-            let sel_refs: Vec<&ExpertSet> = selected.iter().collect();
-            sim += self.cost.ep_step(pl, &sel_refs, n_tokens, &self.ep_cost);
-            let max_load =
-                selected.iter().map(|s| pl.max_load(s)).max().unwrap_or(0);
-            metrics.max_gpu_load.add(max_load as f64);
-        } else {
-            let scaled = self.cost.scale_activations(activated);
-            sim += self.cost.target_step(&scaled, n_tokens).total_seconds;
-        }
-        sim
-    }
-}
-
-/// Draft-model wrapper tracking per-slot cache positions and catch-up debt.
-struct DraftState {
-    model: crate::model::DraftModel,
-    pos: Vec<usize>,
-    lag_token: Vec<Option<u32>>,
-}
-
-impl DraftState {
-    fn new(model: crate::model::DraftModel, b_max: usize) -> DraftState {
-        DraftState { model, pos: vec![0; b_max], lag_token: vec![None; b_max] }
-    }
-
-    /// During plain steps the draft ingests the same tokens as the target.
-    fn shadow_step(
-        &mut self,
-        engine: &crate::runtime::Engine,
-        tokens: &[i32],
-        pos: &[i32],
-    ) -> Result<()> {
-        self.model.step(engine, tokens, pos)?;
-        for (p, &np) in self.pos.iter_mut().zip(pos) {
-            *p = (*p).max(np as usize + 1);
-        }
-        Ok(())
-    }
-
-    /// Feed the one missing input for rows that fully accepted last cycle.
-    fn catch_up(
-        &mut self,
-        engine: &crate::runtime::Engine,
-        batcher: &Batcher,
-        slots: &[usize],
-    ) -> Result<()> {
-        if slots.iter().all(|&s| self.lag_token[s].is_none()) {
-            return Ok(());
-        }
-        let b = self.pos.len();
-        let mut tokens = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        for &s in slots {
-            let seq = batcher.seq(s);
-            match self.lag_token[s] {
-                Some(t) => {
-                    tokens[s] = t as i32;
-                    pos[s] = (seq.pos - 1) as i32;
-                }
-                None => {
-                    // harmless re-write of the upcoming position
-                    tokens[s] = seq.next_token as i32;
-                    pos[s] = seq.pos as i32;
-                }
-            }
-        }
-        self.model.step(engine, &tokens, &pos)?;
-        for &s in slots {
-            self.lag_token[s] = None;
-        }
-        Ok(())
+    /// The underlying stepped core (for callers that want to interleave
+    /// submission with stepping themselves).
+    pub fn core(&mut self) -> &mut ServeLoop<'m> {
+        &mut self.core
     }
 }

@@ -1,0 +1,605 @@
+//! The incrementally-stepped serving core: continuous batching, the
+//! speculative verify cycle, per-layer expert selection and cost accounting.
+//! This is the L3 "leader" loop — everything on the request path runs here,
+//! in rust.
+//!
+//! Unlike the old monolithic `Scheduler::run`, the loop is **step-scoped**:
+//! callers own the cadence. [`ServeLoop::submit`] enqueues a request at any
+//! time; every [`ServeLoop::step`] first admits queued requests into free
+//! batch slots and then runs one decode/spec-verify cycle, so work that
+//! arrives mid-flight joins the very next step instead of waiting for the
+//! whole batch to drain. Finished sequences are surfaced in the returned
+//! [`StepOutcome`] the moment their slot releases. [`ServeLoop::drain`]
+//! (submit-all + step-until-done) reproduces the old batch-at-a-time
+//! behaviour byte-for-byte — the `Scheduler` wrapper in
+//! [`super::scheduler`] is exactly that.
+//!
+//! ## Speculative verify emulation (DESIGN.md §4)
+//!
+//! The compiled decode-step artifact advances one token per row, so a verify
+//! forward over B×(1+L_s) tokens is emulated in two passes of (1+L_s)
+//! sub-steps each:
+//!
+//!  * **pass 1 (scoring)**: vanilla routing, records every layer's gate
+//!    scores for all verify tokens — the effective-batch G^{(l)};
+//!  * **selection**: the policy picks S_l once per layer from those scores
+//!    (with per-request grouping, exactly Algorithm 4's input);
+//!  * **pass 2 (restricted)**: re-runs the sub-steps with every layer
+//!    restricted to S_l; its logits drive acceptance and its KV writes are
+//!    the ones that persist (positions beyond the accepted prefix are
+//!    garbage-but-masked, verified by the kernel tests).
+//!
+//! The cost model charges one draft step per speculative token plus ONE
+//! target forward over the effective batch — the two passes are an artifact
+//! of the one-token-per-row compilation, not of the system being modeled.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::request::{Phase, Request};
+use super::speculative::{effective_batch_scores, greedy_accept};
+use crate::config::ServeConfig;
+use crate::ep::{EpCostModel, Placement};
+use crate::memsim::{CostGeometry, DecodeCostModel, HardwareProfile};
+use crate::metrics::ServeMetrics;
+use crate::model::{argmax, MoeModel, RoutingMode, StepInput};
+use crate::selection::{baselines::Vanilla, ExpertSet, ScoreMatrix, SelectionPolicy};
+
+/// Result of one serving run (what `drain` + `report` produce).
+#[derive(Debug)]
+pub struct RunReport {
+    pub metrics: ServeMetrics,
+    /// request id → generated tokens.
+    pub outputs: BTreeMap<u64, Vec<u32>>,
+    /// request id → domain (for per-dataset reporting).
+    pub domains: BTreeMap<u64, String>,
+}
+
+/// What one `step()` did — the server worker routes responses off this.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    /// Request ids admitted into batch slots at the top of this step.
+    pub admitted: Vec<u64>,
+    /// Sequences that completed this step: (request id, generated tokens).
+    pub finished: Vec<(u64, Vec<u32>)>,
+    /// Live rows that were in prefill phase when the step ran.
+    pub prefill_rows: usize,
+    /// Live rows that were in decode phase when the step ran.
+    pub decode_rows: usize,
+    /// Tokens committed across all rows this step.
+    pub committed: u64,
+    /// Simulated cost of this step, seconds.
+    pub sim_seconds: f64,
+    /// Whether this step ran a speculative verify cycle.
+    pub speculative: bool,
+    /// Requests still waiting in the admission queue after this step.
+    pub queued: usize,
+    /// Sequences still occupying batch slots after this step.
+    pub running: usize,
+}
+
+/// The stepped serving core. Owns the model borrow, selection policy, cost
+/// models, batcher, draft state and metrics for one serving lifetime.
+pub struct ServeLoop<'m> {
+    model: &'m mut MoeModel,
+    cfg: ServeConfig,
+    policy: Box<dyn SelectionPolicy>,
+    cost: DecodeCostModel,
+    ep_cost: EpCostModel,
+    batcher: Batcher,
+    metrics: ServeMetrics,
+    outputs: BTreeMap<u64, Vec<u32>>,
+    domains: BTreeMap<u64, String>,
+    draft: Option<DraftState>,
+    /// request id → sim-clock at submission (queue-wait / TTFT accounting).
+    submit_sim: BTreeMap<u64, f64>,
+    /// Per-slot submission sim-time, pending until the first token commits.
+    ttft_sub: Vec<Option<f64>>,
+    started: Instant,
+}
+
+impl<'m> ServeLoop<'m> {
+    pub fn new(model: &'m mut MoeModel, cfg: ServeConfig) -> Result<ServeLoop<'m>> {
+        let cost = DecodeCostModel::new(
+            HardwareProfile::by_name(&cfg.hardware)?,
+            CostGeometry::for_preset(&cfg.preset)?,
+        );
+        let policy = cfg.policy.build();
+        if let Some(ep) = &cfg.ep {
+            model.placement = Some(Placement::new(
+                model.dims().n_experts,
+                ep.n_gpus,
+                ep.placement,
+            ));
+        }
+        let mut sl = ServeLoop {
+            model,
+            cfg,
+            policy,
+            cost,
+            ep_cost: EpCostModel::default(),
+            batcher: Batcher::new(1, 1),
+            metrics: ServeMetrics::new(0),
+            outputs: BTreeMap::new(),
+            domains: BTreeMap::new(),
+            draft: None,
+            submit_sim: BTreeMap::new(),
+            ttft_sub: Vec::new(),
+            started: Instant::now(),
+        };
+        sl.reset()?;
+        Ok(sl)
+    }
+
+    /// Forget all serving state (batcher, metrics, caches, draft) and start
+    /// a fresh run. Queued-but-unserved requests are dropped.
+    pub fn reset(&mut self) -> Result<()> {
+        let b_max = self.model.max_batch();
+        self.batcher = Batcher::new(b_max, self.cfg.batch_size.min(b_max));
+        self.metrics = ServeMetrics::new(self.model.dims().n_layers);
+        self.outputs.clear();
+        self.domains.clear();
+        self.submit_sim.clear();
+        self.ttft_sub = vec![None; b_max];
+        self.model.reset();
+        self.draft = if self.cfg.spec_len > 0 {
+            Some(DraftState::new(
+                crate::model::DraftModel::new(self.model.engine())?,
+                b_max,
+            ))
+        } else {
+            None
+        };
+        self.started = Instant::now();
+        Ok(())
+    }
+
+    /// Enqueue a request. It joins the next `step()` if a slot is free.
+    pub fn submit(&mut self, req: Request) {
+        self.domains.insert(req.id, req.domain.clone());
+        self.submit_sim.insert(req.id, self.metrics.sim_seconds);
+        self.batcher.submit(req);
+    }
+
+    /// Queued or running work remains.
+    pub fn has_work(&self) -> bool {
+        self.batcher.has_work()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.batcher.queued()
+    }
+
+    pub fn running(&self) -> usize {
+        self.batcher.running()
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// One serving step: admit newly queued requests into free slots, then
+    /// run one decode step (or speculative verify cycle when all live rows
+    /// are in decode phase and speculation is on).
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let wall0 = Instant::now();
+        let sim_before = self.metrics.sim_seconds;
+        let was_running = self.batcher.running() > 0;
+
+        let admitted_slots = self.batcher.admit();
+        let mut admitted = Vec::with_capacity(admitted_slots.len());
+        for &s in &admitted_slots {
+            let id = self.batcher.seq(s).req.id;
+            let sub = self.submit_sim.remove(&id).unwrap_or(sim_before);
+            self.metrics.queue_wait.add(sim_before - sub);
+            if was_running {
+                self.metrics.admitted_in_flight += 1;
+            }
+            self.ttft_sub[s] = Some(sub);
+            admitted.push(id);
+        }
+
+        let slots = self.batcher.live_slots();
+        if slots.is_empty() {
+            return Ok(StepOutcome {
+                admitted,
+                queued: self.batcher.queued(),
+                ..StepOutcome::default()
+            });
+        }
+
+        let prefill_rows =
+            slots.iter().filter(|&&s| self.batcher.seq(s).phase == Phase::Prefill).count();
+        let decode_rows = slots.len() - prefill_rows;
+        let speculative = self.cfg.spec_len > 0 && prefill_rows == 0;
+        let committed_before = self.metrics.tokens_out;
+
+        let (finished, first_token_slots) = if speculative {
+            self.spec_cycle(&slots)?
+        } else {
+            self.plain_step(&slots)?
+        };
+
+        // Sim clock has advanced by this step's cost; TTFT counts it.
+        for s in first_token_slots {
+            if let Some(sub) = self.ttft_sub[s].take() {
+                self.metrics.ttft.add(self.metrics.sim_seconds - sub);
+            }
+        }
+        for (id, tokens) in &finished {
+            self.outputs.insert(*id, tokens.clone());
+        }
+        self.metrics.requests_done = self.outputs.len() as u64;
+        self.metrics.wall_step_latency.record_seconds(wall0.elapsed().as_secs_f64());
+
+        Ok(StepOutcome {
+            admitted,
+            finished,
+            prefill_rows,
+            decode_rows,
+            committed: self.metrics.tokens_out - committed_before,
+            sim_seconds: self.metrics.sim_seconds - sim_before,
+            speculative,
+            queued: self.batcher.queued(),
+            running: self.batcher.running(),
+        })
+    }
+
+    /// Step until all submitted work completes.
+    pub fn drain(&mut self) -> Result<()> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Drop the per-request run-report bookkeeping (outputs + domains).
+    ///
+    /// Long-lived callers that consume results from [`StepOutcome::finished`]
+    /// (the live TCP worker) must call this periodically: the accumulators
+    /// exist only for [`ServeLoop::report`], and on a server that never
+    /// reports they would otherwise grow without bound. After discarding,
+    /// a later `report()` only covers requests finishing after this call.
+    pub fn discard_finished(&mut self) {
+        self.outputs.clear();
+        let still_queued = &self.submit_sim;
+        self.domains.retain(|id, _| still_queued.contains_key(id));
+    }
+
+    /// Close out the run: stamp wall-clock and move the accumulated outputs
+    /// into a report. The loop can keep serving afterwards (metrics keep
+    /// accumulating; outputs/domains start empty again).
+    pub fn report(&mut self) -> RunReport {
+        self.metrics.wall_seconds = self.started.elapsed().as_secs_f64();
+        self.metrics.requests_done = self.outputs.len() as u64;
+        RunReport {
+            metrics: self.metrics.clone(),
+            outputs: std::mem::take(&mut self.outputs),
+            domains: std::mem::take(&mut self.domains),
+        }
+    }
+
+    /// One ordinary continuous-batching step (prefill and/or decode rows).
+    /// Returns finished sequences and the slots that committed their first
+    /// generated token this step.
+    fn plain_step(
+        &mut self,
+        slots: &[usize],
+    ) -> Result<(Vec<(u64, Vec<u32>)>, Vec<usize>)> {
+        let b_max = self.model.max_batch();
+        let vocab = self.model.dims().vocab;
+        let mut tokens = vec![0i32; b_max];
+        let mut pos = vec![0i32; b_max];
+        for &s in slots {
+            let seq = self.batcher.seq(s);
+            tokens[s] = seq.next_token as i32;
+            pos[s] = seq.pos as i32;
+        }
+        let groups: Vec<Vec<usize>> = slots.iter().map(|&s| vec![s]).collect();
+        let out = self.model.step(&StepInput {
+            tokens: &tokens,
+            pos: &pos,
+            rows: slots,
+            requests: &groups,
+            mode: RoutingMode::Policy(self.policy.as_ref()),
+            collect_probs: false,
+        })?;
+
+        // The draft model shadows the token stream so its cache stays warm
+        // for upcoming speculative cycles.
+        if let Some(d) = self.draft.as_mut() {
+            d.shadow_step(self.model.engine(), &tokens, &pos)?;
+        }
+
+        let logits = out.logits.as_f32()?;
+        let mut committed = 0u64;
+        let mut finished = Vec::new();
+        let mut first_token_slots = Vec::new();
+        for &s in slots {
+            let am = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
+            let seq = self.batcher.seq_mut(s);
+            let was_unstarted = seq.generated.is_empty();
+            match seq.phase {
+                Phase::Prefill => {
+                    if seq.advance_prefill(am) {
+                        committed += 1;
+                    }
+                }
+                Phase::Decode => {
+                    seq.commit(am);
+                    committed += 1;
+                }
+            }
+            if was_unstarted && !seq.generated.is_empty() {
+                first_token_slots.push(s);
+            }
+            if seq.is_done() {
+                let done = self.batcher.release(s);
+                finished.push((done.req.id, done.generated));
+            }
+        }
+
+        let sim_s = self.charge_step(&out.activated, &out.selected, slots.len(), 0);
+        self.metrics.record_step(&out.activated, sim_s, committed);
+        Ok((finished, first_token_slots))
+    }
+
+    /// One speculative verify cycle (all rows in decode phase).
+    fn spec_cycle(
+        &mut self,
+        slots: &[usize],
+    ) -> Result<(Vec<(u64, Vec<u32>)>, Vec<usize>)> {
+        let ls = self.cfg.spec_len;
+        let b_max = self.model.max_batch();
+        let vocab = self.model.dims().vocab;
+        let n_layers = self.model.dims().n_layers;
+        let n_experts = self.model.dims().n_experts;
+
+        // ---- draft proposals (plus catch-up for fully-accepted rows) ----
+        let draft = self.draft.as_mut().expect("spec cycle without draft state");
+        draft.catch_up(self.model.engine(), &self.batcher, slots)?;
+        let mut proposals: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        {
+            let mut dtok = vec![0i32; b_max];
+            let mut dpos = vec![0i32; b_max];
+            for &s in slots {
+                let seq = self.batcher.seq(s);
+                dtok[s] = seq.next_token as i32;
+                dpos[s] = seq.pos as i32;
+                proposals.insert(s, Vec::with_capacity(ls));
+            }
+            for _ in 0..ls {
+                let logits_t = draft.model.step(self.model.engine(), &dtok, &dpos)?;
+                let logits = logits_t.as_f32()?;
+                for &s in slots {
+                    let d = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
+                    proposals.get_mut(&s).unwrap().push(d);
+                    dtok[s] = d as i32;
+                    dpos[s] += 1;
+                }
+            }
+            for &s in slots {
+                draft.pos[s] = self.batcher.seq(s).pos + ls; // processed up to pos+ls-1
+            }
+        }
+
+        // verify inputs per sub-step j: j=0 → next_token, j>=1 → draft j-1
+        let verify_tok = |batcher: &Batcher, s: usize, j: usize| -> u32 {
+            if j == 0 {
+                batcher.seq(s).next_token
+            } else {
+                proposals[&s][j - 1]
+            }
+        };
+
+        // ---- pass 1: scoring (vanilla routing, collect per-layer probs) --
+        let vanilla = Vanilla;
+        let groups_single: Vec<Vec<usize>> = slots.iter().map(|&s| vec![s]).collect();
+        let mut pass1_scores: Vec<Vec<(ScoreMatrix, ScoreMatrix)>> = Vec::with_capacity(ls + 1);
+        for j in 0..=ls {
+            let mut tokens = vec![0i32; b_max];
+            let mut pos = vec![0i32; b_max];
+            for &s in slots {
+                tokens[s] = verify_tok(&self.batcher, s, j) as i32;
+                pos[s] = (self.batcher.seq(s).pos + j) as i32;
+            }
+            let out = self.model.step(&StepInput {
+                tokens: &tokens,
+                pos: &pos,
+                rows: slots,
+                requests: &groups_single,
+                mode: RoutingMode::Policy(&vanilla),
+                collect_probs: true,
+            })?;
+            pass1_scores.push(out.scores.unwrap());
+        }
+
+        // ---- per-layer selection over the effective batch ---------------
+        let mut sets: Vec<ExpertSet> = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let logits_steps: Vec<&ScoreMatrix> =
+                pass1_scores.iter().map(|layers| &layers[l].0).collect();
+            let probs_steps: Vec<&ScoreMatrix> =
+                pass1_scores.iter().map(|layers| &layers[l].1).collect();
+            let (eff_logits, _) = effective_batch_scores(&logits_steps, slots);
+            let (eff_probs, groups) = effective_batch_scores(&probs_steps, slots);
+            let rows: Vec<usize> = (0..eff_probs.n_tokens()).collect();
+            let ctx = crate::selection::SelectionContext {
+                probs: &eff_probs,
+                logits: &eff_logits,
+                rows: &rows,
+                requests: &groups,
+                colsum_hint: None,
+                placement: self.model.placement.as_ref(),
+                top_k: self.model.dims().top_k,
+            };
+            sets.push(self.policy.select(&ctx));
+        }
+
+        // ---- pass 2: restricted run; drives acceptance -------------------
+        let mut target_argmax: BTreeMap<usize, Vec<u32>> =
+            slots.iter().map(|&s| (s, Vec::with_capacity(ls + 1))).collect();
+        let mut union_activated: Vec<ExpertSet> =
+            (0..n_layers).map(|_| ExpertSet::empty(n_experts)).collect();
+        let mut acts = vec![0usize; n_layers];
+        for j in 0..=ls {
+            let mut tokens = vec![0i32; b_max];
+            let mut pos = vec![0i32; b_max];
+            for &s in slots {
+                tokens[s] = verify_tok(&self.batcher, s, j) as i32;
+                pos[s] = (self.batcher.seq(s).pos + j) as i32;
+            }
+            let out = self.model.step(&StepInput {
+                tokens: &tokens,
+                pos: &pos,
+                rows: slots,
+                requests: &groups_single,
+                mode: RoutingMode::Restricted(&sets),
+                collect_probs: false,
+            })?;
+            let logits = out.logits.as_f32()?;
+            for &s in slots {
+                let am = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
+                target_argmax.get_mut(&s).unwrap().push(am);
+            }
+            for (u, sel) in union_activated.iter_mut().zip(&out.selected) {
+                u.union_with(sel);
+            }
+        }
+        for (a, u) in acts.iter_mut().zip(&union_activated) {
+            *a = u.len();
+        }
+
+        // ---- acceptance & commit -----------------------------------------
+        let mut committed_total = 0u64;
+        let mut finished = Vec::new();
+        let mut first_token_slots = Vec::new();
+        for &s in slots {
+            let (n_acc, committed) = greedy_accept(&proposals[&s], &target_argmax[&s]);
+            self.metrics.spec_proposed += ls as u64;
+            self.metrics.spec_accepted += n_acc as u64;
+            let seq = self.batcher.seq_mut(s);
+            let was_unstarted = seq.generated.is_empty();
+            let take = committed.len().min(seq.remaining());
+            for &tok in committed.iter().take(take) {
+                seq.commit(tok);
+                committed_total += 1;
+            }
+            if was_unstarted && !seq.generated.is_empty() {
+                first_token_slots.push(s);
+            }
+            let done = seq.is_done();
+            // full acceptance leaves the draft cache one input behind
+            let lag = if n_acc == ls && ls > 0 && !done {
+                Some(proposals[&s][ls - 1])
+            } else {
+                None
+            };
+            self.draft.as_mut().unwrap().lag_token[s] = lag;
+            if done {
+                let released = self.batcher.release(s);
+                finished.push((released.req.id, released.generated));
+            }
+        }
+
+        let sim_s = self.charge_step(
+            &acts,
+            &union_activated,
+            slots.len() * (1 + ls),
+            ls, // draft steps
+        );
+        self.metrics.record_step(&acts, sim_s, committed_total);
+        Ok((finished, first_token_slots))
+    }
+
+    /// Simulated cost of one target forward (+ draft steps) and EP load
+    /// accounting. Returns simulated seconds.
+    fn charge_step(
+        &mut self,
+        activated: &[usize],
+        selected: &[ExpertSet],
+        n_tokens: usize,
+        draft_steps: usize,
+    ) -> f64 {
+        let mut sim = draft_steps as f64 * self.cost.draft_step();
+        if let Some(pl) = &self.model.placement {
+            let sel_refs: Vec<&ExpertSet> = selected.iter().collect();
+            sim += self.cost.ep_step(pl, &sel_refs, n_tokens, &self.ep_cost);
+            let max_load =
+                selected.iter().map(|s| pl.max_load(s)).max().unwrap_or(0);
+            self.metrics.max_gpu_load.add(max_load as f64);
+        } else {
+            let scaled = self.cost.scale_activations(activated);
+            sim += self.cost.target_step(&scaled, n_tokens).total_seconds;
+        }
+        sim
+    }
+}
+
+/// Draft-model wrapper tracking per-slot cache positions and catch-up debt.
+struct DraftState {
+    model: crate::model::DraftModel,
+    pos: Vec<usize>,
+    lag_token: Vec<Option<u32>>,
+}
+
+impl DraftState {
+    fn new(model: crate::model::DraftModel, b_max: usize) -> DraftState {
+        DraftState { model, pos: vec![0; b_max], lag_token: vec![None; b_max] }
+    }
+
+    /// During plain steps the draft ingests the same tokens as the target.
+    fn shadow_step(
+        &mut self,
+        engine: &crate::runtime::Engine,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<()> {
+        self.model.step(engine, tokens, pos)?;
+        for (p, &np) in self.pos.iter_mut().zip(pos) {
+            *p = (*p).max(np as usize + 1);
+        }
+        Ok(())
+    }
+
+    /// Feed the one missing input for rows that fully accepted last cycle.
+    fn catch_up(
+        &mut self,
+        engine: &crate::runtime::Engine,
+        batcher: &Batcher,
+        slots: &[usize],
+    ) -> Result<()> {
+        if slots.iter().all(|&s| self.lag_token[s].is_none()) {
+            return Ok(());
+        }
+        let b = self.pos.len();
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        for &s in slots {
+            let seq = batcher.seq(s);
+            match self.lag_token[s] {
+                Some(t) => {
+                    tokens[s] = t as i32;
+                    pos[s] = (seq.pos - 1) as i32;
+                }
+                None => {
+                    // harmless re-write of the upcoming position
+                    tokens[s] = seq.next_token as i32;
+                    pos[s] = seq.pos as i32;
+                }
+            }
+        }
+        self.model.step(engine, &tokens, &pos)?;
+        for &s in slots {
+            self.lag_token[s] = None;
+        }
+        Ok(())
+    }
+}

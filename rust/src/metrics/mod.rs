@@ -116,6 +116,16 @@ pub struct ServeMetrics {
     pub spec_accepted: u64,
     /// Per-step simulated latency histogram.
     pub step_latency: LatencyHistogram,
+    /// Per-step wall-clock latency histogram (PJRT execution cadence).
+    pub wall_step_latency: LatencyHistogram,
+    /// Sim-time from submission to first committed token, per request.
+    pub ttft: Summary,
+    /// Sim-time spent queued before slot admission, per request.
+    pub queue_wait: Summary,
+    /// Requests admitted while other sequences were already mid-flight —
+    /// the continuous-batching "late joiner" count (always 0 under
+    /// batch-at-a-time serving of uniform-length requests).
+    pub admitted_in_flight: u64,
 }
 
 impl ServeMetrics {
@@ -172,6 +182,21 @@ impl ServeMetrics {
         m.insert("max_gpu_load_mean".into(), Json::num(self.max_gpu_load.mean()));
         m.insert("p50_step_us".into(), Json::num(self.step_latency.quantile_us(0.5)));
         m.insert("p99_step_us".into(), Json::num(self.step_latency.quantile_us(0.99)));
+        m.insert(
+            "p50_wall_step_us".into(),
+            Json::num(self.wall_step_latency.quantile_us(0.5)),
+        );
+        m.insert(
+            "p99_wall_step_us".into(),
+            Json::num(self.wall_step_latency.quantile_us(0.99)),
+        );
+        m.insert("ttft_mean_s".into(), Json::num(self.ttft.mean()));
+        m.insert("ttft_max_s".into(), Json::num(self.ttft.max));
+        m.insert("queue_wait_mean_s".into(), Json::num(self.queue_wait.mean()));
+        m.insert(
+            "admitted_in_flight".into(),
+            Json::num(self.admitted_in_flight as f64),
+        );
         Json::Obj(m)
     }
 }
@@ -228,5 +253,24 @@ mod tests {
         let j = m.to_json();
         assert!(j.get("otps").is_some());
         assert!(j.get("mean_activated").is_some());
+        assert!(j.get("ttft_mean_s").is_some());
+        assert!(j.get("queue_wait_mean_s").is_some());
+        assert!(j.get("admitted_in_flight").is_some());
+    }
+
+    #[test]
+    fn serving_latency_counters_accumulate() {
+        let mut m = ServeMetrics::new(1);
+        m.ttft.add(0.25);
+        m.ttft.add(0.75);
+        m.queue_wait.add(0.1);
+        m.admitted_in_flight += 3;
+        m.wall_step_latency.record_seconds(1e-3);
+        assert!((m.ttft.mean() - 0.5).abs() < 1e-12);
+        assert_eq!(m.queue_wait.n, 1);
+        assert_eq!(m.admitted_in_flight, 3);
+        assert_eq!(m.wall_step_latency.count(), 1);
+        let j = m.to_json();
+        assert!(j.get("p99_wall_step_us").is_some());
     }
 }

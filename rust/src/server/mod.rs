@@ -1,10 +1,24 @@
 //! Threaded TCP serving front-end (JSON-lines protocol) + client library.
 //!
-//! Architecture: connection threads parse requests and enqueue them with a
-//! per-request response channel; a single worker thread owns the model and
-//! drains the queue in dynamic batches (up to `batch_size`, with a short
-//! gather window — the "goodput" batching the paper's deployment setting
-//! assumes), runs the [`Scheduler`] on each batch, and routes results back.
+//! ## Architecture: continuous batching, stepped
+//!
+//! Connection threads parse requests and enqueue them with a per-request
+//! response channel. A single worker thread owns the model and drives a
+//! live [`ServeLoop`]: between every decode step it drains whatever jobs
+//! have arrived and submits them to the loop, and each `step()` admits
+//! queued requests into free batch slots *before* the next decode/
+//! spec-verify cycle. A request that lands one step after a batch started
+//! therefore joins mid-flight (the next step) instead of waiting for the
+//! whole previous batch to drain, and finished sequences are answered the
+//! moment their slot releases — not when the batch completes. This is the
+//! production batching the paper's deployment setting assumes: XShare's
+//! per-layer selection adapts to whatever the batch composition is *this
+//! step*.
+//!
+//! The old gather-window batch-at-a-time behaviour survives only as the
+//! offline path (`Scheduler::run` = submit-all + step-until-done), used by
+//! benches and the fidelity harness; `benches/serve_continuous.rs` measures
+//! the throughput gap between the two under Poisson arrivals.
 //!
 //! (The baked registry carries no tokio; this server uses std::net +
 //! threads, which for a CPU-bound PJRT backend is the honest design anyway —
@@ -16,19 +30,20 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::config::ServeConfig;
-use crate::coordinator::{Request, Scheduler};
+use crate::coordinator::{Request, ServeLoop};
 use crate::model::MoeModel;
 use crate::runtime::{Engine, Manifest};
 pub use protocol::{decode_response, Response};
 
-type Job = (Request, Sender<std::result::Result<Vec<u32>, String>>);
+type Reply = Sender<std::result::Result<Vec<u32>, String>>;
+type Job = (Request, Reply);
 
 /// Handle to a running server.
 pub struct Server {
@@ -103,6 +118,18 @@ impl Drop for Server {
     }
 }
 
+/// Whether an accept error is transient: the next `accept` may well
+/// succeed, so the accept thread must keep going without logging noise.
+fn transient_accept_error(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::TimedOut
+    )
+}
+
 fn accept_loop(listener: TcpListener, job_tx: Sender<Job>, stop: Arc<AtomicBool>) {
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
@@ -115,7 +142,14 @@ fn accept_loop(listener: TcpListener, job_tx: Sender<Job>, stop: Arc<AtomicBool>
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
             }
-            Err(_) => break,
+            Err(e) if transient_accept_error(e.kind()) => {}
+            Err(e) => {
+                // Unexpected (EMFILE, ENOBUFS, …) but not a reason to kill
+                // the accept thread permanently: log, back off so a
+                // persistent failure can't spin the CPU, and retry.
+                eprintln!("xshare server: accept error (will retry): {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
         }
     }
 }
@@ -153,10 +187,29 @@ fn connection_loop(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
                 }
             }
             Err(e) => {
-                writeln!(writer, "{}", protocol::encode_error(0, &format!("{e:#}")))?;
+                // Best-effort id recovery so the client can correlate the
+                // error with the request it sent (a fixed id of 0 made
+                // malformed-payload errors unattributable).
+                let id = protocol::extract_id(trimmed);
+                writeln!(writer, "{}", protocol::encode_error(id, &format!("{e:#}")))?;
             }
         }
     }
+}
+
+/// Remap an incoming job onto a worker-unique internal id (clients may
+/// collide) and submit it to the live loop.
+fn submit_job(
+    core: &mut ServeLoop<'_>,
+    responders: &mut BTreeMap<u64, Reply>,
+    next_internal: &mut u64,
+    (mut req, tx): Job,
+) {
+    let internal = *next_internal;
+    *next_internal += 1;
+    responders.insert(internal, tx);
+    req.id = internal;
+    core.submit(req);
 }
 
 fn worker_loop(
@@ -165,58 +218,84 @@ fn worker_loop(
     job_rx: Receiver<Job>,
     stop: Arc<AtomicBool>,
 ) {
-    // Gather window: wait briefly after the first request so concurrent
-    // clients coalesce into one batch (dynamic batching).
-    let window = Duration::from_millis(20);
-    while !stop.load(Ordering::SeqCst) {
-        let first = match job_rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(j) => j,
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-            Err(_) => break,
+    // Outer loop exists only to rebuild the serving core after a step error
+    // (model/cache state is suspect at that point); the inner loop is the
+    // live continuous-batching loop.
+    let mut next_internal: u64 = 0;
+    'serve: while !stop.load(Ordering::SeqCst) {
+        let mut core = match ServeLoop::new(&mut model, cfg.clone()) {
+            Ok(core) => core,
+            Err(e) => {
+                // Construction failure is config-determined and permanent:
+                // reply with the error until shutdown.
+                let msg = format!("{e:#}");
+                while !stop.load(Ordering::SeqCst) {
+                    match job_rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok((_, tx)) => {
+                            let _ = tx.send(Err(msg.clone()));
+                        }
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                return;
+            }
         };
-        let mut jobs = vec![first];
-        let deadline = std::time::Instant::now() + window;
-        while jobs.len() < cfg.batch_size {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match job_rx.recv_timeout(deadline - now) {
-                Ok(j) => jobs.push(j),
-                Err(_) => break,
-            }
-        }
+        let mut responders: BTreeMap<u64, Reply> = BTreeMap::new();
 
-        // Remap ids to be unique within the batch (clients may collide).
-        let mut requests = Vec::with_capacity(jobs.len());
-        let mut responders: BTreeMap<
-            u64,
-            (u64, Sender<std::result::Result<Vec<u32>, String>>),
-        > = BTreeMap::new();
-        for (i, (mut req, tx)) in jobs.into_iter().enumerate() {
-            let internal = i as u64;
-            responders.insert(internal, (req.id, tx));
-            req.id = internal;
-            requests.push(req);
-        }
-
-        let result =
-            Scheduler::new(&mut model, cfg.clone()).and_then(|mut s| s.run(requests));
-        match result {
-            Ok(report) => {
-                for (internal, (_, tx)) in responders {
-                    let payload = report
-                        .outputs
-                        .get(&internal)
-                        .cloned()
-                        .ok_or_else(|| "request lost".to_string());
-                    let _ = tx.send(payload);
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                // Graceful shutdown: stop taking new jobs but finish the
+                // sequences already submitted (bounded by max_new_tokens),
+                // like the old worker finished its current batch.
+                while core.has_work() {
+                    match core.step() {
+                        Ok(outcome) => {
+                            for (internal, tokens) in outcome.finished {
+                                if let Some(tx) = responders.remove(&internal) {
+                                    let _ = tx.send(Ok(tokens));
+                                }
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+                break 'serve;
+            }
+            // Idle: block briefly for the next job. Busy: just drain
+            // whatever has arrived — admission happens inside step().
+            if !core.has_work() {
+                match job_rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(job) => {
+                        submit_job(&mut core, &mut responders, &mut next_internal, job)
+                    }
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break 'serve,
                 }
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for (_, (_, tx)) in responders {
-                    let _ = tx.send(Err(msg.clone()));
+            while let Ok(job) = job_rx.try_recv() {
+                submit_job(&mut core, &mut responders, &mut next_internal, job);
+            }
+
+            match core.step() {
+                Ok(outcome) => {
+                    // Finished sequences return the moment their slot
+                    // releases — mid-batch, not at batch completion.
+                    for (internal, tokens) in outcome.finished {
+                        if let Some(tx) = responders.remove(&internal) {
+                            let _ = tx.send(Ok(tokens));
+                        }
+                    }
+                    // The worker consumes results here; keep the loop's
+                    // run-report accumulators from growing forever.
+                    core.discard_finished();
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for (_, tx) in std::mem::take(&mut responders) {
+                        let _ = tx.send(Err(msg.clone()));
+                    }
+                    continue 'serve; // rebuild the core
                 }
             }
         }

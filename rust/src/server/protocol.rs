@@ -45,6 +45,17 @@ pub fn decode_request(line: &str) -> Result<Request> {
     Ok(req)
 }
 
+/// Best-effort id recovery from a (possibly malformed) request line, so
+/// error replies stay correlatable to the request that caused them.
+/// Returns 0 when the line is not JSON or carries no usable numeric `id`.
+pub fn extract_id(line: &str) -> u64 {
+    Json::parse(line)
+        .ok()
+        .and_then(|v| v.get("id").and_then(|id| id.as_i64()))
+        .map(|id| id.max(0) as u64)
+        .unwrap_or(0)
+}
+
 pub fn encode_response(id: u64, tokens: &[u32]) -> String {
     Json::obj(vec![
         ("id", Json::num(id as f64)),
@@ -118,5 +129,19 @@ mod tests {
         assert!(decode_request(r#"{"id":1,"prompt":[],"max_new_tokens":4}"#).is_err());
         assert!(decode_request(r#"{"id":1,"prompt":[1],"max_new_tokens":0}"#).is_err());
         assert!(decode_request("not json").is_err());
+    }
+
+    #[test]
+    fn extract_id_recovers_from_malformed_payloads() {
+        // Valid JSON, invalid request (empty prompt): id must survive.
+        assert_eq!(extract_id(r#"{"id":42,"prompt":[],"max_new_tokens":4}"#), 42);
+        // Missing fields entirely: still correlatable.
+        assert_eq!(extract_id(r#"{"id":7}"#), 7);
+        // No id / not JSON / nonsense id: fall back to 0.
+        assert_eq!(extract_id(r#"{"prompt":[1]}"#), 0);
+        assert_eq!(extract_id("not json"), 0);
+        assert_eq!(extract_id(r#"{"id":"seven"}"#), 0);
+        // Negative ids clamp rather than wrap.
+        assert_eq!(extract_id(r#"{"id":-3}"#), 0);
     }
 }

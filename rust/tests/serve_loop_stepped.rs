@@ -1,0 +1,218 @@
+//! Stepped serving-core tests over the tiny artifact preset, ported from
+//! the continuous-batch scheduler ordering suite (prefill-before-decode,
+//! request-admitted-between-decode-steps) plus the central fidelity
+//! property of the refactor: a workload served with staggered mid-flight
+//! submission produces identical per-request outputs to submit-all-upfront.
+
+use std::collections::BTreeMap;
+
+use xshare::config::ServeConfig;
+use xshare::coordinator::{Request, Scheduler, ServeLoop};
+use xshare::gen::{TraceDomain, TraceGenerator};
+use xshare::model::MoeModel;
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+use xshare::util::check::forall;
+
+fn tiny_model() -> MoeModel {
+    let manifest = Manifest::load(&artifacts_root().join("tiny"))
+        .expect("tiny artifacts missing — run `make artifacts`");
+    MoeModel::new(Engine::load(manifest).unwrap()).unwrap()
+}
+
+fn tiny_cfg() -> ServeConfig {
+    ServeConfig {
+        preset: "tiny".into(),
+        batch_size: 4,
+        max_new_tokens: 6,
+        ..Default::default()
+    }
+}
+
+fn trace(n: usize, max_new: usize, seed: u64) -> Vec<Request> {
+    let g = TraceGenerator::new(64, seed);
+    g.generate(&TraceDomain::standard_suite(), n)
+        .into_iter()
+        .map(|t| {
+            let mut prompt = t.prompt;
+            prompt.truncate(5);
+            let mut r = Request::new(t.id, prompt, max_new);
+            r.domain = t.domain;
+            r
+        })
+        .collect()
+}
+
+#[test]
+fn prefill_runs_before_decode_for_admitted_request() {
+    let mut model = tiny_model();
+    let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
+    core.submit(Request::new(1, vec![3, 4, 5], 2));
+
+    // Prompt length 3 → three prefill-phase steps; the third consumes the
+    // last prompt token and commits the first generated token.
+    let o1 = core.step().unwrap();
+    assert_eq!(o1.admitted, vec![1]);
+    assert_eq!((o1.prefill_rows, o1.decode_rows), (1, 0));
+    assert_eq!(o1.committed, 0);
+
+    let o2 = core.step().unwrap();
+    assert_eq!((o2.prefill_rows, o2.decode_rows), (1, 0));
+
+    let o3 = core.step().unwrap();
+    assert_eq!((o3.prefill_rows, o3.decode_rows), (1, 0));
+    assert_eq!(o3.committed, 1, "prefill completion commits the first token");
+
+    // Only now does the row run in decode phase; max_new=2 finishes here.
+    let o4 = core.step().unwrap();
+    assert_eq!((o4.prefill_rows, o4.decode_rows), (0, 1));
+    assert_eq!(o4.finished.len(), 1);
+    assert_eq!(o4.finished[0].0, 1);
+    assert_eq!(o4.finished[0].1.len(), 2);
+    assert!(!core.has_work());
+
+    // TTFT was recorded exactly once, and covers the three prefill steps.
+    assert_eq!(core.metrics().ttft.n, 1);
+    assert!(core.metrics().ttft.min > 0.0);
+}
+
+#[test]
+fn request_admitted_between_decode_steps_joins_next_step() {
+    let mut model = tiny_model();
+    let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
+    core.submit(Request::new(1, vec![3], 4));
+
+    let o1 = core.step().unwrap(); // single-token prompt: prefill commits #1
+    assert_eq!(o1.committed, 1);
+    let o2 = core.step().unwrap(); // pure decode
+    assert_eq!((o2.prefill_rows, o2.decode_rows), (0, 1));
+
+    // B arrives while A is mid-decode: it must be admitted at the top of
+    // the very next step and prefill beside A's decode row.
+    core.submit(Request::new(2, vec![4, 5], 3));
+    let o3 = core.step().unwrap();
+    assert_eq!(o3.admitted, vec![2]);
+    assert_eq!((o3.prefill_rows, o3.decode_rows), (1, 1));
+    assert_eq!(core.metrics().admitted_in_flight, 1);
+    assert!(core.metrics().queue_wait.n >= 2);
+
+    core.drain().unwrap();
+    let report = core.report();
+    assert_eq!(report.outputs.len(), 2);
+    assert_eq!(report.outputs[&1].len(), 4);
+    assert_eq!(report.outputs[&2].len(), 3);
+}
+
+#[test]
+fn finished_requests_release_mid_flight() {
+    // A short request co-batched with a long one must finish (and free its
+    // slot) while the long one keeps decoding — not when the batch drains.
+    let mut model = tiny_model();
+    let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
+    core.submit(Request::new(1, vec![3], 2)); // short
+    core.submit(Request::new(2, vec![4], 8)); // long
+
+    let mut short_done_at = None;
+    let mut steps = 0usize;
+    while core.has_work() {
+        let o = core.step().unwrap();
+        steps += 1;
+        if o.finished.iter().any(|(id, _)| *id == 1) {
+            short_done_at = Some(steps);
+            assert_eq!(o.running, 1, "long request still occupies its slot");
+        }
+    }
+    let report = core.report();
+    assert_eq!(report.outputs.len(), 2);
+    let short_done_at = short_done_at.expect("short request never finished");
+    assert!(short_done_at < steps, "short request only returned at drain");
+}
+
+#[test]
+fn late_joiner_does_not_perturb_vanilla_outputs() {
+    // Under vanilla routing rows are independent, so a request joining
+    // mid-flight must not change what an already-running request generates.
+    let mut model = tiny_model();
+    let solo = Scheduler::new(&mut model, tiny_cfg())
+        .unwrap()
+        .run(vec![Request::new(1, vec![3, 4], 6)])
+        .unwrap();
+
+    let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
+    core.submit(Request::new(1, vec![3, 4], 6));
+    core.step().unwrap();
+    core.step().unwrap();
+    core.submit(Request::new(2, vec![5, 6, 7], 4));
+    core.drain().unwrap();
+    let mixed = core.report();
+
+    assert_eq!(solo.outputs[&1], mixed.outputs[&1]);
+    assert_eq!(mixed.outputs[&2].len(), 4);
+}
+
+#[test]
+fn staggered_submission_matches_upfront_property() {
+    let mut model = tiny_model();
+    let cfg = tiny_cfg();
+    forall(
+        11,
+        6,
+        |rng| {
+            let n = 3 + rng.below(4); // 3..=6 requests
+            let max_new = 2 + rng.below(4); // 2..=5 tokens each
+            // Step offset at which each request is submitted (0 = upfront).
+            let offsets: Vec<usize> = (0..n).map(|_| rng.below(6)).collect();
+            let seed = rng.below(1000) as u64;
+            (n, max_new, offsets, seed)
+        },
+        |&(n, max_new, ref offsets, seed)| {
+            let requests = trace(n, max_new, seed);
+
+            let upfront = Scheduler::new(&mut model, cfg.clone())
+                .map_err(|e| format!("{e:#}"))?
+                .run(requests.clone())
+                .map_err(|e| format!("{e:#}"))?;
+
+            let mut core =
+                ServeLoop::new(&mut model, cfg.clone()).map_err(|e| format!("{e:#}"))?;
+            let mut pending: BTreeMap<usize, Vec<Request>> = BTreeMap::new();
+            for (r, &off) in requests.iter().zip(offsets) {
+                pending.entry(off).or_default().push(r.clone());
+            }
+            let mut step_no = 0usize;
+            loop {
+                if let Some(batch) = pending.remove(&step_no) {
+                    for r in batch {
+                        core.submit(r);
+                    }
+                }
+                if !core.has_work() {
+                    if pending.is_empty() {
+                        break;
+                    }
+                    // Idle gap before a later submission: nothing to do
+                    // this step.
+                    step_no += 1;
+                    continue;
+                }
+                core.step().map_err(|e| format!("{e:#}"))?;
+                step_no += 1;
+            }
+            let staggered = core.report();
+
+            if upfront.outputs != staggered.outputs {
+                return Err(format!(
+                    "outputs diverged: upfront {:?} vs staggered {:?}",
+                    upfront.outputs, staggered.outputs
+                ));
+            }
+            // Every request committed a first token exactly once.
+            if staggered.metrics.ttft.n != n as u64 {
+                return Err(format!(
+                    "ttft recorded {} times for {n} requests",
+                    staggered.metrics.ttft.n
+                ));
+            }
+            Ok(())
+        },
+    );
+}

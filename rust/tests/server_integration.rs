@@ -55,6 +55,22 @@ fn concurrent_clients_are_batched() {
 }
 
 #[test]
+fn malformed_request_error_carries_request_id() {
+    // A parsable-but-invalid payload (empty prompt) must be answered with
+    // an error the client can correlate — not a hardcoded id of 0.
+    let server = start_tiny_server();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, r#"{{"id":9,"prompt":[],"max_new_tokens":3}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+    assert!(line.contains("\"id\":9"), "{line}");
+    server.shutdown();
+}
+
+#[test]
 fn malformed_line_gets_error_not_hang() {
     let server = start_tiny_server();
     let stream = TcpStream::connect(server.addr).unwrap();
