@@ -140,6 +140,35 @@ def program_signatures(cfg: ModelConfig) -> dict:
                 ("v_cache", (B, H, S, hd), "f32"),
             ],
         },
+        # Chunked prefill: T = max_batch chunk positions of ONE row per
+        # invocation, so hidden/logits tensors are batch-shaped and the
+        # embed/moe_layer/lm_head programs serve both phases unchanged.
+        "prefill_attn_router": {
+            "fn": M.prefill_attn_router,
+            "params": [
+                ("hidden", (B, d), "f32"),
+                ("start_pos", (1,), "i32"),
+                ("chunk_valid", (B,), "f32"),
+                ("row", (1,), "i32"),
+                ("k_cache", (B, H, S, hd), "f32"),
+                ("v_cache", (B, H, S, hd), "f32"),
+                ("ln1", (d,), "f32"),
+                ("wq", (d, d), "f32"),
+                ("wk", (d, d), "f32"),
+                ("wv", (d, d), "f32"),
+                ("wo", (d, d), "f32"),
+                ("ln2", (d,), "f32"),
+                ("wg", (N, d), "f32"),
+            ],
+            "outputs": [
+                ("hidden2", (B, d), "f32"),
+                ("logits", (B, N), "f32"),
+                ("probs", (B, N), "f32"),
+                ("colsum", (N,), "f32"),
+                ("k_cache", (B, H, S, hd), "f32"),
+                ("v_cache", (B, H, S, hd), "f32"),
+            ],
+        },
         "moe_layer": {
             "fn": M.moe_layer,
             "params": [
@@ -214,11 +243,20 @@ def make_selftest_inputs(cfg: ModelConfig, sig, rng: np.random.RandomState):
     vals = []
     for name, shape, dt in sig["params"]:
         if dt == "i32":
-            hi = cfg.vocab if name == "tokens" else max(cfg.max_seq - 1, 1)
+            if name == "tokens":
+                hi = cfg.vocab
+            elif name == "start_pos":
+                # the chunk window [start, start + max_batch) must fit the
+                # cache (dynamic_slice clamps instead of erroring)
+                hi = max(cfg.max_seq - cfg.max_batch + 1, 1)
+            elif name == "row":
+                hi = cfg.max_batch
+            else:
+                hi = max(cfg.max_seq - 1, 1)
             vals.append(rng.randint(0, hi, size=shape).astype(np.int32))
         elif name == "shared_flag":
             vals.append(np.asarray([float(cfg.n_shared > 0)], np.float32))
-        elif name == "active":
+        elif name in ("active", "chunk_valid"):
             v = np.ones(shape, np.float32)
             v[shape[0] // 2 :] = 0.0
             vals.append(v)

@@ -109,6 +109,80 @@ def attn_router(
     return hidden2, logits, probs, colsum, k_cache, v_cache
 
 
+def _blend_chunk_cache(cache, new, row, start_pos, chunk_valid):
+    """Write a chunk's K or V slab into one row of the padded cache.
+
+    cache: [B, H, S, hd], new: [T, H, hd] (chunk positions as rows),
+    row: [1] i32, start_pos: [1] i32, chunk_valid: [T] f32.
+
+    Positions with chunk_valid == 0 keep their previous cache bits exactly
+    (a `where`-select, not an arithmetic blend), so a partial final chunk
+    cannot disturb cache state beyond the prompt — the byte-identity the
+    prefill equivalence suite asserts. The caller guarantees
+    start_pos + T <= S (dynamic_slice would clamp, silently shifting the
+    window, so the rust runtime refuses chunks near the cache end).
+    """
+    B, H, S, hd = cache.shape
+    T = new.shape[0]
+    slab = jax.lax.dynamic_slice(cache, (row[0], 0, 0, 0), (1, H, S, hd))[0]
+    old = jax.lax.dynamic_slice(slab, (0, start_pos[0], 0), (H, T, hd))
+    mixed = jnp.where(chunk_valid[None, :, None] > 0, jnp.transpose(new, (1, 0, 2)), old)
+    slab = jax.lax.dynamic_update_slice(slab, mixed, (0, start_pos[0], 0))
+    return jax.lax.dynamic_update_slice(cache, slab[None], (row[0], 0, 0, 0))
+
+
+def prefill_attn_router(
+    hidden,      # [T, d]  chunk token embeddings / residual stream
+    start_pos,   # [1] i32 row position before the chunk
+    chunk_valid,  # [T] f32 1.0 real chunk token / 0.0 padding
+    row,         # [1] i32 batch row the chunk belongs to
+    k_cache,     # [B, H, S, hd]
+    v_cache,     # [B, H, S, hd]
+    ln1,         # [d]
+    wq, wk, wv, wo,  # [d, d] each
+    ln2,         # [d]
+    wg,          # [N, d] router
+):
+    """Chunked-prefill variant of ``attn_router``: advances ONE batch row by
+    up to T prompt tokens in a single invocation instead of T decode-shaped
+    steps. T equals ``max_batch`` so the chunk borrows the batch-shaped
+    ``embed`` / ``moe_layer`` / ``lm_head`` programs unchanged — only the
+    attention/cache half needs its own artifact.
+
+    Chunk position i sits at sequence position start_pos + i and attends
+    causally (mask s <= start_pos + i) over the row's updated cache, which
+    holds the real prompt history plus this chunk's K/V. The attention is
+    the *same* Pallas kernel as decode, fed the row slab broadcast across
+    chunk positions, so per-position numerics match the one-token path
+    bit for bit. Returns (hidden2, logits, probs, colsum, k_cache',
+    v_cache') shaped exactly like ``attn_router`` with T in place of B.
+    """
+    T, d = hidden.shape
+    _, H, S, hd = k_cache.shape
+    pos = start_pos[0] + jnp.arange(T, dtype=jnp.int32)  # [T]
+
+    x = rmsnorm(hidden, ln1)
+    q = (x @ wq).reshape(T, H, hd)
+    k = (x @ wk).reshape(T, H, hd)
+    v = (x @ wv).reshape(T, H, hd)
+    q = rope(q, pos)
+    k = rope(k, pos)
+    k_cache = _blend_chunk_cache(k_cache, k, row, start_pos, chunk_valid)
+    v_cache = _blend_chunk_cache(v_cache, v, row, start_pos, chunk_valid)
+
+    row_k = jax.lax.dynamic_slice(k_cache, (row[0], 0, 0, 0), (1, H, S, hd))
+    row_v = jax.lax.dynamic_slice(v_cache, (row[0], 0, 0, 0), (1, H, S, hd))
+    kb = jnp.broadcast_to(row_k, (T, H, S, hd))
+    vb = jnp.broadcast_to(row_v, (T, H, S, hd))
+    ctx = decode_attention(q, kb, vb, pos).reshape(T, d)
+    hidden2 = hidden + ctx @ wo
+
+    x2 = rmsnorm(hidden2, ln2)
+    logits = x2 @ wg.T                            # [T, N]
+    probs, colsum = router_postprocess(logits, chunk_valid)
+    return hidden2, logits, probs, colsum, k_cache, v_cache
+
+
 def moe_layer(
     hidden2,     # [B, d]  residual stream (post attention)
     gates,       # [B, N]  refined gate weights from the coordinator

@@ -139,6 +139,123 @@ def test_attn_router_step_determinism(weights):
 
 
 # ---------------------------------------------------------------------------
+# prefill_attn_router program (chunked multi-token prefill)
+# ---------------------------------------------------------------------------
+
+
+def run_prefill(weights, hidden, start, valid, row, kc, vc, l=0):
+    w = layer_w(weights, l)
+    return M.prefill_attn_router(
+        hidden, jnp.asarray([start], jnp.int32), jnp.asarray(valid, jnp.float32),
+        jnp.asarray([row], jnp.int32), kc, vc,
+        w["ln1"], w["wq"], w["wk"], w["wv"], w["wo"], w["ln2"], w["wg"],
+    )
+
+
+def test_prefill_chunk_matches_one_token_walk_bitwise(weights):
+    """The load-bearing numerics property of chunked prefill: advancing one
+    row by T tokens in a single invocation must reproduce the one-token
+    attn_router walk BIT FOR BIT (cache row, hidden2, router scores) — the
+    same kernel sees the same per-position inputs. The rust equivalence
+    suite builds on this through the whole serving stack."""
+    B, cfg = CFG.max_batch, CFG
+    row = 1
+    rng = np.random.RandomState(3)
+    history = rng.randint(0, cfg.vocab, size=2).astype(np.int32)
+    chunk = rng.randint(0, cfg.vocab, size=B).astype(np.int32)
+
+    def walk(kc, vc, tokens, start):
+        """One-token attn_router steps for `row`, layer 0."""
+        h2s, probss = [], []
+        for i, tok in enumerate(tokens):
+            toks = np.zeros(B, np.int32)
+            toks[row] = tok
+            (hidden,) = M.embed(jnp.asarray(toks), weights["emb"])
+            pos = np.zeros(B, np.int32)
+            pos[row] = start + i
+            active = np.zeros(B, np.float32)
+            active[row] = 1.0
+            h2, _, probs, _, kc, vc = run_attn(
+                weights, hidden, jnp.asarray(pos), jnp.asarray(active), kc, vc
+            )
+            h2s.append(np.asarray(h2[row]))
+            probss.append(np.asarray(probs[row]))
+        return kc, vc, h2s, probss
+
+    # shared history: two one-token steps
+    kc, vc = fresh_caches(cfg, B)
+    kc, vc, _, _ = walk(kc, vc, history, 0)
+
+    kc_seq, vc_seq, h2_seq, probs_seq = walk(kc, vc, chunk, len(history))
+
+    (hc,) = M.embed(jnp.asarray(chunk), weights["emb"])
+    h2c, _, probsc, _, kc_chunk, vc_chunk = run_prefill(
+        weights, hc, len(history), np.ones(B, np.float32), row, kc, vc
+    )
+
+    np.testing.assert_array_equal(np.asarray(kc_seq[row]), np.asarray(kc_chunk[row]))
+    np.testing.assert_array_equal(np.asarray(vc_seq[row]), np.asarray(vc_chunk[row]))
+    for i in range(B):
+        np.testing.assert_array_equal(h2_seq[i], np.asarray(h2c[i]))
+        np.testing.assert_array_equal(probs_seq[i], np.asarray(probsc[i]))
+
+
+def test_prefill_partial_chunk_preserves_cache_bits(weights):
+    """chunk_valid=0 positions must keep the previous cache bytes exactly
+    (select, not arithmetic blend) and untouched rows must not change."""
+    B, cfg = CFG.max_batch, CFG
+    kc, vc = fresh_caches(cfg, B)
+    kc = kc + 0.123  # sentinel everywhere
+    valid = np.zeros(B, np.float32)
+    valid[:2] = 1.0
+    rng = np.random.RandomState(4)
+    (hc,) = M.embed(jnp.asarray(rng.randint(0, cfg.vocab, B, ), dtype=jnp.int32), weights["emb"])
+    _, _, _, _, kc2, _ = run_prefill(weights, hc, 3, valid, 2, kc, vc)
+    got = np.asarray(kc2)
+    want = np.asarray(kc)
+    # rows other than 2 are untouched
+    mask_rows = [r for r in range(B) if r != 2]
+    np.testing.assert_array_equal(got[mask_rows], want[mask_rows])
+    # row 2: only positions 3 and 4 (the valid chunk entries) changed
+    changed = np.any(got[2] != 0.123, axis=(0, 2))
+    assert changed.tolist() == [i in (3, 4) for i in range(cfg.max_seq)]
+
+
+def test_prefill_causal_mask_within_chunk(weights):
+    """Position i's outputs must not depend on later chunk tokens."""
+    B, cfg = CFG.max_batch, CFG
+    rng = np.random.RandomState(5)
+    toks_a = rng.randint(0, cfg.vocab, size=B).astype(np.int32)
+    toks_b = toks_a.copy()
+    toks_b[-1] = (toks_b[-1] + 1) % cfg.vocab  # perturb only the last token
+
+    outs = []
+    for toks in (toks_a, toks_b):
+        kc, vc = fresh_caches(cfg, B)
+        (hc,) = M.embed(jnp.asarray(toks), weights["emb"])
+        h2, logits, probs, _, _, _ = run_prefill(
+            weights, hc, 0, np.ones(B, np.float32), 0, kc, vc
+        )
+        outs.append((np.asarray(h2), np.asarray(logits), np.asarray(probs)))
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a[: B - 1], b[: B - 1])
+        assert np.any(a[B - 1] != b[B - 1])
+
+
+def test_prefill_colsum_masks_invalid_positions(weights):
+    B, cfg = CFG.max_batch, CFG
+    kc, vc = fresh_caches(cfg, B)
+    rng = np.random.RandomState(6)
+    (hc,) = M.embed(jnp.asarray(rng.randint(0, cfg.vocab, B), dtype=jnp.int32), weights["emb"])
+    valid = np.zeros(B, np.float32)
+    valid[:3] = 1.0
+    _, _, probs, colsum, _, _ = run_prefill(weights, hc, 0, valid, 0, kc, vc)
+    np.testing.assert_allclose(
+        colsum, np.asarray(probs)[:3].sum(axis=0), rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
 # moe_layer program
 # ---------------------------------------------------------------------------
 

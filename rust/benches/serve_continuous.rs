@@ -32,6 +32,14 @@ const SEED: u64 = 17;
 /// late joiners dominate the tail.
 const ARRIVAL_WINDOW_FRAC: f64 = 0.7;
 
+// Long-prompt scenario (chunked prefill): prompts dominate the lifetime of
+// a request, which is exactly where TTFT dies under one-token prefill.
+const LONG_PROMPT_LEN: usize = 48;
+const LONG_N_REQUESTS: usize = 12;
+const LONG_MAX_NEW: usize = 8;
+/// One chunk per step; gptoss-mini's chunk capacity is its max_batch (16).
+const PREFILL_CHUNK: usize = 16;
+
 fn base_cfg(policy: &str) -> ServeConfig {
     ServeConfig {
         preset: PRESET.into(),
@@ -166,6 +174,112 @@ fn serve_batched(
     }
 }
 
+/// Poisson arrivals with long uniform prompts (prompt-heavy workload).
+fn long_prompt_trace(vocab: usize) -> Vec<(f64, Request)> {
+    let mut g = TraceGenerator::new(vocab, SEED + 1);
+    g.arrival_rate = 1.0;
+    g.generate(&TraceDomain::standard_suite(), LONG_N_REQUESTS)
+        .into_iter()
+        .map(|t| {
+            let mut prompt = t.prompt;
+            while prompt.len() < LONG_PROMPT_LEN {
+                let fill = (prompt.len() as u64 * 7 + t.id * 13) % vocab as u64;
+                prompt.push(fill as u32);
+            }
+            prompt.truncate(LONG_PROMPT_LEN);
+            let mut r = Request::new(t.id, prompt, LONG_MAX_NEW);
+            r.domain = t.domain;
+            (t.arrival_s, r)
+        })
+        .collect()
+}
+
+/// Long-prompt TTFT scenario: the stepped loop with chunked prefill vs the
+/// same loop walking prompts one token per step. Same Poisson arrivals,
+/// same policies; under vanilla the outputs must additionally be
+/// byte-identical (chunking is an execution optimisation only).
+fn long_prompt_scenario(model: &mut MoeModel) {
+    println!(
+        "\n# long-prompt TTFT — chunked (T={PREFILL_CHUNK}) vs one-token prefill \
+         ({LONG_N_REQUESTS} reqs × {LONG_PROMPT_LEN}-token prompts, {LONG_MAX_NEW} new)"
+    );
+    let vocab = model.dims().vocab;
+    let mut arrivals = long_prompt_trace(vocab);
+
+    // calibrate the window against the unchunked vanilla busy time
+    let mut probe_cfg = base_cfg("vanilla");
+    probe_cfg.max_new_tokens = LONG_MAX_NEW;
+    let probe_reqs: Vec<Request> = arrivals.iter().map(|(_, r)| r.clone()).collect();
+    let probe = Scheduler::new(model, probe_cfg)
+        .expect("probe scheduler")
+        .run(probe_reqs)
+        .expect("probe run");
+    let busy = probe.metrics.sim_seconds;
+    let t_last = arrivals.last().map(|(t, _)| *t).unwrap_or(0.0).max(1e-12);
+    let scale = ARRIVAL_WINDOW_FRAC * busy / t_last;
+    for (t, _) in arrivals.iter_mut() {
+        *t *= scale;
+    }
+
+    let mut table = Table::new(&[
+        "policy",
+        "prefill",
+        "tokens",
+        "prompt_toks",
+        "makespan_s",
+        "ttft_mean_s",
+        "ttft_delta",
+    ]);
+    for policy in ["vanilla", "batch:24:1"] {
+        let mut unchunked_cfg = base_cfg(policy);
+        unchunked_cfg.max_new_tokens = LONG_MAX_NEW;
+        let mut chunked_cfg = unchunked_cfg.clone();
+        chunked_cfg.prefill_chunk = PREFILL_CHUNK;
+
+        let un = serve_continuous(model, &unchunked_cfg, &arrivals);
+        let ch = serve_continuous(model, &chunked_cfg, &arrivals);
+
+        if policy == "vanilla" {
+            assert_eq!(
+                un.outputs, ch.outputs,
+                "chunked prefill changed generated tokens under vanilla routing"
+            );
+        }
+        assert!(
+            ch.ttft_mean_s < un.ttft_mean_s,
+            "chunked prefill must cut simulated TTFT ({policy}: {} vs {})",
+            ch.ttft_mean_s,
+            un.ttft_mean_s
+        );
+
+        let rows: [(String, &ModeResult, String); 2] = [
+            ("1/step".into(), &un, "-".into()),
+            (
+                format!("{PREFILL_CHUNK}/step"),
+                &ch,
+                format!("{:+.1}%", pct(ch.ttft_mean_s, un.ttft_mean_s)),
+            ),
+        ];
+        for (mode, r, delta) in &rows {
+            table.row(&[
+                policy.to_string(),
+                mode.clone(),
+                r.tokens.to_string(),
+                (LONG_N_REQUESTS * LONG_PROMPT_LEN).to_string(),
+                fmt(r.makespan_s, 4),
+                fmt(r.ttft_mean_s, 4),
+                delta.clone(),
+            ]);
+        }
+        println!(
+            "[{policy:<12}] chunked vs one-token: mean TTFT {:+.1}%, makespan {:+.1}%",
+            pct(ch.ttft_mean_s, un.ttft_mean_s),
+            pct(ch.makespan_s, un.makespan_s),
+        );
+    }
+    table.print("serve_continuous — long-prompt chunked prefill TTFT");
+}
+
 fn main() {
     println!(
         "# serve_continuous — Poisson arrivals, staggered lengths \
@@ -249,4 +363,6 @@ fn main() {
         );
     }
     table.print("serve_continuous — continuous admission vs gather-batch worker");
+
+    long_prompt_scenario(&mut model);
 }

@@ -34,6 +34,11 @@ pub struct ServeConfig {
     pub batch_size: usize,
     /// Speculative length L_s (0 = speculation off).
     pub spec_len: usize,
+    /// Prompt tokens a prefilling row advances per serving step. 1 = the
+    /// legacy one-token-per-step walk; >1 uses the chunked-prefill artifact
+    /// (requires the preset to ship `prefill_attn_router`). Bounded by the
+    /// compiled `max_seq` at `ServeLoop` construction.
+    pub prefill_chunk: usize,
     /// Hardware cost profile for OTPS accounting.
     pub hardware: String,
     /// Expert-parallel topology (None = single GPU).
@@ -53,6 +58,7 @@ impl Default for ServeConfig {
             policy: PolicyKind::Vanilla,
             batch_size: 16,
             spec_len: 0,
+            prefill_chunk: 1,
             hardware: "h100".into(),
             ep: None,
             addr: "127.0.0.1:7431".into(),
@@ -72,8 +78,8 @@ impl ServeConfig {
         let obj = root.as_obj().context("config root must be an object")?;
 
         let known = [
-            "preset", "policy", "batch_size", "spec_len", "hardware", "ep", "addr",
-            "seed", "max_new_tokens",
+            "preset", "policy", "batch_size", "spec_len", "prefill_chunk", "hardware",
+            "ep", "addr", "seed", "max_new_tokens",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -94,6 +100,9 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("spec_len") {
             cfg.spec_len = v.as_usize().context("spec_len")?;
+        }
+        if let Some(v) = root.get("prefill_chunk") {
+            cfg.prefill_chunk = v.as_usize().context("prefill_chunk")?;
         }
         if let Some(v) = root.get("hardware") {
             cfg.hardware = v.as_str().context("hardware")?.to_string();
@@ -135,6 +144,9 @@ impl ServeConfig {
         if args.has("spec-len") {
             self.spec_len = args.usize_or("spec-len", self.spec_len);
         }
+        if args.has("prefill-chunk") {
+            self.prefill_chunk = args.usize_or("prefill-chunk", self.prefill_chunk);
+        }
         if let Some(v) = args.get("hardware") {
             self.hardware = v.to_string();
         }
@@ -163,6 +175,14 @@ impl ServeConfig {
         }
         if self.batch_size * (1 + self.spec_len) > 1024 {
             bail!("effective batch {} too large", self.batch_size * (1 + self.spec_len));
+        }
+        if self.prefill_chunk == 0 {
+            bail!("prefill_chunk must be ≥ 1 (1 = one-token-per-step prefill)");
+        }
+        if self.prefill_chunk > 4096 {
+            // compiled max_seq is checked against the manifest at ServeLoop
+            // construction; this is the config-level sanity ceiling
+            bail!("prefill_chunk {} is beyond any compiled sequence length", self.prefill_chunk);
         }
         if let Some(ep) = &self.ep {
             if ep.n_gpus == 0 {
@@ -253,6 +273,37 @@ mod tests {
         );
         assert_eq!(cfg.effective_batch(), 16);
         assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn prefill_chunk_json_roundtrip_and_validation() {
+        let p = write_tmp("d.json", r#"{"prefill_chunk":8,"batch_size":4}"#);
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.prefill_chunk, 8);
+
+        // default stays the legacy one-token walk
+        assert_eq!(ServeConfig::default().prefill_chunk, 1);
+
+        // zero rejected: a chunk must advance at least one token
+        let z = write_tmp("e.json", r#"{"prefill_chunk":0}"#);
+        let err = ServeConfig::from_json_file(&z).unwrap_err();
+        assert!(format!("{err:#}").contains("prefill_chunk"));
+
+        // absurd chunk rejected at the config level (manifest max_seq is
+        // enforced again at ServeLoop construction)
+        let big = ServeConfig { prefill_chunk: 5000, ..ServeConfig::default() };
+        assert!(big.validate().is_err());
+    }
+
+    #[test]
+    fn prefill_chunk_cli_override() {
+        let args = Args::parse(
+            "--prefill-chunk 16 --batch 4".split_whitespace().map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.prefill_chunk, 16);
+        let bad = Args::parse("--prefill-chunk 0".split_whitespace().map(String::from));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 
     #[test]

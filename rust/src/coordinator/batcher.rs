@@ -83,6 +83,11 @@ impl Batcher {
         self.slots[slot].as_ref().expect("slot not occupied")
     }
 
+    /// Sequence in `slot`, if occupied.
+    pub fn get(&self, slot: usize) -> Option<&SeqState> {
+        self.slots.get(slot).and_then(|s| s.as_ref())
+    }
+
     pub fn seq_mut(&mut self, slot: usize) -> &mut SeqState {
         self.slots[slot].as_mut().expect("slot not occupied")
     }

@@ -74,19 +74,40 @@ impl SeqState {
     /// Advance after a prefill step; returns true if the prompt is finished
     /// and the given first generated token was committed.
     pub fn advance_prefill(&mut self, logits_argmax: u32) -> bool {
+        self.advance_prefill_by(1, logits_argmax)
+    }
+
+    /// Advance after consuming `n` prompt tokens (a chunk). `logits_argmax`
+    /// is the model's prediction at the chunk's last position; it is
+    /// committed as the first generated token iff the chunk exhausts the
+    /// prompt — identical to `n` one-token advances where only the final
+    /// step's logits matter. Returns true when that first token committed.
+    pub fn advance_prefill_by(&mut self, n: usize, logits_argmax: u32) -> bool {
         debug_assert_eq!(self.phase, Phase::Prefill);
-        self.pos += 1;
-        self.prompt_idx += 1;
+        assert!(
+            n >= 1 && self.prompt_idx + n <= self.req.prompt.len(),
+            "chunk of {n} overruns prompt ({} of {} consumed)",
+            self.prompt_idx,
+            self.req.prompt.len()
+        );
+        self.pos += n;
+        self.prompt_idx += n;
         if self.prompt_idx < self.req.prompt.len() {
             self.next_token = self.req.prompt[self.prompt_idx];
             false
         } else {
-            // prompt exhausted: this step's logits predict the first output
+            // prompt exhausted: the last position's logits predict the
+            // first output
             self.phase = Phase::Decode;
             self.generated.push(logits_argmax);
             self.next_token = logits_argmax;
             true
         }
+    }
+
+    /// Prompt tokens not yet fed.
+    pub fn prompt_remaining(&self) -> usize {
+        self.req.prompt.len() - self.prompt_idx
     }
 }
 
@@ -113,6 +134,33 @@ mod tests {
         assert!(s.is_done());
         assert_eq!(s.generated, vec![42, 7]);
         assert_eq!(s.pos, 4);
+    }
+
+    #[test]
+    fn chunked_advance_matches_stepwise() {
+        // A chunk of n must leave the same state as n one-token advances.
+        let req = Request::new(1, vec![10, 11, 12, 13, 14], 2);
+        let mut a = SeqState::new(req.clone());
+        let mut b = SeqState::new(req);
+        assert!(!a.advance_prefill_by(3, 99));
+        for _ in 0..3 {
+            b.advance_prefill(99);
+        }
+        assert_eq!((a.pos, a.prompt_idx, a.next_token), (b.pos, b.prompt_idx, b.next_token));
+        assert_eq!(a.phase, Phase::Prefill);
+        assert_eq!(a.prompt_remaining(), 2);
+        // final chunk commits the predicted token
+        assert!(a.advance_prefill_by(2, 42));
+        assert_eq!(a.phase, Phase::Decode);
+        assert_eq!(a.generated, vec![42]);
+        assert_eq!(a.pos, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns prompt")]
+    fn chunked_advance_rejects_overrun() {
+        let mut s = SeqState::new(Request::new(1, vec![1, 2], 1));
+        s.advance_prefill_by(3, 0);
     }
 
     #[test]

@@ -32,6 +32,25 @@
 //! The cost model charges one draft step per speculative token plus ONE
 //! target forward over the effective batch — the two passes are an artifact
 //! of the one-token-per-row compilation, not of the system being modeled.
+//!
+//! ## Chunked prefill (PR 2)
+//!
+//! With `prefill_chunk > 1`, rows in prefill phase advance by up to a whole
+//! chunk of prompt tokens per step through the `prefill_attn_router`
+//! artifact ([`MoeModel::prefill_chunk`]) while the remaining rows run one
+//! ordinary decode forward; the cost model charges each chunk as one target
+//! forward over its true token count, which amortizes the per-layer weight
+//! stream and cuts TTFT. Chunk rows are parked on their next (token,
+//! position) inside the decode forward — a harmless write the chunk then
+//! overwrites — and the draft shadows every chunk token so spec cycles stay
+//! aligned. Speculation remains gated on `prefill_rows == 0`, chunked or
+//! not. Chunking never changes a request's own prefill routing (the policy
+//! runs per chunk position), so a request's outputs are byte-identical to
+//! the one-token walk under every policy when served solo, and under
+//! row-independent policies in any mix (`rust/tests/prefill_equivalence.rs`).
+//! Batch-coupled policies (batch/spec/gpu-aware) still see each step's
+//! batch composition, which chunking — exactly like admission timing —
+//! alters for concurrently decoding rows.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -45,7 +64,7 @@ use crate::config::ServeConfig;
 use crate::ep::{EpCostModel, Placement};
 use crate::memsim::{CostGeometry, DecodeCostModel, HardwareProfile};
 use crate::metrics::ServeMetrics;
-use crate::model::{argmax, MoeModel, RoutingMode, StepInput};
+use crate::model::{argmax, MoeModel, PrefillInput, RoutingMode, StepInput};
 use crate::selection::{baselines::Vanilla, ExpertSet, ScoreMatrix, SelectionPolicy};
 
 /// Result of one serving run (what `drain` + `report` produce).
@@ -69,8 +88,13 @@ pub struct StepOutcome {
     pub prefill_rows: usize,
     /// Live rows that were in decode phase when the step ran.
     pub decode_rows: usize,
-    /// Tokens committed across all rows this step.
+    /// GENERATED tokens committed across all rows this step. Prompt
+    /// advances are counted in [`StepOutcome::prefill_tokens`], never here
+    /// — the split keeps throughput honest on long prompts.
     pub committed: u64,
+    /// Prompt tokens consumed this step (one-token prefill advances and
+    /// chunked-prefill tokens alike).
+    pub prefill_tokens: u64,
     /// Simulated cost of this step, seconds.
     pub sim_seconds: f64,
     /// Whether this step ran a speculative verify cycle.
@@ -103,6 +127,24 @@ pub struct ServeLoop<'m> {
 
 impl<'m> ServeLoop<'m> {
     pub fn new(model: &'m mut MoeModel, cfg: ServeConfig) -> Result<ServeLoop<'m>> {
+        if cfg.prefill_chunk > 1 {
+            if !model.has_prefill() {
+                anyhow::bail!(
+                    "prefill_chunk={} needs the chunked-prefill artifact, which preset \
+                     '{}' does not ship — rebuild with `make artifacts` or use \
+                     prefill_chunk=1",
+                    cfg.prefill_chunk,
+                    model.dims().name
+                );
+            }
+            if cfg.prefill_chunk > model.dims().max_seq {
+                anyhow::bail!(
+                    "prefill_chunk={} exceeds the compiled sequence length {}",
+                    cfg.prefill_chunk,
+                    model.dims().max_seq
+                );
+            }
+        }
         let cost = DecodeCostModel::new(
             HardwareProfile::by_name(&cfg.hardware)?,
             CostGeometry::for_preset(&cfg.preset)?,
@@ -218,14 +260,22 @@ impl<'m> ServeLoop<'m> {
         let prefill_rows =
             slots.iter().filter(|&&s| self.batcher.seq(s).phase == Phase::Prefill).count();
         let decode_rows = slots.len() - prefill_rows;
+        // Spec-verify cycles need an all-decode batch; the gate is on the
+        // rows' phase, so a row mid-chunk-prefill keeps speculation off
+        // exactly like a one-token prefill row does.
         let speculative = self.cfg.spec_len > 0 && prefill_rows == 0;
         let committed_before = self.metrics.tokens_out;
+        let prompt_before = self.metrics.tokens_prompt;
 
         let (finished, first_token_slots) = if speculative {
             self.spec_cycle(&slots)?
         } else {
-            self.plain_step(&slots)?
+            self.serve_step(&slots)?
         };
+        let prefill_tokens = self.metrics.tokens_prompt - prompt_before;
+        if prefill_tokens > 0 {
+            self.metrics.prefill_tokens_per_step.add(prefill_tokens as f64);
+        }
 
         // Sim clock has advanced by this step's cost; TTFT counts it.
         for s in first_token_slots {
@@ -245,11 +295,18 @@ impl<'m> ServeLoop<'m> {
             prefill_rows,
             decode_rows,
             committed: self.metrics.tokens_out - committed_before,
+            prefill_tokens,
             sim_seconds: self.metrics.sim_seconds - sim_before,
             speculative,
             queued: self.batcher.queued(),
             running: self.batcher.running(),
         })
+    }
+
+    /// Current KV position of the sequence occupying `slot`, if any
+    /// (prefill equivalence tests compare mid-flight positions).
+    pub fn slot_pos(&self, slot: usize) -> Option<usize> {
+        self.batcher.get(slot).map(|s| s.pos)
     }
 
     /// Step until all submitted work completes.
@@ -286,12 +343,128 @@ impl<'m> ServeLoop<'m> {
         }
     }
 
-    /// One ordinary continuous-batching step (prefill and/or decode rows).
-    /// Returns finished sequences and the slots that committed their first
-    /// generated token this step.
+    /// One non-speculative serving step. With `prefill_chunk > 1`, rows in
+    /// prefill phase advance by up to a whole chunk through the prefill
+    /// artifact while the remaining rows run one ordinary decode step; with
+    /// the default chunk of 1 this is byte-identical to the legacy
+    /// one-token-per-step path.
+    fn serve_step(
+        &mut self,
+        slots: &[usize],
+    ) -> Result<(Vec<(u64, Vec<u32>)>, Vec<usize>)> {
+        let cap = self.model.prefill_capacity();
+        let max_seq = self.model.dims().max_seq;
+        // Rows taking the chunked path this step. The chunk artifact slices
+        // a fixed `cap`-wide cache window, so rows whose window would
+        // overhang `max_seq` finish their prompt one token per step
+        // instead; single-token advances (one-token tails, 1-token prompts)
+        // ride the shared decode forward below — a dedicated chunk forward
+        // for one token would cost MORE than the legacy path.
+        let mut plans: Vec<ChunkPlan> = if self.cfg.prefill_chunk > 1 {
+            slots
+                .iter()
+                .filter_map(|&s| {
+                    let seq = self.batcher.seq(s);
+                    if seq.phase != Phase::Prefill || seq.pos + cap > max_seq {
+                        return None;
+                    }
+                    let n = self.cfg.prefill_chunk.min(seq.prompt_remaining());
+                    if n < 2 {
+                        return None;
+                    }
+                    Some(ChunkPlan {
+                        slot: s,
+                        start: seq.pos,
+                        tokens: seq.req.prompt[seq.prompt_idx..seq.prompt_idx + n].to_vec(),
+                    })
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        if plans.is_empty() {
+            return self.plain_step(slots, &[]);
+        }
+
+        let rest: Vec<usize> = slots
+            .iter()
+            .copied()
+            .filter(|s| !plans.iter().any(|p| p.slot == *s))
+            .collect();
+
+        let mut finished = Vec::new();
+        let mut first_token_slots = Vec::new();
+        if !rest.is_empty() {
+            // Park each chunk row at (first chunk token, its position): the
+            // decode step's cache write there is overwritten by the chunk
+            // below, and the draft shadow of the park IS the chunk's first
+            // shadow token — the same harmless-rewrite idiom as
+            // `DraftState::catch_up`.
+            let park: Vec<(usize, u32, usize)> =
+                plans.iter().map(|p| (p.slot, p.tokens[0], p.start)).collect();
+            let (f, fts) = self.plain_step(&rest, &park)?;
+            finished.extend(f);
+            first_token_slots.extend(fts);
+        }
+
+        for plan in &mut plans {
+            let mut consumed = 0usize;
+            let mut last_logits: Option<Vec<f32>> = None;
+            while consumed < plan.tokens.len() {
+                let start = plan.start + consumed;
+                if start + cap > max_seq {
+                    break; // remainder continues one-token-per-step
+                }
+                let n = (plan.tokens.len() - consumed).min(cap);
+                let out = self.model.prefill_chunk(&PrefillInput {
+                    row: plan.slot,
+                    start_pos: start,
+                    tokens: &plan.tokens[consumed..consumed + n],
+                    policy: self.policy.as_ref(),
+                })?;
+                // One target forward over the true chunk geometry: n tokens
+                // amortize the per-layer weight stream — the TTFT lever.
+                let sim_s = self.charge_step(&out.activated, &out.selected, n, 0);
+                self.metrics.record_prefill(&out.activated, sim_s, n as u64);
+                last_logits = Some(out.last_logits);
+                consumed += n;
+            }
+            // A max_seq-boundary break leaves a tail for later steps: the
+            // draft must only shadow what the target actually consumed.
+            plan.tokens.truncate(consumed);
+            let am = argmax(&last_logits.expect("chunk ran at least once")) as u32;
+            let seq = self.batcher.seq_mut(plan.slot);
+            if seq.advance_prefill_by(consumed, am) {
+                // the chunk's last logits committed the first GENERATED
+                // token; record_prefill only counted the prompt tokens
+                first_token_slots.push(plan.slot);
+                self.metrics.tokens_out += 1;
+            }
+            if seq.is_done() {
+                let done = self.batcher.release(plan.slot);
+                finished.push((done.req.id, done.generated));
+            }
+        }
+
+        // The draft shadows every chunk token so its cache stays aligned
+        // for upcoming spec cycles. Token 0 of each chunk was shadowed by
+        // the decode sub-step's park when one ran.
+        let shadow_from = if rest.is_empty() { 0 } else { 1 };
+        self.shadow_chunks(&plans, shadow_from)?;
+
+        Ok((finished, first_token_slots))
+    }
+
+    /// One ordinary continuous-batching step over `slots` (prefill and/or
+    /// decode rows, one token each). `park` entries pin rows OUTSIDE
+    /// `slots` to a (token, position) that a chunk invocation will
+    /// overwrite this same step, keeping their target/draft caches clear of
+    /// the pos-0 garbage padded rows otherwise receive. Returns finished
+    /// sequences and the slots that committed their first generated token.
     fn plain_step(
         &mut self,
         slots: &[usize],
+        park: &[(usize, u32, usize)],
     ) -> Result<(Vec<(u64, Vec<u32>)>, Vec<usize>)> {
         let b_max = self.model.max_batch();
         let vocab = self.model.dims().vocab;
@@ -301,6 +474,11 @@ impl<'m> ServeLoop<'m> {
             let seq = self.batcher.seq(s);
             tokens[s] = seq.next_token as i32;
             pos[s] = seq.pos as i32;
+        }
+        for &(s, tok, p) in park {
+            debug_assert!(!slots.contains(&s), "parked slot also stepped");
+            tokens[s] = tok as i32;
+            pos[s] = p as i32;
         }
         let groups: Vec<Vec<usize>> = slots.iter().map(|&s| vec![s]).collect();
         let out = self.model.step(&StepInput {
@@ -320,6 +498,7 @@ impl<'m> ServeLoop<'m> {
 
         let logits = out.logits.as_f32()?;
         let mut committed = 0u64;
+        let mut prompt_consumed = 0u64;
         let mut finished = Vec::new();
         let mut first_token_slots = Vec::new();
         for &s in slots {
@@ -328,6 +507,7 @@ impl<'m> ServeLoop<'m> {
             let was_unstarted = seq.generated.is_empty();
             match seq.phase {
                 Phase::Prefill => {
+                    prompt_consumed += 1;
                     if seq.advance_prefill(am) {
                         committed += 1;
                     }
@@ -348,7 +528,38 @@ impl<'m> ServeLoop<'m> {
 
         let sim_s = self.charge_step(&out.activated, &out.selected, slots.len(), 0);
         self.metrics.record_step(&out.activated, sim_s, committed);
+        self.metrics.tokens_prompt += prompt_consumed;
         Ok((finished, first_token_slots))
+    }
+
+    /// Feed chunk tokens `shadow_from..` of every plan through the draft
+    /// model (one call per chunk offset; rows without a token at that
+    /// offset are parked on a position their next real shadow overwrites).
+    fn shadow_chunks(&mut self, plans: &[ChunkPlan], shadow_from: usize) -> Result<()> {
+        if self.draft.is_none() {
+            return Ok(());
+        }
+        let b_max = self.model.max_batch();
+        let longest = plans.iter().map(|p| p.tokens.len()).max().unwrap_or(0);
+        for j in shadow_from..longest {
+            let mut tokens = vec![0i32; b_max];
+            let mut pos = vec![0i32; b_max];
+            // harmless parking for every live row not shadowing offset j
+            for s in self.batcher.live_slots() {
+                let seq = self.batcher.seq(s);
+                tokens[s] = seq.next_token as i32;
+                pos[s] = seq.pos as i32;
+            }
+            for p in plans {
+                if j < p.tokens.len() {
+                    tokens[p.slot] = p.tokens[j] as i32;
+                    pos[p.slot] = (p.start + j) as i32;
+                }
+            }
+            let d = self.draft.as_mut().unwrap();
+            d.shadow_step(self.model.engine(), &tokens, &pos)?;
+        }
+        Ok(())
     }
 
     /// One speculative verify cycle (all rows in decode phase).
@@ -541,6 +752,15 @@ impl<'m> ServeLoop<'m> {
         }
         sim
     }
+}
+
+/// One row's chunk of prompt tokens for this serving step.
+struct ChunkPlan {
+    slot: usize,
+    /// Row position before the chunk.
+    start: usize,
+    /// Prompt tokens to consume this step (oldest first).
+    tokens: Vec<u32>,
 }
 
 /// Draft-model wrapper tracking per-slot cache positions and catch-up debt.

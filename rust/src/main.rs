@@ -22,8 +22,10 @@ use xshare::util::cli::Args;
 use xshare::util::json::Json;
 
 const USAGE: &str = "usage: xshare <serve|run|client|info> [--flags]
-  serve  --preset P --policy POL [--batch N] [--spec-len L] [--addr A] [--config F]
-  run    --preset P --policy POL --requests N [--batch N] [--spec-len L] [--seed S]
+  serve  --preset P --policy POL [--batch N] [--spec-len L] [--prefill-chunk T]
+         [--addr A] [--config F]
+  run    --preset P --policy POL --requests N [--batch N] [--spec-len L]
+         [--prefill-chunk T] [--seed S]
   client --addr A --prompt 1,2,3 [--max-new-tokens N] [--id I]
   info   --preset P
 policies: vanilla | batch:<m>:<k0> | spec:<k0>:<m>:<mr> | gpu:<k0>:<mg> |

@@ -97,8 +97,18 @@ impl LatencyHistogram {
 /// paper-table rows.
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
-    /// Output tokens produced (committed, not speculative-rejected).
+    /// Generated output tokens produced (committed, not speculative-
+    /// rejected). Prompt tokens are NEVER counted here — they land in
+    /// [`ServeMetrics::tokens_prompt`], so OTPS can't inflate on long
+    /// prompts.
     pub tokens_out: u64,
+    /// Prompt tokens consumed by prefill (one-token steps and chunks).
+    pub tokens_prompt: u64,
+    /// Chunked-prefill artifact invocations (0 under one-token prefill).
+    pub prefill_forwards: u64,
+    /// Prompt tokens consumed per serving step, over steps that prefilled
+    /// via chunks (the "prefill-tokens-per-step" TTFT lever).
+    pub prefill_tokens_per_step: Summary,
     /// Requests completed.
     pub requests_done: u64,
     /// Simulated time (memsim) spent, seconds.
@@ -144,6 +154,28 @@ impl ServeMetrics {
         self.tokens_out += tokens;
     }
 
+    /// Record one chunked-prefill forward: `prompt_tokens` prompt positions
+    /// advanced in a single target invocation. Contributes simulated time
+    /// and activation summaries like a decode forward but counts toward
+    /// `tokens_prompt`/`prefill_forwards`, never `tokens_out`/`steps` — and
+    /// stays out of `step_latency`, which samples decode forwards (several
+    /// fractional chunk entries per serving step would drag the per-step
+    /// quantiles low exactly on the prefill-heavy workloads they observe).
+    pub fn record_prefill(
+        &mut self,
+        activated_per_layer: &[usize],
+        sim_s: f64,
+        prompt_tokens: u64,
+    ) {
+        assert_eq!(activated_per_layer.len(), self.activated.len());
+        for (s, &a) in self.activated.iter_mut().zip(activated_per_layer) {
+            s.add(a as f64);
+        }
+        self.sim_seconds += sim_s;
+        self.prefill_forwards += 1;
+        self.tokens_prompt += prompt_tokens;
+    }
+
     /// Simulated output tokens per second — the paper's OTPS.
     pub fn otps(&self) -> f64 {
         if self.sim_seconds <= 0.0 {
@@ -172,6 +204,12 @@ impl ServeMetrics {
     pub fn to_json(&self) -> Json {
         let mut m: BTreeMap<String, Json> = BTreeMap::new();
         m.insert("tokens_out".into(), Json::num(self.tokens_out as f64));
+        m.insert("tokens_prompt".into(), Json::num(self.tokens_prompt as f64));
+        m.insert("prefill_forwards".into(), Json::num(self.prefill_forwards as f64));
+        m.insert(
+            "prefill_tokens_per_step".into(),
+            Json::num(self.prefill_tokens_per_step.mean()),
+        );
         m.insert("requests_done".into(), Json::num(self.requests_done as f64));
         m.insert("sim_seconds".into(), Json::num(self.sim_seconds));
         m.insert("wall_seconds".into(), Json::num(self.wall_seconds));
@@ -237,6 +275,26 @@ mod tests {
         assert_eq!(m.otps(), 16.0);
         assert_eq!(m.mean_activated(), 25.0);
         assert_eq!(m.steps, 2);
+    }
+
+    #[test]
+    fn prefill_counters_stay_out_of_otps() {
+        // The throughput-inflation regression: prompt tokens must never
+        // leak into tokens_out, even though prefill forwards advance the
+        // sim clock and the activation summaries.
+        let mut m = ServeMetrics::new(2);
+        m.record_prefill(&[4, 6], 0.5, 8);
+        m.record_step(&[2, 2], 0.5, 3);
+        assert_eq!(m.tokens_out, 3);
+        assert_eq!(m.tokens_prompt, 8);
+        assert_eq!(m.prefill_forwards, 1);
+        assert_eq!(m.steps, 1, "prefill forwards are not decode steps");
+        assert_eq!(m.otps(), 3.0, "OTPS counts generated tokens only");
+        assert_eq!(m.activated[0].n, 2, "both forwards feed activation stats");
+        let j = m.to_json();
+        assert!(j.get("tokens_prompt").is_some());
+        assert!(j.get("prefill_forwards").is_some());
+        assert!(j.get("prefill_tokens_per_step").is_some());
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! The target-model decode walker: one token per live row per step,
-//! embed → L × (attn_router → **expert selection** → moe_layer) → lm_head.
+//! The target-model walker: one token per live row per decode step
+//! (embed → L × (attn_router → **expert selection** → moe_layer) → lm_head)
+//! plus the chunked-prefill path ([`MoeModel::prefill_chunk`]) that advances
+//! ONE row by up to `max_batch` prompt positions per artifact invocation.
 //!
 //! This is where the three layers meet: the attn_router artifact produces
 //! router logits/probs/colsum for the padded batch; the [`crate::selection`]
@@ -39,6 +41,32 @@ pub struct StepInput<'a> {
     pub mode: RoutingMode<'a>,
     /// Record per-layer probs matrices (speculative pass 1).
     pub collect_probs: bool,
+}
+
+/// Inputs for one chunked-prefill invocation: up to
+/// [`MoeModel::prefill_capacity`] prompt tokens of ONE row.
+pub struct PrefillInput<'a> {
+    /// Batch row (slot) the chunk belongs to.
+    pub row: usize,
+    /// Row position before the chunk (next KV slot to write).
+    pub start_pos: usize,
+    /// Chunk tokens, oldest first (`1..=prefill_capacity()` of them).
+    pub tokens: &'a [u32],
+    /// Policy routing each chunk position (applied per position, so
+    /// chunking is an execution optimisation, not a routing change — see
+    /// `rust/tests/prefill_equivalence.rs`).
+    pub policy: &'a dyn SelectionPolicy,
+}
+
+/// Outputs of one chunked-prefill invocation.
+pub struct PrefillOutput {
+    /// LM-head logits of the last chunk position `[V]` (predicts the token
+    /// after the chunk — the first generated token when the prompt ends).
+    pub last_logits: Vec<f32>,
+    /// Per-layer |union of experts routed across the chunk positions|.
+    pub activated: Vec<usize>,
+    /// Per-layer routed unions (EP / cost accounting).
+    pub selected: Vec<ExpertSet>,
 }
 
 /// Outputs of one decode step.
@@ -92,6 +120,44 @@ impl MoeModel {
 
     pub fn max_batch(&self) -> usize {
         self.dims().max_batch
+    }
+
+    /// Whether the loaded artifacts ship the chunked-prefill program.
+    pub fn has_prefill(&self) -> bool {
+        self.engine.manifest().has_prefill()
+    }
+
+    /// Chunk positions one `prefill_chunk` invocation advances (compiled
+    /// at `max_batch` so the chunk borrows the batch-shaped programs).
+    pub fn prefill_capacity(&self) -> usize {
+        self.engine.manifest().prefill_chunk_capacity()
+    }
+
+    /// Order-stable FNV-1a digest over every KV-cache byte (all layers,
+    /// K then V per layer). The prefill equivalence suite uses this to
+    /// assert chunked and one-token prefill leave identical cache state.
+    pub fn kv_digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        for t in self.k_cache.iter().chain(self.v_cache.iter()) {
+            if let Ok(data) = t.as_f32() {
+                h.update(data);
+            }
+        }
+        h.finish()
+    }
+
+    /// Digest of one row's K/V slabs across layers (ignores the garbage
+    /// other slots accumulate from padded-batch steps).
+    pub fn kv_row_digest(&self, row: usize) -> u64 {
+        let m = self.dims();
+        let slab = m.n_heads * m.max_seq * m.head_dim;
+        let mut h = Fnv::new();
+        for t in self.k_cache.iter().chain(self.v_cache.iter()) {
+            if let Ok(data) = t.as_f32() {
+                h.update(&data[row * slab..(row + 1) * slab]);
+            }
+        }
+        h.finish()
     }
 
     /// Forget all cache state (fresh serving run).
@@ -220,5 +286,178 @@ impl MoeModel {
         let logits = ho.remove(0);
 
         Ok(StepOutput { logits, activated, selected, scores: scores_acc })
+    }
+
+    /// Advance one row by `tokens.len()` prompt positions in a single
+    /// artifact invocation per layer: embed the chunk as batch rows, run the
+    /// `prefill_attn_router` artifact (causal attention within the chunk,
+    /// K/V written into the row's persistent cache), route every chunk
+    /// position through `policy` on the `[T × N]` score matrices, and feed
+    /// the refined gates to the shared `moe_layer`/`lm_head` programs.
+    ///
+    /// Routing is applied **per position** (rows = one chunk position at a
+    /// time, batch-utility hint = that position's probs row), so the CHUNK
+    /// ROW's prefill routing — and a solo request's full output and cache
+    /// state — is byte-identical to the one-token-per-step walk under every
+    /// policy; chunking buys TTFT, not different prefill routing. (Rows
+    /// decoding concurrently in the same step are routed by the serve loop
+    /// without the chunk row in their batch, which batch-coupled policies
+    /// observe — as they do any change in batch composition.) Batch-level
+    /// sharing across a chunk is a quality/cost trade documented as an open
+    /// item in ROADMAP.md.
+    pub fn prefill_chunk(&mut self, input: &PrefillInput) -> Result<PrefillOutput> {
+        let m = self.dims().clone();
+        let b = m.max_batch;
+        let t = input.tokens.len();
+        if !self.has_prefill() {
+            bail!(
+                "preset '{}' artifacts lack the prefill program — rebuild with `make artifacts`",
+                m.name
+            );
+        }
+        if t == 0 || t > b {
+            bail!("chunk length {t} outside 1..={b}");
+        }
+        if input.row >= b {
+            bail!("chunk row {} out of range (max_batch={b})", input.row);
+        }
+        // The artifact slices a fixed [start, start+capacity) cache window;
+        // XLA dynamic_slice would CLAMP an overhanging start and silently
+        // shift the write window, so refuse instead (callers fall back to
+        // one-token prefill near the end of the cache).
+        if input.start_pos + b > m.max_seq {
+            bail!(
+                "chunk window [{}, {}) exceeds compiled max_seq={}",
+                input.start_pos,
+                input.start_pos + b,
+                m.max_seq
+            );
+        }
+
+        let mut tok = vec![0i32; b];
+        for (dst, &src) in tok.iter_mut().zip(input.tokens) {
+            *dst = src as i32;
+        }
+        let mut valid = vec![0.0f32; b];
+        valid[..t].fill(1.0);
+        let tokens = HostTensor::i32(vec![b], tok);
+        let start = HostTensor::i32(vec![1], vec![input.start_pos as i32]);
+        let row_t = HostTensor::i32(vec![1], vec![input.row as i32]);
+        let valid_t = HostTensor::f32(vec![b], valid);
+
+        let mut out = self.engine.execute("embed", &[Arg::Host(&tokens), Arg::Weight("emb")])?;
+        let mut hidden = out.remove(0);
+
+        let mut activated = Vec::with_capacity(m.n_layers);
+        let mut selected = Vec::with_capacity(m.n_layers);
+        let shared_flag =
+            HostTensor::f32(vec![1], vec![if m.n_shared > 0 { 1.0 } else { 0.0 }]);
+
+        for l in 0..m.n_layers {
+            let p = |s: &str| format!("layer{l}.{s}");
+            let mut outs = self.engine.execute(
+                "prefill_attn_router",
+                &[
+                    Arg::Host(&hidden),
+                    Arg::Host(&start),
+                    Arg::Host(&valid_t),
+                    Arg::Host(&row_t),
+                    Arg::Host(&self.k_cache[l]),
+                    Arg::Host(&self.v_cache[l]),
+                    Arg::Weight(&p("ln1")),
+                    Arg::Weight(&p("wq")),
+                    Arg::Weight(&p("wk")),
+                    Arg::Weight(&p("wv")),
+                    Arg::Weight(&p("wo")),
+                    Arg::Weight(&p("ln2")),
+                    Arg::Weight(&p("wg")),
+                ],
+            )?;
+            // outputs: hidden2, logits, probs, colsum, k_cache, v_cache
+            let v_new = outs.pop().unwrap();
+            let k_new = outs.pop().unwrap();
+            let _colsum = outs.pop().unwrap(); // chunk-wide; per-position hints below
+            let probs_t = outs.pop().unwrap();
+            let logits_t = outs.pop().unwrap();
+            let hidden2 = outs.pop().unwrap();
+            self.k_cache[l] = k_new;
+            self.v_cache[l] = v_new;
+
+            let logits_m =
+                ScoreMatrix::from_flat(b, m.n_experts, logits_t.as_f32()?.to_vec());
+            let probs_m =
+                ScoreMatrix::from_flat(b, m.n_experts, probs_t.as_f32()?.to_vec());
+
+            let mut gates = vec![0.0f32; b * m.n_experts];
+            let mut union = ExpertSet::empty(m.n_experts);
+            for i in 0..t {
+                let rows_i = [i];
+                let groups_i = [vec![i]];
+                let ctx = SelectionContext {
+                    probs: &probs_m,
+                    logits: &logits_m,
+                    rows: &rows_i,
+                    requests: &groups_i,
+                    colsum_hint: Some(probs_m.row(i)),
+                    placement: self.placement.as_ref(),
+                    top_k: m.top_k,
+                };
+                let routing = input.policy.route(&ctx);
+                let lo = i * m.n_experts;
+                gates[lo..lo + m.n_experts]
+                    .copy_from_slice(&routing.gates.flat()[lo..lo + m.n_experts]);
+                union.union_with(&routing.activated);
+            }
+            activated.push(union.len());
+            selected.push(union);
+
+            let gates_t = HostTensor::f32(vec![b, m.n_experts], gates);
+            let mut mo = self.engine.execute(
+                "moe_layer",
+                &[
+                    Arg::Host(&hidden2),
+                    Arg::Host(&gates_t),
+                    Arg::Weight(&p("ln2")),
+                    Arg::Weight(&p("w1")),
+                    Arg::Weight(&p("w2")),
+                    Arg::Weight(&p("ws1")),
+                    Arg::Weight(&p("ws2")),
+                    Arg::Host(&shared_flag),
+                ],
+            )?;
+            hidden = mo.remove(0);
+        }
+
+        let mut ho = self.engine.execute(
+            "lm_head",
+            &[Arg::Host(&hidden), Arg::Weight("lnf"), Arg::Weight("unembed")],
+        )?;
+        let logits = ho.remove(0);
+        let lf = logits.as_f32()?;
+        let last_logits = lf[(t - 1) * m.vocab..t * m.vocab].to_vec();
+
+        Ok(PrefillOutput { last_logits, activated, selected })
+    }
+}
+
+/// Minimal FNV-1a over f32 bit patterns (cache digests).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn update(&mut self, data: &[f32]) {
+        for v in data {
+            for byte in v.to_bits().to_le_bytes() {
+                self.0 ^= byte as u64;
+                self.0 = self.0.wrapping_mul(0x100000001b3);
+            }
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
     }
 }

@@ -204,6 +204,20 @@ impl Manifest {
     pub fn has_draft(&self) -> bool {
         self.model.draft_layers > 0 && self.programs.contains_key("draft_step")
     }
+
+    /// Whether the preset ships the chunked-prefill artifact. Optional so
+    /// artifacts built before PR 2 keep loading (the serve loop falls back
+    /// to one-token prefill and refuses `prefill_chunk > 1`).
+    pub fn has_prefill(&self) -> bool {
+        self.programs.contains_key("prefill_attn_router")
+    }
+
+    /// Chunk positions one `prefill_attn_router` invocation advances. The
+    /// chunk is compiled at `max_batch` positions so it can borrow the
+    /// batch-shaped embed/moe_layer/lm_head programs unchanged.
+    pub fn prefill_chunk_capacity(&self) -> usize {
+        self.model.max_batch
+    }
 }
 
 /// Resolve the artifacts root: `$XSHARE_ARTIFACTS` or `./artifacts`.

@@ -1,0 +1,266 @@
+//! Chunked-prefill equivalence suite: the chunk path is an *execution*
+//! optimisation, never a model change. For random prompts, policies and
+//! chunk sizes, a request served with `prefill_chunk = T` must produce
+//! byte-identical generated tokens — and leave byte-identical KV-cache and
+//! `pos` state — compared to the one-token-per-step walk (`prefill_chunk =
+//! 1`, the pre-PR-2 path). The substrate guarantee (same kernel, same
+//! per-position bits) is proven in `python/tests/test_model.py::
+//! test_prefill_chunk_matches_one_token_walk_bitwise`; this suite proves it
+//! survives the whole serving stack: selection policies, the batcher, cost
+//! charging and continuous admission.
+
+use std::collections::BTreeMap;
+
+use xshare::config::ServeConfig;
+use xshare::coordinator::{Request, Scheduler, ServeLoop};
+use xshare::model::MoeModel;
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+use xshare::selection::PolicyKind;
+use xshare::util::check::forall;
+
+fn tiny_model() -> MoeModel {
+    let manifest = Manifest::load(&artifacts_root().join("tiny"))
+        .expect("tiny artifacts missing — run `make artifacts`");
+    assert!(
+        manifest.has_prefill(),
+        "tiny artifacts predate the prefill program — re-run `make artifacts`"
+    );
+    MoeModel::new(Engine::load(manifest).unwrap()).unwrap()
+}
+
+fn cfg(policy: &str, chunk: usize, max_new: usize) -> ServeConfig {
+    ServeConfig {
+        preset: "tiny".into(),
+        policy: PolicyKind::parse(policy).expect("policy"),
+        batch_size: 4,
+        prefill_chunk: chunk,
+        max_new_tokens: max_new,
+        ..Default::default()
+    }
+}
+
+fn prompt_of(len: usize, seed: u64, vocab: u64) -> Vec<u32> {
+    (0..len as u64).map(|i| ((seed.wrapping_mul(31) + i * 7 + 3) % vocab) as u32).collect()
+}
+
+/// Serve one request solo and return (generated tokens, served row's final
+/// KV digest).
+fn run_solo(model: &mut MoeModel, c: ServeConfig, req: Request) -> (Vec<u32>, u64) {
+    let report =
+        Scheduler::new(model, c).expect("scheduler").run(vec![req]).expect("run");
+    let tokens = report.outputs.into_values().next().expect("one output");
+    (tokens, model.kv_row_digest(0))
+}
+
+#[test]
+fn chunked_prefill_byte_identical_across_policies_and_chunk_sizes() {
+    // THE equivalence property. Policies cover every select/route shape in
+    // the tree (warm-up+greedy, hierarchical, token-level baselines);
+    // chunk sizes cover sub-chunk, capacity-crossing (tiny capacity is 4,
+    // so 8 needs two invocations per step) and whole-prompt chunks.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let policies = ["vanilla", "batch:6:1", "spec:1:0:2", "lynx:2", "skip:0.3", "opp:1"];
+    forall(
+        29,
+        8,
+        |rng| {
+            let policy = policies[rng.below(policies.len())];
+            let prompt_len = 2 + rng.below(9); // 2..=10
+            let max_new = 2 + rng.below(4); // 2..=5
+            let seed = rng.below(1000) as u64;
+            (policy, prompt_len, max_new, seed)
+        },
+        |&(policy, prompt_len, max_new, seed)| {
+            let req = || Request::new(1, prompt_of(prompt_len, seed, vocab), max_new);
+            let (base_tokens, base_kv) =
+                run_solo(&mut model, cfg(policy, 1, max_new), req());
+            for chunk in [1usize, 3, 8, prompt_len] {
+                let (tokens, kv) =
+                    run_solo(&mut model, cfg(policy, chunk, max_new), req());
+                if tokens != base_tokens {
+                    return Err(format!(
+                        "[{policy} chunk={chunk}] tokens diverged: {tokens:?} vs \
+                         {base_tokens:?}"
+                    ));
+                }
+                if kv != base_kv {
+                    return Err(format!(
+                        "[{policy} chunk={chunk}] final KV digest diverged"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn chunked_prefill_pos_state_and_step_count() {
+    // The `pos` half of the state equivalence, plus the whole point of the
+    // feature: a 7-token prompt takes ceil(7/3)=3 chunked steps to its
+    // first committed token instead of 7 — same final pos either way.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let prompt = prompt_of(7, 11, vocab);
+
+    let mut first_commit = BTreeMap::new();
+    for chunk in [1usize, 3] {
+        let mut core = ServeLoop::new(&mut model, cfg("vanilla", chunk, 4)).unwrap();
+        core.submit(Request::new(1, prompt.clone(), 4));
+        let mut steps = 0;
+        loop {
+            let o = core.step().unwrap();
+            steps += 1;
+            if o.committed > 0 {
+                break;
+            }
+            assert_eq!(o.prefill_tokens, chunk.min(7) as u64);
+        }
+        assert_eq!(
+            core.slot_pos(0),
+            Some(prompt.len()),
+            "pos after prompt consumption must equal prompt length"
+        );
+        first_commit.insert(chunk, steps);
+    }
+    assert_eq!(first_commit[&1], 7, "one-token walk: one step per prompt token");
+    assert_eq!(first_commit[&3], 3, "chunk=3 reaches the first token in ceil(7/3)");
+}
+
+#[test]
+fn staggered_admission_unperturbed_by_chunking() {
+    // Continuous-batching order proof: requests joining a chunking loop
+    // mid-flight must get exactly the tokens the one-token loop (or a
+    // submit-all-upfront run) would give them. Vanilla routing, where rows
+    // are independent, is the regime where byte-equality must hold.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    forall(
+        31,
+        6,
+        |rng| {
+            let n = 3 + rng.below(3); // 3..=5 requests
+            let lens: Vec<usize> = (0..n).map(|_| 2 + rng.below(8)).collect();
+            let offsets: Vec<usize> = (0..n).map(|_| rng.below(5)).collect();
+            let max_new = 2 + rng.below(3);
+            let seed = rng.below(1000) as u64;
+            (lens, offsets, max_new, seed)
+        },
+        |&(ref lens, ref offsets, max_new, seed)| {
+            let requests: Vec<Request> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &len)| {
+                    Request::new(i as u64, prompt_of(len, seed + i as u64, vocab), max_new)
+                })
+                .collect();
+
+            // reference: upfront, one-token prefill
+            let upfront = Scheduler::new(&mut model, cfg("vanilla", 1, max_new))
+                .map_err(|e| format!("{e:#}"))?
+                .run(requests.clone())
+                .map_err(|e| format!("{e:#}"))?;
+
+            // staggered submission into a chunking loop
+            let mut core = ServeLoop::new(&mut model, cfg("vanilla", 3, max_new))
+                .map_err(|e| format!("{e:#}"))?;
+            let mut pending: BTreeMap<usize, Vec<Request>> = BTreeMap::new();
+            for (r, &off) in requests.iter().zip(offsets) {
+                pending.entry(off).or_default().push(r.clone());
+            }
+            let mut step_no = 0usize;
+            loop {
+                if let Some(batch) = pending.remove(&step_no) {
+                    for r in batch {
+                        core.submit(r);
+                    }
+                }
+                if !core.has_work() {
+                    if pending.is_empty() {
+                        break;
+                    }
+                    step_no += 1;
+                    continue;
+                }
+                core.step().map_err(|e| format!("{e:#}"))?;
+                step_no += 1;
+            }
+            let staggered = core.report();
+
+            if upfront.outputs != staggered.outputs {
+                return Err(format!(
+                    "chunked staggered outputs diverged: {:?} vs {:?}",
+                    staggered.outputs, upfront.outputs
+                ));
+            }
+            if staggered.metrics.ttft.n != lens.len() as u64 {
+                return Err(format!(
+                    "ttft recorded {} times for {} requests",
+                    staggered.metrics.ttft.n,
+                    lens.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prompt_and_generated_token_counters_split() {
+    // Throughput-inflation regression (PR 2 bugfix): prompt tokens land in
+    // tokens_prompt, generated tokens in tokens_out, and OTPS only sees
+    // the latter — a 9-token prompt must not look like throughput.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    for chunk in [1usize, 4] {
+        let report = Scheduler::new(&mut model, cfg("vanilla", chunk, 3))
+            .unwrap()
+            .run(vec![Request::new(1, prompt_of(9, 5, vocab), 3)])
+            .unwrap();
+        assert_eq!(report.metrics.tokens_prompt, 9, "chunk={chunk}");
+        assert_eq!(report.metrics.tokens_out, 3, "chunk={chunk}");
+        if chunk == 4 {
+            // chunks of 4 and 4; the single-token tail rides the shared
+            // decode forward instead of paying a dedicated chunk forward
+            assert_eq!(report.metrics.prefill_forwards, 2);
+            assert!(report.metrics.prefill_tokens_per_step.mean() > 1.0);
+        } else {
+            assert_eq!(report.metrics.prefill_forwards, 0);
+        }
+        let j = report.metrics.to_json();
+        assert!(j.get("tokens_prompt").is_some());
+    }
+}
+
+#[test]
+fn chunked_step_outcome_reports_prefill_tokens() {
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let mut core = ServeLoop::new(&mut model, cfg("vanilla", 4, 2)).unwrap();
+    core.submit(Request::new(1, prompt_of(6, 2, vocab), 2));
+    let o1 = core.step().unwrap();
+    assert_eq!((o1.prefill_rows, o1.decode_rows), (1, 0));
+    assert_eq!(o1.prefill_tokens, 4, "first chunk consumes 4 prompt tokens");
+    assert_eq!(o1.committed, 0, "no generated token mid-prompt");
+    let o2 = core.step().unwrap();
+    assert_eq!(o2.prefill_tokens, 2, "final partial chunk");
+    assert_eq!(o2.committed, 1, "prompt exhaustion commits the first token");
+    let o3 = core.step().unwrap();
+    assert_eq!(o3.prefill_tokens, 0);
+    assert_eq!(o3.committed, 1);
+    assert_eq!(o3.finished.len(), 1);
+}
+
+#[test]
+fn serve_loop_rejects_chunks_beyond_compiled_seq_len() {
+    let mut model = tiny_model();
+    let max_seq = model.dims().max_seq;
+    let err = match ServeLoop::new(&mut model, cfg("vanilla", max_seq + 1, 2)) {
+        Ok(_) => panic!("chunk beyond max_seq must be rejected"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("sequence length"));
+    // at the boundary it is accepted
+    assert!(ServeLoop::new(&mut model, cfg("vanilla", max_seq, 2)).is_ok());
+}

@@ -88,6 +88,16 @@ fn selftest_lm_head() {
 }
 
 #[test]
+fn selftest_prefill_attn_router() {
+    let engine = load_tiny();
+    assert!(
+        engine.manifest().has_prefill(),
+        "tiny artifacts predate the prefill program — re-run `make artifacts`"
+    );
+    replay(&engine, "prefill_attn_router");
+}
+
+#[test]
 fn selftest_draft_step() {
     let engine = load_tiny();
     if engine.manifest().has_draft() {

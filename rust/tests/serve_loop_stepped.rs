@@ -150,6 +150,70 @@ fn late_joiner_does_not_perturb_vanilla_outputs() {
 }
 
 #[test]
+fn spec_cycles_gated_on_chunk_prefill_rows() {
+    // The mixed-phase rule under chunking: speculative verify cycles need
+    // an all-decode batch, so they stay disabled while ANY row is mid-
+    // chunk-prefill and resume the step after the last prefill row flips
+    // to decode — the `prefill_rows == 0` gate, now driven by chunk
+    // advances instead of one-token advances.
+    let mut model = tiny_model();
+    let cfg = ServeConfig { spec_len: 2, prefill_chunk: 2, ..tiny_cfg() };
+    let mut core = ServeLoop::new(&mut model, cfg).unwrap();
+
+    // A: single-token prompt → decodes from step 1 on.
+    core.submit(Request::new(1, vec![3], 8));
+    let o1 = core.step().unwrap();
+    assert!(!o1.speculative, "prefill row present");
+    let o2 = core.step().unwrap();
+    assert!(o2.speculative, "all-decode batch runs the verify cycle");
+
+    // B arrives with a 5-token prompt: three chunked steps (2+2+1); the
+    // verify cycle must stay off for ALL of them even though A decodes.
+    core.submit(Request::new(2, vec![4, 5, 6, 7, 8], 4));
+    for (expect_prefill, expect_tokens) in [(1, 2), (1, 2), (1, 1)] {
+        let o = core.step().unwrap();
+        assert_eq!(o.prefill_rows, expect_prefill);
+        assert_eq!(o.prefill_tokens, expect_tokens, "chunk geometry");
+        assert!(!o.speculative, "spec must pause while a row chunk-prefills");
+    }
+    // B flipped to decode at the end of its last chunk: the very next step
+    // resumes speculation for the whole batch.
+    let o = core.step().unwrap();
+    assert_eq!((o.prefill_rows, o.decode_rows), (0, 2));
+    assert!(o.speculative, "spec resumes after the last prefill row flips");
+
+    core.drain().unwrap();
+    let report = core.report();
+    assert_eq!(report.outputs[&1].len(), 8);
+    assert_eq!(report.outputs[&2].len(), 4);
+}
+
+#[test]
+fn prompt_tokens_never_inflate_throughput() {
+    // Regression for the committed-vs-prompt counter split on the legacy
+    // one-token path: a 12-token prompt and a 2-token prompt with the same
+    // generation budget must report the same tokens_out; the prompt walk
+    // shows up in tokens_prompt (and in sim time), not in throughput.
+    let mut model = tiny_model();
+    let mut outs = Vec::new();
+    for prompt_len in [2usize, 12] {
+        let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| 3 + i % 40).collect();
+        let report = Scheduler::new(&mut model, tiny_cfg())
+            .unwrap()
+            .run(vec![Request::new(1, prompt, 4)])
+            .unwrap();
+        assert_eq!(report.metrics.tokens_out, 4, "prompt_len={prompt_len}");
+        assert_eq!(report.metrics.tokens_prompt, prompt_len as u64);
+        assert_eq!(report.metrics.prefill_forwards, 0, "legacy path uses no chunks");
+        outs.push((report.metrics.tokens_out, report.metrics.sim_seconds));
+    }
+    let (tok_short, sim_short) = outs[0];
+    let (tok_long, sim_long) = outs[1];
+    assert_eq!(tok_short, tok_long);
+    assert!(sim_long > sim_short, "longer prompts still cost sim time");
+}
+
+#[test]
 fn staggered_submission_matches_upfront_property() {
     let mut model = tiny_model();
     let cfg = tiny_cfg();
