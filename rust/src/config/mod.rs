@@ -11,6 +11,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::admission::AdmissionKind;
 use crate::ep::PlacementKind;
 use crate::selection::PolicyKind;
 use crate::util::cli::Args;
@@ -41,6 +42,12 @@ pub struct ServeConfig {
     pub prefill_chunk: usize,
     /// Hardware cost profile for OTPS accounting.
     pub hardware: String,
+    /// Admission policy: which queued request takes the next free batch
+    /// slot (fifo | priority | edf | footprint).
+    pub admission: AdmissionKind,
+    /// Admission-queue depth bound; submits beyond it are rejected with a
+    /// typed `QueueFull` error. 0 = unbounded (legacy-compatible default).
+    pub max_queue: usize,
     /// Expert-parallel topology (None = single GPU).
     pub ep: Option<EpConfig>,
     /// Server bind address.
@@ -60,6 +67,8 @@ impl Default for ServeConfig {
             spec_len: 0,
             prefill_chunk: 1,
             hardware: "h100".into(),
+            admission: AdmissionKind::Fifo,
+            max_queue: 0,
             ep: None,
             addr: "127.0.0.1:7431".into(),
             seed: 0,
@@ -79,7 +88,7 @@ impl ServeConfig {
 
         let known = [
             "preset", "policy", "batch_size", "spec_len", "prefill_chunk", "hardware",
-            "ep", "addr", "seed", "max_new_tokens",
+            "admission", "max_queue", "ep", "addr", "seed", "max_new_tokens",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -106,6 +115,13 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("hardware") {
             cfg.hardware = v.as_str().context("hardware")?.to_string();
+        }
+        if let Some(v) = root.get("admission") {
+            cfg.admission = AdmissionKind::parse(v.as_str().context("admission")?)
+                .map_err(anyhow::Error::msg)?;
+        }
+        if let Some(v) = root.get("max_queue") {
+            cfg.max_queue = v.as_usize().context("max_queue")?;
         }
         if let Some(v) = root.get("addr") {
             cfg.addr = v.as_str().context("addr")?.to_string();
@@ -149,6 +165,12 @@ impl ServeConfig {
         }
         if let Some(v) = args.get("hardware") {
             self.hardware = v.to_string();
+        }
+        if let Some(v) = args.get("admission") {
+            self.admission = AdmissionKind::parse(v).map_err(anyhow::Error::msg)?;
+        }
+        if args.has("max-queue") {
+            self.max_queue = args.usize_or("max-queue", self.max_queue);
         }
         if let Some(v) = args.get("addr") {
             self.addr = v.to_string();
@@ -303,6 +325,32 @@ mod tests {
         let cfg = ServeConfig::default().apply_args(&args).unwrap();
         assert_eq!(cfg.prefill_chunk, 16);
         let bad = Args::parse("--prefill-chunk 0".split_whitespace().map(String::from));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn admission_json_and_cli_roundtrip() {
+        // default: fifo + unbounded queue (byte-identical to the legacy
+        // hard-coded admission)
+        let d = ServeConfig::default();
+        assert_eq!(d.admission, AdmissionKind::Fifo);
+        assert_eq!(d.max_queue, 0);
+
+        let p = write_tmp("adm.json", r#"{"admission":"footprint","max_queue":64}"#);
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.admission, AdmissionKind::FootprintAware);
+        assert_eq!(cfg.max_queue, 64);
+
+        let bad = write_tmp("adm_bad.json", r#"{"admission":"lifo"}"#);
+        assert!(ServeConfig::from_json_file(&bad).is_err());
+
+        let args = Args::parse(
+            "--admission edf --max-queue 8".split_whitespace().map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.admission, AdmissionKind::SloEdf);
+        assert_eq!(cfg.max_queue, 8);
+        let bad = Args::parse("--admission random".split_whitespace().map(String::from));
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 

@@ -1,0 +1,689 @@
+//! Pluggable admission: which queued request gets the next free batch slot.
+//!
+//! XShare's central observation is that *batch composition* determines how
+//! much expert sharing is achievable — requests with correlated routing
+//! share experts cheaply, heterogeneous ones don't (§6). Admission is the
+//! serving system's one lever over composition, so this module pulls it out
+//! of the batcher into an [`AdmissionPolicy`] trait with four
+//! implementations:
+//!
+//! * [`AdmissionKind::Fifo`] — submission order, byte-identical to the
+//!   pre-refactor hard-coded queue (pinned by the `admission` test suite's
+//!   equivalence property).
+//! * [`AdmissionKind::Priority`] — strict priority classes
+//!   ([`Request::priority`], higher first), FIFO within a class.
+//! * [`AdmissionKind::SloEdf`] — earliest-deadline-first on each request's
+//!   TTFT deadline ([`Request::deadline_ms`], measured from submission on
+//!   the simulated clock); requests without a deadline run after all
+//!   deadlined ones, FIFO among themselves. Deadline misses are counted in
+//!   [`crate::metrics::ServeMetrics::deadline_misses`].
+//! * [`AdmissionKind::FootprintAware`] — the headline: predict each queued
+//!   request's expert footprint from router scores observed for its traffic
+//!   class ([`FootprintTracker`]), then greedily admit the candidate whose
+//!   predicted expert set overlaps most with what the running rows already
+//!   activate ([`crate::selection::admission_score`] — the paper's modular
+//!   greedy objective applied at admission time). Under expert parallelism
+//!   the overlap is MaxLoad-weighted via the placement. Ties and cold
+//!   starts (no observed scores yet) fall back to FIFO order, so the
+//!   policy degrades to FIFO rather than starving on an uninformative
+//!   tracker. A candidate never waits for a "better" batch: every free
+//!   slot is filled whenever the queue is non-empty, so footprint
+//!   admission reorders the queue but never idles capacity.
+//!
+//! The queue itself ([`AdmissionQueue`]) is bounded: `max_queue > 0`
+//! enables backpressure and [`AdmissionQueue::submit`] returns a typed
+//! [`SubmitError::QueueFull`] that the TCP worker surfaces to the client as
+//! a protocol-level error reply carrying the request id (no silently
+//! dropped jobs).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::coordinator::request::Request;
+use crate::ep::Placement;
+use crate::selection::{admission_score, ExpertSet, Footprint, ScoreMatrix};
+
+/// Which admission policy a deployment runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionKind {
+    /// Submission order (default; byte-identical to the legacy batcher).
+    Fifo,
+    /// Higher [`Request::priority`] first, FIFO within a class.
+    Priority,
+    /// Earliest TTFT deadline first; deadline-less requests go last.
+    SloEdf,
+    /// Maximal expected expert-set overlap with the running batch.
+    FootprintAware,
+}
+
+impl AdmissionKind {
+    /// Parse the `--admission` / config-file spelling.
+    pub fn parse(s: &str) -> Result<AdmissionKind, String> {
+        match s {
+            "fifo" => Ok(AdmissionKind::Fifo),
+            "priority" => Ok(AdmissionKind::Priority),
+            "edf" | "slo-edf" => Ok(AdmissionKind::SloEdf),
+            "footprint" => Ok(AdmissionKind::FootprintAware),
+            other => Err(format!(
+                "unknown admission policy '{other}' (fifo | priority | edf | footprint)"
+            )),
+        }
+    }
+
+    /// Instantiate the policy object.
+    pub fn build(&self) -> Box<dyn AdmissionPolicy> {
+        match self {
+            AdmissionKind::Fifo => Box::new(Fifo),
+            AdmissionKind::Priority => Box::new(Priority),
+            AdmissionKind::SloEdf => Box::new(SloEdf),
+            AdmissionKind::FootprintAware => Box::new(FootprintAware),
+        }
+    }
+}
+
+impl std::fmt::Display for AdmissionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionKind::Fifo => write!(f, "fifo"),
+            AdmissionKind::Priority => write!(f, "priority"),
+            AdmissionKind::SloEdf => write!(f, "edf"),
+            AdmissionKind::FootprintAware => write!(f, "footprint"),
+        }
+    }
+}
+
+/// Typed submit-time rejection. Every variant carries the request id so the
+/// wire layer can answer the exact request that was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at capacity (backpressure).
+    QueueFull { id: u64, depth: usize, max_queue: usize },
+    /// Prompt plus generation budget cannot fit the compiled KV-cache
+    /// window (positions ≥ max_seq would silently drop their cache
+    /// writes mid-decode).
+    PromptTooLong { id: u64, len: usize, budget: usize, max_seq: usize },
+    /// Empty prompts have no first token to feed.
+    EmptyPrompt { id: u64 },
+}
+
+impl SubmitError {
+    /// The rejected request's id.
+    pub fn id(&self) -> u64 {
+        match *self {
+            SubmitError::QueueFull { id, .. }
+            | SubmitError::PromptTooLong { id, .. }
+            | SubmitError::EmptyPrompt { id } => id,
+        }
+    }
+
+    /// The same error re-attributed to another request id (the TCP worker
+    /// remaps client ids onto worker-unique internal ids before submitting;
+    /// the client-facing reply wants the original).
+    pub fn with_id(self, id: u64) -> SubmitError {
+        match self {
+            SubmitError::QueueFull { depth, max_queue, .. } => {
+                SubmitError::QueueFull { id, depth, max_queue }
+            }
+            SubmitError::PromptTooLong { len, budget, max_seq, .. } => {
+                SubmitError::PromptTooLong { id, len, budget, max_seq }
+            }
+            SubmitError::EmptyPrompt { .. } => SubmitError::EmptyPrompt { id },
+        }
+    }
+
+    /// Stable machine-readable error code for the wire protocol.
+    pub fn code(&self) -> &'static str {
+        match self {
+            SubmitError::QueueFull { .. } => "queue_full",
+            SubmitError::PromptTooLong { .. } => "prompt_too_long",
+            SubmitError::EmptyPrompt { .. } => "empty_prompt",
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { id, depth, max_queue } => write!(
+                f,
+                "queue full: request {id} rejected at depth {depth} (max_queue {max_queue})"
+            ),
+            SubmitError::PromptTooLong { id, len, budget, max_seq } => write!(
+                f,
+                "prompt too long: request {id} needs {len} prompt + {budget} \
+                 generated tokens but the compiled sequence length is {max_seq}"
+            ),
+            SubmitError::EmptyPrompt { id } => {
+                write!(f, "empty prompt: request {id} has no tokens to feed")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A queued request plus the admission metadata policies order by.
+#[derive(Debug, Clone)]
+pub struct QueuedEntry {
+    pub req: Request,
+    /// Sim-clock at submission (queue-wait accounting, EDF deadlines).
+    pub submit_sim: f64,
+    /// Monotone submission counter — the FIFO tiebreak every policy
+    /// ultimately falls back to.
+    pub seq_no: u64,
+    /// Absolute TTFT deadline on the sim clock, from
+    /// [`Request::deadline_ms`].
+    pub deadline_sim: Option<f64>,
+}
+
+/// What a policy may look at when choosing the next admission.
+pub struct AdmissionContext<'a> {
+    /// Current simulated time.
+    pub now_sim: f64,
+    /// Footprint state (present only under [`AdmissionKind::FootprintAware`]).
+    pub tracker: Option<&'a FootprintTracker>,
+    /// Slots currently holding sequences (including ones admitted earlier
+    /// in the same step — greedy co-scheduling sees its own picks).
+    pub running_slots: &'a [usize],
+    /// Expert → GPU placement for EP-aware overlap weighting.
+    pub placement: Option<&'a Placement>,
+    /// The model's native top-k (predicted expert-set size).
+    pub top_k: usize,
+}
+
+/// Picks which queued entry is admitted into the next free slot.
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Index into `queue` of the entry to admit next, or `None` to admit
+    /// nothing. `queue` is always in submission order (ascending `seq_no`).
+    fn pick(&self, queue: &VecDeque<QueuedEntry>, ctx: &AdmissionContext) -> Option<usize>;
+}
+
+/// Submission order — the pre-refactor behaviour.
+pub struct Fifo;
+
+impl AdmissionPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&self, queue: &VecDeque<QueuedEntry>, _ctx: &AdmissionContext) -> Option<usize> {
+        if queue.is_empty() { None } else { Some(0) }
+    }
+}
+
+/// Strict priority classes, FIFO within a class.
+pub struct Priority;
+
+impl AdmissionPolicy for Priority {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn pick(&self, queue: &VecDeque<QueuedEntry>, _ctx: &AdmissionContext) -> Option<usize> {
+        // max priority; ties resolve to the earliest seq_no because the
+        // queue is in submission order and the comparison is strict.
+        queue
+            .iter()
+            .enumerate()
+            .max_by_key(|&(i, e)| (e.req.priority, std::cmp::Reverse(i)))
+            .map(|(i, _)| i)
+    }
+}
+
+/// Earliest-deadline-first on the absolute TTFT deadline.
+pub struct SloEdf;
+
+impl AdmissionPolicy for SloEdf {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn pick(&self, queue: &VecDeque<QueuedEntry>, _ctx: &AdmissionContext) -> Option<usize> {
+        let mut best: Option<(usize, Option<f64>)> = None;
+        for (i, e) in queue.iter().enumerate() {
+            let better = match (&best, e.deadline_sim) {
+                (None, _) => true,
+                // any deadline beats no deadline; earlier beats later;
+                // FIFO (first seen) wins ties and the all-None case.
+                (Some((_, None)), Some(_)) => true,
+                (Some((_, Some(b))), Some(d)) => d < *b,
+                _ => false,
+            };
+            if better {
+                best = Some((i, e.deadline_sim));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+/// Greedy expected-overlap co-scheduling (EP-aware when placed).
+pub struct FootprintAware;
+
+impl AdmissionPolicy for FootprintAware {
+    fn name(&self) -> &'static str {
+        "footprint"
+    }
+
+    fn pick(&self, queue: &VecDeque<QueuedEntry>, ctx: &AdmissionContext) -> Option<usize> {
+        if queue.is_empty() {
+            return None;
+        }
+        let tracker = match ctx.tracker {
+            Some(t) => t,
+            None => return Some(0),
+        };
+        let union = tracker.running_union(ctx.running_slots, ctx.top_k);
+        if union.is_empty() {
+            // Nothing running (or nothing observed yet): no overlap signal.
+            return Some(0);
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for (i, e) in queue.iter().enumerate() {
+            let predicted = match tracker.predict(&e.req) {
+                Some(fp) => fp.top_set(ctx.top_k),
+                None => continue, // unknown class: no prediction, FIFO fallback
+            };
+            let score = admission_score(&predicted, &union, ctx.placement);
+            // strictly-greater keeps the earliest seq_no on ties
+            if best.map(|(_, s)| score > s).unwrap_or(true) {
+                best = Some((i, score));
+            }
+        }
+        // If no queued entry has an informative prediction, stay FIFO.
+        Some(best.map(|(i, _)| i).unwrap_or(0))
+    }
+}
+
+/// The bounded admission queue the serve loop owns: submission order plus
+/// the policy that reorders admission out of it.
+pub struct AdmissionQueue {
+    entries: VecDeque<QueuedEntry>,
+    policy: Box<dyn AdmissionPolicy>,
+    /// 0 = unbounded (the legacy-compatible default).
+    max_queue: usize,
+    next_seq: u64,
+}
+
+impl AdmissionQueue {
+    pub fn new(kind: AdmissionKind, max_queue: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            entries: VecDeque::new(),
+            policy: kind.build(),
+            max_queue,
+            next_seq: 0,
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Ids of all queued requests, in submission order.
+    pub fn ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.entries.iter().map(|e| e.req.id)
+    }
+
+    /// Enqueue a request, applying backpressure at `max_queue`.
+    pub fn submit(&mut self, req: Request, now_sim: f64) -> Result<(), SubmitError> {
+        if self.max_queue > 0 && self.entries.len() >= self.max_queue {
+            return Err(SubmitError::QueueFull {
+                id: req.id,
+                depth: self.entries.len(),
+                max_queue: self.max_queue,
+            });
+        }
+        let deadline_sim = req.deadline_ms.map(|ms| now_sim + ms as f64 / 1e3);
+        let entry = QueuedEntry {
+            req,
+            submit_sim: now_sim,
+            seq_no: self.next_seq,
+            deadline_sim,
+        };
+        self.next_seq += 1;
+        self.entries.push_back(entry);
+        Ok(())
+    }
+
+    /// Remove and return the entry the policy wants admitted next.
+    pub fn pop_next(&mut self, ctx: &AdmissionContext) -> Option<QueuedEntry> {
+        let idx = self.policy.pick(&self.entries, ctx)?;
+        self.entries.remove(idx)
+    }
+}
+
+/// Observed-router-score state backing [`FootprintAware`] admission.
+///
+/// Two levels of aggregation, both decayed EMAs over the same full-N
+/// probability rows the selection algorithms consume:
+///
+/// * **per running slot** — seeded from the class prediction at admission,
+///   then updated from the row's actual scores (captured during chunked
+///   prefill and every decode/verify forward);
+/// * **per traffic class** — the prediction source for *queued* requests,
+///   which have no scores of their own yet. The class key is the request's
+///   `domain` tag when present (tenant / template / dataset id in
+///   production terms) and a prompt-content hash otherwise, so duplicate
+///   and templated traffic clusters even without labels.
+pub struct FootprintTracker {
+    n_experts: usize,
+    decay: f32,
+    slots: Vec<Option<(String, Footprint)>>,
+    profiles: BTreeMap<String, Footprint>,
+}
+
+/// EMA decay for footprint updates: ~10-step memory, long enough to smooth
+/// token noise, short enough to track a request drifting between phases.
+pub const FOOTPRINT_DECAY: f32 = 0.9;
+
+impl FootprintTracker {
+    pub fn new(n_experts: usize, n_slots: usize) -> FootprintTracker {
+        FootprintTracker {
+            n_experts,
+            decay: FOOTPRINT_DECAY,
+            slots: (0..n_slots).map(|_| None).collect(),
+            profiles: BTreeMap::new(),
+        }
+    }
+
+    /// The class key queued and running requests aggregate under.
+    pub fn class_key(req: &Request) -> String {
+        if !req.domain.is_empty() {
+            return req.domain.clone();
+        }
+        // Prompt-content hash: unlabeled duplicate/templated traffic still
+        // shares a class.
+        let mut h = crate::util::fnv::Fnv::new();
+        for &t in &req.prompt {
+            h.update_u32(t);
+        }
+        format!("prompt:{:016x}", h.finish())
+    }
+
+    /// Predicted footprint for a queued request (its class profile), if its
+    /// class has been observed before.
+    pub fn predict(&self, req: &Request) -> Option<&Footprint> {
+        self.profiles.get(&Self::class_key(req)).filter(|fp| fp.is_informative())
+    }
+
+    /// A request took a slot: seed the slot footprint from its class
+    /// profile so same-step co-admissions can see it immediately.
+    pub fn on_admit(&mut self, slot: usize, req: &Request) {
+        let key = Self::class_key(req);
+        let fp = self
+            .profiles
+            .get(&key)
+            .cloned()
+            .unwrap_or_else(|| Footprint::empty(self.n_experts));
+        self.slots[slot] = Some((key, fp));
+    }
+
+    /// Fold an observed probability row into the slot's footprint and its
+    /// class profile.
+    pub fn observe_row(&mut self, slot: usize, probs_row: &[f32]) {
+        debug_assert_eq!(probs_row.len(), self.n_experts);
+        if let Some((key, fp)) = self.slots[slot].as_mut() {
+            fp.observe(probs_row, self.decay);
+            self.profiles
+                .entry(key.clone())
+                .or_insert_with(|| Footprint::empty(probs_row.len()))
+                .observe(probs_row, self.decay);
+        }
+    }
+
+    /// Fold one serving step's per-layer score matrices in for `slot`
+    /// (row `row` of each matrix): layers are averaged into a single
+    /// observation so the EMA decays once per step, not once per layer.
+    pub fn observe_step(&mut self, slot: usize, row: usize, layers: &[&ScoreMatrix]) {
+        if layers.is_empty() || self.slots[slot].is_none() {
+            return;
+        }
+        let mut mean = vec![0.0f32; self.n_experts];
+        for m in layers {
+            for (acc, &p) in mean.iter_mut().zip(m.row(row)) {
+                *acc += p;
+            }
+        }
+        let inv = 1.0 / layers.len() as f32;
+        for v in mean.iter_mut() {
+            *v *= inv;
+        }
+        self.observe_row(slot, &mean);
+    }
+
+    /// The sequence in `slot` finished; its class profile persists.
+    pub fn release(&mut self, slot: usize) {
+        self.slots[slot] = None;
+    }
+
+    /// Union of the predicted expert sets of the running rows.
+    pub fn running_union(&self, slots: &[usize], top_k: usize) -> ExpertSet {
+        let mut union = ExpertSet::empty(self.n_experts);
+        for &s in slots {
+            if let Some((_, fp)) = &self.slots[s] {
+                if fp.is_informative() {
+                    union.union_with(&fp.top_set(top_k));
+                }
+            }
+        }
+        union
+    }
+
+    /// Slot footprint accessor (diagnostics / tests).
+    pub fn slot_footprint(&self, slot: usize) -> Option<&Footprint> {
+        self.slots[slot].as_ref().map(|(_, fp)| fp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2], 4)
+    }
+
+    fn ctx<'a>() -> AdmissionContext<'a> {
+        AdmissionContext {
+            now_sim: 0.0,
+            tracker: None,
+            running_slots: &[],
+            placement: None,
+            top_k: 2,
+        }
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in ["fifo", "priority", "edf", "footprint"] {
+            let k = AdmissionKind::parse(s).unwrap();
+            assert_eq!(k.to_string(), s);
+        }
+        assert_eq!(AdmissionKind::parse("slo-edf").unwrap(), AdmissionKind::SloEdf);
+        assert!(AdmissionKind::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn fifo_pops_in_submission_order() {
+        let mut q = AdmissionQueue::new(AdmissionKind::Fifo, 0);
+        for id in 0..5 {
+            q.submit(req(id), 0.0).unwrap();
+        }
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop_next(&ctx()).map(|e| e.req.id)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn queue_full_is_typed_and_carries_id() {
+        let mut q = AdmissionQueue::new(AdmissionKind::Fifo, 2);
+        q.submit(req(0), 0.0).unwrap();
+        q.submit(req(1), 0.0).unwrap();
+        let err = q.submit(req(7), 0.0).unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::QueueFull { id: 7, depth: 2, max_queue: 2 }
+        );
+        assert_eq!(err.id(), 7);
+        assert_eq!(err.code(), "queue_full");
+        // a pop frees capacity again
+        q.pop_next(&ctx()).unwrap();
+        q.submit(req(7), 0.0).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn unbounded_queue_never_rejects() {
+        let mut q = AdmissionQueue::new(AdmissionKind::Fifo, 0);
+        for id in 0..1000 {
+            q.submit(req(id), 0.0).unwrap();
+        }
+        assert_eq!(q.len(), 1000);
+    }
+
+    #[test]
+    fn priority_orders_by_class_then_fifo() {
+        let mut q = AdmissionQueue::new(AdmissionKind::Priority, 0);
+        for (id, prio) in [(0u64, 0u32), (1, 2), (2, 1), (3, 2), (4, 0)] {
+            let mut r = req(id);
+            r.priority = prio;
+            q.submit(r, 0.0).unwrap();
+        }
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop_next(&ctx()).map(|e| e.req.id)).collect();
+        // class 2 first (FIFO within: 1 then 3), then class 1, then class 0
+        assert_eq!(order, vec![1, 3, 2, 0, 4]);
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_with_deadline_less_last() {
+        let mut q = AdmissionQueue::new(AdmissionKind::SloEdf, 0);
+        for (id, dl) in [(0u64, None), (1, Some(500u64)), (2, Some(100)), (3, None), (4, Some(300))] {
+            let mut r = req(id);
+            r.deadline_ms = dl;
+            q.submit(r, 0.0).unwrap();
+        }
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop_next(&ctx()).map(|e| e.req.id)).collect();
+        assert_eq!(order, vec![2, 4, 1, 0, 3]);
+    }
+
+    #[test]
+    fn edf_deadline_is_relative_to_submission() {
+        let mut q = AdmissionQueue::new(AdmissionKind::SloEdf, 0);
+        // Same 100 ms budget, but the second request is submitted much
+        // later — its absolute deadline is later and FIFO order holds.
+        let mut a = req(0);
+        a.deadline_ms = Some(100);
+        let mut b = req(1);
+        b.deadline_ms = Some(100);
+        q.submit(a, 0.0).unwrap();
+        q.submit(b, 10.0).unwrap();
+        assert_eq!(q.pop_next(&ctx()).unwrap().req.id, 0);
+        // …and an old slack request loses to a new tight one.
+        let mut c = req(2);
+        c.deadline_ms = Some(1);
+        q.submit(c, 10.0).unwrap();
+        assert_eq!(q.pop_next(&ctx()).unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn footprint_clusters_same_class_and_cold_starts_as_fifo() {
+        let n_experts = 8;
+        let mut tracker = FootprintTracker::new(n_experts, 4);
+        let mut q = AdmissionQueue::new(AdmissionKind::FootprintAware, 0);
+        let mk = |id: u64, domain: &str| {
+            let mut r = req(id);
+            r.domain = domain.into();
+            r
+        };
+        q.submit(mk(0, "a"), 0.0).unwrap();
+        q.submit(mk(1, "b"), 0.0).unwrap();
+        q.submit(mk(2, "a"), 0.0).unwrap();
+
+        // Cold: no profiles, nothing running → FIFO front.
+        let running: Vec<usize> = vec![];
+        let c = AdmissionContext {
+            now_sim: 0.0,
+            tracker: Some(&tracker),
+            running_slots: &running,
+            placement: None,
+            top_k: 2,
+        };
+        let first = q.pop_next(&c).unwrap();
+        assert_eq!(first.req.id, 0);
+
+        // Slot 0 runs a domain-"a" row concentrated on experts {0, 1};
+        // domain "b" has been seen on {6, 7}.
+        tracker.on_admit(0, &first.req);
+        tracker.observe_row(0, &[0.5, 0.4, 0.02, 0.02, 0.02, 0.02, 0.01, 0.01]);
+        let b_probe = mk(99, "b");
+        tracker.on_admit(1, &b_probe);
+        tracker.observe_row(1, &[0.01, 0.01, 0.02, 0.02, 0.02, 0.02, 0.4, 0.5]);
+        tracker.release(1);
+
+        // With an "a" row running, the queued "a" request (seq later than
+        // the "b" one) must be picked.
+        let running = vec![0usize];
+        let c = AdmissionContext {
+            now_sim: 0.0,
+            tracker: Some(&tracker),
+            running_slots: &running,
+            placement: None,
+            top_k: 2,
+        };
+        let picked = q.pop_next(&c).unwrap();
+        assert_eq!(picked.req.id, 2, "same-class request must jump the queue");
+        assert_eq!(q.pop_next(&c).unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn tracker_class_key_hashes_unlabeled_prompts() {
+        let a = Request::new(1, vec![5, 6, 7], 4);
+        let b = Request::new(2, vec![5, 6, 7], 4);
+        let c = Request::new(3, vec![5, 6, 8], 4);
+        assert_eq!(FootprintTracker::class_key(&a), FootprintTracker::class_key(&b));
+        assert_ne!(FootprintTracker::class_key(&a), FootprintTracker::class_key(&c));
+        let mut lab = Request::new(4, vec![5, 6, 7], 4);
+        lab.domain = "gpqa".into();
+        assert_eq!(FootprintTracker::class_key(&lab), "gpqa");
+    }
+
+    #[test]
+    fn tracker_running_union_ignores_uninformative_slots() {
+        let mut tracker = FootprintTracker::new(4, 2);
+        tracker.on_admit(0, &req(0)); // never observed
+        let mut r1 = req(1);
+        r1.domain = "d".into();
+        tracker.on_admit(1, &r1);
+        tracker.observe_row(1, &[0.7, 0.2, 0.05, 0.05]);
+        let union = tracker.running_union(&[0, 1], 2);
+        assert_eq!(union.to_vec(), vec![0, 1]);
+        tracker.release(1);
+        assert!(tracker.running_union(&[0, 1], 2).is_empty());
+    }
+
+    #[test]
+    fn observe_step_averages_layers() {
+        let mut tracker = FootprintTracker::new(3, 1);
+        let mut r = req(0);
+        r.domain = "d".into();
+        tracker.on_admit(0, &r);
+        let l0 = ScoreMatrix::from_rows(&[vec![1.0, 0.0, 0.0]]);
+        let l1 = ScoreMatrix::from_rows(&[vec![0.0, 1.0, 0.0]]);
+        tracker.observe_step(0, 0, &[&l0, &l1]);
+        let fp = tracker.slot_footprint(0).unwrap();
+        assert_eq!(fp.observations(), 1, "one EMA step per serving step");
+        assert!((fp.weights()[0] - 0.5).abs() < 1e-6);
+        assert!((fp.weights()[1] - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,23 +1,27 @@
-//! Continuous batcher: a bounded pool of batch slots fed from a FIFO
-//! admission queue. Finished sequences free their slot immediately; the
-//! next queued request is admitted the same step (vLLM-style continuous
-//! batching, constrained to the padded `max_batch` of the compiled
-//! artifacts).
+//! Batch-slot pool for continuous batching: a bounded set of slots with a
+//! lowest-index-first free list. Finished sequences free their slot
+//! immediately and the serve loop places the next admitted request the same
+//! step (vLLM-style continuous batching, constrained to the padded
+//! `max_batch` of the compiled artifacts).
+//!
+//! Which queued request gets a free slot is no longer decided here: the
+//! admission queue and its pluggable policy live in
+//! [`super::admission`]. The batcher only owns slot assignment, and keeps
+//! the legacy guarantee that admission always reuses the lowest free index
+//! (slot order determines batch row order).
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::BinaryHeap;
 
 use super::request::{Request, SeqState};
 
 pub struct Batcher {
     slots: Vec<Option<SeqState>>,
-    queue: VecDeque<Request>,
-    /// Free slot indices as a min-heap: admission always reuses the lowest
+    /// Free slot indices as a min-heap: placement always reuses the lowest
     /// free index, keeping slot assignment (and thus row order) identical
-    /// to the old linear scan while making admission O(log slots) instead
-    /// of O(slots) per admitted request.
+    /// to the old linear scan while staying O(log slots) per placement.
     free: BinaryHeap<Reverse<usize>>,
-    /// Count of occupied slots (kept in sync by admit/release).
+    /// Count of occupied slots (kept in sync by place/release).
     n_running: usize,
     /// Cap on concurrently running sequences (≤ slots.len()).
     pub max_running: usize,
@@ -28,50 +32,32 @@ impl Batcher {
         assert!(max_running >= 1 && max_running <= n_slots);
         Batcher {
             slots: (0..n_slots).map(|_| None).collect(),
-            queue: VecDeque::new(),
             free: (0..n_slots).map(Reverse).collect(),
             n_running: 0,
             max_running,
         }
     }
 
-    pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
-    }
-
-    pub fn submit_all<I: IntoIterator<Item = Request>>(&mut self, reqs: I) {
-        for r in reqs {
-            self.submit(r);
-        }
-    }
-
-    pub fn queued(&self) -> usize {
-        self.queue.len()
-    }
-
     pub fn running(&self) -> usize {
         self.n_running
     }
 
-    pub fn has_work(&self) -> bool {
-        self.n_running > 0 || !self.queue.is_empty()
+    /// Whether another sequence may be placed right now.
+    pub fn has_capacity(&self) -> bool {
+        self.n_running < self.max_running
     }
 
-    /// Fill free slots from the queue; returns newly admitted slot indices.
-    pub fn admit(&mut self) -> Vec<usize> {
-        let mut admitted = Vec::new();
-        while self.n_running < self.max_running && !self.queue.is_empty() {
-            let Reverse(slot) = self
-                .free
-                .pop()
-                .expect("running < max_running <= n_slots implies a free slot");
-            debug_assert!(self.slots[slot].is_none());
-            let req = self.queue.pop_front().unwrap();
-            self.slots[slot] = Some(SeqState::new(req));
-            self.n_running += 1;
-            admitted.push(slot);
-        }
-        admitted
+    /// Bind a request to the lowest free slot; returns the slot index.
+    pub fn place(&mut self, req: Request) -> usize {
+        assert!(self.has_capacity(), "place() beyond max_running");
+        let Reverse(slot) = self
+            .free
+            .pop()
+            .expect("running < max_running <= n_slots implies a free slot");
+        debug_assert!(self.slots[slot].is_none());
+        self.slots[slot] = Some(SeqState::new(req));
+        self.n_running += 1;
+        slot
     }
 
     /// Live slot indices, ascending.
@@ -114,64 +100,70 @@ mod tests {
     }
 
     #[test]
-    fn admission_fills_up_to_cap() {
+    fn placement_fills_up_to_cap() {
         let mut b = Batcher::new(4, 2);
-        b.submit_all((0..5).map(req));
-        let admitted = b.admit();
-        assert_eq!(admitted.len(), 2);
+        assert_eq!(b.place(req(0)), 0);
+        assert_eq!(b.place(req(1)), 1);
         assert_eq!(b.running(), 2);
-        assert_eq!(b.queued(), 3);
+        assert!(!b.has_capacity(), "max_running reached");
     }
 
     #[test]
     fn release_frees_slot_for_next() {
         let mut b = Batcher::new(2, 2);
-        b.submit_all((0..3).map(req));
-        b.admit();
-        assert_eq!(b.running(), 2);
+        b.place(req(0));
+        b.place(req(1));
         let done = b.release(0);
         assert_eq!(done.req.id, 0);
         assert_eq!(b.running(), 1);
-        let admitted = b.admit();
-        assert_eq!(admitted, vec![0]);
+        assert!(b.has_capacity());
+        assert_eq!(b.place(req(2)), 0);
         assert_eq!(b.seq(0).req.id, 2);
     }
 
     #[test]
     fn live_slots_sorted() {
         let mut b = Batcher::new(4, 4);
-        b.submit_all((0..3).map(req));
-        b.admit();
+        for id in 0..3 {
+            b.place(req(id));
+        }
         b.release(1);
         assert_eq!(b.live_slots(), vec![0, 2]);
-        assert!(b.has_work());
         b.release(0);
         b.release(2);
-        assert!(!b.has_work());
+        assert_eq!(b.running(), 0);
     }
 
     #[test]
     #[should_panic]
     fn double_release_panics() {
         let mut b = Batcher::new(2, 2);
-        b.submit(req(0));
-        b.admit();
+        b.place(req(0));
         b.release(0);
         b.release(0);
     }
 
     #[test]
-    fn admission_reuses_lowest_free_slot() {
+    #[should_panic(expected = "beyond max_running")]
+    fn place_beyond_cap_panics() {
+        let mut b = Batcher::new(2, 1);
+        b.place(req(0));
+        b.place(req(1));
+    }
+
+    #[test]
+    fn placement_reuses_lowest_free_slot() {
         // The free-list must preserve the linear-scan policy: lowest free
         // index first (slot order determines batch row order).
         let mut b = Batcher::new(4, 4);
-        b.submit_all((0..4).map(req));
-        b.admit();
+        for id in 0..4 {
+            b.place(req(id));
+        }
         b.release(2);
         b.release(0);
         b.release(3);
-        b.submit_all((4..6).map(req));
-        assert_eq!(b.admit(), vec![0, 2]);
+        assert_eq!(b.place(req(4)), 0);
+        assert_eq!(b.place(req(5)), 2);
         assert_eq!(b.seq(0).req.id, 4);
         assert_eq!(b.seq(2).req.id, 5);
     }
@@ -179,10 +171,15 @@ mod tests {
     #[test]
     fn running_count_stays_consistent_under_churn() {
         let mut b = Batcher::new(8, 8);
-        b.submit_all((0..32).map(req));
+        let mut next_id = 0u64;
         let mut next_release = 0usize;
-        while b.has_work() {
-            b.admit();
+        let mut pending = 32u64;
+        while pending > 0 || b.running() > 0 {
+            while pending > 0 && b.has_capacity() {
+                b.place(req(next_id));
+                next_id += 1;
+                pending -= 1;
+            }
             assert_eq!(b.running(), b.live_slots().len(), "counter drifted from slot scan");
             if b.running() > 0 {
                 let live = b.live_slots();
@@ -192,6 +189,5 @@ mod tests {
             }
         }
         assert_eq!(b.running(), 0);
-        assert_eq!(b.queued(), 0);
     }
 }

@@ -1,9 +1,11 @@
-//! The L3 coordinator: request lifecycle, continuous batching, the stepped
-//! serving core ([`ServeLoop`]) with XShare selection on the request path,
-//! speculative decoding, and the fidelity comparator used as the accuracy
-//! substitute. [`Scheduler`] is the batch-at-a-time wrapper (submit-all +
+//! The L3 coordinator: request lifecycle, pluggable admission
+//! ([`admission`]), continuous batching, the stepped serving core
+//! ([`ServeLoop`]) with XShare selection on the request path, speculative
+//! decoding, and the fidelity comparator used as the accuracy substitute.
+//! [`Scheduler`] is the batch-at-a-time wrapper (submit-all +
 //! step-until-done) that offline runs, benches and the fidelity harness use.
 
+pub mod admission;
 pub mod batcher;
 pub mod fidelity;
 pub mod request;
@@ -11,6 +13,7 @@ pub mod scheduler;
 pub mod serve_loop;
 pub mod speculative;
 
+pub use admission::{AdmissionKind, AdmissionPolicy, AdmissionQueue, SubmitError};
 pub use batcher::Batcher;
 pub use fidelity::{compare, Fidelity};
 pub use request::{Phase, Request, SeqState};

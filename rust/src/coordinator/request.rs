@@ -8,11 +8,24 @@ pub struct Request {
     pub domain: String,
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
+    /// Admission priority class (higher = admitted sooner under the
+    /// `priority` policy; 0 = default best-effort class).
+    pub priority: u32,
+    /// TTFT deadline in milliseconds from submission, for `edf` admission
+    /// and deadline-miss accounting. `None` = no SLO.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
-        Request { id, domain: String::new(), prompt, max_new_tokens }
+        Request {
+            id,
+            domain: String::new(),
+            prompt,
+            max_new_tokens,
+            priority: 0,
+            deadline_ms: None,
+        }
     }
 }
 

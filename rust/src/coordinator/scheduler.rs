@@ -24,10 +24,14 @@ impl<'m> Scheduler<'m> {
     }
 
     /// Serve a list of requests to completion; returns metrics + outputs.
+    ///
+    /// Submission is all-upfront, so a bounded queue (`max_queue <
+    /// requests.len()`) rejects the overflow here — offline runs should
+    /// keep the default unbounded queue.
     pub fn run(&mut self, requests: Vec<Request>) -> Result<RunReport> {
         self.core.reset()?;
         for r in requests {
-            self.core.submit(r);
+            self.core.submit(r)?;
         }
         self.core.drain()?;
         Ok(self.core.report())

@@ -51,12 +51,27 @@
 //! Batch-coupled policies (batch/spec/gpu-aware) still see each step's
 //! batch composition, which chunking — exactly like admission timing —
 //! alters for concurrently decoding rows.
+//!
+//! ## Pluggable admission (PR 3)
+//!
+//! Which queued request takes a freed slot is decided by the
+//! [`super::admission`] subsystem: `step()` fills free slots one policy
+//! pick at a time (FIFO by default — byte-identical to the legacy
+//! hard-coded queue — or priority / EDF / footprint-aware co-scheduling),
+//! and [`ServeLoop::submit`] applies bounded-queue backpressure with typed
+//! [`SubmitError`]s that the TCP worker converts into protocol error
+//! replies. Under footprint admission every forward's router probabilities
+//! feed decayed per-slot and per-class footprints ([`FootprintTracker`]),
+//! which is what queued requests are scored against.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use super::admission::{
+    AdmissionContext, AdmissionKind, AdmissionQueue, FootprintTracker, SubmitError,
+};
 use super::batcher::Batcher;
 use super::request::{Phase, Request};
 use super::speculative::{effective_batch_scores, greedy_accept};
@@ -65,7 +80,9 @@ use crate::ep::{EpCostModel, Placement};
 use crate::memsim::{CostGeometry, DecodeCostModel, HardwareProfile};
 use crate::metrics::ServeMetrics;
 use crate::model::{argmax, MoeModel, PrefillInput, RoutingMode, StepInput};
-use crate::selection::{baselines::Vanilla, ExpertSet, ScoreMatrix, SelectionPolicy};
+use crate::selection::{
+    admission_score, baselines::Vanilla, ExpertSet, ScoreMatrix, SelectionPolicy,
+};
 
 /// Result of one serving run (what `drain` + `report` produce).
 #[derive(Debug)]
@@ -105,8 +122,18 @@ pub struct StepOutcome {
     pub running: usize,
 }
 
+/// Per-slot accounting carried from admission until the first generated
+/// token commits (TTFT, per-class TTFT, deadline-miss accounting).
+#[derive(Debug, Clone, Copy)]
+struct PendingTtft {
+    submit_sim: f64,
+    class: u32,
+    deadline_sim: Option<f64>,
+}
+
 /// The stepped serving core. Owns the model borrow, selection policy, cost
-/// models, batcher, draft state and metrics for one serving lifetime.
+/// models, admission queue, batcher, draft state and metrics for one
+/// serving lifetime.
 pub struct ServeLoop<'m> {
     model: &'m mut MoeModel,
     cfg: ServeConfig,
@@ -114,14 +141,17 @@ pub struct ServeLoop<'m> {
     cost: DecodeCostModel,
     ep_cost: EpCostModel,
     batcher: Batcher,
+    /// Bounded admission queue + pluggable policy (see
+    /// [`super::admission`]).
+    queue: AdmissionQueue,
+    /// Observed-router-score footprints (FootprintAware admission only).
+    tracker: Option<FootprintTracker>,
     metrics: ServeMetrics,
     outputs: BTreeMap<u64, Vec<u32>>,
     domains: BTreeMap<u64, String>,
     draft: Option<DraftState>,
-    /// request id → sim-clock at submission (queue-wait / TTFT accounting).
-    submit_sim: BTreeMap<u64, f64>,
-    /// Per-slot submission sim-time, pending until the first token commits.
-    ttft_sub: Vec<Option<f64>>,
+    /// Per-slot TTFT/deadline state, pending until the first token commits.
+    ttft_pending: Vec<Option<PendingTtft>>,
     started: Instant,
 }
 
@@ -164,28 +194,31 @@ impl<'m> ServeLoop<'m> {
             cost,
             ep_cost: EpCostModel::default(),
             batcher: Batcher::new(1, 1),
+            queue: AdmissionQueue::new(AdmissionKind::Fifo, 0),
+            tracker: None,
             metrics: ServeMetrics::new(0),
             outputs: BTreeMap::new(),
             domains: BTreeMap::new(),
             draft: None,
-            submit_sim: BTreeMap::new(),
-            ttft_sub: Vec::new(),
+            ttft_pending: Vec::new(),
             started: Instant::now(),
         };
         sl.reset()?;
         Ok(sl)
     }
 
-    /// Forget all serving state (batcher, metrics, caches, draft) and start
-    /// a fresh run. Queued-but-unserved requests are dropped.
+    /// Forget all serving state (queue, batcher, metrics, caches, draft)
+    /// and start a fresh run. Queued-but-unserved requests are dropped.
     pub fn reset(&mut self) -> Result<()> {
         let b_max = self.model.max_batch();
         self.batcher = Batcher::new(b_max, self.cfg.batch_size.min(b_max));
+        self.queue = AdmissionQueue::new(self.cfg.admission, self.cfg.max_queue);
+        self.tracker = (self.cfg.admission == AdmissionKind::FootprintAware)
+            .then(|| FootprintTracker::new(self.model.dims().n_experts, b_max));
         self.metrics = ServeMetrics::new(self.model.dims().n_layers);
         self.outputs.clear();
         self.domains.clear();
-        self.submit_sim.clear();
-        self.ttft_sub = vec![None; b_max];
+        self.ttft_pending = vec![None; b_max];
         self.model.reset();
         self.draft = if self.cfg.spec_len > 0 {
             Some(DraftState::new(
@@ -200,19 +233,53 @@ impl<'m> ServeLoop<'m> {
     }
 
     /// Enqueue a request. It joins the next `step()` if a slot is free.
-    pub fn submit(&mut self, req: Request) {
-        self.domains.insert(req.id, req.domain.clone());
-        self.submit_sim.insert(req.id, self.metrics.sim_seconds);
-        self.batcher.submit(req);
+    ///
+    /// Rejections are typed and immediate: a full bounded queue returns
+    /// [`SubmitError::QueueFull`] (backpressure — the TCP worker surfaces
+    /// it as a protocol error carrying the request id), and requests that
+    /// could never be served (empty prompt, prompt beyond the compiled
+    /// sequence length) are refused here instead of poisoning the batch
+    /// mid-step.
+    pub fn submit(&mut self, req: Request) -> std::result::Result<(), SubmitError> {
+        if req.prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt { id: req.id });
+        }
+        let max_seq = self.model.dims().max_seq;
+        // The full request must fit the KV window: positions ≥ max_seq
+        // silently drop their cache writes, so a request whose generation
+        // budget overruns the window would decode garbage mid-flight. The
+        // last generated token is committed without being fed back, so the
+        // highest position a request touches is prompt + budget − 2 —
+        // hence the `max_seq + 1` bound.
+        if req.prompt.len() + req.max_new_tokens > max_seq + 1 {
+            return Err(SubmitError::PromptTooLong {
+                id: req.id,
+                len: req.prompt.len(),
+                budget: req.max_new_tokens,
+                max_seq,
+            });
+        }
+        let id = req.id;
+        let domain = req.domain.clone();
+        match self.queue.submit(req, self.metrics.sim_seconds) {
+            Ok(()) => {
+                self.domains.insert(id, domain);
+                Ok(())
+            }
+            Err(e) => {
+                self.metrics.queue_rejected += 1;
+                Err(e)
+            }
+        }
     }
 
     /// Queued or running work remains.
     pub fn has_work(&self) -> bool {
-        self.batcher.has_work()
+        self.batcher.running() > 0 || !self.queue.is_empty()
     }
 
     pub fn queued(&self) -> usize {
-        self.batcher.queued()
+        self.queue.len()
     }
 
     pub fn running(&self) -> usize {
@@ -235,24 +302,14 @@ impl<'m> ServeLoop<'m> {
         let sim_before = self.metrics.sim_seconds;
         let was_running = self.batcher.running() > 0;
 
-        let admitted_slots = self.batcher.admit();
-        let mut admitted = Vec::with_capacity(admitted_slots.len());
-        for &s in &admitted_slots {
-            let id = self.batcher.seq(s).req.id;
-            let sub = self.submit_sim.remove(&id).unwrap_or(sim_before);
-            self.metrics.queue_wait.add(sim_before - sub);
-            if was_running {
-                self.metrics.admitted_in_flight += 1;
-            }
-            self.ttft_sub[s] = Some(sub);
-            admitted.push(id);
-        }
+        let admitted = self.admit(sim_before, was_running);
+        self.metrics.queue_depth.add(self.queue.len() as f64);
 
         let slots = self.batcher.live_slots();
         if slots.is_empty() {
             return Ok(StepOutcome {
                 admitted,
-                queued: self.batcher.queued(),
+                queued: self.queue.len(),
                 ..StepOutcome::default()
             });
         }
@@ -278,9 +335,11 @@ impl<'m> ServeLoop<'m> {
         }
 
         // Sim clock has advanced by this step's cost; TTFT counts it.
+        let now = self.metrics.sim_seconds;
         for s in first_token_slots {
-            if let Some(sub) = self.ttft_sub[s].take() {
-                self.metrics.ttft.add(self.metrics.sim_seconds - sub);
+            if let Some(p) = self.ttft_pending[s].take() {
+                let missed = p.deadline_sim.map(|d| now > d);
+                self.metrics.record_ttft(now - p.submit_sim, p.class, missed);
             }
         }
         for (id, tokens) in &finished {
@@ -298,9 +357,75 @@ impl<'m> ServeLoop<'m> {
             prefill_tokens,
             sim_seconds: self.metrics.sim_seconds - sim_before,
             speculative,
-            queued: self.batcher.queued(),
+            queued: self.queue.len(),
             running: self.batcher.running(),
         })
+    }
+
+    /// Fill free batch slots from the admission queue, one policy pick at a
+    /// time. Each pick sees the rows admitted before it in the same step
+    /// (their footprints are seeded from class profiles at admission), so
+    /// FootprintAware co-scheduling can assemble a correlated batch from a
+    /// deep queue rather than only reacting to long-running rows.
+    fn admit(&mut self, now_sim: f64, was_running: bool) -> Vec<u64> {
+        let mut admitted = Vec::new();
+        let top_k = self.model.dims().top_k;
+        while self.batcher.has_capacity() && !self.queue.is_empty() {
+            let running_slots = self.batcher.live_slots();
+            let ctx = AdmissionContext {
+                now_sim,
+                tracker: self.tracker.as_ref(),
+                running_slots: &running_slots,
+                placement: self.model.placement.as_ref(),
+                top_k,
+            };
+            let Some(entry) = self.queue.pop_next(&ctx) else { break };
+            // Footprint-overlap gauge: what the greedy objective predicted
+            // for the admitted candidate against the batch it joins. This
+            // re-scores the winner (the policy's internal scores stay
+            // internal); the cost is one overlap per ADMISSION — noise next
+            // to the model forward each step runs.
+            if let Some(tr) = &self.tracker {
+                let union = tr.running_union(&running_slots, top_k);
+                if !union.is_empty() {
+                    if let Some(fp) = tr.predict(&entry.req) {
+                        self.metrics.footprint_overlap.add(admission_score(
+                            &fp.top_set(top_k),
+                            &union,
+                            self.model.placement.as_ref(),
+                        ));
+                    }
+                }
+            }
+            let id = entry.req.id;
+            let class = entry.req.priority;
+            self.metrics.record_queue_wait(now_sim - entry.submit_sim);
+            if was_running {
+                self.metrics.admitted_in_flight += 1;
+            }
+            let slot = self.batcher.place(entry.req);
+            if let Some(tr) = &mut self.tracker {
+                tr.on_admit(slot, &self.batcher.seq(slot).req);
+            }
+            self.ttft_pending[slot] = Some(PendingTtft {
+                submit_sim: entry.submit_sim,
+                class,
+                deadline_sim: entry.deadline_sim,
+            });
+            admitted.push(id);
+        }
+        admitted
+    }
+
+    /// Release a finished sequence's slot everywhere slot state lives.
+    /// (`ttft_pending` is left alone: the first-token commit that finished
+    /// this sequence is harvested after the step body returns, and the next
+    /// admission into the slot overwrites the entry.)
+    fn release_slot(&mut self, slot: usize) -> super::request::SeqState {
+        if let Some(tr) = &mut self.tracker {
+            tr.release(slot);
+        }
+        self.batcher.release(slot)
     }
 
     /// Current KV position of the sequence occupying `slot`, if any
@@ -326,8 +451,14 @@ impl<'m> ServeLoop<'m> {
     /// a later `report()` only covers requests finishing after this call.
     pub fn discard_finished(&mut self) {
         self.outputs.clear();
-        let still_queued = &self.submit_sim;
-        self.domains.retain(|id, _| still_queued.contains_key(id));
+        // One pass to collect every id still in flight (queued or running),
+        // then a set-lookup retain — this runs every server step, so it
+        // must stay O(n log n) in the backlog, not O(n²).
+        let mut in_flight: std::collections::BTreeSet<u64> = self.queue.ids().collect();
+        for s in self.batcher.live_slots() {
+            in_flight.insert(self.batcher.seq(s).req.id);
+        }
+        self.domains.retain(|id, _| in_flight.contains(id));
     }
 
     /// Close out the run: stamp wall-clock and move the accumulated outputs
@@ -421,11 +552,20 @@ impl<'m> ServeLoop<'m> {
                     start_pos: start,
                     tokens: &plan.tokens[consumed..consumed + n],
                     policy: self.policy.as_ref(),
+                    collect_probs: self.tracker.is_some(),
                 })?;
                 // One target forward over the true chunk geometry: n tokens
                 // amortize the per-layer weight stream — the TTFT lever.
                 let sim_s = self.charge_step(&out.activated, &out.selected, n, 0);
                 self.metrics.record_prefill(&out.activated, sim_s, n as u64);
+                // Prompt-time router scores feed the row's footprint: every
+                // chunk position is one observation for the slot's EMA.
+                if let (Some(tr), Some(probs)) = (&mut self.tracker, &out.probs) {
+                    let layers: Vec<&ScoreMatrix> = probs.iter().collect();
+                    for i in 0..n {
+                        tr.observe_step(plan.slot, i, &layers);
+                    }
+                }
                 last_logits = Some(out.last_logits);
                 consumed += n;
             }
@@ -441,7 +581,7 @@ impl<'m> ServeLoop<'m> {
                 self.metrics.tokens_out += 1;
             }
             if seq.is_done() {
-                let done = self.batcher.release(plan.slot);
+                let done = self.release_slot(plan.slot);
                 finished.push((done.req.id, done.generated));
             }
         }
@@ -487,8 +627,17 @@ impl<'m> ServeLoop<'m> {
             rows: slots,
             requests: &groups,
             mode: RoutingMode::Policy(self.policy.as_ref()),
-            collect_probs: false,
+            // Footprint admission learns from every forward's router probs.
+            collect_probs: self.tracker.is_some(),
         })?;
+
+        // Decayed-EMA footprint update from this step's observed scores.
+        if let (Some(tr), Some(scores)) = (&mut self.tracker, &out.scores) {
+            let layers: Vec<&ScoreMatrix> = scores.iter().map(|(_, p)| p).collect();
+            for &s in slots {
+                tr.observe_step(s, s, &layers);
+            }
+        }
 
         // The draft model shadows the token stream so its cache stays warm
         // for upcoming speculative cycles.
@@ -521,7 +670,7 @@ impl<'m> ServeLoop<'m> {
                 first_token_slots.push(s);
             }
             if seq.is_done() {
-                let done = self.batcher.release(s);
+                let done = self.release_slot(s);
                 finished.push((done.req.id, done.generated));
             }
         }
@@ -632,6 +781,16 @@ impl<'m> ServeLoop<'m> {
             pass1_scores.push(out.scores.unwrap());
         }
 
+        // Footprints observe the committed-token sub-step (j = 0): the
+        // speculative tail is provisional and may be rejected.
+        if let Some(tr) = &mut self.tracker {
+            let layers: Vec<&ScoreMatrix> =
+                pass1_scores[0].iter().map(|(_, p)| p).collect();
+            for &s in slots {
+                tr.observe_step(s, s, &layers);
+            }
+        }
+
         // ---- per-layer selection over the effective batch ---------------
         let mut sets: Vec<ExpertSet> = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
@@ -715,7 +874,7 @@ impl<'m> ServeLoop<'m> {
             };
             self.draft.as_mut().unwrap().lag_token[s] = lag;
             if done {
-                let released = self.batcher.release(s);
+                let released = self.release_slot(s);
                 finished.push((released.req.id, released.generated));
             }
         }

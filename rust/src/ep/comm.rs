@@ -104,4 +104,67 @@ mod tests {
         assert_eq!(v.iter().sum::<usize>(), 10);
         assert_eq!(v, vec![4, 3, 3]);
     }
+
+    #[test]
+    fn latency_is_monotone_in_max_load() {
+        // Piling one more expert onto the straggler GPU must never make the
+        // layer faster: latency is non-decreasing as MaxLoad grows 1..=N/G,
+        // and strictly increasing whenever the straggler gains an expert.
+        let model = EpCostModel::default();
+        let p = Placement::new(16, 4, PlacementKind::Contiguous);
+        let toks = model.uniform_tokens(8, 4);
+        let mut prev = 0.0f64;
+        for load in 1..=4usize {
+            // GPU 0 hosts experts 0..4 under the contiguous split: select
+            // `load` of them so MaxLoad == load exactly.
+            let sel = ExpertSet::from_indices(16, &(0..load).collect::<Vec<_>>());
+            assert_eq!(p.max_load(&sel), load);
+            let t = model.layer_latency(&p, &sel, &toks);
+            assert!(
+                t > prev,
+                "MaxLoad {load}: latency {t} did not grow past {prev}"
+            );
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn equal_max_load_means_equal_straggler_time() {
+        // The straggler term depends only on the busiest GPU (with uniform
+        // tokens): 4 experts on one GPU costs the same whether the other
+        // GPUs serve 0 or 3 experts each — that is the synchronization
+        // pathology the paper's §5 balances against.
+        let model = EpCostModel::default();
+        let p = Placement::new(16, 4, PlacementKind::Contiguous);
+        let toks = model.uniform_tokens(8, 4);
+        let lone = ExpertSet::from_indices(16, &[0, 1, 2, 3]);
+        let spread = ExpertSet::from_indices(16, &[0, 1, 2, 3, 4, 5, 6, 8, 9, 10, 12, 13, 14]);
+        assert_eq!(p.max_load(&lone), 4);
+        assert_eq!(p.max_load(&spread), 4);
+        let t_lone = model.layer_latency(&p, &lone, &toks);
+        let t_spread = model.layer_latency(&p, &spread, &toks);
+        assert!((t_lone - t_spread).abs() < 1e-12, "{t_lone} vs {t_spread}");
+    }
+
+    #[test]
+    fn all_to_all_scales_linearly_with_tokens() {
+        // With an empty selection the straggler term vanishes, so doubling
+        // the token count must exactly double the (latency − sync) part —
+        // the two all-to-alls are bandwidth-bound in tokens × bytes.
+        let model = EpCostModel::default();
+        let p = Placement::new(8, 2, PlacementKind::Contiguous);
+        let empty = ExpertSet::empty(8);
+        let at = |n: usize| {
+            model.layer_latency(&p, &empty, &model.uniform_tokens(n, 2))
+                - model.sync_overhead_s
+        };
+        let t4 = at(4);
+        let t8 = at(8);
+        let t16 = at(16);
+        assert!((t8 - 2.0 * t4).abs() < 1e-15, "{t8} != 2×{t4}");
+        assert!((t16 - 4.0 * t4).abs() < 1e-15, "{t16} != 4×{t4}");
+        // and the rate matches the configured interconnect exactly
+        let expect = 2.0 * 4.0 * model.bytes_per_token / model.interconnect_bw;
+        assert!((t4 - expect).abs() < 1e-18);
+    }
 }

@@ -146,6 +146,67 @@ mod tests {
     }
 
     #[test]
+    fn prop_every_placement_is_a_partition() {
+        // Invariant for all three kinds at arbitrary (N, G): every expert
+        // is placed exactly once, `gpu_of` and `experts_of` agree, and
+        // block sizes stay balanced within one expert.
+        use crate::util::check::forall;
+        use crate::util::rng::Rng;
+        forall(
+            0xEF,
+            150,
+            |r: &mut Rng| {
+                let n_gpus = 1 + r.below(8);
+                let n_experts = n_gpus + r.below(64);
+                let kind = match r.below(3) {
+                    0 => PlacementKind::Contiguous,
+                    1 => PlacementKind::RoundRobin,
+                    _ => PlacementKind::Random(r.next_u64()),
+                };
+                (n_experts, n_gpus, kind)
+            },
+            |&(n_experts, n_gpus, kind)| {
+                let p = Placement::new(n_experts, n_gpus, kind);
+                let mut seen = vec![0usize; n_experts];
+                for g in 0..n_gpus {
+                    for &j in p.experts_on(g) {
+                        if p.gpu_of(j) != g {
+                            return Err(format!(
+                                "{kind:?}: expert {j} listed on GPU {g} but gpu_of says {}",
+                                p.gpu_of(j)
+                            ));
+                        }
+                        seen[j] += 1;
+                    }
+                }
+                if let Some(j) = seen.iter().position(|&c| c != 1) {
+                    return Err(format!(
+                        "{kind:?} N={n_experts} G={n_gpus}: expert {j} placed {} times",
+                        seen[j]
+                    ));
+                }
+                let sizes: Vec<usize> =
+                    (0..n_gpus).map(|g| p.experts_on(g).len()).collect();
+                let (lo, hi) = (
+                    *sizes.iter().min().unwrap(),
+                    *sizes.iter().max().unwrap(),
+                );
+                if hi - lo > 1 {
+                    return Err(format!(
+                        "{kind:?} N={n_experts} G={n_gpus}: unbalanced sizes {sizes:?}"
+                    ));
+                }
+                // loads() of the full set must equal the block sizes.
+                let full = crate::selection::ExpertSet::full(n_experts);
+                if p.loads(&full) != sizes {
+                    return Err("loads(full) disagrees with experts_on sizes".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn loads_and_max_load() {
         let p = Placement::new(8, 2, PlacementKind::Contiguous);
         let s = ExpertSet::from_indices(8, &[0, 1, 2, 4]);

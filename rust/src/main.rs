@@ -23,13 +23,15 @@ use xshare::util::json::Json;
 
 const USAGE: &str = "usage: xshare <serve|run|client|info> [--flags]
   serve  --preset P --policy POL [--batch N] [--spec-len L] [--prefill-chunk T]
-         [--addr A] [--config F]
+         [--admission A] [--max-queue Q] [--addr A] [--config F]
   run    --preset P --policy POL --requests N [--batch N] [--spec-len L]
-         [--prefill-chunk T] [--seed S]
+         [--prefill-chunk T] [--admission A] [--seed S]
   client --addr A --prompt 1,2,3 [--max-new-tokens N] [--id I]
+         [--priority P] [--deadline-ms D]
   info   --preset P
-policies: vanilla | batch:<m>:<k0> | spec:<k0>:<m>:<mr> | gpu:<k0>:<mg> |
-          lynx:<drop> | skip:<beta> | opp:<k'>";
+policies:  vanilla | batch:<m>:<k0> | spec:<k0>:<m>:<mr> | gpu:<k0>:<mg> |
+           lynx:<drop> | skip:<beta> | opp:<k'>
+admission: fifo | priority | edf | footprint   (--max-queue 0 = unbounded)";
 
 fn main() {
     if let Err(e) = real_main() {
@@ -67,7 +69,10 @@ fn serve(args: &Args) -> Result<()> {
     let dir = artifacts_root().join(&cfg.preset);
     eprintln!("loading preset '{}' from {dir:?} …", cfg.preset);
     let server = Server::start_from_dir(dir, cfg.clone())?;
-    println!("xshare serving preset={} policy={} on {}", cfg.preset, cfg.policy, server.addr);
+    println!(
+        "xshare serving preset={} policy={} admission={} max_queue={} on {}",
+        cfg.preset, cfg.policy, cfg.admission, cfg.max_queue, server.addr
+    );
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -133,6 +138,11 @@ fn client(args: &Args) -> Result<()> {
         args.usize_or("max-new-tokens", 16),
     );
     req.domain = args.str_or("domain", "");
+    req.priority = args.usize_or("priority", 0) as u32;
+    let deadline = args.usize_or("deadline-ms", 0);
+    if deadline > 0 {
+        req.deadline_ms = Some(deadline as u64);
+    }
     let mut client = Client::connect(&addr)?;
     let resp = client.generate(&req)?;
     println!(

@@ -129,8 +129,8 @@ mod tests {
     #[test]
     fn step_time_monotone_in_activation() {
         let m = model();
-        let lo = m.target_step(&vec![30; 36], 16).total_seconds;
-        let hi = m.target_step(&vec![100; 36], 16).total_seconds;
+        let lo = m.target_step(&[30; 36], 16).total_seconds;
+        let hi = m.target_step(&[100; 36], 16).total_seconds;
         assert!(hi > lo);
     }
 
@@ -139,7 +139,7 @@ mod tests {
         // The premise of the whole paper: at moderate batch, memory streaming
         // dominates compute during decode.
         let m = model();
-        let b = m.target_step(&vec![99; 36], 16);
+        let b = m.target_step(&[99; 36], 16);
         assert!(
             b.mem_seconds > 5.0 * b.compute_seconds,
             "mem {} vs compute {}",
@@ -154,7 +154,7 @@ mod tests {
         // (E[N_a] formula) → OTPS should land in the paper's ~60-120 band
         // (they report 75-86 baseline OTPS per request-stream at BS=16).
         let m = model();
-        let step = m.target_step(&vec![99; 36], 16).total_seconds;
+        let step = m.target_step(&[99; 36], 16).total_seconds;
         let total_otps = 16.0 / step;
         let per_stream = total_otps / 16.0;
         assert!(
@@ -175,7 +175,7 @@ mod tests {
     #[test]
     fn draft_step_much_cheaper_than_target() {
         let m = model();
-        let target = m.target_step(&vec![99; 36], 16).total_seconds;
+        let target = m.target_step(&[99; 36], 16).total_seconds;
         let draft = m.draft_step();
         assert!(draft < target / 5.0, "draft {draft} vs target {target}");
         assert!(draft > 0.0);

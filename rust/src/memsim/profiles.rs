@@ -167,8 +167,8 @@ mod tests {
     #[test]
     fn step_bytes_monotone_in_activation() {
         let g = CostGeometry::for_preset("gptoss-mini").unwrap();
-        let lo = g.step_bytes(&vec![20; 36], 16);
-        let hi = g.step_bytes(&vec![90; 36], 16);
+        let lo = g.step_bytes(&[20; 36], 16);
+        let hi = g.step_bytes(&[90; 36], 16);
         assert!(hi > lo);
         // and the delta is exactly the expert stream
         let want = (90.0 - 20.0) * 36.0 * g.expert_bytes;

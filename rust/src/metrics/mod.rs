@@ -69,6 +69,11 @@ impl LatencyHistogram {
         self.summary.mean()
     }
 
+    /// Approximate quantile in seconds (bucket boundaries are µs).
+    pub fn quantile_seconds(&self, q: f64) -> f64 {
+        self.quantile_us(q) * 1e-6
+    }
+
     /// Approximate quantile from bucket boundaries.
     pub fn quantile_us(&self, q: f64) -> f64 {
         let total = self.summary.n;
@@ -130,8 +135,26 @@ pub struct ServeMetrics {
     pub wall_step_latency: LatencyHistogram,
     /// Sim-time from submission to first committed token, per request.
     pub ttft: Summary,
+    /// TTFT tail distribution (p50/p95/p99 — means alone hide tail
+    /// latency; the per-request values also land in [`ServeMetrics::ttft`]).
+    pub ttft_hist: LatencyHistogram,
+    /// TTFT per admission priority class ([`ServeMetrics::record_ttft`]).
+    pub ttft_by_class: BTreeMap<u32, Summary>,
     /// Sim-time spent queued before slot admission, per request.
     pub queue_wait: Summary,
+    /// Queue-wait tail distribution (p50/p95/p99).
+    pub queue_wait_hist: LatencyHistogram,
+    /// Admission-queue depth sampled once per serving step.
+    pub queue_depth: Summary,
+    /// Requests rejected at submit time by queue backpressure.
+    pub queue_rejected: u64,
+    /// Requests whose first token committed after their TTFT deadline.
+    pub deadline_misses: u64,
+    /// Requests that carried a TTFT deadline (miss-rate denominator).
+    pub deadline_total: u64,
+    /// Predicted expert-set overlap of each footprint-admitted request
+    /// against the running batch (admission-time co-scheduling gauge).
+    pub footprint_overlap: Summary,
     /// Requests admitted while other sequences were already mid-flight —
     /// the continuous-batching "late joiner" count (always 0 under
     /// batch-at-a-time serving of uniform-length requests).
@@ -174,6 +197,35 @@ impl ServeMetrics {
         self.sim_seconds += sim_s;
         self.prefill_forwards += 1;
         self.tokens_prompt += prompt_tokens;
+    }
+
+    /// Record one request's first-token latency: the aggregate summary,
+    /// the tail histogram, its priority class, and — when it carried a
+    /// deadline — whether the deadline was met.
+    pub fn record_ttft(&mut self, seconds: f64, class: u32, deadline_missed: Option<bool>) {
+        self.ttft.add(seconds);
+        self.ttft_hist.record_seconds(seconds);
+        self.ttft_by_class.entry(class).or_default().add(seconds);
+        if let Some(missed) = deadline_missed {
+            self.deadline_total += 1;
+            if missed {
+                self.deadline_misses += 1;
+            }
+        }
+    }
+
+    /// Record one request's queue wait (submission → slot admission).
+    pub fn record_queue_wait(&mut self, seconds: f64) {
+        self.queue_wait.add(seconds);
+        self.queue_wait_hist.record_seconds(seconds);
+    }
+
+    /// Fraction of deadlined requests that missed.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.deadline_total == 0 {
+            return 0.0;
+        }
+        self.deadline_misses as f64 / self.deadline_total as f64
     }
 
     /// Simulated output tokens per second — the paper's OTPS.
@@ -230,7 +282,38 @@ impl ServeMetrics {
         );
         m.insert("ttft_mean_s".into(), Json::num(self.ttft.mean()));
         m.insert("ttft_max_s".into(), Json::num(self.ttft.max));
+        m.insert("ttft_p50_s".into(), Json::num(self.ttft_hist.quantile_seconds(0.5)));
+        m.insert("ttft_p95_s".into(), Json::num(self.ttft_hist.quantile_seconds(0.95)));
+        m.insert("ttft_p99_s".into(), Json::num(self.ttft_hist.quantile_seconds(0.99)));
         m.insert("queue_wait_mean_s".into(), Json::num(self.queue_wait.mean()));
+        m.insert(
+            "queue_wait_p50_s".into(),
+            Json::num(self.queue_wait_hist.quantile_seconds(0.5)),
+        );
+        m.insert(
+            "queue_wait_p95_s".into(),
+            Json::num(self.queue_wait_hist.quantile_seconds(0.95)),
+        );
+        m.insert(
+            "queue_wait_p99_s".into(),
+            Json::num(self.queue_wait_hist.quantile_seconds(0.99)),
+        );
+        m.insert("queue_depth_mean".into(), Json::num(self.queue_depth.mean()));
+        m.insert("queue_depth_max".into(), Json::num(self.queue_depth.max));
+        m.insert("queue_rejected".into(), Json::num(self.queue_rejected as f64));
+        m.insert("deadline_misses".into(), Json::num(self.deadline_misses as f64));
+        m.insert("deadline_total".into(), Json::num(self.deadline_total as f64));
+        m.insert("deadline_miss_rate".into(), Json::num(self.deadline_miss_rate()));
+        m.insert(
+            "footprint_overlap_mean".into(),
+            Json::num(self.footprint_overlap.mean()),
+        );
+        let classes: BTreeMap<String, Json> = self
+            .ttft_by_class
+            .iter()
+            .map(|(c, s)| (c.to_string(), Json::num(s.mean())))
+            .collect();
+        m.insert("ttft_mean_s_by_class".into(), Json::Obj(classes));
         m.insert(
             "admitted_in_flight".into(),
             Json::num(self.admitted_in_flight as f64),
@@ -314,6 +397,72 @@ mod tests {
         assert!(j.get("ttft_mean_s").is_some());
         assert!(j.get("queue_wait_mean_s").is_some());
         assert!(j.get("admitted_in_flight").is_some());
+    }
+
+    #[test]
+    fn ttft_and_queue_wait_report_tail_quantiles() {
+        // Means alone hide tails: 90 fast requests and one slow one must
+        // show up in p99 but barely move p50 (with n = 91 the p99 rank is
+        // 91, one past the 90 fast samples, so the straggler's bucket is
+        // the one reported).
+        let mut m = ServeMetrics::new(1);
+        for _ in 0..90 {
+            m.record_ttft(0.001, 0, None);
+            m.record_queue_wait(0.0005);
+        }
+        m.record_ttft(2.0, 0, None);
+        m.record_queue_wait(1.0);
+        let p50 = m.ttft_hist.quantile_seconds(0.5);
+        let p95 = m.ttft_hist.quantile_seconds(0.95);
+        let p99 = m.ttft_hist.quantile_seconds(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p50 < 0.01, "p50 {p50} dragged up by the tail");
+        assert!(p99 > 0.5, "p99 {p99} missed the straggler");
+        let j = m.to_json();
+        for key in [
+            "ttft_p50_s",
+            "ttft_p95_s",
+            "ttft_p99_s",
+            "queue_wait_p50_s",
+            "queue_wait_p95_s",
+            "queue_wait_p99_s",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn per_class_ttft_and_deadline_accounting() {
+        let mut m = ServeMetrics::new(1);
+        m.record_ttft(0.1, 0, None);
+        m.record_ttft(0.3, 1, Some(false));
+        m.record_ttft(0.5, 1, Some(true));
+        assert_eq!(m.ttft.n, 3);
+        assert!((m.ttft_by_class[&0].mean() - 0.1).abs() < 1e-12);
+        assert!((m.ttft_by_class[&1].mean() - 0.4).abs() < 1e-12);
+        assert_eq!(m.deadline_total, 2);
+        assert_eq!(m.deadline_misses, 1);
+        assert!((m.deadline_miss_rate() - 0.5).abs() < 1e-12);
+        let j = m.to_json();
+        assert!(j.get("ttft_mean_s_by_class").is_some());
+        assert!(j.get("deadline_miss_rate").is_some());
+    }
+
+    #[test]
+    fn queue_depth_and_rejection_gauges_dump() {
+        let mut m = ServeMetrics::new(1);
+        m.queue_depth.add(3.0);
+        m.queue_depth.add(5.0);
+        m.queue_rejected = 2;
+        m.footprint_overlap.add(2.5);
+        let j = m.to_json();
+        assert_eq!(j.get("queue_depth_mean").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(j.get("queue_depth_max").and_then(|v| v.as_f64()), Some(5.0));
+        assert_eq!(j.get("queue_rejected").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(
+            j.get("footprint_overlap_mean").and_then(|v| v.as_f64()),
+            Some(2.5)
+        );
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::selection::{
     refine, ExpertSet, Routing, ScoreMatrix, SelectionContext, SelectionPolicy,
 };
 use crate::ep::Placement;
+use crate::util::fnv::Fnv;
 
 /// How a step routes tokens to experts.
 pub enum RoutingMode<'a> {
@@ -56,6 +57,9 @@ pub struct PrefillInput<'a> {
     /// chunking is an execution optimisation, not a routing change — see
     /// `rust/tests/prefill_equivalence.rs`).
     pub policy: &'a dyn SelectionPolicy,
+    /// Return the per-layer router probability matrices (admission-time
+    /// footprint estimation captures prompt-time scores from here).
+    pub collect_probs: bool,
 }
 
 /// Outputs of one chunked-prefill invocation.
@@ -67,6 +71,9 @@ pub struct PrefillOutput {
     pub activated: Vec<usize>,
     /// Per-layer routed unions (EP / cost accounting).
     pub selected: Vec<ExpertSet>,
+    /// Per-layer router probability matrices `[max_batch × N]` (rows
+    /// `0..tokens.len()` are the chunk positions), if requested.
+    pub probs: Option<Vec<ScoreMatrix>>,
 }
 
 /// Outputs of one decode step.
@@ -140,7 +147,7 @@ impl MoeModel {
         let mut h = Fnv::new();
         for t in self.k_cache.iter().chain(self.v_cache.iter()) {
             if let Ok(data) = t.as_f32() {
-                h.update(data);
+                h.update_f32s(data);
             }
         }
         h.finish()
@@ -154,7 +161,7 @@ impl MoeModel {
         let mut h = Fnv::new();
         for t in self.k_cache.iter().chain(self.v_cache.iter()) {
             if let Ok(data) = t.as_f32() {
-                h.update(&data[row * slab..(row + 1) * slab]);
+                h.update_f32s(&data[row * slab..(row + 1) * slab]);
             }
         }
         h.finish()
@@ -350,6 +357,7 @@ impl MoeModel {
 
         let mut activated = Vec::with_capacity(m.n_layers);
         let mut selected = Vec::with_capacity(m.n_layers);
+        let mut probs_acc = if input.collect_probs { Some(Vec::new()) } else { None };
         let shared_flag =
             HostTensor::f32(vec![1], vec![if m.n_shared > 0 { 1.0 } else { 0.0 }]);
 
@@ -410,6 +418,9 @@ impl MoeModel {
             }
             activated.push(union.len());
             selected.push(union);
+            if let Some(acc) = probs_acc.as_mut() {
+                acc.push(probs_m);
+            }
 
             let gates_t = HostTensor::f32(vec![b, m.n_experts], gates);
             let mut mo = self.engine.execute(
@@ -436,28 +447,7 @@ impl MoeModel {
         let lf = logits.as_f32()?;
         let last_logits = lf[(t - 1) * m.vocab..t * m.vocab].to_vec();
 
-        Ok(PrefillOutput { last_logits, activated, selected })
+        Ok(PrefillOutput { last_logits, activated, selected, probs: probs_acc })
     }
 }
 
-/// Minimal FNV-1a over f32 bit patterns (cache digests).
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Fnv {
-        Fnv(0xcbf29ce484222325)
-    }
-
-    fn update(&mut self, data: &[f32]) {
-        for v in data {
-            for byte in v.to_bits().to_le_bytes() {
-                self.0 ^= byte as u64;
-                self.0 = self.0.wrapping_mul(0x100000001b3);
-            }
-        }
-    }
-
-    fn finish(&self) -> u64 {
-        self.0
-    }
-}

@@ -1,0 +1,167 @@
+//! Expert-footprint estimation for admission-time co-scheduling.
+//!
+//! A [`Footprint`] is a decayed running average of the full-N router
+//! probability rows a request (or a group of requests) has been observed to
+//! produce — the same `[T × N]` score matrices every selection algorithm
+//! consumes, aggregated over time instead of over a batch. The admission
+//! subsystem ([`crate::coordinator::admission`]) maintains one footprint per
+//! running batch row (updated from prompt-time scores captured during
+//! chunked prefill and from a decayed EMA during decode) and one per traffic
+//! class (domain), and scores queued candidates by the expected overlap of
+//! their predicted expert set with the experts the running batch already
+//! activates — the paper's modular greedy objective (Proposition 3.2)
+//! applied at admission time instead of selection time.
+
+use super::expert_set::ExpertSet;
+use super::scores::topk_indices;
+use crate::ep::Placement;
+
+/// Decayed mean of observed router probability rows for one request or
+/// traffic class.
+#[derive(Debug, Clone)]
+pub struct Footprint {
+    weights: Vec<f32>,
+    /// Number of `observe` calls folded in (0 = uninformative prior).
+    n_obs: u64,
+}
+
+impl Footprint {
+    /// Uninformative footprint: no observations, zero weights.
+    pub fn empty(n_experts: usize) -> Footprint {
+        Footprint { weights: vec![0.0; n_experts], n_obs: 0 }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Whether any router scores have been folded in. Policies treat an
+    /// unobserved footprint as "no prediction" and fall back to FIFO order.
+    pub fn is_informative(&self) -> bool {
+        self.n_obs > 0
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.n_obs
+    }
+
+    /// Fold one observed probability row in: `w ← decay·w + (1−decay)·p`.
+    /// The first observation seeds the weights directly so a cold footprint
+    /// does not spend its early life biased toward zero.
+    pub fn observe(&mut self, probs_row: &[f32], decay: f32) {
+        debug_assert_eq!(probs_row.len(), self.weights.len());
+        debug_assert!((0.0..1.0).contains(&decay));
+        if self.n_obs == 0 {
+            self.weights.copy_from_slice(probs_row);
+        } else {
+            for (w, &p) in self.weights.iter_mut().zip(probs_row) {
+                *w = decay * *w + (1.0 - decay) * p;
+            }
+        }
+        self.n_obs += 1;
+    }
+
+    /// The predicted expert set: the `k` heaviest experts of the footprint.
+    pub fn top_set(&self, k: usize) -> ExpertSet {
+        ExpertSet::from_indices(self.weights.len(), &topk_indices(&self.weights, k))
+    }
+
+    /// Raw affinity weights (diagnostics).
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+}
+
+/// Admission score of a candidate whose predicted expert set is `cand`
+/// against the experts the running batch is predicted to activate
+/// (`running_union`): the expected overlap, minus — under expert
+/// parallelism — the marginal MaxLoad the candidate's non-overlapping
+/// experts would add to the straggler GPU (§5.1's synchronization cost,
+/// applied at admission time).
+///
+/// Higher is better. A candidate that only re-uses already-active experts
+/// scores `|cand|`; one that drags in a full set of new experts on the
+/// hottest GPU scores lowest.
+pub fn admission_score(
+    cand: &ExpertSet,
+    running_union: &ExpertSet,
+    placement: Option<&Placement>,
+) -> f64 {
+    let overlap = cand.intersection_len(running_union) as f64;
+    match placement {
+        None => overlap,
+        Some(pl) => {
+            let before = pl.max_load(running_union) as f64;
+            let mut merged = running_union.clone();
+            merged.union_with(cand);
+            let after = pl.max_load(&merged) as f64;
+            overlap - (after - before)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ep::PlacementKind;
+
+    #[test]
+    fn empty_is_uninformative() {
+        let fp = Footprint::empty(8);
+        assert!(!fp.is_informative());
+        assert_eq!(fp.top_set(2).len(), 2, "top_set still yields k indices");
+    }
+
+    #[test]
+    fn first_observation_seeds_weights() {
+        let mut fp = Footprint::empty(4);
+        fp.observe(&[0.1, 0.5, 0.3, 0.1], 0.9);
+        assert!(fp.is_informative());
+        assert_eq!(fp.weights(), &[0.1, 0.5, 0.3, 0.1]);
+        assert_eq!(fp.top_set(1).to_vec(), vec![1]);
+    }
+
+    #[test]
+    fn ema_tracks_recent_observations() {
+        let mut fp = Footprint::empty(3);
+        fp.observe(&[1.0, 0.0, 0.0], 0.5);
+        for _ in 0..10 {
+            fp.observe(&[0.0, 1.0, 0.0], 0.5);
+        }
+        // expert 1 dominates after the distribution shifts
+        assert_eq!(fp.top_set(1).to_vec(), vec![1]);
+        assert!(fp.weights()[1] > 0.9);
+        assert_eq!(fp.observations(), 11);
+    }
+
+    #[test]
+    fn score_counts_overlap() {
+        let running = ExpertSet::from_indices(16, &[0, 1, 2, 3]);
+        let hot = ExpertSet::from_indices(16, &[0, 1, 2, 3]);
+        let cold = ExpertSet::from_indices(16, &[8, 9, 10, 11]);
+        let half = ExpertSet::from_indices(16, &[2, 3, 8, 9]);
+        assert_eq!(admission_score(&hot, &running, None), 4.0);
+        assert_eq!(admission_score(&cold, &running, None), 0.0);
+        assert_eq!(admission_score(&half, &running, None), 2.0);
+    }
+
+    #[test]
+    fn ep_weighting_penalizes_straggler_growth() {
+        // 8 experts on 2 GPUs, contiguous: GPU0 = {0..3}, GPU1 = {4..7}.
+        // The batch already loads GPU0 with 3 experts.
+        let pl = Placement::new(8, 2, PlacementKind::Contiguous);
+        let running = ExpertSet::from_indices(8, &[0, 1, 2]);
+        // Equal overlap (one shared expert), but `piles_on` adds 1 expert
+        // to the already-hot GPU0 while `spreads` adds 1 to idle GPU1.
+        let piles_on = ExpertSet::from_indices(8, &[0, 3]);
+        let spreads = ExpertSet::from_indices(8, &[0, 4]);
+        let s_pile = admission_score(&piles_on, &running, Some(&pl));
+        let s_spread = admission_score(&spreads, &running, Some(&pl));
+        assert!(s_spread > s_pile, "spread {s_spread} <= pile {s_pile}");
+        // Without the placement both candidates look identical.
+        assert_eq!(
+            admission_score(&piles_on, &running, None),
+            admission_score(&spreads, &running, None)
+        );
+    }
+}

@@ -20,10 +20,13 @@
 //! * [`baselines`] — vanilla top-k, LYNX-Lat, Dynamic-Skipping,
 //!   Opportunistic.
 //! * [`refine`] — the shared refinement tail (top-k within S).
+//! * [`footprint`] — decayed expert-footprint estimates consumed by
+//!   admission-time co-scheduling ([`crate::coordinator::admission`]).
 
 pub mod baselines;
 pub mod batch_aware;
 pub mod expert_set;
+pub mod footprint;
 pub mod gpu_aware;
 pub mod greedy;
 pub mod policy;
@@ -32,6 +35,7 @@ pub mod scores;
 pub mod spec_aware;
 
 pub use expert_set::ExpertSet;
+pub use footprint::{admission_score, Footprint};
 pub use policy::{PolicyKind, SelectionContext, SelectionPolicy};
 pub use refine::{refine, vanilla_topk, Routing};
 pub use scores::{softmax_in_place, topk_indices, ScoreMatrix};

@@ -20,6 +20,12 @@
 //! benches and the fidelity harness; `benches/serve_continuous.rs` measures
 //! the throughput gap between the two under Poisson arrivals.
 //!
+//! Every job gets exactly one reply: parse failures answer with the
+//! recovered id, submit-time rejections (bounded-queue backpressure,
+//! unservable prompts — see `coordinator::admission::SubmitError`) answer
+//! with a coded protocol error (`"code":"queue_full"`, …), and a worker
+//! that dies mid-drain answers its in-flight jobs with the cause.
+//!
 //! (The baked registry carries no tokio; this server uses std::net +
 //! threads, which for a CPU-bound PJRT backend is the honest design anyway —
 //! the model worker is serial either way.)
@@ -42,7 +48,21 @@ use crate::model::MoeModel;
 use crate::runtime::{Engine, Manifest};
 pub use protocol::{decode_response, Response};
 
-type Reply = Sender<std::result::Result<Vec<u32>, String>>;
+/// Error payload routed back to the connection thread: optional stable
+/// protocol code (e.g. `queue_full`) plus the human-readable message.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub code: Option<&'static str>,
+    pub msg: String,
+}
+
+impl WireError {
+    fn plain(msg: impl Into<String>) -> WireError {
+        WireError { code: None, msg: msg.into() }
+    }
+}
+
+type Reply = Sender<std::result::Result<Vec<u32>, WireError>>;
 type Job = (Request, Reply);
 
 /// Handle to a running server.
@@ -180,7 +200,13 @@ fn connection_loop(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
                     Ok(Ok(tokens)) => {
                         writeln!(writer, "{}", protocol::encode_response(id, &tokens))?
                     }
-                    Ok(Err(msg)) => writeln!(writer, "{}", protocol::encode_error(id, &msg))?,
+                    Ok(Err(e)) => {
+                        let line = match e.code {
+                            Some(code) => protocol::encode_error_coded(id, code, &e.msg),
+                            None => protocol::encode_error(id, &e.msg),
+                        };
+                        writeln!(writer, "{line}")?
+                    }
                     Err(_) => {
                         writeln!(writer, "{}", protocol::encode_error(id, "worker gone"))?
                     }
@@ -198,7 +224,9 @@ fn connection_loop(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
 }
 
 /// Remap an incoming job onto a worker-unique internal id (clients may
-/// collide) and submit it to the live loop.
+/// collide) and submit it to the live loop. A submit-time rejection (queue
+/// backpressure, unservable prompt) is answered immediately with a coded
+/// protocol error — every job gets exactly one reply, never silence.
 fn submit_job(
     core: &mut ServeLoop<'_>,
     responders: &mut BTreeMap<u64, Reply>,
@@ -207,9 +235,17 @@ fn submit_job(
 ) {
     let internal = *next_internal;
     *next_internal += 1;
-    responders.insert(internal, tx);
+    let client_id = req.id;
     req.id = internal;
-    core.submit(req);
+    match core.submit(req) {
+        Ok(()) => {
+            responders.insert(internal, tx);
+        }
+        Err(e) => {
+            let e = e.with_id(client_id);
+            let _ = tx.send(Err(WireError { code: Some(e.code()), msg: e.to_string() }));
+        }
+    }
 }
 
 fn worker_loop(
@@ -232,7 +268,7 @@ fn worker_loop(
                 while !stop.load(Ordering::SeqCst) {
                     match job_rx.recv_timeout(Duration::from_millis(50)) {
                         Ok((_, tx)) => {
-                            let _ = tx.send(Err(msg.clone()));
+                            let _ = tx.send(Err(WireError::plain(msg.clone())));
                         }
                         Err(RecvTimeoutError::Timeout) => {}
                         Err(RecvTimeoutError::Disconnected) => break,
@@ -257,7 +293,17 @@ fn worker_loop(
                                 }
                             }
                         }
-                        Err(_) => break,
+                        Err(e) => {
+                            // The drain died: answer every in-flight job
+                            // with the cause instead of dropping channels
+                            // (a dropped channel reads as "worker gone",
+                            // which hides what actually happened).
+                            let msg = format!("{e:#}");
+                            for (_, tx) in std::mem::take(&mut responders) {
+                                let _ = tx.send(Err(WireError::plain(msg.clone())));
+                            }
+                            break;
+                        }
                     }
                 }
                 break 'serve;
@@ -293,7 +339,7 @@ fn worker_loop(
                 Err(e) => {
                     let msg = format!("{e:#}");
                     for (_, tx) in std::mem::take(&mut responders) {
-                        let _ = tx.send(Err(msg.clone()));
+                        let _ = tx.send(Err(WireError::plain(msg.clone())));
                     }
                     continue 'serve; // rebuild the core
                 }

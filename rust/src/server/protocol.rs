@@ -1,8 +1,14 @@
 //! JSON-lines wire protocol between clients and the serving front-end.
 //!
-//! Request  : {"id": 7, "prompt": [1,2,3], "max_new_tokens": 16, "domain": "gpqa"}
+//! Request  : {"id": 7, "prompt": [1,2,3], "max_new_tokens": 16, "domain": "gpqa",
+//!             "priority": 1, "deadline_ms": 250}   (last two optional)
 //! Response : {"id": 7, "tokens": [..], "n_tokens": 16}
-//! Error    : {"id": 7, "error": "..."}
+//! Error    : {"id": 7, "error": "...", "code": "queue_full"}   (code optional)
+//!
+//! Every request that reaches the server gets exactly one reply line —
+//! malformed payloads and submit-time rejections (queue backpressure,
+//! over-long prompts) answer with an error carrying the request id and a
+//! stable machine-readable `code`, never with silence.
 
 use anyhow::{bail, Context, Result};
 
@@ -10,13 +16,19 @@ use crate::coordinator::Request;
 use crate::util::json::Json;
 
 pub fn encode_request(req: &Request) -> String {
-    Json::obj(vec![
+    let mut fields = vec![
         ("id", Json::num(req.id as f64)),
         ("prompt", Json::arr(req.prompt.iter().map(|&t| Json::num(t as f64)))),
         ("max_new_tokens", Json::num(req.max_new_tokens as f64)),
         ("domain", Json::str(req.domain.clone())),
-    ])
-    .dump()
+    ];
+    if req.priority != 0 {
+        fields.push(("priority", Json::num(req.priority as f64)));
+    }
+    if let Some(ms) = req.deadline_ms {
+        fields.push(("deadline_ms", Json::num(ms as f64)));
+    }
+    Json::obj(fields).dump()
 }
 
 pub fn decode_request(line: &str) -> Result<Request> {
@@ -41,6 +53,18 @@ pub fn decode_request(line: &str) -> Result<Request> {
     let mut req = Request::new(id, prompt, max_new);
     if let Some(d) = v.get("domain").and_then(|d| d.as_str()) {
         req.domain = d.to_string();
+    }
+    if let Some(p) = v.get("priority") {
+        let prio = p.as_usize().context("priority")?;
+        req.priority = u32::try_from(prio)
+            .map_err(|_| anyhow::anyhow!("priority {prio} exceeds u32"))?;
+    }
+    if let Some(d) = v.get("deadline_ms") {
+        let ms = d.as_usize().context("deadline_ms")?;
+        if ms == 0 {
+            bail!("deadline_ms must be ≥ 1 (omit the field for no deadline)");
+        }
+        req.deadline_ms = Some(ms as u64);
     }
     Ok(req)
 }
@@ -69,6 +93,17 @@ pub fn encode_error(id: u64, msg: &str) -> String {
     Json::obj(vec![("id", Json::num(id as f64)), ("error", Json::str(msg))]).dump()
 }
 
+/// Error reply with a stable machine-readable code (e.g. `queue_full`) so
+/// clients can react to backpressure without parsing prose.
+pub fn encode_error_coded(id: u64, code: &str, msg: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("error", Json::str(msg)),
+        ("code", Json::str(code)),
+    ])
+    .dump()
+}
+
 /// Parsed response on the client side.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
@@ -79,7 +114,10 @@ pub struct Response {
 pub fn decode_response(line: &str) -> Result<Response> {
     let v = Json::parse(line).context("parsing response line")?;
     if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
-        bail!("server error: {err}");
+        match v.get("code").and_then(|c| c.as_str()) {
+            Some(code) => bail!("server error [{code}]: {err}"),
+            None => bail!("server error: {err}"),
+        }
     }
     let id = v.req("id").map_err(anyhow::Error::msg)?.as_i64().context("id")? as u64;
     let tokens = v
@@ -107,6 +145,41 @@ mod tests {
         assert_eq!(back.prompt, vec![1, 2, 3]);
         assert_eq!(back.max_new_tokens, 8);
         assert_eq!(back.domain, "gpqa");
+        // defaults survive the wire
+        assert_eq!(back.priority, 0);
+        assert_eq!(back.deadline_ms, None);
+    }
+
+    #[test]
+    fn priority_and_deadline_roundtrip() {
+        let mut r = Request::new(4, vec![1], 2);
+        r.priority = 3;
+        r.deadline_ms = Some(250);
+        let back = decode_request(&encode_request(&r)).unwrap();
+        assert_eq!(back.priority, 3);
+        assert_eq!(back.deadline_ms, Some(250));
+        // omitted fields default; zero deadline is rejected loudly
+        let plain = decode_request(r#"{"id":1,"prompt":[1],"max_new_tokens":2}"#).unwrap();
+        assert_eq!((plain.priority, plain.deadline_ms), (0, None));
+        assert!(decode_request(
+            r#"{"id":1,"prompt":[1],"max_new_tokens":2,"deadline_ms":0}"#
+        )
+        .is_err());
+        // an over-wide priority must fail loudly, not wrap to class 0
+        assert!(decode_request(
+            r#"{"id":1,"prompt":[1],"max_new_tokens":2,"priority":4294967296}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn coded_error_reaches_the_client() {
+        let line = encode_error_coded(12, "queue_full", "queue full: request 12");
+        assert!(line.contains("\"code\""));
+        let err = decode_response(&line).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("queue_full"), "{msg}");
+        assert!(msg.contains("request 12"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,79 @@
+//! FNV-1a — the one non-cryptographic hash the tree needs, shared by the
+//! KV-cache digests (`model`) and admission's unlabeled-traffic class keys
+//! (`coordinator::admission`). 64-bit, byte-at-a-time, deterministic across
+//! runs and platforms.
+
+/// Incremental FNV-1a hasher.
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    pub fn update_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    /// Fold a u32 in, little-endian (token ids).
+    #[inline]
+    pub fn update_u32(&mut self, v: u32) {
+        self.update_bytes(&v.to_le_bytes());
+    }
+
+    /// Fold f32s in by bit pattern (cache digests — bit equality, not
+    /// numeric equality, is the contract).
+    pub fn update_f32s(&mut self, data: &[f32]) {
+        for v in data {
+            self.update_bytes(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // Canonical FNV-1a 64-bit test vectors.
+        let mut h = Fnv::new();
+        assert_eq!(h.finish(), 0xcbf29ce484222325, "offset basis");
+        h.update_bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+        let mut h = Fnv::new();
+        h.update_bytes(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn u32_and_f32_feed_the_same_stream() {
+        let mut a = Fnv::new();
+        a.update_u32(0x3f800000); // bit pattern of 1.0f32
+        let mut b = Fnv::new();
+        b.update_f32s(&[1.0]);
+        assert_eq!(a.finish(), b.finish());
+        // order sensitivity
+        let mut c = Fnv::new();
+        c.update_u32(1);
+        c.update_u32(2);
+        let mut d = Fnv::new();
+        d.update_u32(2);
+        d.update_u32(1);
+        assert_ne!(c.finish(), d.finish());
+    }
+}

@@ -13,9 +13,11 @@
 //! * [`benchkit`] — a miniature criterion: warmup + timed iterations +
 //!   mean/p50/p99 reporting, used by every `cargo bench` target.
 //! * [`cli`]   — flag parsing for the launcher binary and examples.
+//! * [`fnv`]   — FNV-1a (KV-cache digests, admission class keys).
 
 pub mod benchkit;
 pub mod check;
 pub mod cli;
+pub mod fnv;
 pub mod json;
 pub mod rng;

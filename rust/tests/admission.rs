@@ -1,0 +1,380 @@
+//! Admission-subsystem tests: the Fifo-equivalence property pinning the
+//! refactor to the pre-refactor admission order, policy-ordering behaviour
+//! through a live [`ServeLoop`] on the tiny preset, bounded-queue
+//! backpressure, and footprint plumbing (observed router scores reaching
+//! the tracker without perturbing served outputs).
+
+use std::collections::VecDeque;
+
+use xshare::config::ServeConfig;
+use xshare::coordinator::admission::{AdmissionContext, AdmissionKind, AdmissionQueue};
+use xshare::coordinator::{Batcher, Request, ServeLoop, SubmitError};
+use xshare::model::MoeModel;
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+use xshare::util::check::forall;
+use xshare::util::rng::Rng;
+
+fn tiny_model() -> MoeModel {
+    let manifest = Manifest::load(&artifacts_root().join("tiny"))
+        .expect("tiny artifacts missing — run `make artifacts`");
+    MoeModel::new(Engine::load(manifest).unwrap()).unwrap()
+}
+
+fn tiny_cfg() -> ServeConfig {
+    ServeConfig {
+        preset: "tiny".into(),
+        batch_size: 2,
+        max_new_tokens: 4,
+        ..Default::default()
+    }
+}
+
+/// The pre-refactor admission semantics, verbatim: one FIFO queue feeding
+/// free slots lowest-index-first, up to `max_running`.
+struct LegacyBatcher {
+    queue: VecDeque<Request>,
+    slots: Vec<Option<u64>>,
+    max_running: usize,
+}
+
+impl LegacyBatcher {
+    fn new(n_slots: usize, max_running: usize) -> LegacyBatcher {
+        LegacyBatcher {
+            queue: VecDeque::new(),
+            slots: (0..n_slots).map(|_| None).collect(),
+            max_running,
+        }
+    }
+
+    fn running(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Fill free slots from the queue; (request id, slot) pairs in
+    /// admission order — the linear scan the seed implementation used.
+    fn admit(&mut self) -> Vec<(u64, usize)> {
+        let mut admitted = Vec::new();
+        while self.running() < self.max_running && !self.queue.is_empty() {
+            let slot = self
+                .slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("running < max_running implies a free slot");
+            let req = self.queue.pop_front().unwrap();
+            admitted.push((req.id, slot));
+            self.slots[slot] = Some(req.id);
+        }
+        admitted
+    }
+
+    fn release(&mut self, slot: usize) {
+        assert!(self.slots[slot].take().is_some());
+    }
+}
+
+/// ACCEPTANCE: under the default Fifo policy, the new admission stack
+/// (AdmissionQueue + policy pick + Batcher::place) admits exactly the same
+/// requests into exactly the same slots as the pre-refactor hard-coded
+/// queue, across arbitrary submit/admit/release interleavings.
+#[test]
+fn prop_fifo_policy_matches_pre_refactor_admission_order() {
+    forall(
+        0xAD,
+        300,
+        |r: &mut Rng| {
+            let n_slots = 1 + r.below(6);
+            let max_running = 1 + r.below(n_slots);
+            // Script of operations: 0 = submit, 1 = admit, 2 = release a
+            // random live slot.
+            let script: Vec<u8> = (0..r.below(60)).map(|_| r.below(3) as u8).collect();
+            let victims: Vec<usize> = (0..script.len()).map(|_| r.below(16)).collect();
+            (n_slots, max_running, script, victims)
+        },
+        |&(n_slots, max_running, ref script, ref victims)| {
+            let mut legacy = LegacyBatcher::new(n_slots, max_running);
+            let mut queue = AdmissionQueue::new(AdmissionKind::Fifo, 0);
+            let mut batcher = Batcher::new(n_slots, max_running);
+            let mut next_id = 0u64;
+            for (&op, &victim) in script.iter().zip(victims) {
+                match op {
+                    0 => {
+                        legacy.queue.push_back(Request::new(next_id, vec![1], 1));
+                        queue
+                            .submit(Request::new(next_id, vec![1], 1), 0.0)
+                            .map_err(|e| e.to_string())?;
+                        next_id += 1;
+                    }
+                    1 => {
+                        let expected = legacy.admit();
+                        let mut got = Vec::new();
+                        while batcher.has_capacity() && !queue.is_empty() {
+                            let live = batcher.live_slots();
+                            let ctx = AdmissionContext {
+                                now_sim: 0.0,
+                                tracker: None,
+                                running_slots: &live,
+                                placement: None,
+                                top_k: 1,
+                            };
+                            let Some(entry) = queue.pop_next(&ctx) else { break };
+                            let id = entry.req.id;
+                            let slot = batcher.place(entry.req);
+                            got.push((id, slot));
+                        }
+                        if got != expected {
+                            return Err(format!(
+                                "admission diverged: new {got:?} vs legacy {expected:?}"
+                            ));
+                        }
+                    }
+                    _ => {
+                        let live = batcher.live_slots();
+                        if !live.is_empty() {
+                            let slot = live[victim % live.len()];
+                            legacy.release(slot);
+                            batcher.release(slot);
+                        }
+                    }
+                }
+                if batcher.running() != legacy.running() {
+                    return Err(format!(
+                        "running count diverged: {} vs {}",
+                        batcher.running(),
+                        legacy.running()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn priority_admission_front_runs_under_backlog() {
+    // Two slots, deep backlog: the high-priority stragglers submitted LAST
+    // must be admitted before earlier best-effort requests.
+    let mut model = tiny_model();
+    let cfg = ServeConfig { admission: AdmissionKind::Priority, ..tiny_cfg() };
+    let mut core = ServeLoop::new(&mut model, cfg).unwrap();
+    for id in 0..4u64 {
+        core.submit(Request::new(id, vec![3, 4], 2)).unwrap();
+    }
+    for id in 4..6u64 {
+        let mut r = Request::new(id, vec![3, 4], 2);
+        r.priority = 5;
+        core.submit(r).unwrap();
+    }
+    let first = core.step().unwrap();
+    assert_eq!(first.admitted, vec![4, 5], "high-priority class admitted first");
+    core.drain().unwrap();
+    let report = core.report();
+    assert_eq!(report.outputs.len(), 6, "backlog fully served");
+    // Per-class TTFT: class 5 committed its first tokens strictly earlier.
+    let m = &report.metrics;
+    assert!(m.ttft_by_class[&5].mean() < m.ttft_by_class[&0].mean());
+}
+
+#[test]
+fn edf_admission_orders_by_deadline_and_counts_misses() {
+    // One slot (batch_size 1), three queued requests. Submitted
+    // loose-first, but EDF must admit the tight deadlines first; the
+    // second tight request has to wait a full request's service time
+    // (≈ 8 sim steps of ~162 µs on the tiny/h100 cost model) before its
+    // prefill even starts, so its 1 ms TTFT budget is unmeetable while the
+    // first tight request (prefill-only wait, ≈ 0.65 ms) meets its own.
+    let mut model = tiny_model();
+    let cfg = ServeConfig {
+        admission: AdmissionKind::SloEdf,
+        batch_size: 1,
+        ..tiny_cfg()
+    };
+    let mut core = ServeLoop::new(&mut model, cfg).unwrap();
+    let prompt = vec![3, 4, 5, 6];
+    let mut loose = Request::new(1, prompt.clone(), 4);
+    loose.deadline_ms = Some(60_000);
+    let mut tight = Request::new(2, prompt.clone(), 4);
+    tight.deadline_ms = Some(1);
+    let mut hopeless = Request::new(3, prompt, 4);
+    hopeless.deadline_ms = Some(1);
+    core.submit(loose).unwrap();
+    core.submit(tight).unwrap();
+    core.submit(hopeless).unwrap();
+    let first = core.step().unwrap();
+    assert_eq!(first.admitted, vec![2], "earliest deadline admitted first");
+    let mut admissions = Vec::new();
+    while core.has_work() {
+        let o = core.step().unwrap();
+        admissions.extend(o.admitted);
+    }
+    assert_eq!(admissions, vec![3, 1], "tight deadlines before the loose one");
+    let m = core.metrics().clone();
+    assert_eq!(m.deadline_total, 3, "every deadlined request accounted");
+    assert_eq!(
+        m.deadline_misses, 1,
+        "exactly the queued-behind tight request misses"
+    );
+    assert!((m.deadline_miss_rate() - 1.0 / 3.0).abs() < 1e-12);
+}
+
+#[test]
+fn bounded_queue_applies_backpressure_and_recovers() {
+    let mut model = tiny_model();
+    let cfg = ServeConfig { max_queue: 2, batch_size: 1, ..tiny_cfg() };
+    let mut core = ServeLoop::new(&mut model, cfg).unwrap();
+    core.submit(Request::new(0, vec![3], 4)).unwrap();
+    core.step().unwrap(); // request 0 occupies the single slot
+    core.submit(Request::new(1, vec![3], 4)).unwrap();
+    core.submit(Request::new(2, vec![3], 4)).unwrap();
+    let err = core.submit(Request::new(3, vec![3], 4)).unwrap_err();
+    assert_eq!(err, SubmitError::QueueFull { id: 3, depth: 2, max_queue: 2 });
+    assert_eq!(err.code(), "queue_full");
+    assert_eq!(core.metrics().queue_rejected, 1);
+    // Serving drains the queue; capacity comes back.
+    core.drain().unwrap();
+    core.submit(Request::new(3, vec![3], 4)).unwrap();
+    core.drain().unwrap();
+    let report = core.report();
+    assert_eq!(report.outputs.len(), 4);
+    assert!(report.metrics.queue_depth.max >= 2.0);
+}
+
+#[test]
+fn submit_rejects_unservable_requests_typed() {
+    let mut model = tiny_model();
+    let max_seq = model.dims().max_seq;
+    let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
+    let long = Request::new(9, vec![1; max_seq], 4);
+    match core.submit(long).unwrap_err() {
+        SubmitError::PromptTooLong { id, len, budget, max_seq: ms } => {
+            assert_eq!((id, len, budget, ms), (9, max_seq, 4, max_seq));
+        }
+        other => panic!("expected PromptTooLong, got {other:?}"),
+    }
+    // A short prompt whose GENERATION budget overruns the KV window is just
+    // as unservable: positions ≥ max_seq silently drop their cache writes.
+    let greedy = Request::new(12, vec![1, 2], max_seq);
+    assert!(matches!(
+        core.submit(greedy).unwrap_err(),
+        SubmitError::PromptTooLong { id: 12, len: 2, .. }
+    ));
+    // …while requests that exactly fill the window are fine — including
+    // the boundary case where the prompt is the whole window and the one
+    // generated token comes off the last prefill forward's logits (the
+    // final token is committed without being fed back, so the last KV
+    // write is at prompt + budget − 2).
+    let exact = Request::new(13, vec![1, 2], max_seq - 2);
+    core.submit(exact).unwrap();
+    let full_window = Request::new(14, vec![1; max_seq], 1);
+    core.submit(full_window).unwrap();
+    let empty = Request::new(10, vec![], 4);
+    assert_eq!(core.submit(empty).unwrap_err(), SubmitError::EmptyPrompt { id: 10 });
+    // The loop is untouched: a normal request still serves (alongside the
+    // two exactly-fitting ones admitted above).
+    core.submit(Request::new(11, vec![3, 4], 2)).unwrap();
+    core.drain().unwrap();
+    assert_eq!(core.report().outputs.len(), 3);
+}
+
+#[test]
+fn footprint_admission_serves_identically_solo_and_learns_profiles() {
+    // Plumbing test: footprint admission must not change WHAT is generated
+    // (admission order only reorders; routing is untouched), and the
+    // tracker must be fed by real observed scores — visible through the
+    // footprint_overlap gauge once same-class requests queue up.
+    let mut model = tiny_model();
+    let fifo = {
+        let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
+        for id in 0..6u64 {
+            let mut r = Request::new(id, vec![3 + (id % 2) as u32, 4], 3);
+            r.domain = if id % 2 == 0 {
+                "even".into()
+            } else {
+                "odd".into()
+            };
+            core.submit(r).unwrap();
+        }
+        core.drain().unwrap();
+        core.report()
+    };
+    let cfg = ServeConfig { admission: AdmissionKind::FootprintAware, ..tiny_cfg() };
+    let mut core = ServeLoop::new(&mut model, cfg).unwrap();
+    for id in 0..6u64 {
+        let mut r = Request::new(id, vec![3 + (id % 2) as u32, 4], 3);
+        r.domain = if id % 2 == 0 {
+            "even".into()
+        } else {
+            "odd".into()
+        };
+        core.submit(r).unwrap();
+    }
+    core.drain().unwrap();
+    let fp = core.report();
+    // Same request set → same outputs per id under row-independent routing
+    // (vanilla default), regardless of admission order.
+    assert_eq!(fifo.outputs, fp.outputs);
+    // The overlap gauge recorded admissions scored against a live batch.
+    assert!(
+        fp.metrics.footprint_overlap.n > 0,
+        "footprint admissions never saw an informative running union"
+    );
+}
+
+#[test]
+fn footprint_captures_prompt_scores_through_chunked_prefill() {
+    // Chunked prefill is the prompt-time score source for footprints
+    // (`PrefillInput::collect_probs`): with prefill_chunk > 1 the tracker
+    // must still learn profiles and the served outputs must stay
+    // byte-identical to one-token prefill under row-independent routing.
+    let mut model = tiny_model();
+    fn reqs() -> Vec<Request> {
+        (0..4u64)
+            .map(|id| {
+                let mut r = Request::new(id, vec![3, 4, 5, 6, 7], 3);
+                r.domain = if id % 2 == 0 {
+                    "even".into()
+                } else {
+                    "odd".into()
+                };
+                r
+            })
+            .collect()
+    }
+    let baseline = {
+        let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
+        for r in reqs() {
+            core.submit(r).unwrap();
+        }
+        core.drain().unwrap();
+        core.report()
+    };
+    let cfg = ServeConfig {
+        admission: AdmissionKind::FootprintAware,
+        prefill_chunk: 3,
+        ..tiny_cfg()
+    };
+    let mut core = ServeLoop::new(&mut model, cfg).unwrap();
+    for r in reqs() {
+        core.submit(r).unwrap();
+    }
+    core.drain().unwrap();
+    let fp = core.report();
+    assert_eq!(baseline.outputs, fp.outputs, "chunked + footprint changed outputs");
+    assert!(
+        fp.metrics.footprint_overlap.n > 0,
+        "chunk-captured scores never informed an admission"
+    );
+}
+
+#[test]
+fn scheduler_propagates_queue_rejections() {
+    // Offline submit-all over a bounded queue must fail loudly, not drop
+    // requests silently.
+    let mut model = tiny_model();
+    let cfg = ServeConfig { max_queue: 1, batch_size: 1, ..tiny_cfg() };
+    let reqs: Vec<Request> = (0..3).map(|id| Request::new(id, vec![3], 2)).collect();
+    let err = xshare::coordinator::Scheduler::new(&mut model, cfg)
+        .unwrap()
+        .run(reqs)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("queue full"), "{err:#}");
+}

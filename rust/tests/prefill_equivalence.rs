@@ -107,7 +107,7 @@ fn chunked_prefill_pos_state_and_step_count() {
     let mut first_commit = BTreeMap::new();
     for chunk in [1usize, 3] {
         let mut core = ServeLoop::new(&mut model, cfg("vanilla", chunk, 4)).unwrap();
-        core.submit(Request::new(1, prompt.clone(), 4));
+        core.submit(Request::new(1, prompt.clone(), 4)).unwrap();
         let mut steps = 0;
         loop {
             let o = core.step().unwrap();
@@ -173,7 +173,7 @@ fn staggered_admission_unperturbed_by_chunking() {
             loop {
                 if let Some(batch) = pending.remove(&step_no) {
                     for r in batch {
-                        core.submit(r);
+                        core.submit(r).unwrap();
                     }
                 }
                 if !core.has_work() {
@@ -238,7 +238,7 @@ fn chunked_step_outcome_reports_prefill_tokens() {
     let mut model = tiny_model();
     let vocab = model.dims().vocab as u64;
     let mut core = ServeLoop::new(&mut model, cfg("vanilla", 4, 2)).unwrap();
-    core.submit(Request::new(1, prompt_of(6, 2, vocab), 2));
+    core.submit(Request::new(1, prompt_of(6, 2, vocab), 2)).unwrap();
     let o1 = core.step().unwrap();
     assert_eq!((o1.prefill_rows, o1.decode_rows), (1, 0));
     assert_eq!(o1.prefill_tokens, 4, "first chunk consumes 4 prompt tokens");

@@ -46,7 +46,7 @@ fn trace(n: usize, max_new: usize, seed: u64) -> Vec<Request> {
 fn prefill_runs_before_decode_for_admitted_request() {
     let mut model = tiny_model();
     let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
-    core.submit(Request::new(1, vec![3, 4, 5], 2));
+    core.submit(Request::new(1, vec![3, 4, 5], 2)).unwrap();
 
     // Prompt length 3 → three prefill-phase steps; the third consumes the
     // last prompt token and commits the first generated token.
@@ -79,7 +79,7 @@ fn prefill_runs_before_decode_for_admitted_request() {
 fn request_admitted_between_decode_steps_joins_next_step() {
     let mut model = tiny_model();
     let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
-    core.submit(Request::new(1, vec![3], 4));
+    core.submit(Request::new(1, vec![3], 4)).unwrap();
 
     let o1 = core.step().unwrap(); // single-token prompt: prefill commits #1
     assert_eq!(o1.committed, 1);
@@ -88,7 +88,7 @@ fn request_admitted_between_decode_steps_joins_next_step() {
 
     // B arrives while A is mid-decode: it must be admitted at the top of
     // the very next step and prefill beside A's decode row.
-    core.submit(Request::new(2, vec![4, 5], 3));
+    core.submit(Request::new(2, vec![4, 5], 3)).unwrap();
     let o3 = core.step().unwrap();
     assert_eq!(o3.admitted, vec![2]);
     assert_eq!((o3.prefill_rows, o3.decode_rows), (1, 1));
@@ -108,8 +108,8 @@ fn finished_requests_release_mid_flight() {
     // slot) while the long one keeps decoding — not when the batch drains.
     let mut model = tiny_model();
     let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
-    core.submit(Request::new(1, vec![3], 2)); // short
-    core.submit(Request::new(2, vec![4], 8)); // long
+    core.submit(Request::new(1, vec![3], 2)).unwrap(); // short
+    core.submit(Request::new(2, vec![4], 8)).unwrap(); // long
 
     let mut short_done_at = None;
     let mut steps = 0usize;
@@ -138,10 +138,10 @@ fn late_joiner_does_not_perturb_vanilla_outputs() {
         .unwrap();
 
     let mut core = ServeLoop::new(&mut model, tiny_cfg()).unwrap();
-    core.submit(Request::new(1, vec![3, 4], 6));
+    core.submit(Request::new(1, vec![3, 4], 6)).unwrap();
     core.step().unwrap();
     core.step().unwrap();
-    core.submit(Request::new(2, vec![5, 6, 7], 4));
+    core.submit(Request::new(2, vec![5, 6, 7], 4)).unwrap();
     core.drain().unwrap();
     let mixed = core.report();
 
@@ -161,7 +161,7 @@ fn spec_cycles_gated_on_chunk_prefill_rows() {
     let mut core = ServeLoop::new(&mut model, cfg).unwrap();
 
     // A: single-token prompt → decodes from step 1 on.
-    core.submit(Request::new(1, vec![3], 8));
+    core.submit(Request::new(1, vec![3], 8)).unwrap();
     let o1 = core.step().unwrap();
     assert!(!o1.speculative, "prefill row present");
     let o2 = core.step().unwrap();
@@ -169,7 +169,7 @@ fn spec_cycles_gated_on_chunk_prefill_rows() {
 
     // B arrives with a 5-token prompt: three chunked steps (2+2+1); the
     // verify cycle must stay off for ALL of them even though A decodes.
-    core.submit(Request::new(2, vec![4, 5, 6, 7, 8], 4));
+    core.submit(Request::new(2, vec![4, 5, 6, 7, 8], 4)).unwrap();
     for (expect_prefill, expect_tokens) in [(1, 2), (1, 2), (1, 1)] {
         let o = core.step().unwrap();
         assert_eq!(o.prefill_rows, expect_prefill);
@@ -246,7 +246,7 @@ fn staggered_submission_matches_upfront_property() {
             loop {
                 if let Some(batch) = pending.remove(&step_no) {
                     for r in batch {
-                        core.submit(r);
+                        core.submit(r).unwrap();
                     }
                 }
                 if !core.has_work() {

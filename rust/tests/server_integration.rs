@@ -71,6 +71,122 @@ fn malformed_request_error_carries_request_id() {
 }
 
 #[test]
+fn queue_full_reaches_client_as_coded_error_with_its_id() {
+    // ACCEPTANCE: submit beyond max_queue returns a typed QueueFull that a
+    // TCP client observes as a protocol-level error reply carrying its
+    // request id. One slot + one queue seat, six rapid submissions: the
+    // first occupies the slot for its whole generation, one more waits in
+    // the queue, and every other submission must be answered immediately
+    // with a "queue_full"-coded error — never silence.
+    let cfg = ServeConfig {
+        preset: "tiny".into(),
+        batch_size: 1,
+        max_queue: 1,
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    let server = Server::start_from_dir(artifacts_root().join("tiny"), cfg).unwrap();
+
+    let n = 6usize;
+    let mut conns: Vec<(std::io::BufReader<TcpStream>, TcpStream)> = (0..n)
+        .map(|_| {
+            let s = TcpStream::connect(server.addr).unwrap();
+            let w = s.try_clone().unwrap();
+            (BufReader::new(s), w)
+        })
+        .collect();
+    // Rapid-fire while request 0 is still being served (tiny serves a
+    // 3+28-token request over ~31 PJRT steps; these six writes take well
+    // under a millisecond).
+    for (i, (_, w)) in conns.iter_mut().enumerate() {
+        writeln!(
+            w,
+            r#"{{"id":{i},"prompt":[3,4,5],"max_new_tokens":28}}"#
+        )
+        .unwrap();
+    }
+    let mut served = 0usize;
+    let mut rejected = 0usize;
+    for (i, (r, _)) in conns.iter_mut().enumerate() {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(
+            line.contains(&format!("\"id\":{i}")),
+            "reply for client {i} lost its id: {line}"
+        );
+        if line.contains("error") {
+            assert!(line.contains("queue_full"), "uncoded rejection: {line}");
+            rejected += 1;
+        } else {
+            assert!(line.contains("tokens"), "{line}");
+            served += 1;
+        }
+    }
+    assert_eq!(served + rejected, n, "every request answered exactly once");
+    assert!(served >= 1, "the slot-holder must be served");
+    // Exact counts depend on how arrivals interleave with slot releases on
+    // a loaded machine (each release frees the queue seat for one more
+    // absorption), but six near-simultaneous submissions against one slot
+    // + one queue seat cannot all be absorbed: rejections MUST occur, and
+    // each must have reached its client as a coded reply (asserted above).
+    assert!(
+        rejected >= 1,
+        "backpressure never fired across {n} concurrent requests \
+         (served {served}, rejected {rejected})"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn over_long_prompt_rejected_with_coded_error_not_batch_poison() {
+    // A prompt that cannot fit the compiled KV window must be refused at
+    // submit time with a wire reply (id + code), and the worker must keep
+    // serving — the pre-refactor behaviour was a mid-step failure that
+    // errored every in-flight request.
+    let server = start_tiny_server();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let long: Vec<String> = (0..40).map(|i| (i % 60).to_string()).collect();
+    writeln!(
+        writer,
+        r#"{{"id":21,"prompt":[{}],"max_new_tokens":3}}"#,
+        long.join(",")
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+    assert!(line.contains("\"id\":21"), "{line}");
+    assert!(line.contains("prompt_too_long"), "{line}");
+    // connection and server both still healthy
+    writeln!(writer, r#"{{"id":22,"prompt":[1,2],"max_new_tokens":3}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"id\":22"), "{line}");
+    assert!(line.contains("tokens"), "{line}");
+    server.shutdown();
+}
+
+#[test]
+fn priority_and_deadline_fields_accepted_on_the_wire() {
+    let server = start_tiny_server();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(
+        writer,
+        r#"{{"id":5,"prompt":[3,4],"max_new_tokens":3,"priority":2,"deadline_ms":5000}}"#
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"id\":5"), "{line}");
+    assert!(line.contains("tokens"), "{line}");
+    server.shutdown();
+}
+
+#[test]
 fn malformed_line_gets_error_not_hang() {
     let server = start_tiny_server();
     let stream = TcpStream::connect(server.addr).unwrap();
