@@ -16,8 +16,8 @@ mod common;
 
 use std::collections::{BTreeMap, VecDeque};
 
-use common::{fmt, load_model, pct, Table};
-use xshare::config::ServeConfig;
+use common::{fmt, load_model, pct, save_report, Table};
+use xshare::config::{ServeConfig, SpecDraft};
 use xshare::coordinator::admission::{
     AdmissionContext, AdmissionKind, AdmissionQueue, FootprintTracker,
 };
@@ -77,6 +77,9 @@ struct ModeResult {
     ttft_mean_s: f64,
     queue_wait_mean_s: f64,
     admitted_in_flight: u64,
+    spec_stalled_steps: u64,
+    spec_accepted: u64,
+    spec_acceptance_rate: f64,
 }
 
 impl ModeResult {
@@ -96,7 +99,19 @@ fn serve_continuous(
     cfg: &ServeConfig,
     arrivals: &[(f64, Request)],
 ) -> ModeResult {
+    serve_continuous_with(model, cfg, arrivals, |_| {})
+}
+
+/// As [`serve_continuous`], with a setup hook on the fresh loop (the spec
+/// scenario pins the legacy stall gate on for its baseline arm).
+fn serve_continuous_with(
+    model: &mut MoeModel,
+    cfg: &ServeConfig,
+    arrivals: &[(f64, Request)],
+    setup: impl FnOnce(&mut ServeLoop),
+) -> ModeResult {
     let mut core = ServeLoop::new(model, cfg.clone()).expect("serve loop");
+    setup(&mut core);
     let mut idle = 0.0f64; // sim-time spent with no work at all
     let mut idx = 0;
     while idx < arrivals.len() || core.has_work() {
@@ -120,6 +135,9 @@ fn serve_continuous(
         ttft_mean_s: report.metrics.ttft.mean(),
         queue_wait_mean_s: report.metrics.queue_wait.mean(),
         admitted_in_flight: report.metrics.admitted_in_flight,
+        spec_stalled_steps: report.metrics.spec_stalled_steps,
+        spec_accepted: report.metrics.spec_accepted,
+        spec_acceptance_rate: report.metrics.acceptance_rate(),
         outputs: report.outputs,
     }
 }
@@ -174,6 +192,9 @@ fn serve_batched(
         ttft_mean_s: if n_served == 0 { 0.0 } else { ttft_sum / n_served as f64 },
         queue_wait_mean_s: if n_served == 0 { 0.0 } else { wait_sum / n_served as f64 },
         admitted_in_flight: 0,
+        spec_stalled_steps: 0,
+        spec_accepted: 0,
+        spec_acceptance_rate: 0.0,
     }
 }
 
@@ -281,6 +302,176 @@ fn long_prompt_scenario(model: &mut MoeModel) {
         );
     }
     table.print("serve_continuous — long-prompt chunked prefill TTFT");
+}
+
+// Mixed-phase speculation scenario (PR 4): long-prompt Poisson arrivals
+// with lookup-draft speculation, per-row phase machines vs the legacy
+// stall gate. Runs on the tiny preset: its decode streams enter attractor
+// cycles within a couple dozen tokens, which is exactly the regime where
+// n-gram lookup drafting genuinely accepts — so speculation is profitable
+// and the gate's stalls show up as lost throughput, not noise.
+const SPEC_PRESET: &str = "tiny";
+const SPEC_N_REQUESTS: usize = 10;
+const SPEC_PROMPT_LEN: usize = 9;
+const SPEC_MAX_NEW: usize = 24; // 9 + 24 = tiny max_seq + 1 (the KV bound)
+const SPEC_LEN: usize = 3;
+const SPEC_BATCH: usize = 4;
+
+/// Deterministic spec-scenario prompts (kept in lockstep with the
+/// acceptance probes: arithmetic pattern, one seed per request).
+fn spec_prompt(seed: u64, vocab: u64) -> Vec<u32> {
+    (0..SPEC_PROMPT_LEN as u64)
+        .map(|i| ((seed.wrapping_mul(31) + i * 7 + 3) % vocab) as u32)
+        .collect()
+}
+
+/// **Mixed-phase speculation scenario**: same Poisson arrivals, same
+/// requests, vanilla routing, lookup drafts — once with per-row phase
+/// machines (speculation runs whenever any row decodes) and once with the
+/// pre-PR4 batch-global gate (one prefilling row stalls every verify
+/// cycle). Greedy speculation is lossless under vanilla routing, so the
+/// outputs must be byte-identical; the phase machines must then win
+/// strictly on OTPS over simulated time. Emits `BENCH_spec.json` for the
+/// perf trajectory.
+fn spec_mixed_phase_scenario() {
+    println!(
+        "\n# mixed-phase speculation — per-row phase machines vs legacy stall gate \
+         ({SPEC_PRESET}, B={SPEC_BATCH}, L_s={SPEC_LEN}, lookup drafts, \
+         {SPEC_N_REQUESTS} reqs × {SPEC_PROMPT_LEN}-token prompts, {SPEC_MAX_NEW} new)"
+    );
+    let mut model = load_model(SPEC_PRESET);
+    let vocab = model.dims().vocab;
+    let cfg = ServeConfig {
+        preset: SPEC_PRESET.into(),
+        policy: PolicyKind::Vanilla,
+        batch_size: SPEC_BATCH,
+        spec_len: SPEC_LEN,
+        spec_draft: SpecDraft::Lookup,
+        max_new_tokens: SPEC_MAX_NEW,
+        ..Default::default()
+    };
+
+    // Poisson arrivals, window-calibrated against the gated busy time so
+    // prefill phases genuinely overlap other rows' decode (the regime the
+    // stall gate hurts).
+    let mut g = TraceGenerator::new(vocab, SEED + 2);
+    g.arrival_rate = 1.0;
+    let mut arrivals: Vec<(f64, Request)> = g
+        .generate(&TraceDomain::standard_suite(), SPEC_N_REQUESTS)
+        .into_iter()
+        .map(|t| {
+            let mut r =
+                Request::new(t.id, spec_prompt(t.id, vocab as u64), SPEC_MAX_NEW);
+            r.domain = t.domain;
+            (t.arrival_s, r)
+        })
+        .collect();
+    let upfront: Vec<(f64, Request)> =
+        arrivals.iter().map(|(_, r)| (0.0, r.clone())).collect();
+    let busy = serve_continuous_with(&mut model, &cfg, &upfront, |core| {
+        core.set_legacy_spec_gate(true);
+    })
+    .makespan_s;
+    let t_last = arrivals.last().map(|(t, _)| *t).unwrap_or(0.0).max(1e-12);
+    let scale = ARRIVAL_WINDOW_FRAC * busy / t_last;
+    for (t, _) in arrivals.iter_mut() {
+        *t *= scale;
+    }
+
+    let gated = serve_continuous_with(&mut model, &cfg, &arrivals, |core| {
+        core.set_legacy_spec_gate(true);
+    });
+    let mixed = serve_continuous_with(&mut model, &cfg, &arrivals, |_| {});
+
+    let mut table = Table::new(&[
+        "spec gating",
+        "tokens",
+        "makespan_s",
+        "otps",
+        "ttft_mean_s",
+        "stalled_steps",
+        "accept_rate",
+    ]);
+    for (name, r) in [("legacy stall gate", &gated), ("per-row phases", &mixed)] {
+        table.row(&[
+            name.to_string(),
+            r.tokens.to_string(),
+            fmt(r.makespan_s, 4),
+            fmt(r.otps(), 1),
+            fmt(r.ttft_mean_s, 4),
+            r.spec_stalled_steps.to_string(),
+            fmt(r.spec_acceptance_rate, 3),
+        ]);
+    }
+    table.print("serve_continuous — mixed-phase speculation vs stall gate");
+    println!(
+        "[spec        ] per-row phases vs stall gate: OTPS {:+.1}%, stalls {} → {}",
+        pct(mixed.otps(), gated.otps()),
+        gated.spec_stalled_steps,
+        mixed.spec_stalled_steps,
+    );
+
+    assert_eq!(
+        mixed.outputs, gated.outputs,
+        "speculation gating is scheduling-only under vanilla routing — outputs \
+         must be byte-identical"
+    );
+    assert!(
+        gated.spec_stalled_steps > 0,
+        "the Poisson long-prompt mix never tripped the legacy gate — scenario \
+         is not exercising the stall"
+    );
+    assert_eq!(mixed.spec_stalled_steps, 0, "per-row phases must never stall");
+    assert!(
+        mixed.spec_accepted > 0,
+        "lookup drafts never accepted — the speculation win has no substance"
+    );
+    assert!(
+        mixed.otps() > gated.otps(),
+        "ACCEPTANCE: mixed-phase speculation must yield strictly higher OTPS \
+         than the stall-gated baseline at equal outputs ({} vs {})",
+        mixed.otps(),
+        gated.otps()
+    );
+
+    let json = xshare::util::json::Json::obj(vec![
+        ("scenario", xshare::util::json::Json::str("spec_mixed_phase")),
+        ("preset", xshare::util::json::Json::str(SPEC_PRESET)),
+        ("spec_len", xshare::util::json::Json::num(SPEC_LEN as f64)),
+        ("spec_draft", xshare::util::json::Json::str("lookup")),
+        ("requests", xshare::util::json::Json::num(SPEC_N_REQUESTS as f64)),
+        ("tokens_out", xshare::util::json::Json::num(mixed.tokens as f64)),
+        ("mixed_otps", xshare::util::json::Json::num(mixed.otps())),
+        ("gated_otps", xshare::util::json::Json::num(gated.otps())),
+        (
+            "otps_gain_pct",
+            xshare::util::json::Json::num(pct(mixed.otps(), gated.otps())),
+        ),
+        (
+            "mixed_ttft_mean_s",
+            xshare::util::json::Json::num(mixed.ttft_mean_s),
+        ),
+        (
+            "gated_ttft_mean_s",
+            xshare::util::json::Json::num(gated.ttft_mean_s),
+        ),
+        (
+            "gated_stalled_steps",
+            xshare::util::json::Json::num(gated.spec_stalled_steps as f64),
+        ),
+        (
+            "acceptance_rate",
+            xshare::util::json::Json::num(mixed.spec_acceptance_rate),
+        ),
+    ])
+    .dump();
+    // Repo-root copy is the CI artifact (gitignored locally; fail loudly —
+    // a silent miss would only surface as an opaque upload-artifact error);
+    // target/bench-reports keeps the local trajectory alongside the other
+    // bench outputs.
+    std::fs::write("BENCH_spec.json", &json).expect("writing BENCH_spec.json");
+    save_report("BENCH_spec.json", &json);
+    println!("[spec        ] wrote BENCH_spec.json");
 }
 
 // Admission scenario (PR 3): heterogeneous two-dataset mix under queue
@@ -534,6 +725,15 @@ fn admission_sim_scenario() {
 }
 
 fn main() {
+    // Scenario filter: `cargo bench --bench serve_continuous -- spec` runs
+    // only the mixed-phase speculation scenario (what CI executes and
+    // uploads BENCH_spec.json from); no filter runs everything.
+    let only: Option<String> =
+        std::env::args().skip(1).find(|a| !a.starts_with("--"));
+    if only.as_deref() == Some("spec") {
+        spec_mixed_phase_scenario();
+        return;
+    }
     println!(
         "# serve_continuous — Poisson arrivals, staggered lengths \
          ({PRESET}, B={BATCH_SIZE}, {N_REQUESTS} requests)"
@@ -620,4 +820,5 @@ fn main() {
     long_prompt_scenario(&mut model);
     admission_scenario(&mut model);
     admission_sim_scenario();
+    spec_mixed_phase_scenario();
 }

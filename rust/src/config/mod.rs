@@ -24,6 +24,36 @@ pub struct EpConfig {
     pub placement: PlacementKind,
 }
 
+/// Where speculative draft tokens come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecDraft {
+    /// The compiled dense draft model (default; requires the preset to
+    /// ship `draft_step`).
+    Model,
+    /// N-gram lookup over each row's own prompt + generated history
+    /// (prompt-lookup decoding) — drafts cost no model forward at all.
+    Lookup,
+}
+
+impl SpecDraft {
+    pub fn parse(s: &str) -> Result<SpecDraft, String> {
+        match s {
+            "model" => Ok(SpecDraft::Model),
+            "lookup" | "ngram" => Ok(SpecDraft::Lookup),
+            other => Err(format!("unknown spec draft source '{other}' (model | lookup)")),
+        }
+    }
+}
+
+impl std::fmt::Display for SpecDraft {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecDraft::Model => write!(f, "model"),
+            SpecDraft::Lookup => write!(f, "lookup"),
+        }
+    }
+}
+
 /// A full serving deployment description.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -33,8 +63,18 @@ pub struct ServeConfig {
     pub policy: PolicyKind,
     /// Target decode batch size (requests per step, ≤ manifest max_batch).
     pub batch_size: usize,
-    /// Speculative length L_s (0 = speculation off).
+    /// Speculative length L_s (0 = speculation off). With per-row phase
+    /// machines this is the MAXIMUM per-row draft depth, not a batch-wide
+    /// constant.
     pub spec_len: usize,
+    /// Adapt each row's draft depth within `[0, spec_len]` from a
+    /// per-traffic-class acceptance EMA, and weight speculative positions
+    /// by the class's acceptance prior during selection. Off by default
+    /// (uniform depth — the legacy behaviour).
+    pub spec_adaptive: bool,
+    /// Draft source for speculation: the dense draft model or n-gram
+    /// lookup over each row's own history.
+    pub spec_draft: SpecDraft,
     /// Prompt tokens a prefilling row advances per serving step. 1 = the
     /// legacy one-token-per-step walk; >1 uses the chunked-prefill artifact
     /// (requires the preset to ship `prefill_attn_router`). Bounded by the
@@ -65,6 +105,8 @@ impl Default for ServeConfig {
             policy: PolicyKind::Vanilla,
             batch_size: 16,
             spec_len: 0,
+            spec_adaptive: false,
+            spec_draft: SpecDraft::Model,
             prefill_chunk: 1,
             hardware: "h100".into(),
             admission: AdmissionKind::Fifo,
@@ -87,8 +129,9 @@ impl ServeConfig {
         let obj = root.as_obj().context("config root must be an object")?;
 
         let known = [
-            "preset", "policy", "batch_size", "spec_len", "prefill_chunk", "hardware",
-            "admission", "max_queue", "ep", "addr", "seed", "max_new_tokens",
+            "preset", "policy", "batch_size", "spec_len", "spec_adaptive", "spec_draft",
+            "prefill_chunk", "hardware", "admission", "max_queue", "ep", "addr", "seed",
+            "max_new_tokens",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -109,6 +152,13 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("spec_len") {
             cfg.spec_len = v.as_usize().context("spec_len")?;
+        }
+        if let Some(v) = root.get("spec_adaptive") {
+            cfg.spec_adaptive = v.as_bool().context("spec_adaptive")?;
+        }
+        if let Some(v) = root.get("spec_draft") {
+            cfg.spec_draft = SpecDraft::parse(v.as_str().context("spec_draft")?)
+                .map_err(anyhow::Error::msg)?;
         }
         if let Some(v) = root.get("prefill_chunk") {
             cfg.prefill_chunk = v.as_usize().context("prefill_chunk")?;
@@ -160,6 +210,12 @@ impl ServeConfig {
         if args.has("spec-len") {
             self.spec_len = args.usize_or("spec-len", self.spec_len);
         }
+        if args.bool("spec-adaptive") {
+            self.spec_adaptive = true;
+        }
+        if let Some(v) = args.get("spec-draft") {
+            self.spec_draft = SpecDraft::parse(v).map_err(anyhow::Error::msg)?;
+        }
         if args.has("prefill-chunk") {
             self.prefill_chunk = args.usize_or("prefill-chunk", self.prefill_chunk);
         }
@@ -197,6 +253,9 @@ impl ServeConfig {
         }
         if self.batch_size * (1 + self.spec_len) > 1024 {
             bail!("effective batch {} too large", self.batch_size * (1 + self.spec_len));
+        }
+        if self.spec_adaptive && self.spec_len == 0 {
+            bail!("--spec-adaptive needs speculation on (spec_len ≥ 1)");
         }
         if self.prefill_chunk == 0 {
             bail!("prefill_chunk must be ≥ 1 (1 = one-token-per-step prefill)");
@@ -325,6 +384,44 @@ mod tests {
         let cfg = ServeConfig::default().apply_args(&args).unwrap();
         assert_eq!(cfg.prefill_chunk, 16);
         let bad = Args::parse("--prefill-chunk 0".split_whitespace().map(String::from));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn spec_adaptive_and_draft_roundtrip_and_validation() {
+        // defaults: uniform depth, model draft — the legacy behaviour
+        let d = ServeConfig::default();
+        assert!(!d.spec_adaptive);
+        assert_eq!(d.spec_draft, SpecDraft::Model);
+
+        let p = write_tmp(
+            "spec.json",
+            r#"{"spec_len":3,"spec_adaptive":true,"spec_draft":"lookup"}"#,
+        );
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert!(cfg.spec_adaptive);
+        assert_eq!(cfg.spec_draft, SpecDraft::Lookup);
+
+        // adaptive depth without speculation is a config error
+        let bad = write_tmp("spec_bad.json", r#"{"spec_adaptive":true}"#);
+        let err = ServeConfig::from_json_file(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("spec-adaptive"));
+
+        // unknown draft source fails loudly
+        let bad = write_tmp("spec_bad2.json", r#"{"spec_draft":"oracle"}"#);
+        assert!(ServeConfig::from_json_file(&bad).is_err());
+
+        let args = Args::parse(
+            "--spec-len 2 --spec-adaptive --spec-draft ngram"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert!(cfg.spec_adaptive);
+        assert_eq!(cfg.spec_draft, SpecDraft::Lookup);
+        assert_eq!(SpecDraft::Lookup.to_string(), "lookup");
+        let bad =
+            Args::parse("--spec-adaptive".split_whitespace().map(String::from));
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 

@@ -173,6 +173,10 @@ pub struct QueuedEntry {
     /// Absolute TTFT deadline on the sim clock, from
     /// [`Request::deadline_ms`].
     pub deadline_sim: Option<f64>,
+    /// Admissions this entry has been passed over for (its queue-wait
+    /// measured in frees, which is scale-free where sim-seconds are not).
+    /// Drives the [`aging_bonus`] starvation guard.
+    pub skipped: u64,
 }
 
 /// What a policy may look at when choosing the next admission.
@@ -258,6 +262,25 @@ impl AdmissionPolicy for SloEdf {
     }
 }
 
+/// Frees after which a passed-over entry's aging bonus fully dominates any
+/// possible overlap advantage, forcing its admission. The starvation bound
+/// is `queue depth at submission + O(STARVATION_HORIZON)` frees.
+pub const STARVATION_HORIZON: u64 = 16;
+
+/// Queue-wait-scaled aging bonus added to [`admission_score`] under
+/// footprint admission. The wait is measured in *frees the entry lost*
+/// (scale-free, unlike sim-seconds, so the bound holds on any cost model).
+/// `admission_score` lives in `[-top_k, top_k]` (overlap minus the EP
+/// MaxLoad penalty), so once an entry has been skipped
+/// [`STARVATION_HORIZON`] more times than a competitor its bonus exceeds
+/// the whole score range and no overlap advantage can outrank it —
+/// minority traffic classes cannot starve under sustained skew. Entries
+/// that aged together keep their relative base-score order (a burst
+/// backlog gets identical bonuses, leaving co-scheduling untouched).
+pub fn aging_bonus(skipped: u64, top_k: usize) -> f64 {
+    skipped as f64 * (2.0 * top_k as f64 + 1.0) / STARVATION_HORIZON as f64
+}
+
 /// Greedy expected-overlap co-scheduling (EP-aware when placed).
 pub struct FootprintAware;
 
@@ -280,18 +303,29 @@ impl AdmissionPolicy for FootprintAware {
             return Some(0);
         }
         let mut best: Option<(usize, f64)> = None;
+        let mut any_informative = false;
         for (i, e) in queue.iter().enumerate() {
-            let predicted = match tracker.predict(&e.req) {
-                Some(fp) => fp.top_set(ctx.top_k),
-                None => continue, // unknown class: no prediction, FIFO fallback
+            // Unknown classes score a neutral 0 base instead of being
+            // skipped outright — with the aging bonus they are guaranteed
+            // admission too, where the old FIFO fallback could starve
+            // them for as long as informative competitors kept arriving.
+            let base = match tracker.predict(&e.req) {
+                Some(fp) => {
+                    any_informative = true;
+                    admission_score(&fp.top_set(ctx.top_k), &union, ctx.placement)
+                }
+                None => 0.0,
             };
-            let score = admission_score(&predicted, &union, ctx.placement);
+            let score = base + aging_bonus(e.skipped, ctx.top_k);
             // strictly-greater keeps the earliest seq_no on ties
             if best.map(|(_, s)| score > s).unwrap_or(true) {
                 best = Some((i, score));
             }
         }
         // If no queued entry has an informative prediction, stay FIFO.
+        if !any_informative {
+            return Some(0);
+        }
         Some(best.map(|(i, _)| i).unwrap_or(0))
     }
 }
@@ -348,16 +382,24 @@ impl AdmissionQueue {
             submit_sim: now_sim,
             seq_no: self.next_seq,
             deadline_sim,
+            skipped: 0,
         };
         self.next_seq += 1;
         self.entries.push_back(entry);
         Ok(())
     }
 
-    /// Remove and return the entry the policy wants admitted next.
+    /// Remove and return the entry the policy wants admitted next. Every
+    /// entry passed over ages by one free (the starvation-guard clock).
     pub fn pop_next(&mut self, ctx: &AdmissionContext) -> Option<QueuedEntry> {
         let idx = self.policy.pick(&self.entries, ctx)?;
-        self.entries.remove(idx)
+        let popped = self.entries.remove(idx);
+        if popped.is_some() {
+            for e in self.entries.iter_mut() {
+                e.skipped += 1;
+            }
+        }
+        popped
     }
 }
 
@@ -644,6 +686,70 @@ mod tests {
         let picked = q.pop_next(&c).unwrap();
         assert_eq!(picked.req.id, 2, "same-class request must jump the queue");
         assert_eq!(q.pop_next(&c).unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn aging_bonus_dominates_overlap_after_horizon() {
+        let top_k = 4;
+        // within the horizon, a full-overlap fresh entry still outranks an
+        // aged zero-overlap one …
+        assert!(aging_bonus(1, top_k) < top_k as f64);
+        // … but STARVATION_HORIZON extra skips clear the whole score range
+        // (overlap ∈ [-k, k]), so -k + bonus > +k for the aged entry.
+        let bonus = aging_bonus(STARVATION_HORIZON, top_k);
+        assert!(-(top_k as f64) + bonus > top_k as f64);
+        // equal ages cancel: a burst backlog keeps its base-score order
+        assert_eq!(aging_bonus(7, top_k), aging_bonus(7, top_k));
+    }
+
+    #[test]
+    fn starving_minority_class_eventually_admitted() {
+        // Sustained skew: an "a"-class row runs forever and "a" requests
+        // keep arriving, each overlapping the running batch perfectly. A
+        // single "b" request must still be admitted within a bounded
+        // number of frees (pre-guard behaviour: never).
+        let n_experts = 8;
+        let mut tracker = FootprintTracker::new(n_experts, 2);
+        let mk = |id: u64, domain: &str| {
+            let mut r = req(id);
+            r.domain = domain.into();
+            r
+        };
+        let runner = mk(1000, "a");
+        tracker.on_admit(0, &runner);
+        tracker.observe_row(0, &[0.5, 0.4, 0.02, 0.02, 0.02, 0.02, 0.01, 0.01]);
+        let b_probe = mk(1001, "b");
+        tracker.on_admit(1, &b_probe);
+        tracker.observe_row(1, &[0.01, 0.01, 0.02, 0.02, 0.02, 0.02, 0.4, 0.5]);
+        tracker.release(1);
+
+        let mut q = AdmissionQueue::new(AdmissionKind::FootprintAware, 0);
+        q.submit(mk(0, "b"), 0.0).unwrap(); // the minority request
+        let running = vec![0usize];
+        let mut next_id = 1u64;
+        let mut frees = 0u64;
+        loop {
+            // adversary: a fresh same-class competitor before every free
+            q.submit(mk(next_id, "a"), 0.0).unwrap();
+            next_id += 1;
+            let ctx = AdmissionContext {
+                now_sim: frees as f64,
+                tracker: Some(&tracker),
+                running_slots: &running,
+                placement: None,
+                top_k: 2,
+            };
+            let picked = q.pop_next(&ctx).unwrap();
+            frees += 1;
+            if picked.req.id == 0 {
+                break;
+            }
+            assert!(
+                frees <= 2 * STARVATION_HORIZON + 2,
+                "minority request starved for {frees} frees"
+            );
+        }
+        assert!(frees > 1, "guard must not preempt a genuinely better batch at once");
     }
 
     #[test]

@@ -19,4 +19,7 @@ pub use fidelity::{compare, Fidelity};
 pub use request::{Phase, Request, SeqState};
 pub use scheduler::Scheduler;
 pub use serve_loop::{RunReport, ServeLoop, StepOutcome};
-pub use speculative::{effective_batch_scores, greedy_accept};
+pub use speculative::{
+    effective_batch_scores, effective_batch_scores_ragged, greedy_accept, lookup_draft,
+    SpecDepthController,
+};

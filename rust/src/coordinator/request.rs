@@ -14,6 +14,10 @@ pub struct Request {
     /// TTFT deadline in milliseconds from submission, for `edf` admission
     /// and deadline-miss accounting. `None` = no SLO.
     pub deadline_ms: Option<u64>,
+    /// Opt-in streaming (wire: `"stream": true`): the server emits a delta
+    /// frame per step that commits tokens for this request, then the usual
+    /// final reply. Non-streaming requests are byte-unchanged on the wire.
+    pub stream: bool,
 }
 
 impl Request {
@@ -25,17 +29,43 @@ impl Request {
             max_new_tokens,
             priority: 0,
             deadline_ms: None,
+            stream: false,
         }
     }
 }
 
-/// Phase of a sequence occupying a slot.
+/// Phase of a sequence occupying a slot — the per-row state machine the
+/// phase-partitioned executor drives:
+///
+/// ```text
+///   PrefillChunk ──prompt exhausted──▶ Decode ◀──────────────┐
+///                                        │ begin_spec(depth) │ end-of-cycle
+///                                        ▼                   │
+///                                  SpecVerify { depth } ──────┘
+/// ```
+///
+/// `PrefillChunk` covers both the one-token-per-step walk and multi-token
+/// chunk advances (the chunk size is an execution detail, not a phase).
+/// `SpecVerify` is entered for the duration of one speculative verify
+/// cycle at a **per-row** depth — rows at depth 0 ride the verify forward
+/// as plain one-token decodes, which is what lets a mixed-phase batch
+/// speculate at all.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
-    /// Feeding prompt tokens (one per step — decode-style prefill).
-    Prefill,
-    /// Generating new tokens.
+    /// Feeding prompt tokens (one token or one chunk per step).
+    PrefillChunk,
+    /// Generating new tokens, one per step.
     Decode,
+    /// Mid speculative verify cycle with `depth` drafted tokens in flight
+    /// for this row (0 = riding the verify forward without drafts).
+    SpecVerify { depth: usize },
+}
+
+impl Phase {
+    /// Whether the row is still consuming its prompt.
+    pub fn is_prefill(&self) -> bool {
+        matches!(self, Phase::PrefillChunk)
+    }
 }
 
 /// A sequence bound to a batch slot.
@@ -63,12 +93,34 @@ impl SeqState {
             prompt_idx: 0,
             generated: Vec::new(),
             next_token: first,
-            phase: Phase::Prefill,
+            phase: Phase::PrefillChunk,
         }
     }
 
     pub fn is_done(&self) -> bool {
-        self.phase == Phase::Decode && self.generated.len() >= self.req.max_new_tokens
+        !self.phase.is_prefill() && self.generated.len() >= self.req.max_new_tokens
+    }
+
+    /// Enter a speculative verify cycle at the given per-row depth. Only a
+    /// decoding row can speculate; the executor calls [`SeqState::end_spec`]
+    /// after the cycle's commits.
+    pub fn begin_spec(&mut self, depth: usize) {
+        debug_assert_eq!(self.phase, Phase::Decode, "only decode rows speculate");
+        self.phase = Phase::SpecVerify { depth };
+    }
+
+    /// Leave the verify cycle (back to plain decode).
+    pub fn end_spec(&mut self) {
+        debug_assert!(matches!(self.phase, Phase::SpecVerify { .. }));
+        self.phase = Phase::Decode;
+    }
+
+    /// Depth of the in-flight verify cycle, if the row is in one.
+    pub fn spec_depth(&self) -> Option<usize> {
+        match self.phase {
+            Phase::SpecVerify { depth } => Some(depth),
+            _ => None,
+        }
     }
 
     /// Remaining budget of new tokens.
@@ -76,9 +128,9 @@ impl SeqState {
         self.req.max_new_tokens.saturating_sub(self.generated.len())
     }
 
-    /// Commit one generated token (decode phase).
+    /// Commit one generated token (decode or spec-verify phase).
     pub fn commit(&mut self, tok: u32) {
-        debug_assert_eq!(self.phase, Phase::Decode);
+        debug_assert!(!self.phase.is_prefill(), "commit during prefill");
         self.generated.push(tok);
         self.next_token = tok;
         self.pos += 1;
@@ -96,7 +148,7 @@ impl SeqState {
     /// prompt — identical to `n` one-token advances where only the final
     /// step's logits matter. Returns true when that first token committed.
     pub fn advance_prefill_by(&mut self, n: usize, logits_argmax: u32) -> bool {
-        debug_assert_eq!(self.phase, Phase::Prefill);
+        debug_assert_eq!(self.phase, Phase::PrefillChunk);
         assert!(
             n >= 1 && self.prompt_idx + n <= self.req.prompt.len(),
             "chunk of {n} overruns prompt ({} of {} consumed)",
@@ -132,7 +184,7 @@ mod tests {
     fn prefill_walks_prompt_then_decodes() {
         let req = Request::new(1, vec![10, 11, 12], 2);
         let mut s = SeqState::new(req);
-        assert_eq!(s.phase, Phase::Prefill);
+        assert_eq!(s.phase, Phase::PrefillChunk);
         assert_eq!(s.next_token, 10);
         assert!(!s.advance_prefill(99));
         assert_eq!(s.next_token, 11);
@@ -160,7 +212,7 @@ mod tests {
             b.advance_prefill(99);
         }
         assert_eq!((a.pos, a.prompt_idx, a.next_token), (b.pos, b.prompt_idx, b.next_token));
-        assert_eq!(a.phase, Phase::Prefill);
+        assert_eq!(a.phase, Phase::PrefillChunk);
         assert_eq!(a.prompt_remaining(), 2);
         // final chunk commits the predicted token
         assert!(a.advance_prefill_by(2, 42));
@@ -174,6 +226,24 @@ mod tests {
     fn chunked_advance_rejects_overrun() {
         let mut s = SeqState::new(Request::new(1, vec![1, 2], 1));
         s.advance_prefill_by(3, 0);
+    }
+
+    #[test]
+    fn spec_phase_roundtrip() {
+        let mut s = SeqState::new(Request::new(1, vec![1], 3));
+        assert!(s.advance_prefill(5));
+        assert_eq!(s.spec_depth(), None);
+        s.begin_spec(2);
+        assert_eq!(s.phase, Phase::SpecVerify { depth: 2 });
+        assert_eq!(s.spec_depth(), Some(2));
+        assert!(!s.phase.is_prefill());
+        // commits are legal mid-verify; budget exhaustion is observable
+        // before end_spec (the executor releases the slot from SpecVerify)
+        s.commit(7);
+        s.commit(8);
+        assert!(s.is_done());
+        s.end_spec();
+        assert_eq!(s.phase, Phase::Decode);
     }
 
     #[test]

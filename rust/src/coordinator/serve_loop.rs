@@ -1,68 +1,86 @@
-//! The incrementally-stepped serving core: continuous batching, the
-//! speculative verify cycle, per-layer expert selection and cost accounting.
-//! This is the L3 "leader" loop — everything on the request path runs here,
-//! in rust.
+//! The incrementally-stepped serving core: continuous batching, per-row
+//! phase machines, the ragged speculative verify cycle, per-layer expert
+//! selection and cost accounting. This is the L3 "leader" loop —
+//! everything on the request path runs here, in rust.
 //!
 //! Unlike the old monolithic `Scheduler::run`, the loop is **step-scoped**:
 //! callers own the cadence. [`ServeLoop::submit`] enqueues a request at any
 //! time; every [`ServeLoop::step`] first admits queued requests into free
-//! batch slots and then runs one decode/spec-verify cycle, so work that
-//! arrives mid-flight joins the very next step instead of waiting for the
-//! whole batch to drain. Finished sequences are surfaced in the returned
-//! [`StepOutcome`] the moment their slot releases. [`ServeLoop::drain`]
-//! (submit-all + step-until-done) reproduces the old batch-at-a-time
-//! behaviour byte-for-byte — the `Scheduler` wrapper in
+//! batch slots and then runs one phase-partitioned execution cycle, so work
+//! that arrives mid-flight joins the very next step instead of waiting for
+//! the whole batch to drain. Finished sequences are surfaced in the
+//! returned [`StepOutcome`] the moment their slot releases.
+//! [`ServeLoop::drain`] (submit-all + step-until-done) reproduces the old
+//! batch-at-a-time behaviour byte-for-byte — the `Scheduler` wrapper in
 //! [`super::scheduler`] is exactly that.
+//!
+//! ## Per-row phase machines (PR 4)
+//!
+//! Every slot carries an explicit [`Phase`]: `PrefillChunk` (consuming its
+//! prompt, one token or one chunk per step), `Decode`, or
+//! `SpecVerify { depth }` for the duration of a verify cycle. One step
+//! executes all phases side by side:
+//!
+//!  * chunk-eligible prefill rows advance through the prefill artifact;
+//!  * the remaining rows ("riders") share one forward — a plain decode
+//!    forward when no row speculates, or a **ragged verify** when any
+//!    decoding row has draft depth > 0. Non-speculating riders (one-token
+//!    prefill rows, decode rows at depth 0) ride the verify forward parked
+//!    on their own (token, position) — the `catch_up` harmless-rewrite
+//!    idiom generalized from chunk rows to every short row — and commit
+//!    exactly one token from sub-step 0;
+//!  * each row commits independently and flips phase on its own schedule.
+//!
+//! The old batch-global gate (`speculative = spec_len > 0 && prefill_rows
+//! == 0`) is gone: a chunk-prefilling row no longer switches speculation
+//! off for the whole batch, which under Poisson arrivals with long prompts
+//! used to keep speculation off most of the time.
+//! [`ServeLoop::set_legacy_spec_gate`] restores the old gate for benches
+//! and byte-identity pins.
 //!
 //! ## Speculative verify emulation (DESIGN.md §4)
 //!
-//! The compiled decode-step artifact advances one token per row, so a verify
-//! forward over B×(1+L_s) tokens is emulated in two passes of (1+L_s)
-//! sub-steps each:
+//! The compiled decode-step artifact advances one token per row, so a
+//! verify forward over B×(1+max_depth) tokens is emulated in two passes of
+//! (1+max_depth) sub-steps each:
 //!
 //!  * **pass 1 (scoring)**: vanilla routing, records every layer's gate
 //!    scores for all verify tokens — the effective-batch G^{(l)};
 //!  * **selection**: the policy picks S_l once per layer from those scores
-//!    (with per-request grouping, exactly Algorithm 4's input);
+//!    with per-request grouping at each row's TRUE depth (rows beyond their
+//!    depth contribute nothing to selection), and — under `--spec-adaptive`
+//!    — each row's speculative positions weighted by its class's
+//!    acceptance prior (Algorithm 4's input, ragged);
 //!  * **pass 2 (restricted)**: re-runs the sub-steps with every layer
 //!    restricted to S_l; its logits drive acceptance and its KV writes are
-//!    the ones that persist (positions beyond the accepted prefix are
-//!    garbage-but-masked, verified by the kernel tests).
+//!    the ones that persist. A rider parked beyond its depth re-feeds its
+//!    own next (token, position), which rewrites byte-identical KV —
+//!    verified by the kernel masking tests plus the depth-0 byte-identity
+//!    pin in `rust/tests/spec_mixed_phase.rs`.
 //!
-//! The cost model charges one draft step per speculative token plus ONE
-//! target forward over the effective batch — the two passes are an artifact
-//! of the one-token-per-row compilation, not of the system being modeled.
+//! The cost model charges ONE target forward over the **padded** ragged
+//! batch (riders × (1 + max in-use depth) tokens — shrinking one row below
+//! the max saves activation, not padding) plus draft cost from the TRUE
+//! per-row depths ([`DecodeCostModel::draft_cost`]); the two passes are an
+//! artifact of the one-token-per-row compilation, not of the system being
+//! modeled.
 //!
-//! ## Chunked prefill (PR 2)
+//! ## Adaptive depth & draft sources
 //!
-//! With `prefill_chunk > 1`, rows in prefill phase advance by up to a whole
-//! chunk of prompt tokens per step through the `prefill_attn_router`
-//! artifact ([`MoeModel::prefill_chunk`]) while the remaining rows run one
-//! ordinary decode forward; the cost model charges each chunk as one target
-//! forward over its true token count, which amortizes the per-layer weight
-//! stream and cuts TTFT. Chunk rows are parked on their next (token,
-//! position) inside the decode forward — a harmless write the chunk then
-//! overwrites — and the draft shadows every chunk token so spec cycles stay
-//! aligned. Speculation remains gated on `prefill_rows == 0`, chunked or
-//! not. Chunking never changes a request's own prefill routing (the policy
-//! runs per chunk position), so a request's outputs are byte-identical to
-//! the one-token walk under every policy when served solo, and under
-//! row-independent policies in any mix (`rust/tests/prefill_equivalence.rs`).
-//! Batch-coupled policies (batch/spec/gpu-aware) still see each step's
-//! batch composition, which chunking — exactly like admission timing —
-//! alters for concurrently decoding rows.
+//! With `--spec-adaptive`, a per-traffic-class acceptance EMA
+//! ([`SpecDepthController`], class keys shared with [`FootprintTracker`])
+//! shrinks or grows each row's draft depth within `[0, spec_len]`, and the
+//! class prior weights the row's speculative positions in selection. The
+//! draft source is pluggable (`--spec-draft`): the dense draft model
+//! (default), or n-gram lookup over the row's own history
+//! ([`super::speculative::lookup_draft`]) which drafts for free.
 //!
-//! ## Pluggable admission (PR 3)
+//! ## Chunked prefill (PR 2) and pluggable admission (PR 3)
 //!
-//! Which queued request takes a freed slot is decided by the
-//! [`super::admission`] subsystem: `step()` fills free slots one policy
-//! pick at a time (FIFO by default — byte-identical to the legacy
-//! hard-coded queue — or priority / EDF / footprint-aware co-scheduling),
-//! and [`ServeLoop::submit`] applies bounded-queue backpressure with typed
-//! [`SubmitError`]s that the TCP worker converts into protocol error
-//! replies. Under footprint admission every forward's router probabilities
-//! feed decayed per-slot and per-class footprints ([`FootprintTracker`]),
-//! which is what queued requests are scored against.
+//! Unchanged in substance: chunk rows advance by up to a whole chunk per
+//! step through the `prefill_attn_router` artifact while parked in the
+//! shared forward; admission is decided by [`super::admission`], with
+//! bounded-queue backpressure and typed [`SubmitError`]s.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -74,12 +92,16 @@ use super::admission::{
 };
 use super::batcher::Batcher;
 use super::request::{Phase, Request};
-use super::speculative::{effective_batch_scores, greedy_accept};
-use crate::config::ServeConfig;
+use super::speculative::{
+    effective_batch_scores_ragged, greedy_accept, lookup_draft, SpecDepthController,
+};
+use crate::config::{ServeConfig, SpecDraft};
 use crate::ep::{EpCostModel, Placement};
 use crate::memsim::{CostGeometry, DecodeCostModel, HardwareProfile};
 use crate::metrics::ServeMetrics;
-use crate::model::{argmax, MoeModel, PrefillInput, RoutingMode, StepInput};
+use crate::model::{
+    argmax, DraftRunner, MoeModel, PrefillInput, RoutingMode, StepInput,
+};
 use crate::selection::{
     admission_score, baselines::Vanilla, ExpertSet, ScoreMatrix, SelectionPolicy,
 };
@@ -103,7 +125,7 @@ pub struct StepOutcome {
     pub finished: Vec<(u64, Vec<u32>)>,
     /// Live rows that were in prefill phase when the step ran.
     pub prefill_rows: usize,
-    /// Live rows that were in decode phase when the step ran.
+    /// Live rows that were decoding (plain or spec-verify) this step.
     pub decode_rows: usize,
     /// GENERATED tokens committed across all rows this step. Prompt
     /// advances are counted in [`StepOutcome::prefill_tokens`], never here
@@ -114,12 +136,35 @@ pub struct StepOutcome {
     pub prefill_tokens: u64,
     /// Simulated cost of this step, seconds.
     pub sim_seconds: f64,
-    /// Whether this step ran a speculative verify cycle.
-    pub speculative: bool,
+    /// Per-row phase report: (slot, request id, phase the row executed
+    /// this step). Replaces the old batch-global `speculative` flag —
+    /// phases are per row now; [`StepOutcome::speculative`] derives the
+    /// old batch-level view.
+    pub phases: Vec<(usize, u64, Phase)>,
+    /// Generated tokens newly committed this step, per request id (a spec
+    /// commit can carry several at once). Streaming responses are cut
+    /// from exactly these.
+    pub deltas: Vec<(u64, Vec<u32>)>,
     /// Requests still waiting in the admission queue after this step.
     pub queued: usize,
     /// Sequences still occupying batch slots after this step.
     pub running: usize,
+}
+
+impl StepOutcome {
+    /// Whether this step ran a speculative verify cycle (any row was in
+    /// `SpecVerify` phase — including depth-0 riders of that cycle).
+    pub fn speculative(&self) -> bool {
+        self.phases.iter().any(|(_, _, p)| matches!(p, Phase::SpecVerify { .. }))
+    }
+
+    /// Per-row verify depth of `slot` this step, if it rode a verify.
+    pub fn spec_depth_of(&self, slot: usize) -> Option<usize> {
+        self.phases.iter().find_map(|&(s, _, p)| match p {
+            Phase::SpecVerify { depth } if s == slot => Some(depth),
+            _ => None,
+        })
+    }
 }
 
 /// Per-slot accounting carried from admission until the first generated
@@ -129,6 +174,37 @@ struct PendingTtft {
     submit_sim: f64,
     class: u32,
     deadline_sim: Option<f64>,
+}
+
+/// What the step-body helpers report upward: finished sequences, slots
+/// that committed their first generated token, per-request token deltas.
+#[derive(Debug, Default)]
+struct StepEvents {
+    finished: Vec<(u64, Vec<u32>)>,
+    first_token_slots: Vec<usize>,
+    deltas: Vec<(u64, Vec<u32>)>,
+}
+
+impl StepEvents {
+    fn absorb(&mut self, other: StepEvents) {
+        self.finished.extend(other.finished);
+        self.first_token_slots.extend(other.first_token_slots);
+        self.deltas.extend(other.deltas);
+    }
+}
+
+/// One decoding row's speculation plan for the current step.
+struct SpecPlan {
+    slot: usize,
+    /// True draft depth this cycle (≤ spec_len; lookup drafts may come up
+    /// short of the controller's depth).
+    depth: usize,
+    /// Lookup-drafted proposals (model drafts are generated in-cycle).
+    proposals: Vec<u32>,
+    /// Traffic class (acceptance EMA key).
+    class: String,
+    /// Acceptance prior weighting this row's speculative positions.
+    prior: f32,
 }
 
 /// The stepped serving core. Owns the model borrow, selection policy, cost
@@ -149,7 +225,16 @@ pub struct ServeLoop<'m> {
     metrics: ServeMetrics,
     outputs: BTreeMap<u64, Vec<u32>>,
     domains: BTreeMap<u64, String>,
-    draft: Option<DraftState>,
+    /// Dense draft model state (spec_draft = model only; lookup drafts
+    /// need no model, no cache and no shadow steps).
+    draft: Option<DraftRunner>,
+    /// Per-class acceptance EMAs driving adaptive depth (spec runs only).
+    depth_ctl: SpecDepthController,
+    /// Restore the pre-PR4 batch-global gate (speculate only when no
+    /// prefill row is live, uniform depth). Bench/pin instrumentation.
+    legacy_spec_gate: bool,
+    /// Pin every row's draft depth (bench/pin instrumentation).
+    forced_depth: Option<usize>,
     /// Per-slot TTFT/deadline state, pending until the first token commits.
     ttft_pending: Vec<Option<PendingTtft>>,
     started: Instant,
@@ -200,6 +285,9 @@ impl<'m> ServeLoop<'m> {
             outputs: BTreeMap::new(),
             domains: BTreeMap::new(),
             draft: None,
+            depth_ctl: SpecDepthController::new(0),
+            legacy_spec_gate: false,
+            forced_depth: None,
             ttft_pending: Vec::new(),
             started: Instant::now(),
         };
@@ -220,16 +308,37 @@ impl<'m> ServeLoop<'m> {
         self.domains.clear();
         self.ttft_pending = vec![None; b_max];
         self.model.reset();
-        self.draft = if self.cfg.spec_len > 0 {
-            Some(DraftState::new(
+        self.draft = if self.cfg.spec_len > 0 && self.cfg.spec_draft == SpecDraft::Model {
+            Some(DraftRunner::new(
                 crate::model::DraftModel::new(self.model.engine())?,
                 b_max,
             ))
         } else {
             None
         };
+        self.depth_ctl = SpecDepthController::new(self.cfg.spec_len);
         self.started = Instant::now();
         Ok(())
+    }
+
+    /// Restore the pre-PR4 batch-global speculation gate: verify cycles
+    /// only when NO prefill row is live. Instrumentation for benches
+    /// (quantifying the mixed-phase win) and byte-identity pins; never set
+    /// on the serving path.
+    pub fn set_legacy_spec_gate(&mut self, on: bool) {
+        self.legacy_spec_gate = on;
+    }
+
+    /// Pin every decoding row's draft depth (clamped to `[0, spec_len]`),
+    /// overriding the adaptive controller. `None` restores normal depth
+    /// assignment. Instrumentation for tests/benches (e.g. the
+    /// depth-0-everywhere ≡ non-speculative byte-identity pin).
+    ///
+    /// Under `spec_draft = lookup` the pin is a CEILING, not a guarantee:
+    /// a lookup draft proposes at most what the row's history matches, so
+    /// a non-repetitive row may still ride at a lower (even zero) depth.
+    pub fn force_spec_depth(&mut self, depth: Option<usize>) {
+        self.forced_depth = depth.map(|d| d.min(self.cfg.spec_len));
     }
 
     /// Enqueue a request. It joins the next `step()` if a slot is free.
@@ -295,8 +404,7 @@ impl<'m> ServeLoop<'m> {
     }
 
     /// One serving step: admit newly queued requests into free slots, then
-    /// run one decode step (or speculative verify cycle when all live rows
-    /// are in decode phase and speculation is on).
+    /// run one phase-partitioned execution cycle over the live rows.
     pub fn step(&mut self) -> Result<StepOutcome> {
         let wall0 = Instant::now();
         let sim_before = self.metrics.sim_seconds;
@@ -315,17 +423,51 @@ impl<'m> ServeLoop<'m> {
         }
 
         let prefill_rows =
-            slots.iter().filter(|&&s| self.batcher.seq(s).phase == Phase::Prefill).count();
+            slots.iter().filter(|&&s| self.batcher.seq(s).phase.is_prefill()).count();
         let decode_rows = slots.len() - prefill_rows;
-        // Spec-verify cycles need an all-decode batch; the gate is on the
-        // rows' phase, so a row mid-chunk-prefill keeps speculation off
-        // exactly like a one-token prefill row does.
-        let speculative = self.cfg.spec_len > 0 && prefill_rows == 0;
         let committed_before = self.metrics.tokens_out;
         let prompt_before = self.metrics.tokens_prompt;
 
-        let (finished, first_token_slots) = if speculative {
-            self.spec_cycle(&slots)?
+        // ---- speculation planning (per-row phase machines) --------------
+        // A verify cycle runs whenever any decoding row has draft depth > 0
+        // — prefill rows no longer gate it (unless the legacy gate is
+        // pinned on for a baseline run).
+        let gate_blocks = self.legacy_spec_gate && prefill_rows > 0;
+        let spec_plans = if self.cfg.spec_len > 0 && decode_rows > 0 && !gate_blocks {
+            self.plan_spec(&slots)
+        } else {
+            Vec::new()
+        };
+        let run_spec = spec_plans.iter().any(|p| p.depth > 0);
+        if self.cfg.spec_len > 0 && decode_rows > 0 && !run_spec {
+            // Speculation was desired (spec configured, decode rows live)
+            // but unavailable this step: the legacy gate stalled it, or
+            // every row's depth collapsed to 0.
+            self.metrics.spec_stalled_steps += 1;
+        }
+
+        // Phase snapshot BEFORE execution mutates row state: chunk/prefill
+        // rows report PrefillChunk, verify riders their per-row depth.
+        let mut phases = Vec::with_capacity(slots.len());
+        for &s in &slots {
+            let seq = self.batcher.seq(s);
+            let phase = if seq.phase.is_prefill() {
+                Phase::PrefillChunk
+            } else if run_spec {
+                let depth = spec_plans
+                    .iter()
+                    .find(|p| p.slot == s)
+                    .map(|p| p.depth)
+                    .unwrap_or(0);
+                Phase::SpecVerify { depth }
+            } else {
+                Phase::Decode
+            };
+            phases.push((s, seq.req.id, phase));
+        }
+
+        let events = if run_spec {
+            self.spec_mixed_step(&slots, spec_plans)?
         } else {
             self.serve_step(&slots)?
         };
@@ -336,13 +478,13 @@ impl<'m> ServeLoop<'m> {
 
         // Sim clock has advanced by this step's cost; TTFT counts it.
         let now = self.metrics.sim_seconds;
-        for s in first_token_slots {
+        for s in events.first_token_slots {
             if let Some(p) = self.ttft_pending[s].take() {
                 let missed = p.deadline_sim.map(|d| now > d);
                 self.metrics.record_ttft(now - p.submit_sim, p.class, missed);
             }
         }
-        for (id, tokens) in &finished {
+        for (id, tokens) in &events.finished {
             self.outputs.insert(*id, tokens.clone());
         }
         self.metrics.requests_done = self.outputs.len() as u64;
@@ -350,16 +492,75 @@ impl<'m> ServeLoop<'m> {
 
         Ok(StepOutcome {
             admitted,
-            finished,
+            finished: events.finished,
             prefill_rows,
             decode_rows,
             committed: self.metrics.tokens_out - committed_before,
             prefill_tokens,
             sim_seconds: self.metrics.sim_seconds - sim_before,
-            speculative,
+            phases,
+            deltas: events.deltas,
             queued: self.queue.len(),
             running: self.batcher.running(),
         })
+    }
+
+    /// Per-row draft depth assignment for this step's decoding rows:
+    /// forced depth (instrumentation) > adaptive per-class depth >
+    /// uniform `spec_len`. Under `--spec-adaptive` the depth is also
+    /// capped at `remaining − 1` (drafting past a row's budget is pure
+    /// waste); the non-adaptive path keeps the legacy uncapped behaviour
+    /// byte-for-byte. Lookup drafts are generated here (they are free and
+    /// determine the row's true depth); model drafts run in-cycle.
+    fn plan_spec(&mut self, slots: &[usize]) -> Vec<SpecPlan> {
+        let mut plans = Vec::new();
+        // One controller consultation per CLASS per step: rows of the same
+        // class share a depth, and the probe clock ticks per verify cycle,
+        // not per live row.
+        let mut class_depths: BTreeMap<String, usize> = BTreeMap::new();
+        for &s in slots {
+            let seq = self.batcher.seq(s);
+            if seq.phase != Phase::Decode {
+                continue;
+            }
+            let class = FootprintTracker::class_key(&seq.req);
+            let mut depth = match self.forced_depth {
+                Some(d) => d,
+                None if self.cfg.spec_adaptive => match class_depths.get(&class).copied() {
+                    Some(d) => d,
+                    None => {
+                        let d = self.depth_ctl.depth_for(&class);
+                        class_depths.insert(class.clone(), d);
+                        d
+                    }
+                },
+                None => self.cfg.spec_len,
+            };
+            depth = depth.min(self.cfg.spec_len);
+            if self.forced_depth.is_none() && self.cfg.spec_adaptive {
+                depth = depth.min(seq.remaining().saturating_sub(1));
+            }
+            let proposals = match self.cfg.spec_draft {
+                SpecDraft::Model => Vec::new(),
+                SpecDraft::Lookup => {
+                    let mut hist =
+                        Vec::with_capacity(seq.prompt_idx + seq.generated.len());
+                    hist.extend_from_slice(&seq.req.prompt[..seq.prompt_idx]);
+                    hist.extend_from_slice(&seq.generated);
+                    debug_assert_eq!(*hist.last().unwrap(), seq.next_token);
+                    let p = lookup_draft(&hist, depth);
+                    depth = p.len(); // ragged: the lookup may come up short
+                    p
+                }
+            };
+            let prior = if self.cfg.spec_adaptive {
+                self.depth_ctl.prior(&class)
+            } else {
+                1.0
+            };
+            plans.push(SpecPlan { slot: s, depth, proposals, class, prior });
+        }
+        plans
     }
 
     /// Fill free batch slots from the admission queue, one policy pick at a
@@ -425,6 +626,12 @@ impl<'m> ServeLoop<'m> {
         if let Some(tr) = &mut self.tracker {
             tr.release(slot);
         }
+        // A pending draft lag dies with the sequence: the next occupant
+        // starts at pos 0 and must not inherit a catch-up debt (stale lag
+        // would feed `pos − 1` — an underflow — on a fresh prefill rider).
+        if let Some(d) = self.draft.as_mut() {
+            d.set_lag(slot, None);
+        }
         self.batcher.release(slot)
     }
 
@@ -474,45 +681,45 @@ impl<'m> ServeLoop<'m> {
         }
     }
 
+    /// Rows taking the chunked-prefill path this step. The chunk artifact
+    /// slices a fixed `cap`-wide cache window, so rows whose window would
+    /// overhang `max_seq` finish their prompt one token per step instead;
+    /// single-token advances (one-token tails, 1-token prompts) ride the
+    /// shared forward — a dedicated chunk forward for one token would cost
+    /// MORE than the legacy path.
+    fn chunk_plans(&self, slots: &[usize]) -> Vec<ChunkPlan> {
+        if self.cfg.prefill_chunk <= 1 {
+            return Vec::new();
+        }
+        let cap = self.model.prefill_capacity();
+        let max_seq = self.model.dims().max_seq;
+        slots
+            .iter()
+            .filter_map(|&s| {
+                let seq = self.batcher.seq(s);
+                if !seq.phase.is_prefill() || seq.pos + cap > max_seq {
+                    return None;
+                }
+                let n = self.cfg.prefill_chunk.min(seq.prompt_remaining());
+                if n < 2 {
+                    return None;
+                }
+                Some(ChunkPlan {
+                    slot: s,
+                    start: seq.pos,
+                    tokens: seq.req.prompt[seq.prompt_idx..seq.prompt_idx + n].to_vec(),
+                })
+            })
+            .collect()
+    }
+
     /// One non-speculative serving step. With `prefill_chunk > 1`, rows in
     /// prefill phase advance by up to a whole chunk through the prefill
     /// artifact while the remaining rows run one ordinary decode step; with
     /// the default chunk of 1 this is byte-identical to the legacy
     /// one-token-per-step path.
-    fn serve_step(
-        &mut self,
-        slots: &[usize],
-    ) -> Result<(Vec<(u64, Vec<u32>)>, Vec<usize>)> {
-        let cap = self.model.prefill_capacity();
-        let max_seq = self.model.dims().max_seq;
-        // Rows taking the chunked path this step. The chunk artifact slices
-        // a fixed `cap`-wide cache window, so rows whose window would
-        // overhang `max_seq` finish their prompt one token per step
-        // instead; single-token advances (one-token tails, 1-token prompts)
-        // ride the shared decode forward below — a dedicated chunk forward
-        // for one token would cost MORE than the legacy path.
-        let mut plans: Vec<ChunkPlan> = if self.cfg.prefill_chunk > 1 {
-            slots
-                .iter()
-                .filter_map(|&s| {
-                    let seq = self.batcher.seq(s);
-                    if seq.phase != Phase::Prefill || seq.pos + cap > max_seq {
-                        return None;
-                    }
-                    let n = self.cfg.prefill_chunk.min(seq.prompt_remaining());
-                    if n < 2 {
-                        return None;
-                    }
-                    Some(ChunkPlan {
-                        slot: s,
-                        start: seq.pos,
-                        tokens: seq.req.prompt[seq.prompt_idx..seq.prompt_idx + n].to_vec(),
-                    })
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
+    fn serve_step(&mut self, slots: &[usize]) -> Result<StepEvents> {
+        let mut plans = self.chunk_plans(slots);
         if plans.is_empty() {
             return self.plain_step(slots, &[]);
         }
@@ -523,22 +730,40 @@ impl<'m> ServeLoop<'m> {
             .filter(|s| !plans.iter().any(|p| p.slot == *s))
             .collect();
 
-        let mut finished = Vec::new();
-        let mut first_token_slots = Vec::new();
+        let mut events = StepEvents::default();
         if !rest.is_empty() {
             // Park each chunk row at (first chunk token, its position): the
             // decode step's cache write there is overwritten by the chunk
             // below, and the draft shadow of the park IS the chunk's first
-            // shadow token — the same harmless-rewrite idiom as
-            // `DraftState::catch_up`.
+            // shadow token — the same harmless-rewrite idiom the ragged
+            // verify uses for every short row.
             let park: Vec<(usize, u32, usize)> =
                 plans.iter().map(|p| (p.slot, p.tokens[0], p.start)).collect();
-            let (f, fts) = self.plain_step(&rest, &park)?;
-            finished.extend(f);
-            first_token_slots.extend(fts);
+            events.absorb(self.plain_step(&rest, &park)?);
         }
 
-        for plan in &mut plans {
+        events.absorb(self.run_chunk_plans(&mut plans)?);
+
+        // The draft shadows every chunk token so its cache stays aligned
+        // for upcoming spec cycles. Token 0 of each chunk was shadowed by
+        // the decode sub-step's park when one ran.
+        let shadow_from = if rest.is_empty() { 0 } else { 1 };
+        self.shadow_chunks(&plans, shadow_from)?;
+
+        Ok(events)
+    }
+
+    /// Advance every chunk plan through the prefill artifact (possibly
+    /// several invocations for chunks beyond the compiled capacity),
+    /// charge each invocation as one target forward over its true token
+    /// count, and commit prompt progress per row. Plans are truncated to
+    /// what the target actually consumed (max_seq-boundary tails continue
+    /// one token per step) so the draft shadow stays aligned.
+    fn run_chunk_plans(&mut self, plans: &mut [ChunkPlan]) -> Result<StepEvents> {
+        let cap = self.model.prefill_capacity();
+        let max_seq = self.model.dims().max_seq;
+        let mut events = StepEvents::default();
+        for plan in plans.iter_mut() {
             let mut consumed = 0usize;
             let mut last_logits: Option<Vec<f32>> = None;
             while consumed < plan.tokens.len() {
@@ -556,7 +781,7 @@ impl<'m> ServeLoop<'m> {
                 })?;
                 // One target forward over the true chunk geometry: n tokens
                 // amortize the per-layer weight stream — the TTFT lever.
-                let sim_s = self.charge_step(&out.activated, &out.selected, n, 0);
+                let sim_s = self.charge_step(&out.activated, &out.selected, n, 0.0);
                 self.metrics.record_prefill(&out.activated, sim_s, n as u64);
                 // Prompt-time router scores feed the row's footprint: every
                 // chunk position is one observation for the slot's EMA.
@@ -574,38 +799,32 @@ impl<'m> ServeLoop<'m> {
             plan.tokens.truncate(consumed);
             let am = argmax(&last_logits.expect("chunk ran at least once")) as u32;
             let seq = self.batcher.seq_mut(plan.slot);
+            let id = seq.req.id;
             if seq.advance_prefill_by(consumed, am) {
                 // the chunk's last logits committed the first GENERATED
                 // token; record_prefill only counted the prompt tokens
-                first_token_slots.push(plan.slot);
+                events.first_token_slots.push(plan.slot);
+                events.deltas.push((id, vec![am]));
                 self.metrics.tokens_out += 1;
             }
             if seq.is_done() {
                 let done = self.release_slot(plan.slot);
-                finished.push((done.req.id, done.generated));
+                events.finished.push((done.req.id, done.generated));
             }
         }
-
-        // The draft shadows every chunk token so its cache stays aligned
-        // for upcoming spec cycles. Token 0 of each chunk was shadowed by
-        // the decode sub-step's park when one ran.
-        let shadow_from = if rest.is_empty() { 0 } else { 1 };
-        self.shadow_chunks(&plans, shadow_from)?;
-
-        Ok((finished, first_token_slots))
+        Ok(events)
     }
 
     /// One ordinary continuous-batching step over `slots` (prefill and/or
     /// decode rows, one token each). `park` entries pin rows OUTSIDE
     /// `slots` to a (token, position) that a chunk invocation will
     /// overwrite this same step, keeping their target/draft caches clear of
-    /// the pos-0 garbage padded rows otherwise receive. Returns finished
-    /// sequences and the slots that committed their first generated token.
+    /// the pos-0 garbage padded rows otherwise receive.
     fn plain_step(
         &mut self,
         slots: &[usize],
         park: &[(usize, u32, usize)],
-    ) -> Result<(Vec<(u64, Vec<u32>)>, Vec<usize>)> {
+    ) -> Result<StepEvents> {
         let b_max = self.model.max_batch();
         let vocab = self.model.dims().vocab;
         let mut tokens = vec![0i32; b_max];
@@ -648,37 +867,42 @@ impl<'m> ServeLoop<'m> {
         let logits = out.logits.as_f32()?;
         let mut committed = 0u64;
         let mut prompt_consumed = 0u64;
-        let mut finished = Vec::new();
-        let mut first_token_slots = Vec::new();
+        let mut events = StepEvents::default();
         for &s in slots {
             let am = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
             let seq = self.batcher.seq_mut(s);
+            let id = seq.req.id;
             let was_unstarted = seq.generated.is_empty();
             match seq.phase {
-                Phase::Prefill => {
+                Phase::PrefillChunk => {
                     prompt_consumed += 1;
                     if seq.advance_prefill(am) {
                         committed += 1;
+                        events.deltas.push((id, vec![am]));
                     }
                 }
                 Phase::Decode => {
                     seq.commit(am);
                     committed += 1;
+                    events.deltas.push((id, vec![am]));
+                }
+                Phase::SpecVerify { .. } => {
+                    unreachable!("verify rows never take the plain path")
                 }
             }
             if was_unstarted && !seq.generated.is_empty() {
-                first_token_slots.push(s);
+                events.first_token_slots.push(s);
             }
             if seq.is_done() {
                 let done = self.release_slot(s);
-                finished.push((done.req.id, done.generated));
+                events.finished.push((done.req.id, done.generated));
             }
         }
 
-        let sim_s = self.charge_step(&out.activated, &out.selected, slots.len(), 0);
+        let sim_s = self.charge_step(&out.activated, &out.selected, slots.len(), 0.0);
         self.metrics.record_step(&out.activated, sim_s, committed);
         self.metrics.tokens_prompt += prompt_consumed;
-        Ok((finished, first_token_slots))
+        Ok(events)
     }
 
     /// Feed chunk tokens `shadow_from..` of every plan through the draft
@@ -711,69 +935,140 @@ impl<'m> ServeLoop<'m> {
         Ok(())
     }
 
-    /// One speculative verify cycle (all rows in decode phase).
-    fn spec_cycle(
+    /// One mixed-phase step with a ragged speculative verify: chunk rows
+    /// advance through the prefill artifact (parked in the shared
+    /// forward), every other live row rides the verify — decoding rows at
+    /// their per-row depth, one-token prefill rows and depth-0 rows parked
+    /// at depth 0 committing exactly one token from sub-step 0.
+    fn spec_mixed_step(
         &mut self,
         slots: &[usize],
-    ) -> Result<(Vec<(u64, Vec<u32>)>, Vec<usize>)> {
-        let ls = self.cfg.spec_len;
+        plans: Vec<SpecPlan>,
+    ) -> Result<StepEvents> {
         let b_max = self.model.max_batch();
         let vocab = self.model.dims().vocab;
         let n_layers = self.model.dims().n_layers;
         let n_experts = self.model.dims().n_experts;
 
-        // ---- draft proposals (plus catch-up for fully-accepted rows) ----
-        let draft = self.draft.as_mut().expect("spec cycle without draft state");
-        draft.catch_up(self.model.engine(), &self.batcher, slots)?;
-        let mut proposals: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
-        {
-            let mut dtok = vec![0i32; b_max];
-            let mut dpos = vec![0i32; b_max];
-            for &s in slots {
-                let seq = self.batcher.seq(s);
-                dtok[s] = seq.next_token as i32;
-                dpos[s] = seq.pos as i32;
-                proposals.insert(s, Vec::with_capacity(ls));
-            }
-            for _ in 0..ls {
-                let logits_t = draft.model.step(self.model.engine(), &dtok, &dpos)?;
-                let logits = logits_t.as_f32()?;
-                for &s in slots {
-                    let d = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
-                    proposals.get_mut(&s).unwrap().push(d);
-                    dtok[s] = d as i32;
-                    dpos[s] += 1;
-                }
-            }
-            for &s in slots {
-                draft.pos[s] = self.batcher.seq(s).pos + ls; // processed up to pos+ls-1
+        let mut chunk_plans = self.chunk_plans(slots);
+        // Riders: every live row NOT advancing via the chunk artifact.
+        let riders: Vec<usize> = slots
+            .iter()
+            .copied()
+            .filter(|s| !chunk_plans.iter().any(|p| p.slot == *s))
+            .collect();
+        debug_assert!(!riders.is_empty(), "spec step needs at least one decode row");
+
+        // Per-rider depth (0 for prefill riders and unplanned decode rows).
+        let mut spec: BTreeMap<usize, SpecPlan> =
+            plans.into_iter().map(|p| (p.slot, p)).collect();
+        let depth_of = |spec: &BTreeMap<usize, SpecPlan>, s: usize| {
+            spec.get(&s).map(|p| p.depth).unwrap_or(0)
+        };
+        let depths: Vec<usize> = riders.iter().map(|&s| depth_of(&spec, s)).collect();
+        let max_d = depths.iter().copied().max().unwrap_or(0);
+        debug_assert!(max_d > 0, "spec step without any drafting row");
+
+        // Enter SpecVerify phase for every decoding rider (depth-0 riders
+        // included: they are part of this cycle's effective batch).
+        for &s in &riders {
+            if self.batcher.seq(s).phase == Phase::Decode {
+                let d = depth_of(&spec, s);
+                self.batcher.seq_mut(s).begin_spec(d);
             }
         }
 
-        // verify inputs per sub-step j: j=0 → next_token, j>=1 → draft j-1
-        let verify_tok = |batcher: &Batcher, s: usize, j: usize| -> u32 {
-            if j == 0 {
-                batcher.seq(s).next_token
-            } else {
-                proposals[&s][j - 1]
+        // Padded park defaults for every live row: riders on their own
+        // next (token, position), chunk rows on their chunk's first token
+        // (the chunk invocation below overwrites that write).
+        let park_defaults = |batcher: &Batcher, chunk_plans: &[ChunkPlan]| {
+            let mut tokens = vec![0i32; b_max];
+            let mut pos = vec![0i32; b_max];
+            for s in batcher.live_slots() {
+                let seq = batcher.seq(s);
+                tokens[s] = seq.next_token as i32;
+                pos[s] = seq.pos as i32;
             }
+            for p in chunk_plans {
+                tokens[p.slot] = p.tokens[0] as i32;
+                pos[p.slot] = p.start as i32;
+            }
+            (tokens, pos)
         };
+
+        // ---- draft proposals --------------------------------------------
+        // Model drafts run max_d batched sub-steps (rows past their depth —
+        // and non-drafting riders — park on harmless rewrites); lookup
+        // drafts were generated at planning time for free.
+        if self.cfg.spec_draft == SpecDraft::Model {
+            let draft = self.draft.as_mut().expect("model-draft spec without runner");
+            // Catch-up: rows that fully accepted last cycle owe the draft
+            // one input (fed at pos − 1); everyone else harmlessly
+            // re-writes their upcoming position.
+            if draft.any_lag(&riders) {
+                let (mut tokens, mut pos) = park_defaults(&self.batcher, &chunk_plans);
+                for &s in &riders {
+                    if let Some(t) = draft.lag_token(s) {
+                        tokens[s] = t as i32;
+                        pos[s] = (self.batcher.seq(s).pos - 1) as i32;
+                    }
+                }
+                draft.step(self.model.engine(), &tokens, &pos)?;
+                draft.clear_lag(&riders);
+            }
+            let (mut dtok, mut dpos) = park_defaults(&self.batcher, &chunk_plans);
+            for j in 0..max_d {
+                let draft = self.draft.as_mut().unwrap();
+                let logits_t = draft.step(self.model.engine(), &dtok, &dpos)?;
+                let logits = logits_t.as_f32()?;
+                for &s in &riders {
+                    let plan_depth = depth_of(&spec, s);
+                    if j < plan_depth {
+                        let d = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
+                        spec.get_mut(&s).unwrap().proposals.push(d);
+                        dtok[s] = d as i32;
+                        dpos[s] += 1;
+                    }
+                    // rows at/past their depth keep their park: identical
+                    // rewrites of a position their next real input covers
+                }
+            }
+        }
+
+        // verify inputs per sub-step j for rider s: j=0 → next_token,
+        // 1..=depth → draft j−1, beyond depth → park on (next_token, pos).
+        fn verify_tok(
+            batcher: &Batcher,
+            spec: &BTreeMap<usize, SpecPlan>,
+            s: usize,
+            j: usize,
+        ) -> (u32, usize) {
+            let seq = batcher.seq(s);
+            if j == 0 {
+                return (seq.next_token, seq.pos);
+            }
+            match spec.get(&s) {
+                Some(p) if j <= p.depth => (p.proposals[j - 1], seq.pos + j),
+                _ => (seq.next_token, seq.pos),
+            }
+        }
 
         // ---- pass 1: scoring (vanilla routing, collect per-layer probs) --
         let vanilla = Vanilla;
-        let groups_single: Vec<Vec<usize>> = slots.iter().map(|&s| vec![s]).collect();
-        let mut pass1_scores: Vec<Vec<(ScoreMatrix, ScoreMatrix)>> = Vec::with_capacity(ls + 1);
-        for j in 0..=ls {
-            let mut tokens = vec![0i32; b_max];
-            let mut pos = vec![0i32; b_max];
-            for &s in slots {
-                tokens[s] = verify_tok(&self.batcher, s, j) as i32;
-                pos[s] = (self.batcher.seq(s).pos + j) as i32;
+        let groups_single: Vec<Vec<usize>> = riders.iter().map(|&s| vec![s]).collect();
+        let mut pass1_scores: Vec<Vec<(ScoreMatrix, ScoreMatrix)>> =
+            Vec::with_capacity(max_d + 1);
+        for j in 0..=max_d {
+            let (mut tokens, mut pos) = park_defaults(&self.batcher, &chunk_plans);
+            for &s in &riders {
+                let (t, p) = verify_tok(&self.batcher, &spec, s, j);
+                tokens[s] = t as i32;
+                pos[s] = p as i32;
             }
             let out = self.model.step(&StepInput {
                 tokens: &tokens,
                 pos: &pos,
-                rows: slots,
+                rows: &riders,
                 requests: &groups_single,
                 mode: RoutingMode::Policy(&vanilla),
                 collect_probs: true,
@@ -786,20 +1081,36 @@ impl<'m> ServeLoop<'m> {
         if let Some(tr) = &mut self.tracker {
             let layers: Vec<&ScoreMatrix> =
                 pass1_scores[0].iter().map(|(_, p)| p).collect();
-            for &s in slots {
+            for &s in &riders {
                 tr.observe_step(s, s, &layers);
             }
         }
 
-        // ---- per-layer selection over the effective batch ---------------
+        // ---- per-layer selection over the RAGGED effective batch --------
+        // Each rider contributes 1 + its own depth positions; under
+        // adaptive depth the speculative positions are weighted by the
+        // row's class acceptance prior (deep positions of low-acceptance
+        // rows contribute less gating mass).
+        let priors: Option<Vec<f32>> = self.cfg.spec_adaptive.then(|| {
+            riders
+                .iter()
+                .map(|&s| spec.get(&s).map(|p| p.prior).unwrap_or(1.0))
+                .collect()
+        });
         let mut sets: Vec<ExpertSet> = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
             let logits_steps: Vec<&ScoreMatrix> =
                 pass1_scores.iter().map(|layers| &layers[l].0).collect();
             let probs_steps: Vec<&ScoreMatrix> =
                 pass1_scores.iter().map(|layers| &layers[l].1).collect();
-            let (eff_logits, _) = effective_batch_scores(&logits_steps, slots);
-            let (eff_probs, groups) = effective_batch_scores(&probs_steps, slots);
+            let (eff_logits, _) =
+                effective_batch_scores_ragged(&logits_steps, &riders, &depths, None);
+            let (eff_probs, groups) = effective_batch_scores_ragged(
+                &probs_steps,
+                &riders,
+                &depths,
+                priors.as_deref(),
+            );
             let rows: Vec<usize> = (0..eff_probs.n_tokens()).collect();
             let ctx = crate::selection::SelectionContext {
                 probs: &eff_probs,
@@ -815,27 +1126,27 @@ impl<'m> ServeLoop<'m> {
 
         // ---- pass 2: restricted run; drives acceptance -------------------
         let mut target_argmax: BTreeMap<usize, Vec<u32>> =
-            slots.iter().map(|&s| (s, Vec::with_capacity(ls + 1))).collect();
+            riders.iter().map(|&s| (s, Vec::with_capacity(max_d + 1))).collect();
         let mut union_activated: Vec<ExpertSet> =
             (0..n_layers).map(|_| ExpertSet::empty(n_experts)).collect();
         let mut acts = vec![0usize; n_layers];
-        for j in 0..=ls {
-            let mut tokens = vec![0i32; b_max];
-            let mut pos = vec![0i32; b_max];
-            for &s in slots {
-                tokens[s] = verify_tok(&self.batcher, s, j) as i32;
-                pos[s] = (self.batcher.seq(s).pos + j) as i32;
+        for j in 0..=max_d {
+            let (mut tokens, mut pos) = park_defaults(&self.batcher, &chunk_plans);
+            for &s in &riders {
+                let (t, p) = verify_tok(&self.batcher, &spec, s, j);
+                tokens[s] = t as i32;
+                pos[s] = p as i32;
             }
             let out = self.model.step(&StepInput {
                 tokens: &tokens,
                 pos: &pos,
-                rows: slots,
+                rows: &riders,
                 requests: &groups_single,
                 mode: RoutingMode::Restricted(&sets),
                 collect_probs: false,
             })?;
             let logits = out.logits.as_f32()?;
-            for &s in slots {
+            for &s in &riders {
                 let am = argmax(&logits[s * vocab..(s + 1) * vocab]) as u32;
                 target_argmax.get_mut(&s).unwrap().push(am);
             }
@@ -847,58 +1158,122 @@ impl<'m> ServeLoop<'m> {
             *a = u.len();
         }
 
-        // ---- acceptance & commit -----------------------------------------
+        // ---- per-row acceptance & commit ---------------------------------
         let mut committed_total = 0u64;
-        let mut finished = Vec::new();
-        let mut first_token_slots = Vec::new();
-        for &s in slots {
-            let (n_acc, committed) = greedy_accept(&proposals[&s], &target_argmax[&s]);
-            self.metrics.spec_proposed += ls as u64;
-            self.metrics.spec_accepted += n_acc as u64;
-            let seq = self.batcher.seq_mut(s);
-            let was_unstarted = seq.generated.is_empty();
-            let take = committed.len().min(seq.remaining());
-            for &tok in committed.iter().take(take) {
-                seq.commit(tok);
-                committed_total += 1;
-            }
-            if was_unstarted && !seq.generated.is_empty() {
-                first_token_slots.push(s);
-            }
-            let done = seq.is_done();
-            // full acceptance leaves the draft cache one input behind
-            let lag = if n_acc == ls && ls > 0 && !done {
-                Some(proposals[&s][ls - 1])
-            } else {
-                None
-            };
-            self.draft.as_mut().unwrap().lag_token[s] = lag;
-            if done {
-                let released = self.release_slot(s);
-                finished.push((released.req.id, released.generated));
+        let mut prompt_consumed = 0u64;
+        let mut events = StepEvents::default();
+        for &s in &riders {
+            let seq_phase = self.batcher.seq(s).phase;
+            match seq_phase {
+                Phase::PrefillChunk => {
+                    // One-token prompt advance from sub-step 0 of the
+                    // shared verify forward.
+                    let am = target_argmax[&s][0];
+                    let seq = self.batcher.seq_mut(s);
+                    let id = seq.req.id;
+                    prompt_consumed += 1;
+                    if seq.advance_prefill(am) {
+                        committed_total += 1;
+                        events.first_token_slots.push(s);
+                        events.deltas.push((id, vec![am]));
+                    }
+                    // A budget of 1 finishes on the prefill commit itself.
+                    if seq.is_done() {
+                        let released = self.release_slot(s);
+                        events.finished.push((released.req.id, released.generated));
+                    }
+                }
+                Phase::SpecVerify { depth } => {
+                    let plan = &spec[&s];
+                    debug_assert_eq!(plan.depth, depth);
+                    debug_assert_eq!(plan.proposals.len(), depth);
+                    // Acceptance sees only this row's TRUE depth; sub-steps
+                    // beyond it were padding (harmless rewrites).
+                    let (n_acc, committed) =
+                        greedy_accept(&plan.proposals, &target_argmax[&s][..=depth]);
+                    self.metrics.spec_proposed += depth as u64;
+                    self.metrics.spec_accepted += n_acc as u64;
+                    self.metrics.spec_depth.add(depth as f64);
+                    if depth > 0 {
+                        let rate = n_acc as f64 / depth as f64;
+                        self.metrics.record_spec_accept(&plan.class, rate);
+                        self.depth_ctl.observe(&plan.class, depth, n_acc);
+                    }
+                    let seq = self.batcher.seq_mut(s);
+                    let id = seq.req.id;
+                    let take = committed.len().min(seq.remaining());
+                    let mut delta = Vec::with_capacity(take);
+                    for &tok in committed.iter().take(take) {
+                        seq.commit(tok);
+                        delta.push(tok);
+                        committed_total += 1;
+                    }
+                    if !delta.is_empty() {
+                        events.deltas.push((id, delta));
+                    }
+                    let done = seq.is_done();
+                    seq.end_spec();
+                    // full acceptance leaves the draft cache one input
+                    // behind (model drafts only; lookup drafts have no
+                    // cache to lag)
+                    if let Some(d) = self.draft.as_mut() {
+                        let lag = if n_acc == depth && depth > 0 && !done {
+                            Some(plan.proposals[depth - 1])
+                        } else {
+                            None
+                        };
+                        d.set_lag(s, lag);
+                    }
+                    if done {
+                        let released = self.release_slot(s);
+                        events.finished.push((released.req.id, released.generated));
+                    }
+                }
+                Phase::Decode => unreachable!("decode riders entered SpecVerify"),
             }
         }
 
+        // Cost: ONE target forward over the padded ragged batch (max
+        // in-use depth sets the verify geometry) plus the true per-row
+        // draft charge. Riders' target_argmax beyond their own depth came
+        // from harmless rewrites and cost nothing extra — they are the
+        // padding the max-depth charge already covers.
+        let draft_seconds = if self.cfg.spec_draft == SpecDraft::Model {
+            self.cost.draft_cost(&depths)
+        } else {
+            0.0 // lookup drafts are a CPU table scan, not a model forward
+        };
         let sim_s = self.charge_step(
             &acts,
             &union_activated,
-            slots.len() * (1 + ls),
-            ls, // draft steps
+            riders.len() * (1 + max_d),
+            draft_seconds,
         );
         self.metrics.record_step(&acts, sim_s, committed_total);
-        Ok((finished, first_token_slots))
+        self.metrics.tokens_prompt += prompt_consumed;
+
+        // ---- chunk rows advance + draft shadow ---------------------------
+        if !chunk_plans.is_empty() {
+            events.absorb(self.run_chunk_plans(&mut chunk_plans)?);
+            // Chunk token 0 was shadowed by the verify/draft parks above
+            // (model drafts only; without a draft runner there is nothing
+            // to shadow).
+            self.shadow_chunks(&chunk_plans, 1)?;
+        }
+
+        Ok(events)
     }
 
-    /// Simulated cost of one target forward (+ draft steps) and EP load
+    /// Simulated cost of one target forward (+ draft seconds) and EP load
     /// accounting. Returns simulated seconds.
     fn charge_step(
         &mut self,
         activated: &[usize],
         selected: &[ExpertSet],
         n_tokens: usize,
-        draft_steps: usize,
+        draft_seconds: f64,
     ) -> f64 {
-        let mut sim = draft_steps as f64 * self.cost.draft_step();
+        let mut sim = draft_seconds;
         if let Some(pl) = &self.model.placement {
             let sel_refs: Vec<&ExpertSet> = selected.iter().collect();
             sim += self.cost.ep_step(pl, &sel_refs, n_tokens, &self.ep_cost);
@@ -920,65 +1295,4 @@ struct ChunkPlan {
     start: usize,
     /// Prompt tokens to consume this step (oldest first).
     tokens: Vec<u32>,
-}
-
-/// Draft-model wrapper tracking per-slot cache positions and catch-up debt.
-struct DraftState {
-    model: crate::model::DraftModel,
-    pos: Vec<usize>,
-    lag_token: Vec<Option<u32>>,
-}
-
-impl DraftState {
-    fn new(model: crate::model::DraftModel, b_max: usize) -> DraftState {
-        DraftState { model, pos: vec![0; b_max], lag_token: vec![None; b_max] }
-    }
-
-    /// During plain steps the draft ingests the same tokens as the target.
-    fn shadow_step(
-        &mut self,
-        engine: &crate::runtime::Engine,
-        tokens: &[i32],
-        pos: &[i32],
-    ) -> Result<()> {
-        self.model.step(engine, tokens, pos)?;
-        for (p, &np) in self.pos.iter_mut().zip(pos) {
-            *p = (*p).max(np as usize + 1);
-        }
-        Ok(())
-    }
-
-    /// Feed the one missing input for rows that fully accepted last cycle.
-    fn catch_up(
-        &mut self,
-        engine: &crate::runtime::Engine,
-        batcher: &Batcher,
-        slots: &[usize],
-    ) -> Result<()> {
-        if slots.iter().all(|&s| self.lag_token[s].is_none()) {
-            return Ok(());
-        }
-        let b = self.pos.len();
-        let mut tokens = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        for &s in slots {
-            let seq = batcher.seq(s);
-            match self.lag_token[s] {
-                Some(t) => {
-                    tokens[s] = t as i32;
-                    pos[s] = (seq.pos - 1) as i32;
-                }
-                None => {
-                    // harmless re-write of the upcoming position
-                    tokens[s] = seq.next_token as i32;
-                    pos[s] = seq.pos as i32;
-                }
-            }
-        }
-        self.model.step(engine, &tokens, &pos)?;
-        for &s in slots {
-            self.lag_token[s] = None;
-        }
-        Ok(())
-    }
 }

@@ -1,6 +1,10 @@
-//! Speculative-decoding primitives: greedy acceptance and per-layer
-//! effective-batch score assembly. The verify-cycle orchestration lives in
-//! [`super::scheduler`]; the logic here is pure and unit-tested.
+//! Speculative-decoding primitives: greedy acceptance, per-layer
+//! effective-batch score assembly (uniform and **ragged** per-row depth),
+//! the adaptive depth controller, and the n-gram lookup drafter. The
+//! verify-cycle orchestration lives in [`super::serve_loop`]; the logic
+//! here is pure and unit-tested.
+
+use std::collections::BTreeMap;
 
 use crate::selection::ScoreMatrix;
 
@@ -40,20 +44,191 @@ pub fn effective_batch_scores(
     slots: &[usize],
 ) -> (ScoreMatrix, Vec<Vec<usize>>) {
     assert!(!per_step.is_empty());
+    let depths = vec![per_step.len() - 1; slots.len()];
+    effective_batch_scores_ragged(per_step, slots, &depths, None)
+}
+
+/// Ragged generalization of [`effective_batch_scores`]: each slot
+/// contributes only its own `1 + depths[q]` verify positions (rows beyond a
+/// row's depth are padding the emulation runs but the selection must never
+/// see — they would bias the batch utility toward tokens that do not
+/// exist).
+///
+/// With `priors`, position `j` of slot `q` is weighted by
+/// `priors[q]^j` — the probability the position is actually *reached*
+/// under geometric acceptance, the "acceptance prior" of the paper's
+/// hierarchical spec-aware selection. Deep speculative positions of a
+/// low-acceptance row then contribute proportionally less gating mass to
+/// `SpecAware`'s per-request aggregation and to every batch utility, so
+/// the selected set spends its budget on tokens likely to commit. Position
+/// 0 (the committed token) always has weight 1; `priors = None` (or all
+/// 1.0) reproduces the unweighted matrix bit-for-bit — the uniform-depth
+/// byte-identity pin depends on that.
+pub fn effective_batch_scores_ragged(
+    per_step: &[&ScoreMatrix],
+    slots: &[usize],
+    depths: &[usize],
+    priors: Option<&[f32]>,
+) -> (ScoreMatrix, Vec<Vec<usize>>) {
+    assert!(!per_step.is_empty());
+    assert_eq!(slots.len(), depths.len());
     let n = per_step[0].n_experts();
-    let steps = per_step.len();
-    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(slots.len() * steps);
+    let mut rows: Vec<Vec<f32>> = Vec::new();
     let mut groups = Vec::with_capacity(slots.len());
-    for &slot in slots {
-        let mut group = Vec::with_capacity(steps);
-        for m in per_step {
+    for (q, &slot) in slots.iter().enumerate() {
+        assert!(
+            depths[q] < per_step.len(),
+            "slot {slot} depth {} exceeds the {} verify sub-steps",
+            depths[q],
+            per_step.len()
+        );
+        let mut group = Vec::with_capacity(1 + depths[q]);
+        for (j, m) in per_step.iter().take(1 + depths[q]).enumerate() {
             assert_eq!(m.n_experts(), n);
             group.push(rows.len());
-            rows.push(m.row(slot).to_vec());
+            let mut row = m.row(slot).to_vec();
+            if let Some(p) = priors {
+                let w = p[q].clamp(0.0, 1.0).powi(j as i32);
+                if w != 1.0 {
+                    for v in row.iter_mut() {
+                        *v *= w;
+                    }
+                }
+            }
+            rows.push(row);
         }
         groups.push(group);
     }
     (ScoreMatrix::from_rows(&rows), groups)
+}
+
+/// Propose a draft continuation by n-gram lookup over the row's own
+/// committed history (prompt + generated) — prompt-lookup / self-lookup
+/// decoding (Saxena 2023; vLLM's `prompt_lookup`): find the most recent
+/// prior occurrence of the trailing bigram (falling back to the trailing
+/// token), and propose the `depth` tokens that followed it. Costs no model
+/// forward at all, so its drafts are free on the cost ledger; acceptance is
+/// high exactly when generation is locally repetitive.
+///
+/// `history` must end with the token about to be fed to the verify forward
+/// (`SeqState::next_token`). Returns up to `depth` proposals — possibly
+/// fewer (ragged by construction) or none when the history has no match.
+pub fn lookup_draft(history: &[u32], depth: usize) -> Vec<u32> {
+    let n = history.len();
+    if depth == 0 || n < 2 {
+        return Vec::new();
+    }
+    // trailing bigram, most recent match first
+    if n >= 3 {
+        for j in (0..n - 2).rev() {
+            if history[j] == history[n - 2] && history[j + 1] == history[n - 1] {
+                let end = (j + 2 + depth).min(n);
+                return history[j + 2..end].to_vec();
+            }
+        }
+    }
+    // trailing unigram fallback
+    for j in (0..n - 1).rev() {
+        if history[j] == history[n - 1] {
+            let end = (j + 1 + depth).min(n);
+            return history[j + 1..end].to_vec();
+        }
+    }
+    Vec::new()
+}
+
+/// EMA decay for per-class acceptance tracking: ~10-cycle memory, the same
+/// horizon the footprint tracker uses for routing scores.
+pub const ACCEPT_DECAY: f32 = 0.9;
+
+/// Verify cycles a depth-0 class waits between depth-1 probes. Without
+/// probing, a class that ever collapsed to depth 0 would stop producing
+/// acceptance observations and stay at 0 forever.
+pub const PROBE_INTERVAL: u64 = 8;
+
+/// Per-traffic-class adaptive speculation depth.
+///
+/// Tracks a decayed EMA of each class's per-token acceptance rate (class
+/// keys are [`super::admission::FootprintTracker::class_key`] — domain tag
+/// or prompt hash, the same clustering admission uses) and maps it to a
+/// draft depth in `[0, max_depth]`: the expected number of tokens a cycle
+/// commits beyond position `d` decays like `a^d`, so depth is the largest
+/// `d` with `a^d` above a fixed usefulness threshold. Unobserved classes
+/// start optimistic (full depth — observations only exist if someone
+/// drafts), and collapsed classes probe at depth 1 every
+/// [`PROBE_INTERVAL`] cycles so recovery is possible.
+#[derive(Debug, Default)]
+pub struct SpecDepthController {
+    max_depth: usize,
+    ema: BTreeMap<String, ClassAcceptance>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ClassAcceptance {
+    rate: f32,
+    /// Cycles since the class last drafted (probe scheduling at depth 0).
+    idle_cycles: u64,
+}
+
+/// Keep drafting position d while the expected marginal commit `a^d`
+/// clears this threshold (draft tokens are cheap, verify slots are not).
+const DEPTH_USEFULNESS: f32 = 0.25;
+
+impl SpecDepthController {
+    pub fn new(max_depth: usize) -> SpecDepthController {
+        SpecDepthController { max_depth, ema: BTreeMap::new() }
+    }
+
+    /// Smoothed acceptance rate for a class, if it has ever drafted.
+    pub fn acceptance(&self, class: &str) -> Option<f32> {
+        self.ema.get(class).map(|c| c.rate)
+    }
+
+    /// The acceptance prior used to weight the class's speculative
+    /// positions in selection (optimistic 1.0 before any observation).
+    pub fn prior(&self, class: &str) -> f32 {
+        self.acceptance(class).unwrap_or(1.0)
+    }
+
+    /// Draft depth for the next cycle of a row in `class`, advancing the
+    /// class's probe clock. Cold classes get full depth.
+    pub fn depth_for(&mut self, class: &str) -> usize {
+        let Some(c) = self.ema.get_mut(class) else {
+            return self.max_depth;
+        };
+        let mut depth = 0;
+        let mut marginal = 1.0f32;
+        while depth < self.max_depth {
+            marginal *= c.rate;
+            if marginal < DEPTH_USEFULNESS {
+                break;
+            }
+            depth += 1;
+        }
+        if depth == 0 {
+            c.idle_cycles += 1;
+            if c.idle_cycles >= PROBE_INTERVAL {
+                c.idle_cycles = 0;
+                return 1; // probe
+            }
+        }
+        depth
+    }
+
+    /// Fold one verify cycle's outcome for a row of `class` in:
+    /// `accepted` of `proposed` draft tokens matched the target.
+    pub fn observe(&mut self, class: &str, proposed: usize, accepted: usize) {
+        if proposed == 0 {
+            return;
+        }
+        let rate = accepted as f32 / proposed as f32;
+        if let Some(c) = self.ema.get_mut(class) {
+            c.rate = ACCEPT_DECAY * c.rate + (1.0 - ACCEPT_DECAY) * rate;
+            c.idle_cycles = 0;
+            return;
+        }
+        self.ema.insert(class.to_string(), ClassAcceptance { rate, idle_cycles: 0 });
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +261,130 @@ mod tests {
         let (n, committed) = greedy_accept(&[], &[3]);
         assert_eq!(n, 0);
         assert_eq!(committed, vec![3]);
+    }
+
+    #[test]
+    fn ragged_scores_truncate_to_per_row_depth() {
+        let a = ScoreMatrix::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0], vec![3.0, 0.0]]);
+        let b = ScoreMatrix::from_rows(&[vec![0.0, 1.0], vec![0.0, 2.0], vec![0.0, 3.0]]);
+        let c = ScoreMatrix::from_rows(&[vec![4.0, 4.0], vec![5.0, 5.0], vec![6.0, 6.0]]);
+        // slot 0 at depth 2 (all three sub-steps), slot 2 at depth 0
+        // (committed token only — its speculative rows must NOT appear)
+        let (m, groups) =
+            effective_batch_scores_ragged(&[&a, &b, &c], &[0, 2], &[2, 0], None);
+        assert_eq!(m.n_tokens(), 4);
+        assert_eq!(groups, vec![vec![0, 1, 2], vec![3]]);
+        assert_eq!(m.row(0), &[1.0, 0.0]);
+        assert_eq!(m.row(1), &[0.0, 1.0]);
+        assert_eq!(m.row(2), &[4.0, 4.0]);
+        assert_eq!(m.row(3), &[3.0, 0.0]); // slot 2's committed token
+    }
+
+    #[test]
+    fn ragged_scores_weight_positions_by_acceptance_prior() {
+        let a = ScoreMatrix::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let b = ScoreMatrix::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let c = ScoreMatrix::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let (m, _) = effective_batch_scores_ragged(
+            &[&a, &b, &c],
+            &[0, 1],
+            &[2, 2],
+            Some(&[0.5, 1.0]),
+        );
+        // slot 0: positions weighted 1, 0.5, 0.25; slot 1: all 1.0
+        assert_eq!(m.row(0), &[1.0, 1.0]);
+        assert_eq!(m.row(1), &[0.5, 0.5]);
+        assert_eq!(m.row(2), &[0.25, 0.25]);
+        assert_eq!(m.row(3), &[1.0, 1.0]);
+        assert_eq!(m.row(5), &[1.0, 1.0]);
+        // prior 1.0 (or None) must be bit-identical to unweighted — the
+        // uniform-depth byte-identity pins ride on this
+        let (unweighted, _) =
+            effective_batch_scores_ragged(&[&a, &b, &c], &[0, 1], &[2, 2], None);
+        let (ones, _) = effective_batch_scores_ragged(
+            &[&a, &b, &c],
+            &[0, 1],
+            &[2, 2],
+            Some(&[1.0, 1.0]),
+        );
+        for i in 0..unweighted.n_tokens() {
+            assert_eq!(unweighted.row(i), ones.row(i));
+        }
+    }
+
+    #[test]
+    fn uniform_wrapper_matches_ragged_full_depth() {
+        let a = ScoreMatrix::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0]]);
+        let b = ScoreMatrix::from_rows(&[vec![0.0, 1.0], vec![0.0, 2.0]]);
+        let (m1, g1) = effective_batch_scores(&[&a, &b], &[0, 1]);
+        let (m2, g2) =
+            effective_batch_scores_ragged(&[&a, &b], &[0, 1], &[1, 1], None);
+        assert_eq!(g1, g2);
+        for i in 0..m1.n_tokens() {
+            assert_eq!(m1.row(i), m2.row(i));
+        }
+    }
+
+    #[test]
+    fn lookup_draft_prefers_bigram_then_unigram() {
+        // bigram (2,3) seen earlier → propose what followed it
+        assert_eq!(lookup_draft(&[1, 2, 3, 9, 8, 2, 3], 3), vec![9, 8, 2]);
+        // most recent bigram match wins
+        assert_eq!(lookup_draft(&[2, 3, 7, 2, 3, 5, 2, 3], 2), vec![5, 2]);
+        // no bigram match → unigram fallback
+        assert_eq!(lookup_draft(&[4, 1, 6, 5, 1], 2), vec![6, 5]);
+        // fixed point: the most recent (6,6) match sits one token from the
+        // end, so one proposal survives the history clip — enough for the
+        // verify to commit 2 tokens per cycle on a repeating tail
+        assert_eq!(lookup_draft(&[9, 6, 6, 6], 3), vec![6]);
+        // no match at all / short history / zero depth → empty
+        assert!(lookup_draft(&[1, 2, 3], 0).is_empty());
+        assert!(lookup_draft(&[7], 3).is_empty());
+        assert!(lookup_draft(&[1, 2, 3, 4], 2).is_empty());
+        // proposals are clipped at the history end (ragged by nature)
+        assert_eq!(lookup_draft(&[5, 8, 5], 4), vec![8, 5]);
+    }
+
+    #[test]
+    fn depth_controller_adapts_and_probes() {
+        let mut c = SpecDepthController::new(4);
+        // cold class: optimistic full depth, prior 1.0
+        assert_eq!(c.depth_for("a"), 4);
+        assert_eq!(c.prior("a"), 1.0);
+        // strong acceptance keeps full depth
+        for _ in 0..5 {
+            c.observe("a", 4, 4);
+        }
+        assert_eq!(c.depth_for("a"), 4);
+        assert!(c.prior("a") > 0.9);
+        // zero acceptance collapses the class to 0 …
+        for _ in 0..40 {
+            c.observe("a", 4, 0);
+        }
+        assert_eq!(c.depth_for("a"), 0);
+        // … but a probe at depth 1 fires every PROBE_INTERVAL cycles
+        let mut saw_probe = false;
+        for _ in 0..PROBE_INTERVAL {
+            if c.depth_for("a") == 1 {
+                saw_probe = true;
+                break;
+            }
+        }
+        assert!(saw_probe, "collapsed class never probed");
+        // recovery: sustained acceptance grows depth back
+        for _ in 0..60 {
+            c.observe("a", 4, 4);
+        }
+        assert_eq!(c.depth_for("a"), 4);
+        // middling acceptance lands between the extremes
+        let mut m = SpecDepthController::new(4);
+        for _ in 0..30 {
+            m.observe("b", 4, 2);
+        }
+        let d = m.depth_for("b");
+        assert!((1..4).contains(&d), "depth {d} for 50% acceptance");
+        // classes are independent
+        assert_eq!(m.depth_for("never-seen"), 4);
     }
 
     #[test]

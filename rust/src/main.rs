@@ -22,16 +22,21 @@ use xshare::util::cli::Args;
 use xshare::util::json::Json;
 
 const USAGE: &str = "usage: xshare <serve|run|client|info> [--flags]
-  serve  --preset P --policy POL [--batch N] [--spec-len L] [--prefill-chunk T]
-         [--admission A] [--max-queue Q] [--addr A] [--config F]
+  serve  --preset P --policy POL [--batch N] [--spec-len L] [--spec-adaptive]
+         [--spec-draft model|lookup] [--prefill-chunk T] [--admission A]
+         [--max-queue Q] [--addr A] [--config F]
   run    --preset P --policy POL --requests N [--batch N] [--spec-len L]
-         [--prefill-chunk T] [--admission A] [--seed S]
+         [--spec-adaptive] [--spec-draft D] [--prefill-chunk T]
+         [--admission A] [--seed S]
   client --addr A --prompt 1,2,3 [--max-new-tokens N] [--id I]
-         [--priority P] [--deadline-ms D]
+         [--priority P] [--deadline-ms D] [--stream]
   info   --preset P
 policies:  vanilla | batch:<m>:<k0> | spec:<k0>:<m>:<mr> | gpu:<k0>:<mg> |
            lynx:<drop> | skip:<beta> | opp:<k'>
-admission: fifo | priority | edf | footprint   (--max-queue 0 = unbounded)";
+admission: fifo | priority | edf | footprint   (--max-queue 0 = unbounded)
+spec:      --spec-adaptive adapts per-row draft depth per traffic class;
+           --spec-draft lookup drafts by n-gram lookup (no draft model);
+           --stream makes the client print a delta line per committed chunk";
 
 fn main() {
     if let Err(e) = real_main() {
@@ -144,7 +149,22 @@ fn client(args: &Args) -> Result<()> {
         req.deadline_ms = Some(deadline as u64);
     }
     let mut client = Client::connect(&addr)?;
-    let resp = client.generate(&req)?;
+    let resp = if args.bool("stream") {
+        // Delta frames print as they arrive; the final line is the same
+        // summary the non-streaming path prints.
+        client.generate_stream(&req, |delta| {
+            println!(
+                "{}",
+                Json::obj(vec![(
+                    "delta",
+                    Json::arr(delta.iter().map(|&t| Json::num(t as f64)))
+                )])
+                .dump()
+            );
+        })?
+    } else {
+        client.generate(&req)?
+    };
     println!(
         "{}",
         Json::obj(vec![

@@ -84,6 +84,20 @@ impl DecodeCostModel {
         self.geo.draft_bytes_per_step / self.hw.hbm_bw + self.hw.step_overhead_s * 0.3
     }
 
+    /// Draft-side cost of one ragged speculative cycle, from the TRUE
+    /// per-row draft depths. The dense draft is memory-bound: every
+    /// batched draft sub-step streams the full draft weights once, so the
+    /// **deepest** row sets the stream count and shallower rows ride those
+    /// calls for free — per-row compute is negligible next to the weight
+    /// stream. These are exactly the padded-batch economics the adaptive
+    /// depth controller optimises against: shrinking one row below the max
+    /// saves verify activation, not draft streams, until the max itself
+    /// drops. Uniform depths reproduce the legacy `L_s × draft_step()`
+    /// charge bit-for-bit.
+    pub fn draft_cost(&self, depths: &[usize]) -> f64 {
+        depths.iter().copied().max().unwrap_or(0) as f64 * self.draft_step()
+    }
+
     /// One EP decode step: per-layer straggler latency from MaxLoad plus
     /// all-to-alls, summed over layers (per-layer selected sets supplied).
     pub fn ep_step(
@@ -179,6 +193,22 @@ mod tests {
         let draft = m.draft_step();
         assert!(draft < target / 5.0, "draft {draft} vs target {target}");
         assert!(draft > 0.0);
+    }
+
+    #[test]
+    fn ragged_draft_cost_charged_by_max_depth() {
+        let m = model();
+        let per_call = m.draft_step();
+        // uniform depths reproduce the legacy L_s × draft_step charge
+        assert_eq!(m.draft_cost(&[3, 3, 3, 3]), 3.0 * per_call);
+        // ragged: the deepest row sets the batched stream count
+        assert_eq!(m.draft_cost(&[0, 1, 3, 2]), 3.0 * per_call);
+        // shrinking a non-max row saves nothing; shrinking the max does
+        assert_eq!(m.draft_cost(&[0, 0, 3, 0]), m.draft_cost(&[3, 3, 3, 3]));
+        assert!(m.draft_cost(&[0, 0, 2, 0]) < m.draft_cost(&[0, 0, 3, 0]));
+        // no drafting rows → no draft charge
+        assert_eq!(m.draft_cost(&[0, 0]), 0.0);
+        assert_eq!(m.draft_cost(&[]), 0.0);
     }
 
     #[test]

@@ -129,6 +129,16 @@ pub struct ServeMetrics {
     /// Speculative: proposed / accepted bonus counts.
     pub spec_proposed: u64,
     pub spec_accepted: u64,
+    /// Per-row draft depth of every verify-cycle rider (depth-0 riders
+    /// included) — the adaptive controller's observable.
+    pub spec_depth: Summary,
+    /// Per-traffic-class acceptance-rate distribution: one sample per
+    /// drafting row per verify cycle (n_accepted / depth).
+    pub spec_accept_by_class: BTreeMap<String, Summary>,
+    /// Steps where speculation was desired (spec_len > 0, decode rows
+    /// live) but no verify cycle ran — the legacy batch-global gate
+    /// stalled it, or every row's adaptive depth collapsed to 0.
+    pub spec_stalled_steps: u64,
     /// Per-step simulated latency histogram.
     pub step_latency: LatencyHistogram,
     /// Per-step wall-clock latency histogram (PJRT execution cadence).
@@ -214,6 +224,12 @@ impl ServeMetrics {
         }
     }
 
+    /// Record one drafting row's acceptance rate for one verify cycle,
+    /// keyed by its traffic class.
+    pub fn record_spec_accept(&mut self, class: &str, rate: f64) {
+        self.spec_accept_by_class.entry(class.to_string()).or_default().add(rate);
+    }
+
     /// Record one request's queue wait (submission → slot admission).
     pub fn record_queue_wait(&mut self, seconds: f64) {
         self.queue_wait.add(seconds);
@@ -269,6 +285,18 @@ impl ServeMetrics {
         m.insert("otps".into(), Json::num(self.otps()));
         m.insert("mean_activated".into(), Json::num(self.mean_activated()));
         m.insert("acceptance_rate".into(), Json::num(self.acceptance_rate()));
+        m.insert("spec_depth_mean".into(), Json::num(self.spec_depth.mean()));
+        m.insert("spec_depth_max".into(), Json::num(self.spec_depth.max));
+        m.insert(
+            "spec_stalled_steps".into(),
+            Json::num(self.spec_stalled_steps as f64),
+        );
+        let accept_classes: BTreeMap<String, Json> = self
+            .spec_accept_by_class
+            .iter()
+            .map(|(c, s)| (c.clone(), Json::num(s.mean())))
+            .collect();
+        m.insert("spec_accept_by_class".into(), Json::Obj(accept_classes));
         m.insert("max_gpu_load_mean".into(), Json::num(self.max_gpu_load.mean()));
         m.insert("p50_step_us".into(), Json::num(self.step_latency.quantile_us(0.5)));
         m.insert("p99_step_us".into(), Json::num(self.step_latency.quantile_us(0.99)));
@@ -386,6 +414,32 @@ mod tests {
         m.spec_proposed = 10;
         m.spec_accepted = 7;
         assert!((m.acceptance_rate() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_depth_acceptance_and_stall_gauges() {
+        let mut m = ServeMetrics::new(1);
+        // one verify cycle: rows at depths 3, 1 and a depth-0 rider
+        m.spec_depth.add(3.0);
+        m.spec_depth.add(1.0);
+        m.spec_depth.add(0.0);
+        m.record_spec_accept("gpqa", 1.0);
+        m.record_spec_accept("gpqa", 0.5);
+        m.record_spec_accept("aime", 0.0);
+        m.spec_stalled_steps = 4;
+        assert!((m.spec_depth.mean() - 4.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.spec_depth.max, 3.0);
+        assert!((m.spec_accept_by_class["gpqa"].mean() - 0.75).abs() < 1e-12);
+        assert_eq!(m.spec_accept_by_class["aime"].n, 1);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("spec_depth_mean").and_then(|v| v.as_f64()),
+            Some(m.spec_depth.mean())
+        );
+        assert_eq!(j.get("spec_stalled_steps").and_then(|v| v.as_f64()), Some(4.0));
+        let by_class = j.get("spec_accept_by_class").expect("class map dumped");
+        assert_eq!(by_class.get("gpqa").and_then(|v| v.as_f64()), Some(0.75));
+        assert_eq!(by_class.get("aime").and_then(|v| v.as_f64()), Some(0.0));
     }
 
     #[test]

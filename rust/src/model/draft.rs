@@ -1,6 +1,17 @@
 //! The dense draft model for speculative decoding (EAGLE-style role: small,
 //! fast, same vocabulary). One `draft_step` artifact call advances all rows
 //! by one token; caches are stacked per layer and round-trip as two tensors.
+//!
+//! [`DraftRunner`] wraps the model with the per-row cache bookkeeping the
+//! ragged verify needs: per-row positions, per-row lag tokens (a fully
+//! accepted row leaves its draft cache one input behind), and the rewind
+//! discipline. **Rewind is by overwrite**: after a rejected speculation the
+//! cache positions beyond the accepted prefix hold stale draft-token
+//! entries, but the next input each row feeds lands at its first stale
+//! position (the correction token the target committed), overwriting it,
+//! and entries beyond the current query position are masked by the
+//! attention kernel — so per-row rewind costs nothing and rows at
+//! different depths never interfere.
 
 use anyhow::{bail, Result};
 
@@ -70,5 +81,53 @@ impl DraftModel {
         self.k_cache = k_new;
         self.v_cache = v_new;
         Ok(logits)
+    }
+}
+
+/// [`DraftModel`] plus the per-row serving state the coordinator's verify
+/// cycles drive: the per-slot lag tokens. The coordinator prepares the
+/// padded (token, position) arrays — it owns the sequences and their
+/// positions — and the runner owns the cache plus which rows still owe it
+/// an input.
+pub struct DraftRunner {
+    model: DraftModel,
+    /// Fully-accepted rows owe the draft one input (the last drafted token
+    /// was committed but never fed); it is fed at the top of the next
+    /// cycle, position `seq.pos - 1`.
+    lag: Vec<Option<u32>>,
+}
+
+impl DraftRunner {
+    pub fn new(model: DraftModel, b_max: usize) -> DraftRunner {
+        DraftRunner { model, lag: vec![None; b_max] }
+    }
+
+    /// Advance the draft one batched step; `tokens`/`pos` are the padded
+    /// arrays.
+    pub fn step(&mut self, engine: &Engine, tokens: &[i32], pos: &[i32]) -> Result<HostTensor> {
+        self.model.step(engine, tokens, pos)
+    }
+
+    /// Shadow one target forward (plain steps): same inputs, logits unused.
+    pub fn shadow_step(&mut self, engine: &Engine, tokens: &[i32], pos: &[i32]) -> Result<()> {
+        self.step(engine, tokens, pos).map(|_| ())
+    }
+
+    pub fn lag_token(&self, slot: usize) -> Option<u32> {
+        self.lag[slot]
+    }
+
+    pub fn set_lag(&mut self, slot: usize, token: Option<u32>) {
+        self.lag[slot] = token;
+    }
+
+    pub fn any_lag(&self, slots: &[usize]) -> bool {
+        slots.iter().any(|&s| self.lag[s].is_some())
+    }
+
+    pub fn clear_lag(&mut self, slots: &[usize]) {
+        for &s in slots {
+            self.lag[s] = None;
+        }
     }
 }

@@ -10,6 +10,23 @@
 //! as persistent padded host tensors — stale cache slots beyond each row's
 //! `pos` are masked inside the attention kernel (verified by the kernel test
 //! suite), which is what makes slot reuse and speculative rejection free.
+//!
+//! ## The ragged-verify park contract
+//!
+//! The coordinator's mixed-phase verify cycles re-feed a row's own next
+//! `(token, position)` on sub-steps beyond that row's depth ("parking").
+//! Such a step is a **byte-identical rewrite** as long as the row stays in
+//! [`StepInput::rows`] with the same routing mode: the K/V written at a
+//! position depend only on the token embedding, the layer weights and the
+//! row's cache prefix `< pos` — all unchanged between the first write and
+//! the rewrite — and deeper layers see identical hidden streams because
+//! the row's routing (policy or set-restricted refine of identical
+//! logits) is identical. A parked row EXCLUDED from `rows` gets zero
+//! gates, so its layer≥1 K/V writes are garbage — only legal when a chunk
+//! invocation overwrites that window the same step (the chunk-park
+//! idiom). The depth-0 byte-identity pin in
+//! `rust/tests/spec_mixed_phase.rs` and the kernel masking tests hold
+//! this contract in place.
 
 use anyhow::{bail, Result};
 

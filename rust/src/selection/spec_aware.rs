@@ -14,6 +14,19 @@
 //! The paper's Pareto-optimal configurations (k0=1, m=0, m_r∈{4,5}) skip the
 //! batch top-up entirely — the per-request stage already captures the
 //! gating mass.
+//!
+//! **Ragged depth & acceptance priors (PR 4).** Under per-row speculative
+//! depth the coordinator assembles each request's group from only its own
+//! `1 + depth_r` verify positions, and — with `--spec-adaptive` — scales
+//! position `j`'s probability row by the request's acceptance prior
+//! `a_r^j` (`coordinator::speculative::effective_batch_scores_ragged`).
+//! The hierarchy below needs no changes to exploit that: the per-request
+//! aggregation Σ_{x∈T_r} g_{x,j} then weights every request's positions by
+//! how likely they are to commit, so a low-acceptance request's deep
+//! speculative tokens stop pulling experts into S_l (verified by
+//! `acceptance_prior_weighting_shifts_request_budget` below). Warm-up
+//! (top-k0 per position) is scale-invariant per row, so committed tokens
+//! keep their guaranteed experts regardless of prior.
 
 use super::expert_set::ExpertSet;
 use super::greedy::greedy_select;
@@ -203,6 +216,44 @@ mod tests {
                 .sum()
         };
         assert!(mass(&s_h) > 0.9 * 6.0); // ≥90% of total gating mass with 4 experts
+    }
+
+    #[test]
+    fn acceptance_prior_weighting_shifts_request_budget() {
+        // The ragged effective batch scales a request's speculative
+        // positions by its acceptance prior. With the prior at 1.0 a hot
+        // expert on the deepest position wins the per-request budget; with
+        // the prior collapsed (deep rows ≈ 0) the budget must go to the
+        // committed position's runner-up instead.
+        let mk = |hot: usize, scale: f32| {
+            let mut row = vec![0.01f32; 16];
+            row[hot] = 5.0;
+            row[(hot + 1) % 16] = 3.0;
+            softmax_in_place(&mut row);
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+            row
+        };
+        // request: committed token hot on 0, speculative tokens hot on 8 —
+        // position weights emulate priors 1.0 vs 0.05.
+        let full = ScoreMatrix::from_rows(&[mk(0, 1.0), mk(8, 1.0), mk(8, 1.0)]);
+        let collapsed =
+            ScoreMatrix::from_rows(&[mk(0, 1.0), mk(8, 0.05), mk(8, 0.0025)]);
+        let rows = vec![0, 1, 2];
+        let mut scratch = Vec::new();
+        let confident = per_request_select(&full, &rows, 1, 1, &mut scratch);
+        let skeptical = per_request_select(&collapsed, &rows, 1, 1, &mut scratch);
+        // warm-up top-1 per position is scale-invariant: {0, 8} both ways
+        for s in [&confident, &skeptical] {
+            assert!(s.contains(0) && s.contains(8), "warm-up lost");
+        }
+        // the one budget slot goes to the speculative runner-up at full
+        // prior …
+        assert!(confident.contains(9), "{:?}", confident.to_vec());
+        // … and to the committed token's runner-up once the prior collapses
+        assert!(skeptical.contains(1), "{:?}", skeptical.to_vec());
+        assert!(!skeptical.contains(9), "{:?}", skeptical.to_vec());
     }
 
     #[test]

@@ -20,11 +20,15 @@
 //! benches and the fidelity harness; `benches/serve_continuous.rs` measures
 //! the throughput gap between the two under Poisson arrivals.
 //!
-//! Every job gets exactly one reply: parse failures answer with the
+//! Every job gets exactly one FINAL reply: parse failures answer with the
 //! recovered id, submit-time rejections (bounded-queue backpressure,
 //! unservable prompts — see `coordinator::admission::SubmitError`) answer
 //! with a coded protocol error (`"code":"queue_full"`, …), and a worker
-//! that dies mid-drain answers its in-flight jobs with the cause.
+//! that dies mid-drain answers its in-flight jobs with the cause. A job
+//! that opted into `"stream": true` additionally gets a delta frame for
+//! every serving step that committed tokens for it (cut straight from
+//! `StepOutcome::deltas` — speculative commits arrive several tokens at a
+//! time) before that final reply; non-streaming traffic is byte-unchanged.
 //!
 //! (The baked registry carries no tokio; this server uses std::net +
 //! threads, which for a CPU-bound PJRT backend is the honest design anyway —
@@ -46,7 +50,7 @@ use crate::config::ServeConfig;
 use crate::coordinator::{Request, ServeLoop};
 use crate::model::MoeModel;
 use crate::runtime::{Engine, Manifest};
-pub use protocol::{decode_response, Response};
+pub use protocol::{decode_response, Frame, Response};
 
 /// Error payload routed back to the connection thread: optional stable
 /// protocol code (e.g. `queue_full`) plus the human-readable message.
@@ -62,7 +66,15 @@ impl WireError {
     }
 }
 
-type Reply = Sender<std::result::Result<Vec<u32>, WireError>>;
+/// One worker→connection message. Every job ends with exactly one
+/// `Final`; streaming jobs may see any number of `Delta`s first.
+#[derive(Debug)]
+enum WorkerReply {
+    Delta(Vec<u32>),
+    Final(std::result::Result<Vec<u32>, WireError>),
+}
+
+type Reply = Sender<WorkerReply>;
 type Job = (Request, Reply);
 
 /// Handle to a running server.
@@ -196,19 +208,33 @@ fn connection_loop(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
                     writeln!(writer, "{}", protocol::encode_error(id, "server stopping"))?;
                     return Ok(());
                 }
-                match rx.recv() {
-                    Ok(Ok(tokens)) => {
-                        writeln!(writer, "{}", protocol::encode_response(id, &tokens))?
-                    }
-                    Ok(Err(e)) => {
-                        let line = match e.code {
-                            Some(code) => protocol::encode_error_coded(id, code, &e.msg),
-                            None => protocol::encode_error(id, &e.msg),
-                        };
-                        writeln!(writer, "{line}")?
-                    }
-                    Err(_) => {
-                        writeln!(writer, "{}", protocol::encode_error(id, "worker gone"))?
+                loop {
+                    match rx.recv() {
+                        Ok(WorkerReply::Delta(tokens)) => {
+                            writeln!(writer, "{}", protocol::encode_delta(id, &tokens))?
+                        }
+                        Ok(WorkerReply::Final(Ok(tokens))) => {
+                            writeln!(writer, "{}", protocol::encode_response(id, &tokens))?;
+                            break;
+                        }
+                        Ok(WorkerReply::Final(Err(e))) => {
+                            let line = match e.code {
+                                Some(code) => {
+                                    protocol::encode_error_coded(id, code, &e.msg)
+                                }
+                                None => protocol::encode_error(id, &e.msg),
+                            };
+                            writeln!(writer, "{line}")?;
+                            break;
+                        }
+                        Err(_) => {
+                            writeln!(
+                                writer,
+                                "{}",
+                                protocol::encode_error(id, "worker gone")
+                            )?;
+                            break;
+                        }
                     }
                 }
             }
@@ -229,21 +255,54 @@ fn connection_loop(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
 /// protocol error — every job gets exactly one reply, never silence.
 fn submit_job(
     core: &mut ServeLoop<'_>,
-    responders: &mut BTreeMap<u64, Reply>,
+    responders: &mut BTreeMap<u64, Responder>,
     next_internal: &mut u64,
     (mut req, tx): Job,
 ) {
     let internal = *next_internal;
     *next_internal += 1;
     let client_id = req.id;
+    let stream = req.stream;
     req.id = internal;
     match core.submit(req) {
         Ok(()) => {
-            responders.insert(internal, tx);
+            responders.insert(internal, Responder { tx, stream });
         }
         Err(e) => {
             let e = e.with_id(client_id);
-            let _ = tx.send(Err(WireError { code: Some(e.code()), msg: e.to_string() }));
+            let _ = tx.send(WorkerReply::Final(Err(WireError {
+                code: Some(e.code()),
+                msg: e.to_string(),
+            })));
+        }
+    }
+}
+
+/// Reply channel plus the job's streaming opt-in.
+struct Responder {
+    tx: Reply,
+    stream: bool,
+}
+
+/// Route one step's deltas (streaming jobs only) and final replies.
+fn dispatch_outcome(
+    responders: &mut BTreeMap<u64, Responder>,
+    deltas: &[(u64, Vec<u32>)],
+    finished: Vec<(u64, Vec<u32>)>,
+) {
+    // Deltas first: a request finishing this step still sees its last
+    // delta frame before the final reply (frame ordering is pinned by
+    // server_integration).
+    for (internal, tokens) in deltas {
+        if let Some(r) = responders.get(internal) {
+            if r.stream {
+                let _ = r.tx.send(WorkerReply::Delta(tokens.clone()));
+            }
+        }
+    }
+    for (internal, tokens) in finished {
+        if let Some(r) = responders.remove(&internal) {
+            let _ = r.tx.send(WorkerReply::Final(Ok(tokens)));
         }
     }
 }
@@ -268,7 +327,8 @@ fn worker_loop(
                 while !stop.load(Ordering::SeqCst) {
                     match job_rx.recv_timeout(Duration::from_millis(50)) {
                         Ok((_, tx)) => {
-                            let _ = tx.send(Err(WireError::plain(msg.clone())));
+                            let _ = tx
+                                .send(WorkerReply::Final(Err(WireError::plain(msg.clone()))));
                         }
                         Err(RecvTimeoutError::Timeout) => {}
                         Err(RecvTimeoutError::Disconnected) => break,
@@ -277,7 +337,7 @@ fn worker_loop(
                 return;
             }
         };
-        let mut responders: BTreeMap<u64, Reply> = BTreeMap::new();
+        let mut responders: BTreeMap<u64, Responder> = BTreeMap::new();
 
         loop {
             if stop.load(Ordering::SeqCst) {
@@ -287,11 +347,11 @@ fn worker_loop(
                 while core.has_work() {
                     match core.step() {
                         Ok(outcome) => {
-                            for (internal, tokens) in outcome.finished {
-                                if let Some(tx) = responders.remove(&internal) {
-                                    let _ = tx.send(Ok(tokens));
-                                }
-                            }
+                            dispatch_outcome(
+                                &mut responders,
+                                &outcome.deltas,
+                                outcome.finished,
+                            );
                         }
                         Err(e) => {
                             // The drain died: answer every in-flight job
@@ -299,8 +359,10 @@ fn worker_loop(
                             // (a dropped channel reads as "worker gone",
                             // which hides what actually happened).
                             let msg = format!("{e:#}");
-                            for (_, tx) in std::mem::take(&mut responders) {
-                                let _ = tx.send(Err(WireError::plain(msg.clone())));
+                            for (_, r) in std::mem::take(&mut responders) {
+                                let _ = r.tx.send(WorkerReply::Final(Err(
+                                    WireError::plain(msg.clone()),
+                                )));
                             }
                             break;
                         }
@@ -326,20 +388,19 @@ fn worker_loop(
             match core.step() {
                 Ok(outcome) => {
                     // Finished sequences return the moment their slot
-                    // releases — mid-batch, not at batch completion.
-                    for (internal, tokens) in outcome.finished {
-                        if let Some(tx) = responders.remove(&internal) {
-                            let _ = tx.send(Ok(tokens));
-                        }
-                    }
+                    // releases — mid-batch, not at batch completion —
+                    // with streaming jobs' delta frames cut per step.
+                    dispatch_outcome(&mut responders, &outcome.deltas, outcome.finished);
                     // The worker consumes results here; keep the loop's
                     // run-report accumulators from growing forever.
                     core.discard_finished();
                 }
                 Err(e) => {
                     let msg = format!("{e:#}");
-                    for (_, tx) in std::mem::take(&mut responders) {
-                        let _ = tx.send(Err(WireError::plain(msg.clone())));
+                    for (_, r) in std::mem::take(&mut responders) {
+                        let _ = r.tx.send(WorkerReply::Final(Err(WireError::plain(
+                            msg.clone(),
+                        ))));
                     }
                     continue 'serve; // rebuild the core
                 }
@@ -367,5 +428,30 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         protocol::decode_response(line.trim())
+    }
+
+    /// Submit a streaming request: `on_delta` fires once per delta frame
+    /// (in order), and the final reply — whose tokens are the
+    /// concatenation of all deltas — is returned. Forces `stream: true`
+    /// on the request.
+    pub fn generate_stream(
+        &mut self,
+        req: &Request,
+        mut on_delta: impl FnMut(&[u32]),
+    ) -> Result<Response> {
+        let mut req = req.clone();
+        req.stream = true;
+        writeln!(self.writer, "{}", protocol::encode_request(&req))?;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed the connection mid-stream");
+            }
+            match protocol::decode_frame(line.trim())? {
+                protocol::Frame::Delta { tokens, .. } => on_delta(&tokens),
+                protocol::Frame::Final(resp) => return Ok(resp),
+            }
+        }
     }
 }

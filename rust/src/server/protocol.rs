@@ -1,14 +1,21 @@
 //! JSON-lines wire protocol between clients and the serving front-end.
 //!
 //! Request  : {"id": 7, "prompt": [1,2,3], "max_new_tokens": 16, "domain": "gpqa",
-//!             "priority": 1, "deadline_ms": 250}   (last two optional)
+//!             "priority": 1, "deadline_ms": 250, "stream": true}   (last three optional)
 //! Response : {"id": 7, "tokens": [..], "n_tokens": 16}
+//! Delta    : {"id": 7, "delta": [..]}          (streaming requests only)
 //! Error    : {"id": 7, "error": "...", "code": "queue_full"}   (code optional)
 //!
-//! Every request that reaches the server gets exactly one reply line —
-//! malformed payloads and submit-time rejections (queue backpressure,
+//! Every request that reaches the server gets exactly one FINAL reply line
+//! — malformed payloads and submit-time rejections (queue backpressure,
 //! over-long prompts) answer with an error carrying the request id and a
-//! stable machine-readable `code`, never with silence.
+//! stable machine-readable `code`, never with silence. A request that
+//! opted into `"stream": true` additionally receives zero or more delta
+//! frames BEFORE its final reply: one frame per serving step that
+//! committed tokens for it (a speculative commit can carry several tokens
+//! in one frame), whose concatenation equals the final reply's `tokens`.
+//! Non-streaming clients see byte-identical traffic to the pre-streaming
+//! protocol.
 
 use anyhow::{bail, Context, Result};
 
@@ -27,6 +34,9 @@ pub fn encode_request(req: &Request) -> String {
     }
     if let Some(ms) = req.deadline_ms {
         fields.push(("deadline_ms", Json::num(ms as f64)));
+    }
+    if req.stream {
+        fields.push(("stream", Json::Bool(true)));
     }
     Json::obj(fields).dump()
 }
@@ -66,6 +76,9 @@ pub fn decode_request(line: &str) -> Result<Request> {
         }
         req.deadline_ms = Some(ms as u64);
     }
+    if let Some(s) = v.get("stream") {
+        req.stream = s.as_bool().context("stream must be a boolean")?;
+    }
     Ok(req)
 }
 
@@ -85,6 +98,16 @@ pub fn encode_response(id: u64, tokens: &[u32]) -> String {
         ("id", Json::num(id as f64)),
         ("tokens", Json::arr(tokens.iter().map(|&t| Json::num(t as f64)))),
         ("n_tokens", Json::num(tokens.len() as f64)),
+    ])
+    .dump()
+}
+
+/// One streaming delta frame: the tokens a single serving step committed
+/// for this request (speculative commits carry several at once).
+pub fn encode_delta(id: u64, tokens: &[u32]) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("delta", Json::arr(tokens.iter().map(|&t| Json::num(t as f64)))),
     ])
     .dump()
 }
@@ -111,6 +134,16 @@ pub struct Response {
     pub tokens: Vec<u32>,
 }
 
+/// One parsed reply line of a streaming exchange.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Incremental tokens (streaming requests only; ordering pinned by
+    /// `server_integration`).
+    Delta { id: u64, tokens: Vec<u32> },
+    /// The final reply — identical to the non-streaming response line.
+    Final(Response),
+}
+
 pub fn decode_response(line: &str) -> Result<Response> {
     let v = Json::parse(line).context("parsing response line")?;
     if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
@@ -129,6 +162,25 @@ pub fn decode_response(line: &str) -> Result<Response> {
         .map(|t| t.as_usize().map(|u| u as u32).context("token"))
         .collect::<Result<_>>()?;
     Ok(Response { id, tokens })
+}
+
+/// Decode one reply line of a streaming exchange: a delta frame or the
+/// final reply. Error lines fail with the server's message, like
+/// [`decode_response`].
+pub fn decode_frame(line: &str) -> Result<Frame> {
+    let v = Json::parse(line).context("parsing reply line")?;
+    if let Some(delta) = v.get("delta") {
+        let id =
+            v.req("id").map_err(anyhow::Error::msg)?.as_i64().context("id")? as u64;
+        let tokens = delta
+            .as_arr()
+            .context("delta")?
+            .iter()
+            .map(|t| t.as_usize().map(|u| u as u32).context("delta token"))
+            .collect::<Result<_>>()?;
+        return Ok(Frame::Delta { id, tokens });
+    }
+    decode_response(line).map(Frame::Final)
 }
 
 #[cfg(test)]
@@ -180,6 +232,38 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("queue_full"), "{msg}");
         assert!(msg.contains("request 12"), "{msg}");
+    }
+
+    #[test]
+    fn stream_flag_roundtrip_and_default() {
+        let mut r = Request::new(3, vec![1, 2], 4);
+        assert!(!decode_request(&encode_request(&r)).unwrap().stream);
+        // the flag is OMITTED when false — non-streaming request lines are
+        // byte-identical to the pre-streaming protocol
+        assert!(!encode_request(&r).contains("stream"));
+        r.stream = true;
+        let line = encode_request(&r);
+        assert!(line.contains("\"stream\":true"), "{line}");
+        assert!(decode_request(&line).unwrap().stream);
+        assert!(decode_request(
+            r#"{"id":1,"prompt":[1],"max_new_tokens":2,"stream":"yes"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn delta_frames_decode_and_finals_pass_through() {
+        let d = encode_delta(9, &[4, 5]);
+        assert_eq!(
+            decode_frame(&d).unwrap(),
+            Frame::Delta { id: 9, tokens: vec![4, 5] }
+        );
+        let f = encode_response(9, &[4, 5, 6]);
+        assert_eq!(
+            decode_frame(&f).unwrap(),
+            Frame::Final(Response { id: 9, tokens: vec![4, 5, 6] })
+        );
+        assert!(decode_frame(&encode_error(9, "boom")).is_err());
     }
 
     #[test]

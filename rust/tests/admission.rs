@@ -378,3 +378,84 @@ fn scheduler_propagates_queue_rejections() {
         .unwrap_err();
     assert!(format!("{err:#}").contains("queue full"), "{err:#}");
 }
+
+/// SATELLITE (PR 4): the footprint starvation guard. Under sustained skew
+/// — the running batch and a continuous arrival stream all belong to one
+/// majority class — any queued request (minority class, or entirely
+/// unknown to the tracker) must be admitted within a bounded number of
+/// frees: its backlog at submission plus O(STARVATION_HORIZON) aging.
+#[test]
+fn prop_footprint_admission_is_starvation_free() {
+    use xshare::coordinator::admission::{FootprintTracker, STARVATION_HORIZON};
+    let n_experts = 8;
+    let top_k = 2;
+    forall(
+        0x5A,
+        60,
+        |r: &mut Rng| {
+            let backlog = r.below(12); // majority entries ahead at submission
+            let labeled = r.bool(0.5); // minority carries a domain tag or not
+            let refill = 1 + r.below(2); // fresh majority arrivals per free
+            (backlog, labeled, refill)
+        },
+        |&(backlog, labeled, refill)| {
+            let mut tracker = FootprintTracker::new(n_experts, 2);
+            let mk = |id: u64, domain: &str| {
+                let mut rq = Request::new(id, vec![1, 2], 4);
+                rq.domain = domain.into();
+                rq
+            };
+            // One majority-class row runs forever, concentrated on {0, 1}.
+            let runner = mk(9_000, "hot");
+            tracker.on_admit(0, &runner);
+            tracker.observe_row(0, &[0.5, 0.4, 0.02, 0.02, 0.02, 0.02, 0.01, 0.01]);
+            if labeled {
+                // the minority class has been seen before, on {6, 7}
+                let probe = mk(9_001, "cold");
+                tracker.on_admit(1, &probe);
+                tracker.observe_row(1, &[0.01, 0.01, 0.02, 0.02, 0.02, 0.02, 0.4, 0.5]);
+                tracker.release(1);
+            }
+
+            let mut q = AdmissionQueue::new(AdmissionKind::FootprintAware, 0);
+            let mut next_id = 1u64;
+            for _ in 0..backlog {
+                q.submit(mk(next_id, "hot"), 0.0).map_err(|e| e.to_string())?;
+                next_id += 1;
+            }
+            // the request at risk of starving ("cold" class, or unlabeled
+            // and never observed)
+            q.submit(mk(0, if labeled { "cold" } else { "" }), 0.0)
+                .map_err(|e| e.to_string())?;
+
+            let running = vec![0usize];
+            let bound = backlog as u64 + 2 * STARVATION_HORIZON + 2;
+            let mut frees = 0u64;
+            loop {
+                for _ in 0..refill {
+                    q.submit(mk(next_id, "hot"), 0.0).map_err(|e| e.to_string())?;
+                    next_id += 1;
+                }
+                let ctx = AdmissionContext {
+                    now_sim: frees as f64,
+                    tracker: Some(&tracker),
+                    running_slots: &running,
+                    placement: None,
+                    top_k,
+                };
+                let picked = q.pop_next(&ctx).expect("queue never empty");
+                frees += 1;
+                if picked.req.id == 0 {
+                    break;
+                }
+                if frees > bound {
+                    return Err(format!(
+                        "minority request still queued after {frees} frees \
+                         (backlog {backlog}, labeled {labeled}, refill {refill})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

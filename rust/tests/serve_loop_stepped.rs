@@ -150,12 +150,12 @@ fn late_joiner_does_not_perturb_vanilla_outputs() {
 }
 
 #[test]
-fn spec_cycles_gated_on_chunk_prefill_rows() {
-    // The mixed-phase rule under chunking: speculative verify cycles need
-    // an all-decode batch, so they stay disabled while ANY row is mid-
-    // chunk-prefill and resume the step after the last prefill row flips
-    // to decode — the `prefill_rows == 0` gate, now driven by chunk
-    // advances instead of one-token advances.
+fn spec_cycles_survive_chunk_prefill_rows() {
+    // The mixed-phase rule (PR 4): a chunk-prefilling row no longer
+    // switches speculation off for the batch. While B walks its prompt in
+    // chunks, A keeps running verify cycles — the step reports per-row
+    // phases: B in PrefillChunk, A in SpecVerify at full depth.
+    use xshare::coordinator::Phase;
     let mut model = tiny_model();
     let cfg = ServeConfig { spec_len: 2, prefill_chunk: 2, ..tiny_cfg() };
     let mut core = ServeLoop::new(&mut model, cfg).unwrap();
@@ -163,29 +163,69 @@ fn spec_cycles_gated_on_chunk_prefill_rows() {
     // A: single-token prompt → decodes from step 1 on.
     core.submit(Request::new(1, vec![3], 8)).unwrap();
     let o1 = core.step().unwrap();
-    assert!(!o1.speculative, "prefill row present");
+    assert!(!o1.speculative(), "a lone prefill row has nothing to speculate");
+    assert_eq!(o1.phases, vec![(0, 1, Phase::PrefillChunk)]);
     let o2 = core.step().unwrap();
-    assert!(o2.speculative, "all-decode batch runs the verify cycle");
+    assert!(o2.speculative(), "all-decode batch runs the verify cycle");
+    assert_eq!(o2.spec_depth_of(0), Some(2));
 
     // B arrives with a 5-token prompt: three chunked steps (2+2+1); the
-    // verify cycle must stay off for ALL of them even though A decodes.
+    // verify cycle must KEEP RUNNING for A through all of them.
     core.submit(Request::new(2, vec![4, 5, 6, 7, 8], 4)).unwrap();
     for (expect_prefill, expect_tokens) in [(1, 2), (1, 2), (1, 1)] {
         let o = core.step().unwrap();
         assert_eq!(o.prefill_rows, expect_prefill);
         assert_eq!(o.prefill_tokens, expect_tokens, "chunk geometry");
-        assert!(!o.speculative, "spec must pause while a row chunk-prefills");
+        assert!(
+            o.speculative(),
+            "a chunk-prefilling row must not stall the decode row's speculation"
+        );
+        assert_eq!(o.spec_depth_of(0), Some(2), "A speculates at full depth");
+        assert!(
+            o.phases.iter().any(|&(s, id, p)| (s, id, p) == (1, 2, Phase::PrefillChunk)),
+            "B reports its prefill phase: {:?}",
+            o.phases
+        );
+        assert_eq!(core.metrics().spec_stalled_steps, 0, "no stall under mixed phases");
     }
-    // B flipped to decode at the end of its last chunk: the very next step
-    // resumes speculation for the whole batch.
+    // B finished its prompt: both rows now speculate.
     let o = core.step().unwrap();
     assert_eq!((o.prefill_rows, o.decode_rows), (0, 2));
-    assert!(o.speculative, "spec resumes after the last prefill row flips");
+    assert!(o.speculative());
+    assert_eq!(o.spec_depth_of(1), Some(2));
 
     core.drain().unwrap();
     let report = core.report();
     assert_eq!(report.outputs[&1].len(), 8);
     assert_eq!(report.outputs[&2].len(), 4);
+}
+
+#[test]
+fn legacy_gate_restores_batch_global_stall() {
+    // The pre-PR4 gate survives as bench/pin instrumentation: with it
+    // pinned on, a chunk-prefilling row stalls speculation for everyone
+    // and the stall is counted in spec_stalled_steps.
+    let mut model = tiny_model();
+    let cfg = ServeConfig { spec_len: 2, prefill_chunk: 2, ..tiny_cfg() };
+    let mut core = ServeLoop::new(&mut model, cfg).unwrap();
+    core.set_legacy_spec_gate(true);
+
+    core.submit(Request::new(1, vec![3], 8)).unwrap();
+    core.step().unwrap();
+    let o = core.step().unwrap();
+    assert!(o.speculative(), "all-decode batch still speculates under the gate");
+
+    core.submit(Request::new(2, vec![4, 5, 6, 7, 8], 4)).unwrap();
+    let mut stalled = 0;
+    for _ in 0..3 {
+        let o = core.step().unwrap();
+        assert_eq!(o.prefill_rows, 1);
+        assert!(!o.speculative(), "the legacy gate stalls on any prefill row");
+        stalled += 1;
+    }
+    assert_eq!(core.metrics().spec_stalled_steps, stalled);
+    let o = core.step().unwrap();
+    assert!(o.speculative(), "gate lifts once the batch is all-decode");
 }
 
 #[test]

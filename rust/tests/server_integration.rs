@@ -55,6 +55,80 @@ fn concurrent_clients_are_batched() {
 }
 
 #[test]
+fn streaming_deltas_arrive_in_order_before_final_reply() {
+    // Satellite (PR 4): "stream": true gets one delta frame per step that
+    // committed tokens, then the usual final reply whose tokens equal the
+    // concatenation of all deltas. Without speculation every step commits
+    // exactly one token, so the frame count is pinned too.
+    let server = start_tiny_server();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let mut deltas: Vec<Vec<u32>> = Vec::new();
+    let resp = client
+        .generate_stream(&Request::new(7, vec![3, 4, 5], 6), |d| deltas.push(d.to_vec()))
+        .unwrap();
+    assert_eq!(resp.id, 7);
+    assert_eq!(resp.tokens.len(), 6);
+    let concat: Vec<u32> = deltas.iter().flatten().copied().collect();
+    assert_eq!(concat, resp.tokens, "deltas must concatenate to the final reply");
+    assert_eq!(deltas.len(), 6, "one frame per committed token without speculation");
+
+    // the same request non-streaming returns the same tokens
+    let plain = client.generate(&Request::new(8, vec![3, 4, 5], 6)).unwrap();
+    assert_eq!(plain.tokens, resp.tokens);
+    server.shutdown();
+}
+
+#[test]
+fn streaming_spec_commits_batch_several_tokens_per_frame() {
+    // Under lookup-draft speculation a verify cycle can commit several
+    // tokens at once — they arrive as ONE frame, and the concatenation
+    // still equals the final reply.
+    let cfg = ServeConfig {
+        preset: "tiny".into(),
+        batch_size: 2,
+        spec_len: 3,
+        spec_draft: xshare::config::SpecDraft::Lookup,
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    let server = Server::start_from_dir(artifacts_root().join("tiny"), cfg).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let mut deltas: Vec<Vec<u32>> = Vec::new();
+    let resp = client
+        .generate_stream(&Request::new(3, vec![5, 6], 24), |d| deltas.push(d.to_vec()))
+        .unwrap();
+    let concat: Vec<u32> = deltas.iter().flatten().copied().collect();
+    assert_eq!(concat, resp.tokens);
+    assert_eq!(resp.tokens.len(), 24);
+    assert!(
+        deltas.len() <= resp.tokens.len(),
+        "never more frames than tokens"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn non_streaming_reply_bytes_unchanged() {
+    // Clients that do not opt in must see exactly the pre-streaming wire
+    // format: one reply line, bit-identical to encode_response — no delta
+    // frames, no extra fields.
+    let server = start_tiny_server();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, r#"{{"id":11,"prompt":[3,4],"max_new_tokens":4}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = xshare::server::decode_response(line.trim()).unwrap();
+    assert_eq!(
+        line.trim(),
+        xshare::server::protocol::encode_response(11, &resp.tokens),
+        "non-streaming reply line must be byte-identical to the legacy format"
+    );
+    server.shutdown();
+}
+
+#[test]
 fn malformed_request_error_carries_request_id() {
     // A parsable-but-invalid payload (empty prompt) must be answered with
     // an error the client can correlate — not a hardcoded id of 0.
