@@ -17,11 +17,12 @@ mod common;
 use std::collections::{BTreeMap, VecDeque};
 
 use common::{fmt, load_model, pct, save_report, Table};
-use xshare::config::{ServeConfig, SpecDraft};
+use xshare::config::{EpConfig, ServeConfig, SpecDraft};
 use xshare::coordinator::admission::{
     AdmissionContext, AdmissionKind, AdmissionQueue, FootprintTracker,
 };
 use xshare::coordinator::{Request, Scheduler, ServeLoop};
+use xshare::ep::PlacementKind;
 use xshare::gen::{Domain, GatingParams, RequestGating, TraceDomain, TraceGenerator};
 use xshare::model::MoeModel;
 use xshare::selection::{softmax_in_place, topk_indices, ExpertSet, PolicyKind};
@@ -610,6 +611,176 @@ fn admission_scenario(model: &mut MoeModel) {
     assert_eq!(edf.metrics.deadline_total, ADM_N_REQUESTS as u64);
 }
 
+// EP serving scenario (PR 5): the same two-template traffic, deployed
+// expert-parallel.
+const EP_GPUS: usize = 4;
+const EP_REBALANCE_EVERY: usize = 2;
+const EP_N_REQUESTS: usize = 24;
+
+/// Skewed two-template burst: one minority-class row lands in the first
+/// (cold-admitted) batch, then a long majority run, then the minority
+/// block. The shape that makes eviction earn its keep: the cold admission
+/// strands one "B" row among "A"s with a queue full of better-fitting
+/// "A"s, and the B block at the tail gives the preempted row same-class
+/// company to resume with.
+fn ep_template_requests() -> Vec<Request> {
+    let tpl_a: Vec<u32> = vec![70, 75, 80, 72, 78, 74];
+    let tpl_b: Vec<u32> = vec![430, 436, 440, 433, 428, 438];
+    let mut reqs = Vec::with_capacity(EP_N_REQUESTS);
+    let mut push = |id: u64, class_a: bool| {
+        let (prompt, domain) =
+            if class_a { (tpl_a.clone(), "tplA") } else { (tpl_b.clone(), "tplB") };
+        let mut r = Request::new(id, prompt, ADM_MAX_NEW);
+        r.domain = domain.into();
+        reqs.push(r);
+    };
+    // first batch: A, A, A, B (the stranded minority row) …
+    for id in 0..3 {
+        push(id, true);
+    }
+    push(3, false);
+    // … then 10 more A, then the B block
+    for id in 4..14 {
+        push(id, true);
+    }
+    for id in 14..EP_N_REQUESTS as u64 {
+        push(id, false);
+    }
+    reqs
+}
+
+/// **EP serving scenario**: the live serve loop under a 4-GPU
+/// expert-parallel deployment, burst backlog of the skewed template mix,
+/// vanilla (placement-blind) routing so token outputs are comparable
+/// byte-for-byte. Baseline: static contiguous placement, FIFO admission.
+/// Optimized: the gpu-aware scheduling stack — MaxLoad-weighted footprint
+/// admission, footprint-driven eviction (`--ep-evict`), dynamic placement
+/// (`--ep-rebalance`). ACCEPTANCE: the optimized deployment serves the
+/// identical tokens at a strictly lower peak-GPU-load integral
+/// (∫ MaxLoad dt). Emits `BENCH_ep_serve.json`.
+fn ep_serve_scenario(model: &mut MoeModel) {
+    println!(
+        "\n# EP serving — gpu-aware stack vs vanilla placement ({EP_N_REQUESTS} reqs, \
+         B={ADM_BATCH}, G={EP_GPUS}, vanilla routing, burst backlog)"
+    );
+    let reqs = ep_template_requests();
+    let mut base_cfg = base_cfg("vanilla");
+    base_cfg.batch_size = ADM_BATCH;
+    base_cfg.max_new_tokens = ADM_MAX_NEW;
+    base_cfg.ep = Some(EpConfig { n_gpus: EP_GPUS, placement: PlacementKind::Contiguous });
+    let mut opt_cfg = base_cfg.clone();
+    opt_cfg.admission = AdmissionKind::FootprintAware;
+    opt_cfg.ep_evict = true;
+    opt_cfg.ep_rebalance = EP_REBALANCE_EVERY;
+
+    let base = Scheduler::new(model, base_cfg)
+        .expect("scheduler")
+        .run(reqs.clone())
+        .expect("run");
+    let opt = Scheduler::new(model, opt_cfg)
+        .expect("scheduler")
+        .run(reqs)
+        .expect("run");
+
+    let mut table = Table::new(&[
+        "deployment",
+        "tokens",
+        "sim_s",
+        "max_load_mean",
+        "∫maxload_dt",
+        "load/gpu",
+        "evictions",
+        "rebalances",
+    ]);
+    for (name, r) in [("vanilla placement + fifo", &base), ("gpu-aware stack", &opt)] {
+        let m = &r.metrics;
+        let per_gpu: Vec<String> =
+            m.gpu_loads.iter().map(|s| format!("{:.1}", s.mean())).collect();
+        table.row(&[
+            name.to_string(),
+            m.tokens_out.to_string(),
+            fmt(m.sim_seconds, 4),
+            fmt(m.max_gpu_load.mean(), 2),
+            fmt(m.gpu_load_integral, 5),
+            per_gpu.join("/"),
+            m.evictions.to_string(),
+            m.rebalances.to_string(),
+        ]);
+    }
+    table.print("serve_continuous — expert-parallel serving, skewed template mix");
+    println!(
+        "[ep          ] gpu-aware stack vs vanilla placement: ∫MaxLoad dt {:+.1}%, \
+         sim {:+.1}%, {} evictions, {} rebalances (mean Δ {:.3})",
+        pct(opt.metrics.gpu_load_integral, base.metrics.gpu_load_integral),
+        pct(opt.metrics.sim_seconds, base.metrics.sim_seconds),
+        opt.metrics.evictions,
+        opt.metrics.rebalances,
+        opt.metrics.rebalance_delta.mean(),
+    );
+
+    assert_eq!(
+        opt.outputs, base.outputs,
+        "scheduling/placement are cost-and-composition levers — under vanilla \
+         routing the served tokens must be byte-identical"
+    );
+    assert!(
+        opt.metrics.gpu_load_integral < base.metrics.gpu_load_integral,
+        "ACCEPTANCE: gpu-aware admission + eviction + rebalancing must serve the \
+         skewed mix at a strictly lower peak-GPU-load integral than vanilla \
+         placement ({} vs {})",
+        opt.metrics.gpu_load_integral,
+        base.metrics.gpu_load_integral
+    );
+    assert!(
+        opt.metrics.evictions > 0,
+        "the stranded minority row was never evicted — the scenario is not \
+         exercising footprint-driven preemption"
+    );
+    assert!(
+        opt.metrics.rebalances > 0,
+        "dynamic placement never adopted a rebalance on the skewed mix"
+    );
+    assert!(
+        opt.metrics.rebalance_delta.min > 0.0,
+        "adopted rebalances must strictly improve expected MaxLoad"
+    );
+
+    let json = xshare::util::json::Json::obj(vec![
+        ("scenario", xshare::util::json::Json::str("ep_serve")),
+        ("preset", xshare::util::json::Json::str(PRESET)),
+        ("n_gpus", xshare::util::json::Json::num(EP_GPUS as f64)),
+        ("requests", xshare::util::json::Json::num(EP_N_REQUESTS as f64)),
+        ("tokens_out", xshare::util::json::Json::num(opt.metrics.tokens_out as f64)),
+        (
+            "base_gpu_load_integral",
+            xshare::util::json::Json::num(base.metrics.gpu_load_integral),
+        ),
+        (
+            "opt_gpu_load_integral",
+            xshare::util::json::Json::num(opt.metrics.gpu_load_integral),
+        ),
+        (
+            "integral_gain_pct",
+            xshare::util::json::Json::num(pct(
+                opt.metrics.gpu_load_integral,
+                base.metrics.gpu_load_integral,
+            )),
+        ),
+        ("base_sim_s", xshare::util::json::Json::num(base.metrics.sim_seconds)),
+        ("opt_sim_s", xshare::util::json::Json::num(opt.metrics.sim_seconds)),
+        ("evictions", xshare::util::json::Json::num(opt.metrics.evictions as f64)),
+        ("rebalances", xshare::util::json::Json::num(opt.metrics.rebalances as f64)),
+        (
+            "rebalance_delta_mean",
+            xshare::util::json::Json::num(opt.metrics.rebalance_delta.mean()),
+        ),
+    ])
+    .dump();
+    std::fs::write("BENCH_ep_serve.json", &json).expect("writing BENCH_ep_serve.json");
+    save_report("BENCH_ep_serve.json", &json);
+    println!("[ep          ] wrote BENCH_ep_serve.json");
+}
+
 // Synthetic-gating admission sim: the general correlated-routing case.
 const SIM_N_EXPERTS: usize = 128;
 const SIM_TOP_K: usize = 8;
@@ -661,6 +832,7 @@ fn simulate_admission(kind: AdmissionKind) -> f64 {
                 running_slots: &running,
                 placement: None,
                 top_k: SIM_TOP_K,
+                spec: None,
             };
             let Some(entry) = queue.pop_next(&ctx) else { break };
             tracker.on_admit(slot, &entry.req);
@@ -725,13 +897,19 @@ fn admission_sim_scenario() {
 }
 
 fn main() {
-    // Scenario filter: `cargo bench --bench serve_continuous -- spec` runs
-    // only the mixed-phase speculation scenario (what CI executes and
-    // uploads BENCH_spec.json from); no filter runs everything.
+    // Scenario filter: `cargo bench --bench serve_continuous -- spec`
+    // runs only the mixed-phase speculation scenario and `-- ep` only the
+    // expert-parallel serving scenario (CI executes both and uploads
+    // BENCH_spec.json / BENCH_ep_serve.json); no filter runs everything.
     let only: Option<String> =
         std::env::args().skip(1).find(|a| !a.starts_with("--"));
     if only.as_deref() == Some("spec") {
         spec_mixed_phase_scenario();
+        return;
+    }
+    if only.as_deref() == Some("ep") {
+        let mut model = load_model(PRESET);
+        ep_serve_scenario(&mut model);
         return;
     }
     println!(
@@ -819,6 +997,7 @@ fn main() {
 
     long_prompt_scenario(&mut model);
     admission_scenario(&mut model);
+    ep_serve_scenario(&mut model);
     admission_sim_scenario();
     spec_mixed_phase_scenario();
 }

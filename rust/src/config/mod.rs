@@ -88,6 +88,24 @@ pub struct ServeConfig {
     /// Admission-queue depth bound; submits beyond it are rejected with a
     /// typed `QueueFull` error. 0 = unbounded (legacy-compatible default).
     pub max_queue: usize,
+    /// EMA decay for footprint tracking (admission co-scheduling,
+    /// eviction, rebalancing). Valid on the closed interval `[0, 1]`:
+    /// `0.0` = no memory (latest observation wins), `1.0` = freeze at the
+    /// first observation. Default 0.9 (~10-step memory).
+    pub footprint_decay: f32,
+    /// Footprint-aware slot eviction (`--ep-evict`): when the queue holds
+    /// a request whose predicted expert set fits the running batch far
+    /// better than the worst-fitting running row does, preempt that row
+    /// back to the queue (bounded per request; resumed losslessly from its
+    /// committed history — see `coordinator::eviction`). Requires
+    /// footprint admission. Off by default.
+    pub ep_evict: bool,
+    /// Dynamic placement (`--ep-rebalance N`): every N slot frees, greedily
+    /// reassign experts to GPUs to minimize expected MaxLoad under the
+    /// tracked class mix (adopted only when it strictly improves). 0 = off
+    /// (static placement, the default). Requires an EP topology and
+    /// footprint admission.
+    pub ep_rebalance: usize,
     /// Expert-parallel topology (None = single GPU).
     pub ep: Option<EpConfig>,
     /// Server bind address.
@@ -111,6 +129,9 @@ impl Default for ServeConfig {
             hardware: "h100".into(),
             admission: AdmissionKind::Fifo,
             max_queue: 0,
+            footprint_decay: 0.9,
+            ep_evict: false,
+            ep_rebalance: 0,
             ep: None,
             addr: "127.0.0.1:7431".into(),
             seed: 0,
@@ -130,8 +151,8 @@ impl ServeConfig {
 
         let known = [
             "preset", "policy", "batch_size", "spec_len", "spec_adaptive", "spec_draft",
-            "prefill_chunk", "hardware", "admission", "max_queue", "ep", "addr", "seed",
-            "max_new_tokens",
+            "prefill_chunk", "hardware", "admission", "max_queue", "footprint_decay",
+            "ep_evict", "ep_rebalance", "ep", "addr", "seed", "max_new_tokens",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -172,6 +193,15 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("max_queue") {
             cfg.max_queue = v.as_usize().context("max_queue")?;
+        }
+        if let Some(v) = root.get("footprint_decay") {
+            cfg.footprint_decay = v.as_f64().context("footprint_decay")? as f32;
+        }
+        if let Some(v) = root.get("ep_evict") {
+            cfg.ep_evict = v.as_bool().context("ep_evict")?;
+        }
+        if let Some(v) = root.get("ep_rebalance") {
+            cfg.ep_rebalance = v.as_usize().context("ep_rebalance")?;
         }
         if let Some(v) = root.get("addr") {
             cfg.addr = v.as_str().context("addr")?.to_string();
@@ -228,6 +258,16 @@ impl ServeConfig {
         if args.has("max-queue") {
             self.max_queue = args.usize_or("max-queue", self.max_queue);
         }
+        if args.has("footprint-decay") {
+            self.footprint_decay =
+                args.f64_or("footprint-decay", self.footprint_decay as f64) as f32;
+        }
+        if args.bool("ep-evict") {
+            self.ep_evict = true;
+        }
+        if args.has("ep-rebalance") {
+            self.ep_rebalance = args.usize_or("ep-rebalance", self.ep_rebalance);
+        }
         if let Some(v) = args.get("addr") {
             self.addr = v.to_string();
         }
@@ -264,6 +304,31 @@ impl ServeConfig {
             // compiled max_seq is checked against the manifest at ServeLoop
             // construction; this is the config-level sanity ceiling
             bail!("prefill_chunk {} is beyond any compiled sequence length", self.prefill_chunk);
+        }
+        if !(0.0..=1.0).contains(&self.footprint_decay) || !self.footprint_decay.is_finite()
+        {
+            bail!(
+                "footprint_decay {} outside [0, 1] (0 = no memory, 1 = freeze at the \
+                 first observation; both endpoints are legal)",
+                self.footprint_decay
+            );
+        }
+        if self.ep_evict && self.admission != AdmissionKind::FootprintAware {
+            bail!(
+                "--ep-evict needs footprint admission (--admission footprint): eviction \
+                 scores rows and queue candidates by tracked expert footprints"
+            );
+        }
+        if self.ep_rebalance > 0 {
+            if self.ep.is_none() {
+                bail!("--ep-rebalance needs an EP topology (--ep-gpus N)");
+            }
+            if self.admission != AdmissionKind::FootprintAware {
+                bail!(
+                    "--ep-rebalance needs footprint admission (--admission footprint): \
+                     rebalancing weights experts by the tracked class mix"
+                );
+            }
         }
         if let Some(ep) = &self.ep {
             if ep.n_gpus == 0 {
@@ -448,6 +513,67 @@ mod tests {
         assert_eq!(cfg.admission, AdmissionKind::SloEdf);
         assert_eq!(cfg.max_queue, 8);
         let bad = Args::parse("--admission random".split_whitespace().map(String::from));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn ep_serving_knobs_roundtrip_and_validation() {
+        // defaults: static placement, no eviction, 0.9 decay
+        let d = ServeConfig::default();
+        assert!(!d.ep_evict);
+        assert_eq!(d.ep_rebalance, 0);
+        assert!((d.footprint_decay - 0.9).abs() < 1e-6);
+
+        let p = write_tmp(
+            "ep_serve.json",
+            r#"{"admission":"footprint","footprint_decay":0.8,"ep_evict":true,
+               "ep_rebalance":4,"ep":{"n_gpus":4}}"#,
+        );
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert!(cfg.ep_evict);
+        assert_eq!(cfg.ep_rebalance, 4);
+        assert!((cfg.footprint_decay - 0.8).abs() < 1e-6);
+
+        // both decay endpoints are LEGAL (0 = no memory, 1 = freeze) —
+        // the old Footprint::observe guard rejected exactly one of them
+        for decay in [0.0f32, 1.0] {
+            let cfg = ServeConfig { footprint_decay: decay, ..ServeConfig::default() };
+            cfg.validate().unwrap();
+        }
+        // …but out-of-range fails loudly at parse time, not deep in serving
+        for decay in [-0.1f32, 1.1, f32::NAN] {
+            let cfg = ServeConfig { footprint_decay: decay, ..ServeConfig::default() };
+            let err = cfg.validate().unwrap_err();
+            assert!(format!("{err:#}").contains("footprint_decay"), "{err:#}");
+        }
+
+        // eviction without footprint admission is a config error
+        let bad = write_tmp("ep_evict_bad.json", r#"{"ep_evict":true}"#);
+        let err = ServeConfig::from_json_file(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("footprint admission"));
+
+        // rebalance needs both an EP topology and footprint admission
+        let bad = write_tmp(
+            "ep_reb_bad.json",
+            r#"{"admission":"footprint","ep_rebalance":2}"#,
+        );
+        assert!(ServeConfig::from_json_file(&bad).is_err());
+        let bad =
+            write_tmp("ep_reb_bad2.json", r#"{"ep_rebalance":2,"ep":{"n_gpus":2}}"#);
+        assert!(ServeConfig::from_json_file(&bad).is_err());
+
+        // CLI spellings
+        let args = Args::parse(
+            "--admission footprint --ep-gpus 4 --ep-evict --ep-rebalance 8 \
+             --footprint-decay 0.95"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert!(cfg.ep_evict);
+        assert_eq!(cfg.ep_rebalance, 8);
+        assert!((cfg.footprint_decay - 0.95).abs() < 1e-6);
+        let bad = Args::parse("--ep-evict".split_whitespace().map(String::from));
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 

@@ -39,6 +39,7 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::coordinator::request::Request;
+use crate::coordinator::speculative::SpecDepthController;
 use crate::ep::Placement;
 use crate::selection::{admission_score, ExpertSet, Footprint, ScoreMatrix};
 
@@ -179,6 +180,42 @@ pub struct QueuedEntry {
     pub skipped: u64,
 }
 
+/// Acceptance-prior state for the spec-grouping admission refinement: the
+/// ragged verify's padded geometry is densest when co-running rows draft
+/// at similar depths, so footprint admission prefers co-admitting classes
+/// whose acceptance priors match the running rows' (present only when
+/// adaptive speculation is on).
+pub struct SpecGrouping<'a> {
+    /// The per-class acceptance EMAs (shared with depth control).
+    pub ctl: &'a SpecDepthController,
+    /// Traffic-class keys of the rows currently running.
+    pub running_classes: &'a [String],
+}
+
+impl SpecGrouping<'_> {
+    /// Mean acceptance prior of the running batch (1.0-optimistic for
+    /// unobserved classes, like depth control itself).
+    fn running_prior(&self) -> Option<f64> {
+        if self.running_classes.is_empty() {
+            return None;
+        }
+        let sum: f64 =
+            self.running_classes.iter().map(|c| self.ctl.prior(c) as f64).sum();
+        Some(sum / self.running_classes.len() as f64)
+    }
+
+    /// Similarity bonus for a candidate class, in `[0, SPEC_GROUP_WEIGHT]`.
+    fn bonus(&self, class: &str) -> f64 {
+        match self.running_prior() {
+            Some(mean) => {
+                let cand = self.ctl.prior(class) as f64;
+                SPEC_GROUP_WEIGHT * (1.0 - (cand - mean).abs())
+            }
+            None => 0.0,
+        }
+    }
+}
+
 /// What a policy may look at when choosing the next admission.
 pub struct AdmissionContext<'a> {
     /// Current simulated time.
@@ -192,6 +229,8 @@ pub struct AdmissionContext<'a> {
     pub placement: Option<&'a Placement>,
     /// The model's native top-k (predicted expert-set size).
     pub top_k: usize,
+    /// Spec-grouping refinement state (adaptive speculation only).
+    pub spec: Option<SpecGrouping<'a>>,
 }
 
 /// Picks which queued entry is admitted into the next free slot.
@@ -281,6 +320,13 @@ pub fn aging_bonus(skipped: u64, top_k: usize) -> f64 {
     skipped as f64 * (2.0 * top_k as f64 + 1.0) / STARVATION_HORIZON as f64
 }
 
+/// Weight of the spec-grouping similarity bonus. Kept at half an expert so
+/// the full admission score stays inside `(-top_k, top_k + 1)` and the
+/// aging bonus — whose slope is `2·top_k + 1` per [`STARVATION_HORIZON`]
+/// skips — still strictly dominates after the horizon: the starvation
+/// bound is unchanged by spec grouping.
+pub const SPEC_GROUP_WEIGHT: f64 = 0.5;
+
 /// Greedy expected-overlap co-scheduling (EP-aware when placed).
 pub struct FootprintAware;
 
@@ -316,7 +362,16 @@ impl AdmissionPolicy for FootprintAware {
                 }
                 None => 0.0,
             };
-            let score = base + aging_bonus(e.skipped, ctx.top_k);
+            // Spec-grouping refinement: prefer candidates whose class
+            // acceptance prior matches the running rows', so ragged
+            // verifies stay dense (bounded by SPEC_GROUP_WEIGHT — it
+            // breaks overlap ties, never overrides a whole expert).
+            let spec_bonus = ctx
+                .spec
+                .as_ref()
+                .map(|sg| sg.bonus(&FootprintTracker::class_key(&e.req)))
+                .unwrap_or(0.0);
+            let score = base + spec_bonus + aging_bonus(e.skipped, ctx.top_k);
             // strictly-greater keeps the earliest seq_no on ties
             if best.map(|(_, s)| score > s).unwrap_or(true) {
                 best = Some((i, score));
@@ -365,6 +420,30 @@ impl AdmissionQueue {
     /// Ids of all queued requests, in submission order.
     pub fn ids(&self) -> impl Iterator<Item = u64> + '_ {
         self.entries.iter().map(|e| e.req.id)
+    }
+
+    /// All queued entries, in submission order (eviction planning scans
+    /// these read-only).
+    pub fn entries(&self) -> impl Iterator<Item = &QueuedEntry> {
+        self.entries.iter()
+    }
+
+    /// Re-enqueue a preempted (evicted) request. Unlike
+    /// [`AdmissionQueue::submit`], this never applies backpressure — a
+    /// request the system already accepted must not be droppable — and it
+    /// carries the caller-preserved submission time and absolute deadline
+    /// (an eviction must not reset a request's SLO clock or its queue-wait
+    /// origin). The entry joins the back of submission order.
+    pub fn requeue(&mut self, req: Request, submit_sim: f64, deadline_sim: Option<f64>) {
+        let entry = QueuedEntry {
+            req,
+            submit_sim,
+            seq_no: self.next_seq,
+            deadline_sim,
+            skipped: 0,
+        };
+        self.next_seq += 1;
+        self.entries.push_back(entry);
     }
 
     /// Enqueue a request, applying backpressure at `max_queue`.
@@ -437,15 +516,25 @@ impl FootprintTracker {
         }
     }
 
+    /// Override the EMA decay (config `footprint_decay`; validated to
+    /// `[0, 1]` at config parse time).
+    pub fn with_decay(mut self, decay: f32) -> FootprintTracker {
+        debug_assert!((0.0..=1.0).contains(&decay), "decay {decay} outside [0, 1]");
+        self.decay = decay;
+        self
+    }
+
     /// The class key queued and running requests aggregate under.
     pub fn class_key(req: &Request) -> String {
         if !req.domain.is_empty() {
             return req.domain.clone();
         }
         // Prompt-content hash: unlabeled duplicate/templated traffic still
-        // shares a class.
+        // shares a class. Hash the ORIGINAL prompt only — an evicted
+        // request re-feeds its generated tokens as prompt, and changing
+        // class mid-request would orphan its profile.
         let mut h = crate::util::fnv::Fnv::new();
-        for &t in &req.prompt {
+        for &t in req.original_prompt() {
             h.update_u32(t);
         }
         format!("prompt:{:016x}", h.finish())
@@ -541,6 +630,7 @@ mod tests {
             running_slots: &[],
             placement: None,
             top_k: 2,
+            spec: None,
         }
     }
 
@@ -660,6 +750,7 @@ mod tests {
             running_slots: &running,
             placement: None,
             top_k: 2,
+            spec: None,
         };
         let first = q.pop_next(&c).unwrap();
         assert_eq!(first.req.id, 0);
@@ -682,6 +773,7 @@ mod tests {
             running_slots: &running,
             placement: None,
             top_k: 2,
+            spec: None,
         };
         let picked = q.pop_next(&c).unwrap();
         assert_eq!(picked.req.id, 2, "same-class request must jump the queue");
@@ -738,6 +830,7 @@ mod tests {
                 running_slots: &running,
                 placement: None,
                 top_k: 2,
+                spec: None,
             };
             let picked = q.pop_next(&ctx).unwrap();
             frees += 1;
@@ -750,6 +843,124 @@ mod tests {
             );
         }
         assert!(frees > 1, "guard must not preempt a genuinely better batch at once");
+    }
+
+    #[test]
+    fn spec_grouping_prefers_similar_acceptance_priors() {
+        // Two queued classes with IDENTICAL footprint overlap; the running
+        // batch is one high-acceptance class. With adaptive-spec context,
+        // admission must pick the class whose acceptance prior matches.
+        let n_experts = 8;
+        let mut tracker = FootprintTracker::new(n_experts, 2);
+        let mk = |id: u64, domain: &str| {
+            let mut r = req(id);
+            r.domain = domain.into();
+            r
+        };
+        // both queued classes concentrate on the same experts as the
+        // running row, so overlap cannot break the tie
+        let runner = mk(100, "run");
+        tracker.on_admit(0, &runner);
+        tracker.observe_row(0, &[0.5, 0.4, 0.02, 0.02, 0.02, 0.02, 0.01, 0.01]);
+        for (slot, dom) in [(1usize, "hi"), (1, "lo")] {
+            let probe = mk(101, dom);
+            tracker.on_admit(slot, &probe);
+            tracker.observe_row(slot, &[0.5, 0.4, 0.02, 0.02, 0.02, 0.02, 0.01, 0.01]);
+            tracker.release(slot);
+        }
+        let mut ctl = SpecDepthController::new(4);
+        for _ in 0..20 {
+            ctl.observe("run", 4, 4); // running class accepts everything
+            ctl.observe("hi", 4, 4); // similar prior
+            ctl.observe("lo", 4, 0); // collapsed prior
+        }
+        let mut q = AdmissionQueue::new(AdmissionKind::FootprintAware, 0);
+        q.submit(mk(0, "lo"), 0.0).unwrap(); // earlier seq_no
+        q.submit(mk(1, "hi"), 0.0).unwrap();
+        let running = vec![0usize];
+        let classes = vec!["run".to_string()];
+        let c = AdmissionContext {
+            now_sim: 0.0,
+            tracker: Some(&tracker),
+            running_slots: &running,
+            placement: None,
+            top_k: 2,
+            spec: Some(SpecGrouping { ctl: &ctl, running_classes: &classes }),
+        };
+        assert_eq!(
+            q.pop_next(&c).unwrap().req.id,
+            1,
+            "similar-prior class must win the overlap tie"
+        );
+        // without the spec context the earlier submission wins the tie
+        let mut q2 = AdmissionQueue::new(AdmissionKind::FootprintAware, 0);
+        q2.submit(mk(0, "lo"), 0.0).unwrap();
+        q2.submit(mk(1, "hi"), 0.0).unwrap();
+        let c2 = AdmissionContext {
+            now_sim: 0.0,
+            tracker: Some(&tracker),
+            running_slots: &running,
+            placement: None,
+            top_k: 2,
+            spec: None,
+        };
+        assert_eq!(q2.pop_next(&c2).unwrap().req.id, 0);
+    }
+
+    #[test]
+    fn spec_grouping_bonus_is_bounded_below_aging_dominance() {
+        // The similarity bonus lives in [0, SPEC_GROUP_WEIGHT]; after
+        // STARVATION_HORIZON extra skips the aging bonus still clears the
+        // whole widened score range, so the starvation bound is intact.
+        let top_k = 4;
+        let widened_max = top_k as f64 + SPEC_GROUP_WEIGHT;
+        assert!(-(top_k as f64) + aging_bonus(STARVATION_HORIZON, top_k) > widened_max);
+        // and the bonus itself is within bounds for extreme priors
+        let mut ctl = SpecDepthController::new(4);
+        for _ in 0..30 {
+            ctl.observe("zero", 4, 0);
+        }
+        let classes = vec!["zero".to_string()];
+        let sg = SpecGrouping { ctl: &ctl, running_classes: &classes };
+        let b_same = sg.bonus("zero");
+        let b_far = sg.bonus("never-seen"); // optimistic prior 1.0
+        assert!(b_same > b_far, "{b_same} vs {b_far}");
+        assert!((0.0..=SPEC_GROUP_WEIGHT).contains(&b_same));
+        assert!((0.0..=SPEC_GROUP_WEIGHT).contains(&b_far));
+    }
+
+    #[test]
+    fn requeue_bypasses_backpressure_and_preserves_clock() {
+        let mut q = AdmissionQueue::new(AdmissionKind::Fifo, 1);
+        q.submit(req(0), 5.0).unwrap();
+        assert!(q.submit(req(1), 5.0).is_err(), "bounded queue full");
+        // an evicted request re-enters even at capacity, keeping its
+        // original submission time and absolute deadline
+        q.requeue(req(2), 1.25, Some(9.0));
+        assert_eq!(q.len(), 2);
+        let first = q.pop_next(&ctx()).unwrap();
+        assert_eq!(first.req.id, 0);
+        let re = q.pop_next(&ctx()).unwrap();
+        assert_eq!(re.req.id, 2);
+        assert_eq!(re.submit_sim, 1.25);
+        assert_eq!(re.deadline_sim, Some(9.0));
+    }
+
+    #[test]
+    fn tracker_class_key_stable_across_eviction_resume() {
+        // An unlabeled request's class key hashes its ORIGINAL prompt: the
+        // resume mutation (generated tokens appended to prompt) must not
+        // move it to a fresh class and orphan its profile.
+        let fresh = Request::new(1, vec![5, 6, 7], 8);
+        let mut resumed = Request::new(2, vec![5, 6, 7], 8);
+        resumed.prompt.extend_from_slice(&[40, 41]);
+        resumed.resume_prefix = vec![40, 41];
+        resumed.max_new_tokens = 6;
+        resumed.evictions = 1;
+        assert_eq!(
+            FootprintTracker::class_key(&fresh),
+            FootprintTracker::class_key(&resumed)
+        );
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Footprint-aware slot eviction (`--ep-evict`): preempt the running row
+//! that fits the batch worst when a queued request would fit far better.
+//!
+//! Admission composes the batch only at slot-free boundaries; under
+//! long-running rows a bad mix (cold-start admissions, drifting traffic)
+//! can pin the expert union — and under expert parallelism the straggler
+//! GPU — for thousands of steps. Eviction is the complementary lever: when
+//! the queue holds a request whose predicted expert set overlaps the
+//! running union **far** better than the worst-fitting running row does
+//! (strictly more than [`EVICTION_MARGIN`], on the same MaxLoad-weighted
+//! [`admission_score`] admission uses), that row is preempted back to the
+//! queue and the better-fitting request takes its slot at the very next
+//! admission.
+//!
+//! ## Preemption is lossless (the recompute/resume contract)
+//!
+//! KV never migrates between slots. [`requeue_request`] converts the
+//! victim's sequence into a resubmittable request: every committed token —
+//! consumed prompt and generated alike — becomes the new prompt, the
+//! generated tokens are additionally recorded in
+//! [`Request::resume_prefix`], and the generation budget shrinks by what
+//! was already produced. Re-admission rebuilds the row's cache by
+//! prefilling that history into whatever slot it lands in (the chunk
+//! `catch_up` idiom at request scope; see the eviction/resume contract in
+//! `model/moe_model.rs`), so under row-independent routing the resumed
+//! continuation is byte-identical to an uninterrupted run — pinned by
+//! `rust/tests/ep_serve.rs`.
+//!
+//! ## Bounds
+//!
+//! * At most one eviction per serving step (the serve loop's driver).
+//! * At most [`EVICTION_BUDGET`] evictions per request, tracked in
+//!   [`Request::evictions`] — a preempted request can never thrash.
+//! * A victim must beat the margin: candidates that are merely *slightly*
+//!   better never justify throwing away a row's prefill work.
+//! * Requeued entries bypass queue backpressure (an accepted request is
+//!   never droppable) and keep their submission clock and absolute
+//!   deadline, so TTFT/SLO accounting stays origin-anchored.
+
+use super::admission::FootprintTracker;
+use super::request::{Request, SeqState};
+use crate::ep::Placement;
+use crate::selection::{admission_score, ExpertSet};
+
+/// Evictions one request may suffer over its lifetime. One is enough to
+/// correct a cold-start mis-admission, and the bound guarantees progress:
+/// total evictions per workload ≤ requests submitted.
+pub const EVICTION_BUDGET: u32 = 1;
+
+/// How much better (in [`admission_score`] units — experts of overlap,
+/// MaxLoad-weighted under EP) the best queued candidate must fit the
+/// remaining batch than the victim does. One full expert: eviction
+/// recomputes the victim's prefill, so near-ties must never trigger it.
+pub const EVICTION_MARGIN: f64 = 1.0;
+
+/// A planned preemption: evict the sequence in `victim_slot`; the best
+/// queued candidate out-fits it by `gain` score units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvictionPlan {
+    pub victim_slot: usize,
+    pub gain: f64,
+}
+
+/// Decide whether any running row should be preempted for a queued
+/// request. Pure: the serve loop passes read-only views and applies the
+/// plan itself.
+///
+/// For every eligible victim `v` (informative footprint, eviction budget
+/// left), the batch it would leave behind is `loo_union(v)` — the union of
+/// the OTHER rows' predicted expert sets. The victim's fit and every
+/// informative queued candidate's fit are scored against that same union
+/// with the MaxLoad-weighted [`admission_score`]; the plan maximizes
+/// `best_candidate − victim` and fires only strictly above
+/// [`EVICTION_MARGIN`]. Candidate predictions are resolved once up front
+/// (only the leave-one-out union varies per victim), so one call costs
+/// O(queue + slots²) set operations — the serve loop only calls when the
+/// batch is full and the queue is non-empty.
+pub fn plan_eviction(
+    tracker: &FootprintTracker,
+    candidates: &[&Request],
+    running: &[(usize, &SeqState)],
+    placement: Option<&Placement>,
+    top_k: usize,
+) -> Option<EvictionPlan> {
+    if candidates.is_empty() || running.len() < 2 {
+        // A solo row has no "rest of the batch" to fit badly against.
+        return None;
+    }
+    // Hoisted per-candidate predicted expert sets: class-key hashing and
+    // top-set extraction are victim-independent.
+    let cand_sets: Vec<ExpertSet> = candidates
+        .iter()
+        .filter_map(|req| tracker.predict(req))
+        .map(|fp| fp.top_set(top_k))
+        .collect();
+    if cand_sets.is_empty() {
+        return None; // no informative candidate anywhere in the queue
+    }
+    let mut best: Option<EvictionPlan> = None;
+    for &(victim, seq) in running {
+        if seq.req.evictions >= EVICTION_BUDGET {
+            continue;
+        }
+        let Some(victim_fp) = tracker.slot_footprint(victim) else { continue };
+        if !victim_fp.is_informative() {
+            continue;
+        }
+        let others: Vec<usize> =
+            running.iter().map(|&(s, _)| s).filter(|&s| s != victim).collect();
+        let loo_union = tracker.running_union(&others, top_k);
+        if loo_union.is_empty() {
+            continue; // nothing observed to fit against
+        }
+        let victim_score =
+            admission_score(&victim_fp.top_set(top_k), &loo_union, placement);
+        let best_cand = cand_sets
+            .iter()
+            .map(|set| admission_score(set, &loo_union, placement))
+            .fold(f64::NEG_INFINITY, f64::max);
+        let gain = best_cand - victim_score;
+        if gain > EVICTION_MARGIN && best.map(|b| gain > b.gain).unwrap_or(true) {
+            best = Some(EvictionPlan { victim_slot: victim, gain });
+        }
+    }
+    best
+}
+
+/// Convert a preempted sequence back into a queue-able request (see the
+/// module docs for the resume contract). The prompt/budget invariant
+/// `prompt.len() + max_new_tokens` is unchanged, so the KV-window bound
+/// checked at submission still holds on resume.
+pub fn requeue_request(seq: SeqState) -> Request {
+    let mut req = seq.req;
+    req.evictions += 1;
+    if !seq.generated.is_empty() {
+        debug_assert!(seq.generated.len() < req.max_new_tokens, "done rows never evict");
+        req.max_new_tokens -= seq.generated.len();
+        req.prompt.extend_from_slice(&seq.generated);
+        req.resume_prefix.extend_from_slice(&seq.generated);
+    }
+    req
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Phase;
+
+    fn mk(id: u64, domain: &str) -> Request {
+        let mut r = Request::new(id, vec![1, 2, 3], 6);
+        r.domain = domain.into();
+        r
+    }
+
+    /// Tracker with two well-separated classes: "a" on experts {0, 1},
+    /// "b" on {6, 7}; slots 0/1 run "a", slot 2 runs "b".
+    fn warmed_tracker() -> FootprintTracker {
+        let mut tr = FootprintTracker::new(8, 4);
+        let row_a = [0.5, 0.4, 0.02, 0.02, 0.02, 0.02, 0.01, 0.01];
+        let row_b = [0.01, 0.01, 0.02, 0.02, 0.02, 0.02, 0.4, 0.5];
+        for slot in [0usize, 1] {
+            tr.on_admit(slot, &mk(slot as u64, "a"));
+            tr.observe_row(slot, &row_a);
+        }
+        tr.on_admit(2, &mk(2, "b"));
+        tr.observe_row(2, &row_b);
+        tr
+    }
+
+    fn seqs() -> Vec<SeqState> {
+        vec![
+            SeqState::new(mk(0, "a")),
+            SeqState::new(mk(1, "a")),
+            SeqState::new(mk(2, "b")),
+        ]
+    }
+
+    #[test]
+    fn evicts_the_worst_fitting_row_for_a_better_candidate() {
+        let tr = warmed_tracker();
+        let seqs = seqs();
+        let running: Vec<(usize, &SeqState)> =
+            seqs.iter().enumerate().map(|(i, s)| (i, s)).collect();
+        let cand = mk(10, "a");
+        let plan = plan_eviction(&tr, &[&cand], &running, None, 2).expect("plan");
+        // the "b" row overlaps the {a, a} rest not at all; the "a"
+        // candidate overlaps it fully → gain 2 > margin 1
+        assert_eq!(plan.victim_slot, 2);
+        assert!(plan.gain > EVICTION_MARGIN);
+        // a same-class candidate must NOT evict anyone out of an all-"a"
+        // batch: every victim's leave-one-out fit equals the candidate's
+        let all_a: Vec<(usize, &SeqState)> =
+            running.iter().take(2).copied().collect();
+        assert_eq!(plan_eviction(&tr, &[&cand], &all_a, None, 2), None);
+    }
+
+    #[test]
+    fn no_eviction_without_informative_candidates_or_mixed_batch() {
+        let tr = warmed_tracker();
+        let seqs = seqs();
+        let running: Vec<(usize, &SeqState)> =
+            seqs.iter().enumerate().map(|(i, s)| (i, s)).collect();
+        // unknown class → no prediction → no plan
+        let unknown = mk(11, "never-seen");
+        assert_eq!(plan_eviction(&tr, &[&unknown], &running, None, 2), None);
+        // empty queue → no plan
+        assert_eq!(plan_eviction(&tr, &[], &running, None, 2), None);
+        // a solo row never evicts
+        let solo: Vec<(usize, &SeqState)> = vec![(2, &seqs[2])];
+        let cand = mk(10, "a");
+        assert_eq!(plan_eviction(&tr, &[&cand], &solo, None, 2), None);
+    }
+
+    #[test]
+    fn eviction_budget_protects_the_victim() {
+        let tr = warmed_tracker();
+        let mut seqs = seqs();
+        seqs[2].req.evictions = EVICTION_BUDGET; // already evicted once
+        let running: Vec<(usize, &SeqState)> =
+            seqs.iter().enumerate().map(|(i, s)| (i, s)).collect();
+        let cand = mk(10, "a");
+        assert_eq!(
+            plan_eviction(&tr, &[&cand], &running, None, 2),
+            None,
+            "budget-exhausted rows are immune"
+        );
+    }
+
+    #[test]
+    fn requeue_mid_prefill_keeps_prompt_and_counts_the_eviction() {
+        let seq = SeqState::new(mk(7, "a"));
+        let req = requeue_request(seq);
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+        assert_eq!(req.max_new_tokens, 6);
+        assert!(req.resume_prefix.is_empty());
+        assert_eq!(req.evictions, 1);
+    }
+
+    #[test]
+    fn requeue_mid_decode_moves_generated_into_prompt() {
+        let mut seq = SeqState::new(mk(7, "a"));
+        for _ in 0..2 {
+            seq.advance_prefill(0);
+        }
+        seq.advance_prefill(40); // prompt done, first token 40
+        seq.commit(41);
+        assert_eq!(seq.phase, Phase::Decode);
+        let before_sum = seq.req.prompt.len() + seq.req.max_new_tokens;
+        let req = requeue_request(seq);
+        assert_eq!(req.prompt, vec![1, 2, 3, 40, 41]);
+        assert_eq!(req.resume_prefix, vec![40, 41]);
+        assert_eq!(req.max_new_tokens, 4);
+        assert_eq!(req.prompt.len() + req.max_new_tokens, before_sum);
+        assert_eq!(req.evictions, 1);
+        // a resumed run that finishes reports the full generation
+        let mut resumed = SeqState::new(req);
+        for _ in 0..4 {
+            resumed.advance_prefill(0);
+        }
+        resumed.advance_prefill(42);
+        assert_eq!(resumed.full_output(), vec![40, 41, 42]);
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod eviction;
 pub mod fidelity;
 pub mod request;
 pub mod scheduler;
@@ -15,11 +16,12 @@ pub mod speculative;
 
 pub use admission::{AdmissionKind, AdmissionPolicy, AdmissionQueue, SubmitError};
 pub use batcher::Batcher;
+pub use eviction::{EvictionPlan, EVICTION_BUDGET, EVICTION_MARGIN};
 pub use fidelity::{compare, Fidelity};
 pub use request::{Phase, Request, SeqState};
 pub use scheduler::Scheduler;
 pub use serve_loop::{RunReport, ServeLoop, StepOutcome};
 pub use speculative::{
     effective_batch_scores, effective_batch_scores_ragged, greedy_accept, lookup_draft,
-    SpecDepthController,
+    NgramIndex, SpecDepthController,
 };

@@ -1,6 +1,8 @@
 //! Request lifecycle types: what enters the queue, how a running sequence
 //! tracks its prompt/decode progress inside a batch slot.
 
+use super::speculative::NgramIndex;
+
 /// An inference request as submitted by a client or a trace.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -18,6 +20,15 @@ pub struct Request {
     /// frame per step that commits tokens for this request, then the usual
     /// final reply. Non-streaming requests are byte-unchanged on the wire.
     pub stream: bool,
+    /// Tokens this request generated before being preempted by slot
+    /// eviction (`coordinator::eviction`). On eviction they are appended
+    /// to `prompt` (the KV rebuild re-prefills them) AND recorded here so
+    /// the finished output is the request's complete generation. Always
+    /// empty for fresh submissions — never a wire field.
+    pub resume_prefix: Vec<u32>,
+    /// Times this request has been evicted (bounded by
+    /// `coordinator::eviction::EVICTION_BUDGET`).
+    pub evictions: u32,
 }
 
 impl Request {
@@ -30,7 +41,16 @@ impl Request {
             priority: 0,
             deadline_ms: None,
             stream: false,
+            resume_prefix: Vec::new(),
+            evictions: 0,
         }
+    }
+
+    /// The prompt as originally submitted, excluding any generated tokens
+    /// re-fed after an eviction. Traffic-class keys hash this slice so a
+    /// resumed request stays in the class it started in.
+    pub fn original_prompt(&self) -> &[u32] {
+        &self.prompt[..self.prompt.len() - self.resume_prefix.len()]
     }
 }
 
@@ -81,6 +101,13 @@ pub struct SeqState {
     /// Token to feed at the next step.
     pub next_token: u32,
     pub phase: Phase,
+    /// Rolling n-gram index over the committed history (consumed prompt +
+    /// generated), updated on every prefill advance and commit — the
+    /// lookup drafter queries it in O(log n) instead of rescanning the
+    /// history each verify cycle. The serve loop disables it at admission
+    /// unless lookup drafting is configured, so non-drafting deployments
+    /// pay nothing on the commit path.
+    pub ngram: NgramIndex,
 }
 
 impl SeqState {
@@ -94,11 +121,21 @@ impl SeqState {
             generated: Vec::new(),
             next_token: first,
             phase: Phase::PrefillChunk,
+            ngram: NgramIndex::default(),
         }
     }
 
     pub fn is_done(&self) -> bool {
         !self.phase.is_prefill() && self.generated.len() >= self.req.max_new_tokens
+    }
+
+    /// The request's complete generation: tokens committed before any
+    /// eviction plus the tokens of the current stint. What finished
+    /// sequences report.
+    pub fn full_output(&self) -> Vec<u32> {
+        let mut out = self.req.resume_prefix.clone();
+        out.extend_from_slice(&self.generated);
+        out
     }
 
     /// Enter a speculative verify cycle at the given per-row depth. Only a
@@ -134,6 +171,7 @@ impl SeqState {
         self.generated.push(tok);
         self.next_token = tok;
         self.pos += 1;
+        self.ngram.push(tok);
     }
 
     /// Advance after a prefill step; returns true if the prompt is finished
@@ -155,6 +193,9 @@ impl SeqState {
             self.prompt_idx,
             self.req.prompt.len()
         );
+        for &t in &self.req.prompt[self.prompt_idx..self.prompt_idx + n] {
+            self.ngram.push(t);
+        }
         self.pos += n;
         self.prompt_idx += n;
         if self.prompt_idx < self.req.prompt.len() {
@@ -166,6 +207,7 @@ impl SeqState {
             self.phase = Phase::Decode;
             self.generated.push(logits_argmax);
             self.next_token = logits_argmax;
+            self.ngram.push(logits_argmax);
             true
         }
     }
@@ -257,5 +299,47 @@ mod tests {
     #[should_panic(expected = "empty prompt")]
     fn rejects_empty_prompt() {
         SeqState::new(Request::new(1, vec![], 1));
+    }
+
+    #[test]
+    fn ngram_index_tracks_committed_history() {
+        // The index must always cover consumed prompt + generated — the
+        // lookup drafter's history — for both chunked and one-token
+        // prefill and for decode commits.
+        let req = Request::new(1, vec![10, 11, 12, 13], 3);
+        let mut s = SeqState::new(req.clone());
+        assert!(s.ngram.is_empty());
+        s.advance_prefill(0);
+        assert_eq!(s.ngram.history(), &[10]);
+        s.advance_prefill_by(3, 42); // finishes the prompt, commits 42
+        assert_eq!(s.ngram.history(), &[10, 11, 12, 13, 42]);
+        s.commit(7);
+        assert_eq!(s.ngram.history(), &[10, 11, 12, 13, 42, 7]);
+        assert_eq!(*s.ngram.history().last().unwrap(), s.next_token);
+        // chunked and stepwise walks build the identical index
+        let mut w = SeqState::new(req);
+        for _ in 0..3 {
+            w.advance_prefill(0);
+        }
+        w.advance_prefill(42);
+        w.commit(7);
+        assert_eq!(w.ngram.history(), s.ngram.history());
+    }
+
+    #[test]
+    fn full_output_stitches_resume_prefix() {
+        let mut req = Request::new(1, vec![1, 2, 3], 2);
+        assert_eq!(req.original_prompt(), &[1, 2, 3]);
+        req.prompt.extend_from_slice(&[9, 8]);
+        req.resume_prefix = vec![9, 8];
+        assert_eq!(req.original_prompt(), &[1, 2, 3]);
+        let mut s = SeqState::new(req);
+        for _ in 0..4 {
+            s.advance_prefill(0);
+        }
+        s.advance_prefill(5); // prompt done, first post-resume token
+        s.commit(6);
+        assert_eq!(s.full_output(), vec![9, 8, 5, 6]);
+        assert!(s.is_done());
     }
 }

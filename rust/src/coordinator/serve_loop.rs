@@ -81,6 +81,34 @@
 //! step through the `prefill_attn_router` artifact while parked in the
 //! shared forward; admission is decided by [`super::admission`], with
 //! bounded-queue backpressure and typed [`SubmitError`]s.
+//!
+//! ## Expert-parallel serving (PR 5)
+//!
+//! With `cfg.ep` set, expert parallelism is a first-class deployment mode,
+//! not a gauge: every forward — decode, ragged verify, chunk prefill —
+//! charges through [`EpCostModel::layer_latency`] on the step's true
+//! per-layer [`Placement::loads`] ([`ServeLoop::charge_step`]), so
+//! sim-time, TTFT and OTPS feel the straggler GPU exactly as §5.1's
+//! MaxLoad model says they should (draft forwards stay dense: the draft
+//! model is replicated, not expert-sharded). Three schedulers ride that
+//! signal:
+//!
+//!  * **footprint admission** (PR 3) weights overlap by marginal MaxLoad;
+//!  * **eviction** (`--ep-evict`, [`super::eviction`]): a running row that
+//!    fits the batch far worse than a queued candidate would is preempted
+//!    back to the queue (≤ 1/step, ≤ `EVICTION_BUDGET`/request) and
+//!    resumed losslessly by re-prefilling its committed history — the
+//!    eviction/resume KV contract in `model/moe_model.rs`;
+//!  * **rebalancing** (`--ep-rebalance N`): every N slot frees the tracked
+//!    class mix's footprint weights drive a greedy LPT
+//!    [`Placement::rebalance_from`]; the new placement is adopted only
+//!    when its expected MaxLoad strictly improves.
+//!
+//! Metrics: per-GPU load histograms (`gpu_loads`), the straggler-exposure
+//! integral `∫ MaxLoad dt` (`gpu_load_integral`), eviction counts and
+//! per-rebalance deltas. `benches/serve_continuous.rs -- ep` asserts the
+//! full stack beats static-placement FIFO on the integral at byte-equal
+//! outputs.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -88,13 +116,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::admission::{
-    AdmissionContext, AdmissionKind, AdmissionQueue, FootprintTracker, SubmitError,
+    AdmissionContext, AdmissionKind, AdmissionQueue, FootprintTracker, SpecGrouping,
+    SubmitError,
 };
 use super::batcher::Batcher;
+use super::eviction;
 use super::request::{Phase, Request};
-use super::speculative::{
-    effective_batch_scores_ragged, greedy_accept, lookup_draft, SpecDepthController,
-};
+use super::speculative::{effective_batch_scores_ragged, greedy_accept, SpecDepthController};
 use crate::config::{ServeConfig, SpecDraft};
 use crate::ep::{EpCostModel, Placement};
 use crate::memsim::{CostGeometry, DecodeCostModel, HardwareProfile};
@@ -149,6 +177,11 @@ pub struct StepOutcome {
     pub queued: usize,
     /// Sequences still occupying batch slots after this step.
     pub running: usize,
+    /// Request ids preempted back to the queue by footprint-aware slot
+    /// eviction at the top of this step (at most one per step). The
+    /// requests are still in flight — they resume from their committed
+    /// history at a later admission; no reply is owed for them.
+    pub evicted: Vec<u64>,
 }
 
 impl StepOutcome {
@@ -167,13 +200,18 @@ impl StepOutcome {
     }
 }
 
-/// Per-slot accounting carried from admission until the first generated
-/// token commits (TTFT, per-class TTFT, deadline-miss accounting).
+/// Per-slot admission metadata, alive for the whole occupancy (not just
+/// until the first token): TTFT/per-class-TTFT/deadline-miss accounting
+/// fires once (`recorded` flips), but the original submission clock and
+/// absolute deadline must survive until release so an eviction at ANY
+/// point can requeue the request without resetting its SLO.
 #[derive(Debug, Clone, Copy)]
 struct PendingTtft {
     submit_sim: f64,
     class: u32,
     deadline_sim: Option<f64>,
+    /// First-token latency already recorded (resumed rows start true).
+    recorded: bool,
 }
 
 /// What the step-body helpers report upward: finished sequences, slots
@@ -237,6 +275,9 @@ pub struct ServeLoop<'m> {
     forced_depth: Option<usize>,
     /// Per-slot TTFT/deadline state, pending until the first token commits.
     ttft_pending: Vec<Option<PendingTtft>>,
+    /// Slot releases since the last adopted (or attempted) placement
+    /// rebalance — the `--ep-rebalance N` clock.
+    frees_since_rebalance: u64,
     started: Instant,
 }
 
@@ -265,13 +306,10 @@ impl<'m> ServeLoop<'m> {
             CostGeometry::for_preset(&cfg.preset)?,
         );
         let policy = cfg.policy.build();
-        if let Some(ep) = &cfg.ep {
-            model.placement = Some(Placement::new(
-                model.dims().n_experts,
-                ep.n_gpus,
-                ep.placement,
-            ));
-        }
+        // `model.placement` is (re)established in `reset()` below — which
+        // also CLEARS it when this config is not EP, so a loop built over
+        // a model that previously served expert-parallel cannot silently
+        // keep charging EP costs.
         let mut sl = ServeLoop {
             model,
             cfg,
@@ -289,6 +327,7 @@ impl<'m> ServeLoop<'m> {
             legacy_spec_gate: false,
             forced_depth: None,
             ttft_pending: Vec::new(),
+            frees_since_rebalance: 0,
             started: Instant::now(),
         };
         sl.reset()?;
@@ -301,12 +340,23 @@ impl<'m> ServeLoop<'m> {
         let b_max = self.model.max_batch();
         self.batcher = Batcher::new(b_max, self.cfg.batch_size.min(b_max));
         self.queue = AdmissionQueue::new(self.cfg.admission, self.cfg.max_queue);
-        self.tracker = (self.cfg.admission == AdmissionKind::FootprintAware)
-            .then(|| FootprintTracker::new(self.model.dims().n_experts, b_max));
+        self.tracker = (self.cfg.admission == AdmissionKind::FootprintAware).then(|| {
+            FootprintTracker::new(self.model.dims().n_experts, b_max)
+                .with_decay(self.cfg.footprint_decay)
+        });
+        self.frees_since_rebalance = 0;
         self.metrics = ServeMetrics::new(self.model.dims().n_layers);
         self.outputs.clear();
         self.domains.clear();
         self.ttft_pending = vec![None; b_max];
+        // Restore the CONFIGURED placement — or clear it. `--ep-rebalance`
+        // mutates the placement during serving, so a fresh run must start
+        // from the static layout again; and a non-EP config must not
+        // inherit a placement left on the model by an earlier EP serving
+        // lifetime (which would silently re-enable EP cost charging).
+        self.model.placement = self.cfg.ep.as_ref().map(|ep| {
+            Placement::new(self.model.dims().n_experts, ep.n_gpus, ep.placement)
+        });
         self.model.reset();
         self.draft = if self.cfg.spec_len > 0 && self.cfg.spec_draft == SpecDraft::Model {
             Some(DraftRunner::new(
@@ -410,6 +460,13 @@ impl<'m> ServeLoop<'m> {
         let sim_before = self.metrics.sim_seconds;
         let was_running = self.batcher.running() > 0;
 
+        // EP serving levers, before admission sees the queue: rebalance
+        // the placement on the frees clock, then preempt a far-worse-
+        // fitting row so this step's admission can hand its slot to the
+        // better-fitting queued request.
+        self.maybe_rebalance();
+        let evicted = self.maybe_evict(sim_before);
+
         let admitted = self.admit(sim_before, was_running);
         self.metrics.queue_depth.add(self.queue.len() as f64);
 
@@ -417,6 +474,7 @@ impl<'m> ServeLoop<'m> {
         if slots.is_empty() {
             return Ok(StepOutcome {
                 admitted,
+                evicted,
                 queued: self.queue.len(),
                 ..StepOutcome::default()
             });
@@ -476,12 +534,21 @@ impl<'m> ServeLoop<'m> {
             self.metrics.prefill_tokens_per_step.add(prefill_tokens as f64);
         }
 
-        // Sim clock has advanced by this step's cost; TTFT counts it.
+        // Sim clock has advanced by this step's cost; TTFT counts it. The
+        // slot metadata stays in place after recording — a later eviction
+        // still needs the submission clock and deadline.
         let now = self.metrics.sim_seconds;
         for s in events.first_token_slots {
-            if let Some(p) = self.ttft_pending[s].take() {
-                let missed = p.deadline_sim.map(|d| now > d);
-                self.metrics.record_ttft(now - p.submit_sim, p.class, missed);
+            let first = match self.ttft_pending[s].as_mut() {
+                Some(p) if !p.recorded => {
+                    p.recorded = true;
+                    Some((p.submit_sim, p.class, p.deadline_sim))
+                }
+                _ => None,
+            };
+            if let Some((submit_sim, class, deadline_sim)) = first {
+                let missed = deadline_sim.map(|d| now > d);
+                self.metrics.record_ttft(now - submit_sim, class, missed);
             }
         }
         for (id, tokens) in &events.finished {
@@ -502,7 +569,127 @@ impl<'m> ServeLoop<'m> {
             deltas: events.deltas,
             queued: self.queue.len(),
             running: self.batcher.running(),
+            evicted,
         })
+    }
+
+    /// Adopt a rebalanced placement when the `--ep-rebalance` frees clock
+    /// has fired and the tracked mix says it would strictly lower expected
+    /// MaxLoad. The mix weights are the running rows' footprints plus the
+    /// class predictions of everything queued — the traffic the placement
+    /// is about to serve. Candidates that do not improve are discarded
+    /// (and not counted): LPT under the count-balance constraint is a
+    /// heuristic, and a placement swap must never make the straggler
+    /// worse on its own inputs.
+    fn maybe_rebalance(&mut self) {
+        let every = self.cfg.ep_rebalance as u64;
+        if every == 0 || self.frees_since_rebalance < every {
+            return;
+        }
+        let Some(tr) = &self.tracker else { return };
+        let Some(pl) = self.model.placement.as_ref() else { return };
+        let mut weights = vec![0.0f32; pl.n_experts()];
+        let mut any = false;
+        for s in self.batcher.live_slots() {
+            if let Some(fp) = tr.slot_footprint(s) {
+                if fp.is_informative() {
+                    for (acc, &w) in weights.iter_mut().zip(fp.weights()) {
+                        *acc += w;
+                    }
+                    any = true;
+                }
+            }
+        }
+        for e in self.queue.entries() {
+            if let Some(fp) = tr.predict(&e.req) {
+                for (acc, &w) in weights.iter_mut().zip(fp.weights()) {
+                    *acc += w;
+                }
+                any = true;
+            }
+        }
+        if !any {
+            return; // keep the clock armed until the tracker warms up
+        }
+        self.frees_since_rebalance = 0;
+        let before = pl.expected_max_load(&weights);
+        let candidate = pl.rebalance_from(&weights);
+        let after = candidate.expected_max_load(&weights);
+        if after < before - 1e-9 {
+            self.metrics.rebalances += 1;
+            self.metrics.rebalance_delta.add(before - after);
+            self.model.placement = Some(candidate);
+        }
+    }
+
+    /// Footprint-aware slot eviction (`--ep-evict`): at most one row per
+    /// step, only when the batch is full and the queue non-empty, decided
+    /// by [`eviction::plan_eviction`]. The victim is requeued with its
+    /// committed history as prompt (lossless resume — see the module docs
+    /// and `model/moe_model.rs`), keeping its submission clock and
+    /// absolute deadline. Returns the evicted request ids (0 or 1).
+    fn maybe_evict(&mut self, now_sim: f64) -> Vec<u64> {
+        if !self.cfg.ep_evict || self.queue.is_empty() || self.batcher.has_capacity() {
+            return Vec::new();
+        }
+        let victim = {
+            let Some(tr) = &self.tracker else { return Vec::new() };
+            let running: Vec<(usize, &super::request::SeqState)> = self
+                .batcher
+                .live_slots()
+                .into_iter()
+                .map(|s| (s, self.batcher.seq(s)))
+                .collect();
+            let candidates: Vec<&Request> =
+                self.queue.entries().map(|e| &e.req).collect();
+            let Some(plan) = eviction::plan_eviction(
+                tr,
+                &candidates,
+                &running,
+                self.model.placement.as_ref(),
+                self.model.dims().top_k,
+            ) else {
+                return Vec::new();
+            };
+            plan.victim_slot
+        };
+        vec![self.preempt(victim, now_sim)]
+    }
+
+    /// Preempt the sequence in `victim` back to the queue (the eviction
+    /// tail shared by the planner path and the test hook). The original
+    /// submission clock and absolute deadline survive the preemption —
+    /// the slot metadata is kept for a row's whole occupancy, so this
+    /// holds whether or not its first token has committed.
+    fn preempt(&mut self, victim: usize, now_sim: f64) -> u64 {
+        let pending = self.ttft_pending[victim].take();
+        let seq = self.release_slot(victim);
+        let id = seq.req.id;
+        let (submit_sim, deadline_sim) = match pending {
+            Some(p) => (p.submit_sim, p.deadline_sim),
+            None => (now_sim, None), // unreachable: admission always sets it
+        };
+        let req = eviction::requeue_request(seq);
+        self.queue.requeue(req, submit_sim, deadline_sim);
+        self.metrics.evictions += 1;
+        id
+    }
+
+    /// Forcibly preempt the sequence in `slot`, bypassing the footprint
+    /// planner (no margin, no budget, no tracker required). Instrumentation
+    /// for tests/benches pinning the eviction/resume contract on a chosen
+    /// row at a chosen moment; never called on the serving path. Must be
+    /// invoked between steps (every row is in a stable Decode/Prefill
+    /// phase then). Returns the evicted request id, or `None` if the slot
+    /// is empty.
+    pub fn evict_slot(&mut self, slot: usize) -> Option<u64> {
+        self.batcher.get(slot)?;
+        debug_assert!(
+            self.batcher.seq(slot).spec_depth().is_none(),
+            "evict_slot mid verify cycle"
+        );
+        let now = self.metrics.sim_seconds;
+        Some(self.preempt(slot, now))
     }
 
     /// Per-row draft depth assignment for this step's decoding rows:
@@ -543,12 +730,21 @@ impl<'m> ServeLoop<'m> {
             let proposals = match self.cfg.spec_draft {
                 SpecDraft::Model => Vec::new(),
                 SpecDraft::Lookup => {
-                    let mut hist =
-                        Vec::with_capacity(seq.prompt_idx + seq.generated.len());
-                    hist.extend_from_slice(&seq.req.prompt[..seq.prompt_idx]);
-                    hist.extend_from_slice(&seq.generated);
-                    debug_assert_eq!(*hist.last().unwrap(), seq.next_token);
-                    let p = lookup_draft(&hist, depth);
+                    // The row's NgramIndex already covers its committed
+                    // history (consumed prompt + generated, maintained on
+                    // every advance/commit) — an O(log n) query instead of
+                    // the old per-cycle linear rescan, proposal-identical
+                    // to `lookup_draft` by the equivalence property in
+                    // `speculative.rs`.
+                    debug_assert_eq!(
+                        seq.ngram.len(),
+                        seq.prompt_idx + seq.generated.len()
+                    );
+                    debug_assert_eq!(
+                        seq.ngram.history().last().copied(),
+                        Some(seq.next_token)
+                    );
+                    let p = seq.ngram.draft(depth);
                     depth = p.len(); // ragged: the lookup may come up short
                     p
                 }
@@ -571,14 +767,32 @@ impl<'m> ServeLoop<'m> {
     fn admit(&mut self, now_sim: f64, was_running: bool) -> Vec<u64> {
         let mut admitted = Vec::new();
         let top_k = self.model.dims().top_k;
+        // Spec-grouping refinement (adaptive speculation only): footprint
+        // admission sees the running rows' traffic classes and the shared
+        // acceptance EMAs, and prefers co-admitting classes with similar
+        // priors so ragged verifies stay dense.
+        let spec_grouping =
+            self.cfg.spec_adaptive && self.cfg.spec_len > 0 && self.tracker.is_some();
         while self.batcher.has_capacity() && !self.queue.is_empty() {
             let running_slots = self.batcher.live_slots();
+            let running_classes: Vec<String> = if spec_grouping {
+                running_slots
+                    .iter()
+                    .map(|&s| FootprintTracker::class_key(&self.batcher.seq(s).req))
+                    .collect()
+            } else {
+                Vec::new()
+            };
             let ctx = AdmissionContext {
                 now_sim,
                 tracker: self.tracker.as_ref(),
                 running_slots: &running_slots,
                 placement: self.model.placement.as_ref(),
                 top_k,
+                spec: spec_grouping.then(|| SpecGrouping {
+                    ctl: &self.depth_ctl,
+                    running_classes: &running_classes,
+                }),
             };
             let Some(entry) = self.queue.pop_next(&ctx) else { break };
             // Footprint-overlap gauge: what the greedy objective predicted
@@ -600,11 +814,23 @@ impl<'m> ServeLoop<'m> {
             }
             let id = entry.req.id;
             let class = entry.req.priority;
-            self.metrics.record_queue_wait(now_sim - entry.submit_sim);
+            // Evicted requests keep their ORIGINAL submission clock, so
+            // only the first admission records a queue wait; a row that
+            // already committed its first token (non-empty resume prefix)
+            // must not re-record TTFT either — both are measured once.
+            if entry.req.evictions == 0 {
+                self.metrics.record_queue_wait(now_sim - entry.submit_sim);
+            }
+            let ttft_recorded = !entry.req.resume_prefix.is_empty();
             if was_running {
                 self.metrics.admitted_in_flight += 1;
             }
             let slot = self.batcher.place(entry.req);
+            // Only lookup drafting reads the per-row n-gram index; every
+            // other deployment must not pay its per-commit upkeep.
+            if self.cfg.spec_len == 0 || self.cfg.spec_draft != SpecDraft::Lookup {
+                self.batcher.seq_mut(slot).ngram.disable();
+            }
             if let Some(tr) = &mut self.tracker {
                 tr.on_admit(slot, &self.batcher.seq(slot).req);
             }
@@ -612,6 +838,7 @@ impl<'m> ServeLoop<'m> {
                 submit_sim: entry.submit_sim,
                 class,
                 deadline_sim: entry.deadline_sim,
+                recorded: ttft_recorded,
             });
             admitted.push(id);
         }
@@ -632,7 +859,17 @@ impl<'m> ServeLoop<'m> {
         if let Some(d) = self.draft.as_mut() {
             d.set_lag(slot, None);
         }
+        // Every release (finish or eviction) ticks the rebalance clock.
+        self.frees_since_rebalance += 1;
         self.batcher.release(slot)
+    }
+
+    /// Release a FINISHED sequence and report its complete generation
+    /// (tokens committed before any eviction stitched in front of this
+    /// stint's).
+    fn finish_slot(&mut self, slot: usize) -> (u64, Vec<u32>) {
+        let done = self.release_slot(slot);
+        (done.req.id, done.full_output())
     }
 
     /// Current KV position of the sequence occupying `slot`, if any
@@ -808,8 +1045,8 @@ impl<'m> ServeLoop<'m> {
                 self.metrics.tokens_out += 1;
             }
             if seq.is_done() {
-                let done = self.release_slot(plan.slot);
-                events.finished.push((done.req.id, done.generated));
+                let finished = self.finish_slot(plan.slot);
+                events.finished.push(finished);
             }
         }
         Ok(events)
@@ -894,8 +1131,8 @@ impl<'m> ServeLoop<'m> {
                 events.first_token_slots.push(s);
             }
             if seq.is_done() {
-                let done = self.release_slot(s);
-                events.finished.push((done.req.id, done.generated));
+                let finished = self.finish_slot(s);
+                events.finished.push(finished);
             }
         }
 
@@ -1179,8 +1416,8 @@ impl<'m> ServeLoop<'m> {
                     }
                     // A budget of 1 finishes on the prefill commit itself.
                     if seq.is_done() {
-                        let released = self.release_slot(s);
-                        events.finished.push((released.req.id, released.generated));
+                        let finished = self.finish_slot(s);
+                        events.finished.push(finished);
                     }
                 }
                 Phase::SpecVerify { depth } => {
@@ -1225,8 +1462,8 @@ impl<'m> ServeLoop<'m> {
                         d.set_lag(s, lag);
                     }
                     if done {
-                        let released = self.release_slot(s);
-                        events.finished.push((released.req.id, released.generated));
+                        let finished = self.finish_slot(s);
+                        events.finished.push(finished);
                     }
                 }
                 Phase::Decode => unreachable!("decode riders entered SpecVerify"),
@@ -1266,6 +1503,19 @@ impl<'m> ServeLoop<'m> {
 
     /// Simulated cost of one target forward (+ draft seconds) and EP load
     /// accounting. Returns simulated seconds.
+    ///
+    /// Under EP every target forward — decode, ragged verify, chunk
+    /// prefill — charges per layer through
+    /// [`EpCostModel::layer_latency`] on the true per-layer
+    /// [`Placement::loads`] of the experts it routed, so the sim clock
+    /// (and with it TTFT/OTPS and every admission deadline) feels the
+    /// straggler GPU. Draft forwards keep their dense charge: the draft
+    /// model is replicated per GPU, not expert-sharded, so it adds no
+    /// dispatch/straggler term. Load gauges recorded here: per-layer
+    /// per-GPU histograms, the per-forward MaxLoad, and the
+    /// straggler-exposure integral `∫ MaxLoad dt` (MaxLoad × this
+    /// forward's full charge, draft seconds included — the draft runs
+    /// inside the same wall interval the straggler bounds).
     fn charge_step(
         &mut self,
         activated: &[usize],
@@ -1280,6 +1530,10 @@ impl<'m> ServeLoop<'m> {
             let max_load =
                 selected.iter().map(|s| pl.max_load(s)).max().unwrap_or(0);
             self.metrics.max_gpu_load.add(max_load as f64);
+            for sel in selected {
+                self.metrics.record_gpu_loads(&pl.loads(sel));
+            }
+            self.metrics.gpu_load_integral += max_load as f64 * sim;
         } else {
             let scaled = self.cost.scale_activations(activated);
             sim += self.cost.target_step(&scaled, n_tokens).total_seconds;

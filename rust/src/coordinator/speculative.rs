@@ -137,6 +137,133 @@ pub fn lookup_draft(history: &[u32], depth: usize) -> Vec<u32> {
     Vec::new()
 }
 
+/// Incremental index behind the lookup drafter: the row's committed
+/// history plus, for every trailing n-gram, its two most recent start
+/// positions — updated in O(log n) on each commit instead of re-scanning
+/// the whole history every verify cycle (the ROADMAP "index the lookup
+/// drafter" item). Bigrams key on the exact 64-bit packed token pair
+/// (collision-free, so the index is provably equivalent to the scan — the
+/// property test below pins proposal-identity against [`lookup_draft`]).
+///
+/// Two positions per key are required because the *trailing* n-gram is
+/// itself the most recent occurrence the moment its last token lands: a
+/// draft query must fall back to the previous occurrence, exactly as the
+/// linear scan's `(0..n-2).rev()` bound excludes the trailing match.
+#[derive(Debug, Clone)]
+pub struct NgramIndex {
+    history: Vec<u32>,
+    /// packed (a, b) → (latest start pos, previous start pos).
+    bigram: BTreeMap<u64, (usize, Option<usize>)>,
+    /// token → (latest pos, previous pos).
+    unigram: BTreeMap<u32, (usize, Option<usize>)>,
+    /// Disabled indexes drop every push — deployments that never lookup-
+    /// draft (the default `spec_draft = model`, or `spec_len = 0`) must
+    /// not pay a per-token history copy plus O(log n) map upserts on the
+    /// commit path. The serve loop disables the index at admission unless
+    /// lookup drafting is configured.
+    enabled: bool,
+}
+
+impl Default for NgramIndex {
+    fn default() -> NgramIndex {
+        NgramIndex {
+            history: Vec::new(),
+            bigram: BTreeMap::new(),
+            unigram: BTreeMap::new(),
+            enabled: true,
+        }
+    }
+}
+
+#[inline]
+fn bigram_key(a: u32, b: u32) -> u64 {
+    ((a as u64) << 32) | b as u64
+}
+
+impl NgramIndex {
+    /// Stop indexing and free the accumulated state. One-way for the life
+    /// of the sequence: `draft()` on a disabled index would see an empty
+    /// history, so callers only disable when lookup drafting is off.
+    pub fn disable(&mut self) {
+        self.enabled = false;
+        self.history = Vec::new();
+        self.bigram = BTreeMap::new();
+        self.unigram = BTreeMap::new();
+    }
+
+    /// Append one committed token (prompt or generated), updating the
+    /// trailing unigram/bigram occurrence chains. No-op when disabled.
+    pub fn push(&mut self, tok: u32) {
+        if !self.enabled {
+            return;
+        }
+        let n = self.history.len();
+        match self.unigram.get_mut(&tok) {
+            Some(e) => *e = (n, Some(e.0)),
+            None => {
+                self.unigram.insert(tok, (n, None));
+            }
+        }
+        if let Some(&prev) = self.history.last() {
+            let key = bigram_key(prev, tok);
+            match self.bigram.get_mut(&key) {
+                Some(e) => *e = (n - 1, Some(e.0)),
+                None => {
+                    self.bigram.insert(key, (n - 1, None));
+                }
+            }
+        }
+        self.history.push(tok);
+    }
+
+    /// The committed history the index covers (prompt + generated; the
+    /// last element is the token about to be fed — `SeqState::next_token`
+    /// for a decoding row).
+    pub fn history(&self) -> &[u32] {
+        &self.history
+    }
+
+    pub fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+
+    /// Propose up to `depth` draft tokens — identical proposals to
+    /// [`lookup_draft`] over the same history, in O(log n + depth) instead
+    /// of O(n): most recent earlier occurrence of the trailing bigram,
+    /// falling back to the trailing unigram; proposals clipped at the
+    /// history end.
+    pub fn draft(&self, depth: usize) -> Vec<u32> {
+        let h = &self.history;
+        let n = h.len();
+        if depth == 0 || n < 2 {
+            return Vec::new();
+        }
+        if n >= 3 {
+            if let Some(&(j1, j2)) = self.bigram.get(&bigram_key(h[n - 2], h[n - 1])) {
+                // the trailing bigram itself starts at n-2; a match must
+                // start strictly earlier
+                let j = if j1 == n - 2 { j2 } else { Some(j1) };
+                if let Some(j) = j {
+                    let end = (j + 2 + depth).min(n);
+                    return h[j + 2..end].to_vec();
+                }
+            }
+        }
+        if let Some(&(j1, j2)) = self.unigram.get(&h[n - 1]) {
+            let j = if j1 == n - 1 { j2 } else { Some(j1) };
+            if let Some(j) = j {
+                let end = (j + 1 + depth).min(n);
+                return h[j + 1..end].to_vec();
+            }
+        }
+        Vec::new()
+    }
+}
+
 /// EMA decay for per-class acceptance tracking: ~10-cycle memory, the same
 /// horizon the footprint tracker uses for routing scores.
 pub const ACCEPT_DECAY: f32 = 0.9;
@@ -343,6 +470,92 @@ mod tests {
         assert!(lookup_draft(&[1, 2, 3, 4], 2).is_empty());
         // proposals are clipped at the history end (ragged by nature)
         assert_eq!(lookup_draft(&[5, 8, 5], 4), vec![8, 5]);
+    }
+
+    #[test]
+    fn ngram_index_matches_linear_scan_on_fixtures() {
+        // The same fixtures that pin lookup_draft, through the index.
+        let cases: [(&[u32], usize); 8] = [
+            (&[1, 2, 3, 9, 8, 2, 3], 3),
+            (&[2, 3, 7, 2, 3, 5, 2, 3], 2),
+            (&[4, 1, 6, 5, 1], 2),
+            (&[9, 6, 6, 6], 3),
+            (&[1, 2, 3], 0),
+            (&[7], 3),
+            (&[1, 2, 3, 4], 2),
+            (&[5, 8, 5], 4),
+        ];
+        for (hist, depth) in cases {
+            let mut idx = NgramIndex::default();
+            for &t in hist {
+                idx.push(t);
+            }
+            assert_eq!(
+                idx.draft(depth),
+                lookup_draft(hist, depth),
+                "divergence on {hist:?} depth {depth}"
+            );
+        }
+    }
+
+    #[test]
+    fn disabled_ngram_index_drops_pushes_and_state() {
+        // Deployments without lookup drafting disable the index at
+        // admission: pushes become no-ops and the accumulated state is
+        // freed, so the commit path pays nothing.
+        let mut idx = NgramIndex::default();
+        idx.push(1);
+        idx.push(2);
+        assert_eq!(idx.len(), 2);
+        idx.disable();
+        assert!(idx.is_empty());
+        idx.push(3);
+        idx.push(3);
+        assert!(idx.is_empty());
+        assert!(idx.draft(4).is_empty());
+    }
+
+    #[test]
+    fn prop_ngram_index_equals_linear_scan() {
+        // For arbitrary token streams (tiny vocab → dense n-gram
+        // collisions) the index proposes IDENTICAL drafts to the linear
+        // scan at every prefix and every depth — the losslessness pin the
+        // lookup-drafter swap rides on.
+        use crate::util::check::forall;
+        use crate::util::rng::Rng;
+        forall(
+            0x1D11,
+            120,
+            |r: &mut Rng| {
+                let vocab = 2 + r.below(5) as u32;
+                let len = r.below(48);
+                let seed = r.next_u64();
+                (vocab, len, seed)
+            },
+            |&(vocab, len, seed)| {
+                let mut r = Rng::new(seed);
+                let mut idx = NgramIndex::default();
+                let mut hist: Vec<u32> = Vec::new();
+                for _ in 0..len {
+                    let tok = r.below(vocab as usize) as u32;
+                    idx.push(tok);
+                    hist.push(tok);
+                    for depth in 0..5 {
+                        let want = lookup_draft(&hist, depth);
+                        let got = idx.draft(depth);
+                        if got != want {
+                            return Err(format!(
+                                "index {got:?} != scan {want:?} on {hist:?} depth {depth}"
+                            ));
+                        }
+                    }
+                }
+                if idx.history() != hist.as_slice() || idx.len() != hist.len() {
+                    return Err("index history drifted from pushes".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

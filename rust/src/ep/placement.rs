@@ -100,6 +100,80 @@ impl Placement {
     pub fn max_load(&self, selected: &crate::selection::ExpertSet) -> usize {
         self.loads(selected).into_iter().max().unwrap_or(0)
     }
+
+    /// Expected per-GPU load under fractional per-expert weights (the
+    /// tracked traffic mix): `Σ_{j ∈ E_g} w_j` — the continuous analogue
+    /// of [`Placement::loads`] that rebalancing optimizes against.
+    pub fn weighted_loads(&self, weights: &[f32]) -> Vec<f64> {
+        assert_eq!(weights.len(), self.n_experts, "weights must cover every expert");
+        let mut loads = vec![0.0f64; self.n_gpus];
+        for (j, &w) in weights.iter().enumerate() {
+            loads[self.gpu_of[j]] += w as f64;
+        }
+        loads
+    }
+
+    /// Expected MaxLoad under per-expert weights — what
+    /// [`Placement::rebalance_from`] minimizes.
+    pub fn expected_max_load(&self, weights: &[f32]) -> f64 {
+        self.weighted_loads(weights).into_iter().fold(0.0, f64::max)
+    }
+
+    /// Greedy expert → GPU reassignment minimizing expected MaxLoad under
+    /// the given per-expert weights (the serve loop feeds the tracked class
+    /// mix's footprint weights): experts are placed heaviest-first, each
+    /// onto the GPU with the least accumulated weight — LPT scheduling.
+    /// Per-GPU expert COUNTS stay balanced within one (same capacity rule
+    /// as construction), so memory residency never skews even when the
+    /// weight mass does. LPT under the count constraint is a heuristic:
+    /// callers that hold an incumbent placement should adopt the result
+    /// only when [`Placement::expected_max_load`] strictly improves (the
+    /// serve loop's `--ep-rebalance` step does exactly that).
+    ///
+    /// Deterministic: ties break toward the lower expert index and the
+    /// lower GPU index. Weights must be finite and non-negative.
+    pub fn rebalance_from(&self, weights: &[f32]) -> Placement {
+        assert_eq!(weights.len(), self.n_experts, "weights must cover every expert");
+        debug_assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "rebalance weights must be finite and non-negative"
+        );
+        let base = self.n_experts / self.n_gpus;
+        let extra = self.n_experts % self.n_gpus;
+        let cap: Vec<usize> =
+            (0..self.n_gpus).map(|g| base + usize::from(g < extra)).collect();
+        let mut order: Vec<usize> = (0..self.n_experts).collect();
+        order.sort_by(|&a, &b| {
+            weights[b]
+                .partial_cmp(&weights[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut gpu_of = vec![0usize; self.n_experts];
+        let mut acc = vec![0.0f64; self.n_gpus];
+        let mut counts = vec![0usize; self.n_gpus];
+        for &j in &order {
+            let g = (0..self.n_gpus)
+                .filter(|&g| counts[g] < cap[g])
+                .min_by(|&x, &y| {
+                    acc[x].partial_cmp(&acc[y]).unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .expect("capacities sum to n_experts");
+            gpu_of[j] = g;
+            acc[g] += weights[j] as f64;
+            counts[g] += 1;
+        }
+        let mut experts_of = vec![Vec::new(); self.n_gpus];
+        for (j, &g) in gpu_of.iter().enumerate() {
+            experts_of[g].push(j);
+        }
+        Placement {
+            n_experts: self.n_experts,
+            n_gpus: self.n_gpus,
+            gpu_of,
+            experts_of,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -204,6 +278,109 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn rebalance_spreads_hot_experts() {
+        // Contiguous placement piles the four hot experts onto GPU 0;
+        // rebalancing under those weights spreads them one per GPU.
+        let p = Placement::new(16, 4, PlacementKind::Contiguous);
+        let mut w = vec![0.01f32; 16];
+        for j in 0..4 {
+            w[j] = 1.0; // all on GPU 0 under the contiguous split
+        }
+        assert!(p.expected_max_load(&w) > 4.0 - 1e-6);
+        let r = p.rebalance_from(&w);
+        let loads = r.weighted_loads(&w);
+        assert!(
+            r.expected_max_load(&w) < 1.2,
+            "hot experts not spread: {loads:?}"
+        );
+        // every hot expert on its own GPU
+        let hot_gpus: std::collections::BTreeSet<usize> =
+            (0..4).map(|j| r.gpu_of(j)).collect();
+        assert_eq!(hot_gpus.len(), 4);
+    }
+
+    #[test]
+    fn rebalance_is_deterministic_and_count_balanced() {
+        let p = Placement::new(10, 3, PlacementKind::RoundRobin);
+        let w: Vec<f32> = (0..10).map(|j| (j as f32 * 0.37).sin().abs()).collect();
+        let a = p.rebalance_from(&w);
+        let b = p.rebalance_from(&w);
+        assert_eq!(a.gpu_of, b.gpu_of);
+        let sizes: Vec<usize> = (0..3).map(|g| a.experts_on(g).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn prop_rebalance_is_a_balanced_partition() {
+        // For arbitrary (N, G, weights): the rebalanced assignment stays a
+        // balanced partition (every expert placed exactly once, per-GPU
+        // counts within one). LPT is a heuristic, not a guarantee — under
+        // the count-balance constraint it CAN land above a lucky static
+        // layout (e.g. N=3, G=2, ascending weights), which is why the
+        // serve loop adopts a rebalanced placement only when its expected
+        // MaxLoad strictly improves on the incumbent's.
+        use crate::util::check::forall;
+        use crate::util::rng::Rng;
+        forall(
+            0xBA1A,
+            150,
+            |r: &mut Rng| {
+                let g = 1 + r.below(8);
+                let n = g + r.below(48);
+                let seed = r.next_u64();
+                (n, g, seed)
+            },
+            |&(n, g, seed)| {
+                let mut r = Rng::new(seed);
+                let w: Vec<f32> = (0..n).map(|_| r.f32()).collect();
+                let p = Placement::new(n, g, PlacementKind::Contiguous);
+                let reb = p.rebalance_from(&w);
+                let mut seen = vec![0usize; n];
+                for gpu in 0..g {
+                    for &j in reb.experts_on(gpu) {
+                        if reb.gpu_of(j) != gpu {
+                            return Err("gpu_of/experts_of disagree".into());
+                        }
+                        seen[j] += 1;
+                    }
+                }
+                if seen.iter().any(|&c| c != 1) {
+                    return Err("not a partition".into());
+                }
+                let sizes: Vec<usize> =
+                    (0..g).map(|gpu| reb.experts_on(gpu).len()).collect();
+                if sizes.iter().max().unwrap() - sizes.iter().min().unwrap() > 1 {
+                    return Err(format!("unbalanced counts {sizes:?}"));
+                }
+                // weighted_loads must agree with the assignment it reports
+                let total: f64 = reb.weighted_loads(&w).iter().sum();
+                let want: f64 = w.iter().map(|&x| x as f64).sum();
+                if (total - want).abs() > 1e-6 {
+                    return Err("weighted_loads lost mass".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn weighted_loads_match_integer_loads_on_indicator_weights() {
+        let p = Placement::new(8, 2, PlacementKind::Contiguous);
+        let s = ExpertSet::from_indices(8, &[0, 1, 2, 4]);
+        let mut w = vec![0.0f32; 8];
+        for j in s.iter() {
+            w[j] = 1.0;
+        }
+        let wl = p.weighted_loads(&w);
+        let il = p.loads(&s);
+        for (a, b) in wl.iter().zip(&il) {
+            assert!((a - *b as f64).abs() < 1e-12);
+        }
+        assert!((p.expected_max_load(&w) - p.max_load(&s) as f64).abs() < 1e-12);
     }
 
     #[test]

@@ -24,10 +24,12 @@ use xshare::util::json::Json;
 const USAGE: &str = "usage: xshare <serve|run|client|info> [--flags]
   serve  --preset P --policy POL [--batch N] [--spec-len L] [--spec-adaptive]
          [--spec-draft model|lookup] [--prefill-chunk T] [--admission A]
-         [--max-queue Q] [--addr A] [--config F]
+         [--max-queue Q] [--footprint-decay D] [--ep-gpus G] [--ep-evict]
+         [--ep-rebalance N] [--addr A] [--config F]
   run    --preset P --policy POL --requests N [--batch N] [--spec-len L]
          [--spec-adaptive] [--spec-draft D] [--prefill-chunk T]
-         [--admission A] [--seed S]
+         [--admission A] [--ep-gpus G] [--ep-evict] [--ep-rebalance N]
+         [--seed S]
   client --addr A --prompt 1,2,3 [--max-new-tokens N] [--id I]
          [--priority P] [--deadline-ms D] [--stream]
   info   --preset P
@@ -36,7 +38,11 @@ policies:  vanilla | batch:<m>:<k0> | spec:<k0>:<m>:<mr> | gpu:<k0>:<mg> |
 admission: fifo | priority | edf | footprint   (--max-queue 0 = unbounded)
 spec:      --spec-adaptive adapts per-row draft depth per traffic class;
            --spec-draft lookup drafts by n-gram lookup (no draft model);
-           --stream makes the client print a delta line per committed chunk";
+           --stream makes the client print a delta line per committed chunk
+ep:        --ep-gpus G [--ep-placement P] deploys expert-parallel; with
+           footprint admission, --ep-evict preempts far-worse-fitting rows
+           (lossless resume) and --ep-rebalance N re-places experts by the
+           tracked class mix every N slot frees";
 
 fn main() {
     if let Err(e) = real_main() {

@@ -84,18 +84,46 @@ impl DecodeCostModel {
         self.geo.draft_bytes_per_step / self.hw.hbm_bw + self.hw.step_overhead_s * 0.3
     }
 
+    /// Per-row draft compute for one sub-step: the dense draft runs ~2
+    /// FLOPs per weight parameter per token, and its serving weights are
+    /// ~2 bytes per parameter, so FLOPs-per-token ≈ bytes-streamed — a
+    /// deliberate roofline shortcut that keeps the term proportional
+    /// without adding another geometry field.
+    fn draft_row_compute(&self) -> f64 {
+        self.geo.draft_bytes_per_step / self.hw.flops
+    }
+
     /// Draft-side cost of one ragged speculative cycle, from the TRUE
-    /// per-row draft depths. The dense draft is memory-bound: every
-    /// batched draft sub-step streams the full draft weights once, so the
-    /// **deepest** row sets the stream count and shallower rows ride those
-    /// calls for free — per-row compute is negligible next to the weight
-    /// stream. These are exactly the padded-batch economics the adaptive
-    /// depth controller optimises against: shrinking one row below the max
-    /// saves verify activation, not draft streams, until the max itself
-    /// drops. Uniform depths reproduce the legacy `L_s × draft_step()`
-    /// charge bit-for-bit.
+    /// per-row draft depths. Two terms per batched sub-step `j`:
+    ///
+    ///  * the **stream**: the full draft weights load once per sub-step,
+    ///    so the *deepest* row sets the stream count (`max(depths)`
+    ///    sub-steps) and shallower rows ride those calls;
+    ///  * the **width**: rows still drafting at sub-step `j`
+    ///    (`depths[r] > j`) each add one token of draft compute —
+    ///    negligible next to the stream on real hardware, but it makes the
+    ///    true per-row depths visible in the ledger.
+    ///
+    /// These are the padded-batch economics the adaptive depth controller
+    /// optimises against: shrinking one row below the max trims only the
+    /// (small) width term until the max itself drops and a whole weight
+    /// stream disappears. A single row at depth `d` charges exactly what
+    /// uniform `[d]` used to: `d × (draft_step() + row compute)`.
     pub fn draft_cost(&self, depths: &[usize]) -> f64 {
-        depths.iter().copied().max().unwrap_or(0) as f64 * self.draft_step()
+        let max_d = depths.iter().copied().max().unwrap_or(0);
+        if max_d == 0 {
+            return 0.0;
+        }
+        let stream = self.draft_step();
+        if stream == 0.0 {
+            return 0.0; // preset ships no draft model
+        }
+        let mut total = 0.0;
+        for j in 0..max_d {
+            let width = depths.iter().filter(|&&d| d > j).count();
+            total += stream + width as f64 * self.draft_row_compute();
+        }
+        total
     }
 
     /// One EP decode step: per-layer straggler latency from MaxLoad plus
@@ -196,16 +224,37 @@ mod tests {
     }
 
     #[test]
-    fn ragged_draft_cost_charged_by_max_depth() {
+    fn ragged_draft_cost_streams_by_max_depth_computes_by_width() {
+        // The corrected semantics (ISSUE 5 satellite): the deepest row
+        // still sets the batched weight-stream count, but the WIDTH of
+        // each sub-step — rows actually drafting at that depth — now
+        // charges per-row compute, so the true per-row depths are visible
+        // in the ledger (as ROADMAP always claimed they were).
         let m = model();
         let per_call = m.draft_step();
-        // uniform depths reproduce the legacy L_s × draft_step charge
-        assert_eq!(m.draft_cost(&[3, 3, 3, 3]), 3.0 * per_call);
-        // ragged: the deepest row sets the batched stream count
-        assert_eq!(m.draft_cost(&[0, 1, 3, 2]), 3.0 * per_call);
-        // shrinking a non-max row saves nothing; shrinking the max does
-        assert_eq!(m.draft_cost(&[0, 0, 3, 0]), m.draft_cost(&[3, 3, 3, 3]));
-        assert!(m.draft_cost(&[0, 0, 2, 0]) < m.draft_cost(&[0, 0, 3, 0]));
+        // a single drafting row charges the legacy per-stream rate plus
+        // one row of compute per sub-step
+        let solo3 = m.draft_cost(&[0, 0, 3, 0]);
+        assert!(solo3 >= 3.0 * per_call);
+        assert_eq!(solo3, m.draft_cost(&[3]), "parked rows charge nothing");
+        // stream count is set by the max: equal max depth ⇒ equal stream
+        // charge, and the ragged batch costs strictly LESS than uniform
+        // because its sub-step widths are smaller (3+2+1 vs 4+4+4 rows)
+        let ragged = m.draft_cost(&[0, 1, 3, 2]);
+        let uniform = m.draft_cost(&[3, 3, 3, 3]);
+        assert!(
+            ragged < uniform,
+            "width-insensitive charge: ragged {ragged} !< uniform {uniform}"
+        );
+        // …but both stay within one weight stream of each other: width is
+        // a compute-side correction, the stream term dominates
+        assert!(uniform - ragged < per_call);
+        // shrinking the max drops a whole stream — the dominant saving
+        assert!(m.draft_cost(&[0, 0, 2, 0]) < solo3);
+        assert!(solo3 - m.draft_cost(&[0, 0, 2, 0]) > 0.9 * per_call);
+        // widening at fixed max adds only the (small) per-row compute
+        assert!(uniform > solo3);
+        assert!(uniform - solo3 < 0.5 * per_call);
         // no drafting rows → no draft charge
         assert_eq!(m.draft_cost(&[0, 0]), 0.0);
         assert_eq!(m.draft_cost(&[]), 0.0);

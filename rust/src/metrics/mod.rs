@@ -126,6 +126,20 @@ pub struct ServeMetrics {
     pub activated: Vec<Summary>,
     /// Max per-GPU load summary (EP runs).
     pub max_gpu_load: Summary,
+    /// Per-GPU activated-expert load histogram (EP runs): one sample per
+    /// layer per forward, indexed by GPU. Sized on first record.
+    pub gpu_loads: Vec<Summary>,
+    /// ∫ MaxLoad dt over simulated time (Σ step MaxLoad × step seconds) —
+    /// the straggler exposure the EP serve bench compares placements by.
+    pub gpu_load_integral: f64,
+    /// Rows preempted back to the queue by footprint-aware eviction.
+    pub evictions: u64,
+    /// Placement rebalances adopted (`--ep-rebalance`; candidates that did
+    /// not improve expected MaxLoad are discarded and not counted).
+    pub rebalances: u64,
+    /// Expected-MaxLoad improvement of each adopted rebalance (before −
+    /// after under the tracked mix weights; positive by construction).
+    pub rebalance_delta: Summary,
     /// Speculative: proposed / accepted bonus counts.
     pub spec_proposed: u64,
     pub spec_accepted: u64,
@@ -224,6 +238,18 @@ impl ServeMetrics {
         }
     }
 
+    /// Record one forward's per-layer per-GPU loads (EP accounting). The
+    /// gauge vector is sized to the topology on first use so metrics stay
+    /// topology-agnostic at construction.
+    pub fn record_gpu_loads(&mut self, loads: &[usize]) {
+        if self.gpu_loads.len() < loads.len() {
+            self.gpu_loads.resize(loads.len(), Summary::default());
+        }
+        for (s, &l) in self.gpu_loads.iter_mut().zip(loads) {
+            s.add(l as f64);
+        }
+    }
+
     /// Record one drafting row's acceptance rate for one verify cycle,
     /// keyed by its traffic class.
     pub fn record_spec_accept(&mut self, class: &str, rate: f64) {
@@ -298,6 +324,17 @@ impl ServeMetrics {
             .collect();
         m.insert("spec_accept_by_class".into(), Json::Obj(accept_classes));
         m.insert("max_gpu_load_mean".into(), Json::num(self.max_gpu_load.mean()));
+        m.insert("gpu_load_integral".into(), Json::num(self.gpu_load_integral));
+        m.insert(
+            "gpu_load_mean_by_gpu".into(),
+            Json::Arr(self.gpu_loads.iter().map(|s| Json::num(s.mean())).collect()),
+        );
+        m.insert("evictions".into(), Json::num(self.evictions as f64));
+        m.insert("rebalances".into(), Json::num(self.rebalances as f64));
+        m.insert(
+            "rebalance_delta_mean".into(),
+            Json::num(self.rebalance_delta.mean()),
+        );
         m.insert("p50_step_us".into(), Json::num(self.step_latency.quantile_us(0.5)));
         m.insert("p99_step_us".into(), Json::num(self.step_latency.quantile_us(0.99)));
         m.insert(
@@ -440,6 +477,32 @@ mod tests {
         let by_class = j.get("spec_accept_by_class").expect("class map dumped");
         assert_eq!(by_class.get("gpqa").and_then(|v| v.as_f64()), Some(0.75));
         assert_eq!(by_class.get("aime").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn ep_serving_gauges_accumulate_and_dump() {
+        let mut m = ServeMetrics::new(1);
+        // per-GPU loads size lazily to the topology and track per sample
+        m.record_gpu_loads(&[3, 1]);
+        m.record_gpu_loads(&[1, 1]);
+        assert_eq!(m.gpu_loads.len(), 2);
+        assert_eq!(m.gpu_loads[0].mean(), 2.0);
+        assert_eq!(m.gpu_loads[1].mean(), 1.0);
+        m.gpu_load_integral += 3.0 * 0.5;
+        m.evictions = 2;
+        m.rebalances = 1;
+        m.rebalance_delta.add(1.5);
+        let j = m.to_json();
+        assert_eq!(j.get("gpu_load_integral").and_then(|v| v.as_f64()), Some(1.5));
+        assert_eq!(j.get("evictions").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(j.get("rebalances").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(
+            j.get("rebalance_delta_mean").and_then(|v| v.as_f64()),
+            Some(1.5)
+        );
+        let by_gpu = j.get("gpu_load_mean_by_gpu").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(by_gpu.len(), 2);
+        assert_eq!(by_gpu[0].as_f64(), Some(2.0));
     }
 
     #[test]

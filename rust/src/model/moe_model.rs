@@ -27,6 +27,22 @@
 //! idiom). The depth-0 byte-identity pin in
 //! `rust/tests/spec_mixed_phase.rs` and the kernel masking tests hold
 //! this contract in place.
+//!
+//! ## The eviction/resume KV contract
+//!
+//! Slot eviction (`coordinator::eviction`) NEVER migrates K/V between
+//! slots. A preempted row abandons its cache bytes in place and is
+//! requeued with every committed token — consumed prompt plus generated —
+//! as its new prompt; on re-admission, prefilling that history into
+//! whatever slot it lands in rebuilds the cache from scratch (the chunk
+//! `catch_up` idiom promoted to request scope). The rebuild is
+//! byte-faithful for the same reason parks are: K/V at a position depend
+//! only on the token stream and the cache prefix below it, both of which
+//! the replay reproduces exactly — so under row-independent routing the
+//! resumed continuation is byte-identical to an uninterrupted run
+//! (pinned by `rust/tests/ep_serve.rs`). The victim slot's stale bytes
+//! beyond a later occupant's `pos` are masked by the attention kernel,
+//! exactly as for ordinary slot reuse after a finish.
 
 use anyhow::{bail, Result};
 

@@ -48,9 +48,24 @@ impl Footprint {
     /// Fold one observed probability row in: `w ← decay·w + (1−decay)·p`.
     /// The first observation seeds the weights directly so a cold footprint
     /// does not spend its early life biased toward zero.
+    ///
+    /// `decay` is valid on the whole closed interval `[0, 1]`: `0.0` keeps
+    /// no memory (weights = the latest row), `1.0` freezes the weights at
+    /// the seed. The old guard rejected exactly one of those endpoints
+    /// (`1.0`) while silently accepting the other; range policy now lives
+    /// at config parse time (`ServeConfig::validate` on
+    /// `footprint_decay`), and this method only debug-checks the closed
+    /// interval. A length-mismatched probability row is a caller bug and
+    /// panics instead of being silently truncated by `zip`.
     pub fn observe(&mut self, probs_row: &[f32], decay: f32) {
-        debug_assert_eq!(probs_row.len(), self.weights.len());
-        debug_assert!((0.0..1.0).contains(&decay));
+        assert_eq!(
+            probs_row.len(),
+            self.weights.len(),
+            "observed row covers {} experts but the footprint tracks {}",
+            probs_row.len(),
+            self.weights.len()
+        );
+        debug_assert!((0.0..=1.0).contains(&decay), "decay {decay} outside [0, 1]");
         if self.n_obs == 0 {
             self.weights.copy_from_slice(probs_row);
         } else {
@@ -119,6 +134,27 @@ mod tests {
         assert!(fp.is_informative());
         assert_eq!(fp.weights(), &[0.1, 0.5, 0.3, 0.1]);
         assert_eq!(fp.top_set(1).to_vec(), vec![1]);
+    }
+
+    #[test]
+    fn decay_endpoints_are_symmetric() {
+        // decay = 1.0 freezes at the seed; decay = 0.0 keeps no memory.
+        // Both are legal (the old debug guard rejected only the freeze).
+        let mut frozen = Footprint::empty(2);
+        frozen.observe(&[0.9, 0.1], 1.0);
+        frozen.observe(&[0.0, 1.0], 1.0);
+        assert_eq!(frozen.weights(), &[0.9, 0.1]);
+        let mut memoryless = Footprint::empty(2);
+        memoryless.observe(&[0.9, 0.1], 0.0);
+        memoryless.observe(&[0.0, 1.0], 0.0);
+        assert_eq!(memoryless.weights(), &[0.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "observed row covers")]
+    fn mismatched_row_length_panics_instead_of_truncating() {
+        let mut fp = Footprint::empty(4);
+        fp.observe(&[0.5, 0.5], 0.9);
     }
 
     #[test]

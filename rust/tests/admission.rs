@@ -115,6 +115,7 @@ fn prop_fifo_policy_matches_pre_refactor_admission_order() {
                                 running_slots: &live,
                                 placement: None,
                                 top_k: 1,
+                                spec: None,
                             };
                             let Some(entry) = queue.pop_next(&ctx) else { break };
                             let id = entry.req.id;
@@ -442,6 +443,7 @@ fn prop_footprint_admission_is_starvation_free() {
                     running_slots: &running,
                     placement: None,
                     top_k,
+                    spec: None,
                 };
                 let picked = q.pop_next(&ctx).expect("queue never empty");
                 frees += 1;

@@ -1,0 +1,301 @@
+//! Expert-parallel serving suite (PR 5).
+//!
+//! Two contracts pinned here:
+//!
+//! 1. **EP charging is cost-only.** With `cfg.ep` set (and eviction /
+//!    rebalance off), generated tokens and the final KV digest are
+//!    byte-identical to the non-EP run under every selection policy that
+//!    can run in both modes — staggered admission included. The placement
+//!    reaches selection contexts, but only the `gpu` policy reads it (and
+//!    that policy cannot run without EP, so it has no non-EP baseline to
+//!    compare against); for everyone else EP must only move the sim
+//!    clock. This is exactly what keeps the pre-PR EP-off path
+//!    byte-identical: the EP arm of `charge_step` is unreachable without
+//!    `cfg.ep`.
+//!
+//! 2. **Eviction/resume is lossless.** A row preempted back to the queue
+//!    — mid-decode or mid-prefill — resumes by re-prefilling its
+//!    committed history, and under row-independent routing the final
+//!    outputs are byte-identical to an uninterrupted run (the
+//!    eviction/resume KV contract in `model/moe_model.rs`).
+
+use std::collections::BTreeMap;
+
+use xshare::config::{EpConfig, ServeConfig};
+use xshare::coordinator::{AdmissionKind, Request, Scheduler, ServeLoop};
+use xshare::ep::PlacementKind;
+use xshare::metrics::ServeMetrics;
+use xshare::model::MoeModel;
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+use xshare::selection::PolicyKind;
+
+fn tiny_model() -> MoeModel {
+    let manifest = Manifest::load(&artifacts_root().join("tiny"))
+        .expect("tiny artifacts missing — run `make artifacts`");
+    MoeModel::new(Engine::load(manifest).unwrap()).unwrap()
+}
+
+fn cfg(policy: &str) -> ServeConfig {
+    ServeConfig {
+        preset: "tiny".into(),
+        policy: PolicyKind::parse(policy).expect("policy"),
+        batch_size: 2,
+        max_new_tokens: 5,
+        ..Default::default()
+    }
+}
+
+fn ep2() -> Option<EpConfig> {
+    Some(EpConfig { n_gpus: 2, placement: PlacementKind::Contiguous })
+}
+
+fn prompt_of(len: usize, seed: u64, vocab: u64) -> Vec<u32> {
+    (0..len as u64).map(|i| ((seed.wrapping_mul(31) + i * 7 + 3) % vocab) as u32).collect()
+}
+
+fn trace(vocab: u64) -> Vec<Request> {
+    (0..4u64)
+        .map(|id| {
+            let mut r = Request::new(id, prompt_of(3 + id as usize % 3, id + 5, vocab), 5);
+            r.domain = if id % 2 == 0 { "evenA".into() } else { "oddB".into() };
+            r
+        })
+        .collect()
+}
+
+/// Staggered admission drive: two requests up front, three steps, the rest
+/// mid-flight, then drain. Returns (outputs, final metrics); the caller
+/// reads the KV digest off the model afterwards.
+fn run_staggered(
+    model: &mut MoeModel,
+    c: ServeConfig,
+    reqs: &[Request],
+) -> (BTreeMap<u64, Vec<u32>>, ServeMetrics) {
+    let mut core = ServeLoop::new(model, c).expect("serve loop");
+    for r in &reqs[..2] {
+        core.submit(r.clone()).unwrap();
+    }
+    for _ in 0..3 {
+        core.step().unwrap();
+    }
+    for r in &reqs[2..] {
+        core.submit(r.clone()).unwrap();
+    }
+    core.drain().unwrap();
+    let report = core.report();
+    (report.outputs, report.metrics)
+}
+
+#[test]
+fn ep_charging_is_cost_only_never_routing_visible() {
+    // Every policy shape that runs with and without EP (the `gpu` policy
+    // is placement-dependent by design and refuses to run EP-off, so it
+    // is the one exclusion). Tokens AND the full KV digest must match;
+    // only the sim clock may move.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let reqs = trace(vocab);
+    for policy in ["vanilla", "batch:6:1", "spec:1:0:2", "lynx:2", "skip:0.3", "opp:1"] {
+        let (base_out, base_metrics) = run_staggered(&mut model, cfg(policy), &reqs);
+        let base_kv = model.kv_digest();
+        for placement in [PlacementKind::Contiguous, PlacementKind::RoundRobin] {
+            let mut c = cfg(policy);
+            c.ep = Some(EpConfig { n_gpus: 2, placement });
+            let (ep_out, ep_metrics) = run_staggered(&mut model, c, &reqs);
+            let ep_kv = model.kv_digest();
+            assert_eq!(
+                ep_out, base_out,
+                "[{policy} {placement:?}] EP charging changed generated tokens"
+            );
+            assert_eq!(
+                ep_kv, base_kv,
+                "[{policy} {placement:?}] EP charging changed KV state"
+            );
+            // …and the cost side is actually live: the straggler model
+            // moved the sim clock and populated every EP gauge.
+            assert!(
+                (ep_metrics.sim_seconds - base_metrics.sim_seconds).abs() > 1e-12,
+                "[{policy} {placement:?}] EP run never charged through the comm model"
+            );
+            assert!(ep_metrics.max_gpu_load.n > 0);
+            assert_eq!(ep_metrics.gpu_loads.len(), 2);
+            assert!(ep_metrics.gpu_loads.iter().all(|s| s.n > 0));
+            assert!(ep_metrics.gpu_load_integral > 0.0);
+            assert_eq!(base_metrics.gpu_load_integral, 0.0);
+        }
+    }
+}
+
+#[test]
+fn ep_speculative_serving_matches_non_ep_byte_for_byte() {
+    // The ragged-verify path under EP: lookup drafts, mixed phases. Cost
+    // still must never leak into routing.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let reqs: Vec<Request> = (0..3u64)
+        .map(|id| Request::new(id, prompt_of(4, id + 11, vocab), 8))
+        .collect();
+    let mut base_cfg = cfg("vanilla");
+    base_cfg.batch_size = 3;
+    base_cfg.spec_len = 2;
+    base_cfg.spec_draft = xshare::config::SpecDraft::Lookup;
+    base_cfg.max_new_tokens = 8;
+    let (base_out, base_metrics) = run_staggered(&mut model, base_cfg.clone(), &reqs);
+    let mut ep_cfg = base_cfg;
+    ep_cfg.ep = ep2();
+    let (ep_out, ep_metrics) = run_staggered(&mut model, ep_cfg, &reqs);
+    assert_eq!(ep_out, base_out, "EP verify cycles changed outputs");
+    assert!((ep_metrics.sim_seconds - base_metrics.sim_seconds).abs() > 1e-12);
+    assert!(ep_metrics.spec_accepted <= base_metrics.spec_proposed);
+    assert_eq!(
+        ep_metrics.spec_proposed, base_metrics.spec_proposed,
+        "speculation planning must not see the cost model"
+    );
+}
+
+/// Uninterrupted baseline for the eviction pins: all requests through the
+/// plain scheduler.
+fn baseline_outputs(
+    model: &mut MoeModel,
+    c: ServeConfig,
+    reqs: &[Request],
+) -> BTreeMap<u64, Vec<u32>> {
+    Scheduler::new(model, c)
+        .expect("scheduler")
+        .run(reqs.to_vec())
+        .expect("run")
+        .outputs
+}
+
+#[test]
+fn forced_eviction_mid_decode_resumes_losslessly() {
+    // Evict a row that has already committed tokens: it must re-enter the
+    // queue, rebuild its KV by re-prefilling prompt + generated, and
+    // finish with output byte-identical to the uninterrupted run.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let reqs: Vec<Request> = (0..3u64)
+        .map(|id| Request::new(id, prompt_of(3 + id as usize, id + 21, vocab), 6))
+        .collect();
+    let mut c = cfg("vanilla");
+    c.max_new_tokens = 6;
+    let base = baseline_outputs(&mut model, c.clone(), &reqs);
+
+    let mut core = ServeLoop::new(&mut model, c).expect("serve loop");
+    for r in &reqs {
+        core.submit(r.clone()).unwrap();
+    }
+    // step until slot 0's row has committed at least one token (pos
+    // reaches its prompt length exactly when the first token commits)
+    let victim_prompt = reqs[0].prompt.len();
+    let mut evicted_id = None;
+    for _ in 0..64 {
+        core.step().unwrap();
+        if core.slot_pos(0).map(|p| p >= victim_prompt).unwrap_or(false) {
+            evicted_id = core.evict_slot(0);
+            break;
+        }
+    }
+    let evicted_id = evicted_id.expect("victim row never reached decode");
+    assert_eq!(evicted_id, 0, "slot 0 held request 0 (FIFO, lowest slot first)");
+    core.drain().unwrap();
+    let report = core.report();
+    assert_eq!(report.metrics.evictions, 1);
+    assert_eq!(
+        report.outputs, base,
+        "eviction/resume changed outputs under vanilla routing"
+    );
+    assert_eq!(report.outputs[&0].len(), 6, "resumed row lost part of its budget");
+}
+
+#[test]
+fn forced_eviction_mid_prefill_resumes_losslessly() {
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let reqs: Vec<Request> = (0..3u64)
+        .map(|id| Request::new(id, prompt_of(5, id + 31, vocab), 4))
+        .collect();
+    let mut c = cfg("vanilla");
+    c.max_new_tokens = 4;
+    let base = baseline_outputs(&mut model, c.clone(), &reqs);
+
+    let mut core = ServeLoop::new(&mut model, c).expect("serve loop");
+    for r in &reqs {
+        core.submit(r.clone()).unwrap();
+    }
+    core.step().unwrap(); // one token of prefill — mid-prompt
+    assert!(core.slot_pos(0).unwrap() < 5, "row unexpectedly past prefill");
+    assert_eq!(core.evict_slot(0), Some(0));
+    core.drain().unwrap();
+    let report = core.report();
+    assert_eq!(report.metrics.evictions, 1);
+    assert_eq!(report.outputs, base);
+}
+
+#[test]
+fn planned_eviction_under_ep_keeps_vanilla_outputs() {
+    // The full planner path (footprint admission + --ep-evict + EP
+    // charging): whatever the planner decides, vanilla routing means the
+    // served tokens per request cannot change vs plain FIFO serving.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let mut reqs: Vec<Request> = Vec::new();
+    for id in 0..6u64 {
+        let mut r = Request::new(id, prompt_of(3, (id % 2) * 17 + 3, vocab), 5);
+        r.domain = if id % 2 == 0 { "clsA".into() } else { "clsB".into() };
+        reqs.push(r);
+    }
+    let base = baseline_outputs(&mut model, cfg("vanilla"), &reqs);
+    let mut c = cfg("vanilla");
+    c.admission = AdmissionKind::FootprintAware;
+    c.ep = ep2();
+    c.ep_evict = true;
+    let report = Scheduler::new(&mut model, c)
+        .expect("scheduler")
+        .run(reqs)
+        .expect("run");
+    assert_eq!(
+        report.outputs, base,
+        "footprint admission + eviction reordered work but must not change tokens"
+    );
+}
+
+#[test]
+fn rebalance_under_vanilla_is_cost_only_and_only_improves() {
+    // Dynamic placement with a placement-blind policy: outputs must stay
+    // byte-identical to the static-placement run, and every ADOPTED
+    // rebalance must have strictly improved expected MaxLoad (the serve
+    // loop discards non-improving candidates).
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let mut reqs: Vec<Request> = Vec::new();
+    for id in 0..8u64 {
+        let mut r = Request::new(id, prompt_of(3, (id % 2) * 29 + 7, vocab), 5);
+        r.domain = if id % 2 == 0 { "rebA".into() } else { "rebB".into() };
+        reqs.push(r);
+    }
+    let mut static_cfg = cfg("vanilla");
+    static_cfg.admission = AdmissionKind::FootprintAware;
+    static_cfg.ep = ep2();
+    let static_out = Scheduler::new(&mut model, static_cfg.clone())
+        .expect("scheduler")
+        .run(reqs.clone())
+        .expect("run")
+        .outputs;
+    let mut dyn_cfg = static_cfg;
+    dyn_cfg.ep_rebalance = 1; // every free
+    let report = Scheduler::new(&mut model, dyn_cfg)
+        .expect("scheduler")
+        .run(reqs)
+        .expect("run");
+    assert_eq!(
+        report.outputs, static_out,
+        "placement rebalancing leaked into vanilla routing"
+    );
+    if report.metrics.rebalances > 0 {
+        assert!(
+            report.metrics.rebalance_delta.min > 0.0,
+            "adopted a rebalance that did not improve expected MaxLoad"
+        );
+    }
+}
