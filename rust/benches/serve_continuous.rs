@@ -44,6 +44,23 @@ const LONG_MAX_NEW: usize = 8;
 /// One chunk per step; gptoss-mini's chunk capacity is its max_batch (16).
 const PREFILL_CHUNK: usize = 16;
 
+/// Where `--write-bench <dir>` mirrors every BENCH_*.json artifact — the
+/// refresh path for the reference snapshots under `benchmarks/`.
+static WRITE_BENCH_DIR: std::sync::OnceLock<std::path::PathBuf> = std::sync::OnceLock::new();
+
+/// Emit one BENCH_*.json artifact: the working directory (CI uploads it
+/// from there), the shared report sink, and — when `--write-bench` is set —
+/// a copy into the snapshot directory.
+fn emit_bench(name: &str, json: &str) {
+    std::fs::write(name, json).unwrap_or_else(|e| panic!("writing {name}: {e}"));
+    save_report(name, json);
+    if let Some(dir) = WRITE_BENCH_DIR.get() {
+        std::fs::create_dir_all(dir).expect("creating --write-bench dir");
+        std::fs::write(dir.join(name), json)
+            .unwrap_or_else(|e| panic!("copying {name} into --write-bench dir: {e}"));
+    }
+}
+
 fn base_cfg(policy: &str) -> ServeConfig {
     ServeConfig {
         preset: PRESET.into(),
@@ -470,8 +487,7 @@ fn spec_mixed_phase_scenario() {
     // a silent miss would only surface as an opaque upload-artifact error);
     // target/bench-reports keeps the local trajectory alongside the other
     // bench outputs.
-    std::fs::write("BENCH_spec.json", &json).expect("writing BENCH_spec.json");
-    save_report("BENCH_spec.json", &json);
+    emit_bench("BENCH_spec.json", &json);
     println!("[spec        ] wrote BENCH_spec.json");
 }
 
@@ -776,9 +792,172 @@ fn ep_serve_scenario(model: &mut MoeModel) {
         ),
     ])
     .dump();
-    std::fs::write("BENCH_ep_serve.json", &json).expect("writing BENCH_ep_serve.json");
-    save_report("BENCH_ep_serve.json", &json);
+    emit_bench("BENCH_ep_serve.json", &json);
     println!("[ep          ] wrote BENCH_ep_serve.json");
+}
+
+// Replication/migration scenario (PR 6).
+const MIG_SLACK: f64 = 2.0;
+const MIG_BUDGET: usize = 3;
+
+/// **EP migration scenario**: the same skewed template burst, PR 5's
+/// swap-rebalance stack (`--ep-migrate-budget 0`, whole-placement LPT
+/// swaps) against PR 6's replicated placement — residency slack
+/// [`MIG_SLACK`], incremental plans of at most [`MIG_BUDGET`] ops with the
+/// copied weight bytes charged through the interconnect, and footprint
+/// prefetch for queued classes. ACCEPTANCE: identical tokens, and the
+/// replication arm's ∫ MaxLoad dt strictly below the swap baseline even
+/// though it pays for every byte it moves. Emits `BENCH_ep_migrate.json`.
+fn ep_migrate_scenario(model: &mut MoeModel) {
+    println!(
+        "\n# EP migration — replica sets + bounded migration vs swap rebalance \
+         ({EP_N_REQUESTS} reqs, B={ADM_BATCH}, G={EP_GPUS}, slack={MIG_SLACK}, \
+         budget={MIG_BUDGET}, vanilla routing)"
+    );
+    let reqs = ep_template_requests();
+    let mut swap_cfg = base_cfg("vanilla");
+    swap_cfg.batch_size = ADM_BATCH;
+    swap_cfg.max_new_tokens = ADM_MAX_NEW;
+    swap_cfg.ep = Some(EpConfig { n_gpus: EP_GPUS, placement: PlacementKind::Contiguous });
+    swap_cfg.admission = AdmissionKind::FootprintAware;
+    swap_cfg.ep_evict = true;
+    swap_cfg.ep_rebalance = EP_REBALANCE_EVERY;
+    let mut mig_cfg = swap_cfg.clone();
+    mig_cfg.ep_replica_slack = MIG_SLACK;
+    mig_cfg.ep_migrate_budget = MIG_BUDGET;
+    mig_cfg.ep_prefetch = true;
+
+    let swap = Scheduler::new(model, swap_cfg)
+        .expect("scheduler")
+        .run(reqs.clone())
+        .expect("run");
+    let mig = Scheduler::new(model, mig_cfg)
+        .expect("scheduler")
+        .run(reqs)
+        .expect("run");
+
+    let mut table = Table::new(&[
+        "deployment",
+        "tokens",
+        "sim_s",
+        "max_load_mean",
+        "∫maxload_dt",
+        "migrations",
+        "mig_bytes",
+        "mig_charge_s",
+        "prefetches",
+    ]);
+    for (name, r) in [("swap rebalance (PR 5)", &swap), ("replication + migration", &mig)] {
+        let m = &r.metrics;
+        table.row(&[
+            name.to_string(),
+            m.tokens_out.to_string(),
+            fmt(m.sim_seconds, 4),
+            fmt(m.max_gpu_load.mean(), 2),
+            fmt(m.gpu_load_integral, 5),
+            m.migrations.to_string(),
+            fmt(m.migration_bytes, 0),
+            fmt(m.migration_seconds, 6),
+            m.prefetches.to_string(),
+        ]);
+    }
+    table.print("serve_continuous — replicated placement vs swap rebalance");
+    println!(
+        "[ep-migrate  ] replication vs swap: ∫MaxLoad dt {:+.1}%, sim {:+.1}%, \
+         {} migrations ({} prefetch), max {} ops/plan, {:.0} bytes moved",
+        pct(mig.metrics.gpu_load_integral, swap.metrics.gpu_load_integral),
+        pct(mig.metrics.sim_seconds, swap.metrics.sim_seconds),
+        mig.metrics.migrations,
+        mig.metrics.prefetches,
+        mig.metrics.migration_ops.max,
+        mig.metrics.migration_bytes,
+    );
+
+    assert_eq!(
+        mig.outputs, swap.outputs,
+        "replication/migration are cost-and-composition levers — under vanilla \
+         routing the served tokens must be byte-identical to the swap baseline"
+    );
+    assert!(
+        mig.metrics.gpu_load_integral < swap.metrics.gpu_load_integral,
+        "ACCEPTANCE: replicated placement + bounded migration must serve the \
+         skewed mix at a strictly lower peak-GPU-load integral than the PR 5 \
+         swap-rebalance baseline ({} vs {})",
+        mig.metrics.gpu_load_integral,
+        swap.metrics.gpu_load_integral
+    );
+    assert!(
+        mig.metrics.migrations > 0,
+        "the skewed mix never triggered an adopted migration plan"
+    );
+    assert!(
+        mig.metrics.migration_ops.max <= MIG_BUDGET as f64,
+        "a migration plan carried {} ops past the budget {MIG_BUDGET}",
+        mig.metrics.migration_ops.max
+    );
+    let cost = xshare::ep::EpCostModel::default();
+    assert!(
+        mig.metrics.migration_bytes
+            <= mig.metrics.migrations as f64 * MIG_BUDGET as f64 * cost.expert_bytes,
+        "per-plan migration bytes exceeded budget × expert_bytes"
+    );
+    assert!(
+        mig.metrics.migration_seconds > 0.0,
+        "adopted migrations were never charged to the sim clock"
+    );
+    assert_eq!(mig.metrics.rebalances, 0, "swap path ran in migration mode");
+    assert!(
+        mig.metrics.rebalance_delta.min > 0.0,
+        "adopted migration plans must strictly improve expected MaxLoad"
+    );
+
+    let json = xshare::util::json::Json::obj(vec![
+        ("scenario", xshare::util::json::Json::str("ep_migrate")),
+        ("preset", xshare::util::json::Json::str(PRESET)),
+        ("n_gpus", xshare::util::json::Json::num(EP_GPUS as f64)),
+        ("requests", xshare::util::json::Json::num(EP_N_REQUESTS as f64)),
+        ("replica_slack", xshare::util::json::Json::num(MIG_SLACK)),
+        ("migrate_budget", xshare::util::json::Json::num(MIG_BUDGET as f64)),
+        ("tokens_out", xshare::util::json::Json::num(mig.metrics.tokens_out as f64)),
+        (
+            "swap_gpu_load_integral",
+            xshare::util::json::Json::num(swap.metrics.gpu_load_integral),
+        ),
+        (
+            "migrate_gpu_load_integral",
+            xshare::util::json::Json::num(mig.metrics.gpu_load_integral),
+        ),
+        (
+            "integral_gain_pct",
+            xshare::util::json::Json::num(pct(
+                mig.metrics.gpu_load_integral,
+                swap.metrics.gpu_load_integral,
+            )),
+        ),
+        ("swap_sim_s", xshare::util::json::Json::num(swap.metrics.sim_seconds)),
+        ("migrate_sim_s", xshare::util::json::Json::num(mig.metrics.sim_seconds)),
+        ("migrations", xshare::util::json::Json::num(mig.metrics.migrations as f64)),
+        (
+            "migration_ops_max",
+            xshare::util::json::Json::num(mig.metrics.migration_ops.max),
+        ),
+        (
+            "migration_bytes",
+            xshare::util::json::Json::num(mig.metrics.migration_bytes),
+        ),
+        (
+            "migration_seconds",
+            xshare::util::json::Json::num(mig.metrics.migration_seconds),
+        ),
+        ("prefetches", xshare::util::json::Json::num(mig.metrics.prefetches as f64)),
+        (
+            "rebalance_delta_mean",
+            xshare::util::json::Json::num(mig.metrics.rebalance_delta.mean()),
+        ),
+    ])
+    .dump();
+    emit_bench("BENCH_ep_migrate.json", &json);
+    println!("[ep-migrate  ] wrote BENCH_ep_migrate.json");
 }
 
 // Synthetic-gating admission sim: the general correlated-routing case.
@@ -898,11 +1077,29 @@ fn admission_sim_scenario() {
 
 fn main() {
     // Scenario filter: `cargo bench --bench serve_continuous -- spec`
-    // runs only the mixed-phase speculation scenario and `-- ep` only the
-    // expert-parallel serving scenario (CI executes both and uploads
-    // BENCH_spec.json / BENCH_ep_serve.json); no filter runs everything.
-    let only: Option<String> =
-        std::env::args().skip(1).find(|a| !a.starts_with("--"));
+    // runs only the mixed-phase speculation scenario and `-- ep` the two
+    // expert-parallel scenarios (CI executes both filters and uploads
+    // BENCH_spec.json / BENCH_ep_serve.json / BENCH_ep_migrate.json); no
+    // filter runs everything. `--write-bench <dir>` additionally mirrors
+    // every emitted BENCH_*.json into `<dir>` — the recipe for refreshing
+    // the reference snapshots under `benchmarks/`.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut only: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        if argv[i] == "--write-bench" {
+            let dir = argv.get(i + 1).expect("--write-bench needs a directory");
+            WRITE_BENCH_DIR
+                .set(std::path::PathBuf::from(dir))
+                .expect("--write-bench given twice");
+            i += 2;
+            continue;
+        }
+        if !argv[i].starts_with("--") && only.is_none() {
+            only = Some(argv[i].clone());
+        }
+        i += 1;
+    }
     if only.as_deref() == Some("spec") {
         spec_mixed_phase_scenario();
         return;
@@ -910,6 +1107,7 @@ fn main() {
     if only.as_deref() == Some("ep") {
         let mut model = load_model(PRESET);
         ep_serve_scenario(&mut model);
+        ep_migrate_scenario(&mut model);
         return;
     }
     println!(
@@ -998,6 +1196,7 @@ fn main() {
     long_prompt_scenario(&mut model);
     admission_scenario(&mut model);
     ep_serve_scenario(&mut model);
+    ep_migrate_scenario(&mut model);
     admission_sim_scenario();
     spec_mixed_phase_scenario();
 }

@@ -106,6 +106,23 @@ pub struct ServeConfig {
     /// (static placement, the default). Requires an EP topology and
     /// footprint admission.
     pub ep_rebalance: usize,
+    /// Replica residency slack (`--ep-replica-slack F`): each GPU may hold
+    /// up to ⌈F·N/G⌉ expert copies, so F−1 is the fractional weight-memory
+    /// overhead replication may spend. 1.0 (default) leaves no headroom
+    /// beyond the balanced partition; values > 1 require an EP topology.
+    pub ep_replica_slack: f64,
+    /// Incremental migration (`--ep-migrate-budget B`): placement changes
+    /// on the rebalance clock become bounded plans of ≤ B expert
+    /// copies/drops per step, charged through the interconnect and adopted
+    /// only when the expected straggler saving beats the transfer cost.
+    /// 0 = off (the legacy free instantaneous swap). Requires
+    /// `--ep-rebalance` (migration rides the same clock and weights).
+    pub ep_migrate_budget: usize,
+    /// Footprint-driven replica prefetch (`--ep-prefetch`): each step, run
+    /// the migration planner over the QUEUED classes' predicted expert
+    /// sets so replicas are resident (and paid for) before that traffic
+    /// admits. Requires `--ep-migrate-budget` > 0. Off by default.
+    pub ep_prefetch: bool,
     /// Expert-parallel topology (None = single GPU).
     pub ep: Option<EpConfig>,
     /// Server bind address.
@@ -132,6 +149,9 @@ impl Default for ServeConfig {
             footprint_decay: 0.9,
             ep_evict: false,
             ep_rebalance: 0,
+            ep_replica_slack: 1.0,
+            ep_migrate_budget: 0,
+            ep_prefetch: false,
             ep: None,
             addr: "127.0.0.1:7431".into(),
             seed: 0,
@@ -152,7 +172,8 @@ impl ServeConfig {
         let known = [
             "preset", "policy", "batch_size", "spec_len", "spec_adaptive", "spec_draft",
             "prefill_chunk", "hardware", "admission", "max_queue", "footprint_decay",
-            "ep_evict", "ep_rebalance", "ep", "addr", "seed", "max_new_tokens",
+            "ep_evict", "ep_rebalance", "ep_replica_slack", "ep_migrate_budget",
+            "ep_prefetch", "ep", "addr", "seed", "max_new_tokens",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -202,6 +223,15 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("ep_rebalance") {
             cfg.ep_rebalance = v.as_usize().context("ep_rebalance")?;
+        }
+        if let Some(v) = root.get("ep_replica_slack") {
+            cfg.ep_replica_slack = v.as_f64().context("ep_replica_slack")?;
+        }
+        if let Some(v) = root.get("ep_migrate_budget") {
+            cfg.ep_migrate_budget = v.as_usize().context("ep_migrate_budget")?;
+        }
+        if let Some(v) = root.get("ep_prefetch") {
+            cfg.ep_prefetch = v.as_bool().context("ep_prefetch")?;
         }
         if let Some(v) = root.get("addr") {
             cfg.addr = v.as_str().context("addr")?.to_string();
@@ -268,6 +298,17 @@ impl ServeConfig {
         if args.has("ep-rebalance") {
             self.ep_rebalance = args.usize_or("ep-rebalance", self.ep_rebalance);
         }
+        if args.has("ep-replica-slack") {
+            self.ep_replica_slack =
+                args.f64_or("ep-replica-slack", self.ep_replica_slack);
+        }
+        if args.has("ep-migrate-budget") {
+            self.ep_migrate_budget =
+                args.usize_or("ep-migrate-budget", self.ep_migrate_budget);
+        }
+        if args.bool("ep-prefetch") {
+            self.ep_prefetch = true;
+        }
         if let Some(v) = args.get("addr") {
             self.addr = v.to_string();
         }
@@ -329,6 +370,28 @@ impl ServeConfig {
                      rebalancing weights experts by the tracked class mix"
                 );
             }
+        }
+        if !self.ep_replica_slack.is_finite() || self.ep_replica_slack < 1.0 {
+            bail!(
+                "ep_replica_slack {} must be a finite value ≥ 1.0 (1.0 = no replica \
+                 headroom beyond the balanced partition)",
+                self.ep_replica_slack
+            );
+        }
+        if self.ep_replica_slack > 1.0 && self.ep.is_none() {
+            bail!("--ep-replica-slack > 1 needs an EP topology (--ep-gpus N)");
+        }
+        if self.ep_migrate_budget > 0 && self.ep_rebalance == 0 {
+            bail!(
+                "--ep-migrate-budget needs --ep-rebalance N: incremental migration \
+                 rides the rebalance clock and its tracked class-mix weights"
+            );
+        }
+        if self.ep_prefetch && self.ep_migrate_budget == 0 {
+            bail!(
+                "--ep-prefetch needs --ep-migrate-budget B: prefetch schedules \
+                 bounded replica migrations for the predicted queued mix"
+            );
         }
         if let Some(ep) = &self.ep {
             if ep.n_gpus == 0 {
@@ -574,6 +637,67 @@ mod tests {
         assert_eq!(cfg.ep_rebalance, 8);
         assert!((cfg.footprint_decay - 0.95).abs() < 1e-6);
         let bad = Args::parse("--ep-evict".split_whitespace().map(String::from));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn replication_knobs_roundtrip_and_validation() {
+        // defaults: no replica headroom, instantaneous swap, no prefetch —
+        // byte-identical to the PR 5 behaviour
+        let d = ServeConfig::default();
+        assert!((d.ep_replica_slack - 1.0).abs() < 1e-12);
+        assert_eq!(d.ep_migrate_budget, 0);
+        assert!(!d.ep_prefetch);
+
+        let p = write_tmp(
+            "ep_migrate.json",
+            r#"{"admission":"footprint","ep":{"n_gpus":4},"ep_rebalance":2,
+               "ep_replica_slack":1.5,"ep_migrate_budget":3,"ep_prefetch":true}"#,
+        );
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert!((cfg.ep_replica_slack - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.ep_migrate_budget, 3);
+        assert!(cfg.ep_prefetch);
+
+        // slack below 1 / non-finite fails loudly
+        for slack in [0.5f64, 0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let cfg = ServeConfig { ep_replica_slack: slack, ..ServeConfig::default() };
+            let err = cfg.validate().unwrap_err();
+            assert!(format!("{err:#}").contains("ep_replica_slack"), "{err:#}");
+        }
+        // replica headroom without an EP topology is meaningless
+        let bad = write_tmp("ep_slack_bad.json", r#"{"ep_replica_slack":2.0}"#);
+        assert!(ServeConfig::from_json_file(&bad).is_err());
+        // migration without the rebalance clock has nothing to ride
+        let bad = write_tmp(
+            "ep_mig_bad.json",
+            r#"{"admission":"footprint","ep":{"n_gpus":2},"ep_migrate_budget":2}"#,
+        );
+        let err = ServeConfig::from_json_file(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("ep-rebalance"), "{err:#}");
+        // prefetch without a migration budget cannot schedule anything
+        let bad = write_tmp(
+            "ep_pref_bad.json",
+            r#"{"admission":"footprint","ep":{"n_gpus":2},"ep_rebalance":2,
+               "ep_prefetch":true}"#,
+        );
+        let err = ServeConfig::from_json_file(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("ep-migrate-budget"), "{err:#}");
+
+        // CLI spellings
+        let args = Args::parse(
+            "--admission footprint --ep-gpus 4 --ep-rebalance 2 \
+             --ep-replica-slack 2.0 --ep-migrate-budget 3 --ep-prefetch"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert!((cfg.ep_replica_slack - 2.0).abs() < 1e-12);
+        assert_eq!(cfg.ep_migrate_budget, 3);
+        assert!(cfg.ep_prefetch);
+        let bad = Args::parse(
+            "--ep-gpus 2 --ep-replica-slack 0.5".split_whitespace().map(String::from),
+        );
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 

@@ -10,7 +10,10 @@
 //! (strictly more than [`EVICTION_MARGIN`], on the same MaxLoad-weighted
 //! [`admission_score`] admission uses), that row is preempted back to the
 //! queue and the better-fitting request takes its slot at the very next
-//! admission.
+//! admission. Since PR 6 the MaxLoad term resolves replicas: the
+//! leave-one-out unions are scored under replica-aware routing, so an
+//! expert with a copy on an idle GPU no longer penalizes the candidate
+//! that needs it.
 //!
 //! ## Preemption is lossless (the recompute/resume contract)
 //!

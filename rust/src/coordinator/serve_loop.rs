@@ -109,6 +109,24 @@
 //! per-rebalance deltas. `benches/serve_continuous.rs -- ep` asserts the
 //! full stack beats static-placement FIFO on the integral at byte-equal
 //! outputs.
+//!
+//! ## Expert replication & incremental migration (PR 6)
+//!
+//! [`Placement`] is a replica set now (see [`crate::ep`] for the full
+//! contract), and placement change is physical. With
+//! `--ep-migrate-budget B` the rebalance clock stops swapping the whole
+//! assignment for free and instead adopts bounded migration plans
+//! ([`crate::ep::plan_migration`]): ≤ B replica copies/drops per step,
+//! residency per GPU capped by `--ep-replica-slack`, adopted only when the
+//! expected straggler saving over an amortization horizon beats the
+//! interconnect charge for the copied weights. That charge lands in a
+//! backlog drained against subsequent step time
+//! ([`ServeLoop::charge_step`]) — migration overlaps decode, a step at
+//! most doubles. `--ep-prefetch` additionally runs the planner over the
+//! QUEUED classes' predicted footprints each step, so replicas are
+//! resident (and paid for) before the traffic that needs them admits.
+//! All of it is cost-only: tokens and KV stay byte-identical to non-EP
+//! runs (`rust/tests/ep_migrate.rs`).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -278,8 +296,22 @@ pub struct ServeLoop<'m> {
     /// Slot releases since the last adopted (or attempted) placement
     /// rebalance — the `--ep-rebalance N` clock.
     frees_since_rebalance: u64,
+    /// Interconnect seconds of adopted-but-not-yet-drained expert weight
+    /// movement (`--ep-migrate-budget`). Each EP step drains up to its own
+    /// simulated duration from this backlog — migration traffic overlaps
+    /// decoding, so a step at most doubles and the charge never stalls the
+    /// loop outright.
+    migration_backlog_s: f64,
     started: Instant,
 }
+
+/// Amortization horizon for adopting a migration plan: an expected-MaxLoad
+/// drop of Δ experts saves ~`Δ × expert_load_s` per layer forward, and the
+/// plan is adopted only when that saving over this many layer forwards
+/// exceeds the plan's interconnect charge. 256 layer forwards ≈ a handful
+/// of decode steps on the full-scale geometries — skew shorter-lived than
+/// that is not worth moving weights for.
+const MIGRATION_HORIZON_LAYER_FORWARDS: f64 = 256.0;
 
 impl<'m> ServeLoop<'m> {
     pub fn new(model: &'m mut MoeModel, cfg: ServeConfig) -> Result<ServeLoop<'m>> {
@@ -328,6 +360,7 @@ impl<'m> ServeLoop<'m> {
             forced_depth: None,
             ttft_pending: Vec::new(),
             frees_since_rebalance: 0,
+            migration_backlog_s: 0.0,
             started: Instant::now(),
         };
         sl.reset()?;
@@ -345,6 +378,7 @@ impl<'m> ServeLoop<'m> {
                 .with_decay(self.cfg.footprint_decay)
         });
         self.frees_since_rebalance = 0;
+        self.migration_backlog_s = 0.0;
         self.metrics = ServeMetrics::new(self.model.dims().n_layers);
         self.outputs.clear();
         self.domains.clear();
@@ -461,10 +495,12 @@ impl<'m> ServeLoop<'m> {
         let was_running = self.batcher.running() > 0;
 
         // EP serving levers, before admission sees the queue: rebalance
-        // the placement on the frees clock, then preempt a far-worse-
-        // fitting row so this step's admission can hand its slot to the
-        // better-fitting queued request.
+        // the placement on the frees clock, prefetch replicas for the
+        // traffic about to admit, then preempt a far-worse-fitting row so
+        // this step's admission can hand its slot to the better-fitting
+        // queued request.
         self.maybe_rebalance();
+        self.maybe_prefetch();
         let evicted = self.maybe_evict(sim_before);
 
         let admitted = self.admit(sim_before, was_running);
@@ -573,30 +609,63 @@ impl<'m> ServeLoop<'m> {
         })
     }
 
-    /// Adopt a rebalanced placement when the `--ep-rebalance` frees clock
-    /// has fired and the tracked mix says it would strictly lower expected
+    /// Adopt a placement change when the `--ep-rebalance` frees clock has
+    /// fired and the tracked mix says it would strictly lower expected
     /// MaxLoad. The mix weights are the running rows' footprints plus the
     /// class predictions of everything queued — the traffic the placement
-    /// is about to serve. Candidates that do not improve are discarded
-    /// (and not counted): LPT under the count-balance constraint is a
-    /// heuristic, and a placement swap must never make the straggler
-    /// worse on its own inputs.
+    /// is about to serve. With `--ep-migrate-budget 0` (default) this is
+    /// the legacy free instantaneous LPT swap
+    /// ([`Placement::rebalance_from`]); with a budget it becomes a bounded,
+    /// interconnect-charged replica migration
+    /// ([`ServeLoop::adopt_migration`]). Candidates that do not improve
+    /// are discarded (and not counted): both planners are heuristics, and
+    /// a placement change must never make the straggler worse on its own
+    /// inputs.
     fn maybe_rebalance(&mut self) {
         let every = self.cfg.ep_rebalance as u64;
         if every == 0 || self.frees_since_rebalance < every {
             return;
         }
-        let Some(tr) = &self.tracker else { return };
+        let Some(weights) = self.tracked_mix_weights(true) else {
+            return; // keep the clock armed until the tracker warms up
+        };
+        self.frees_since_rebalance = 0;
+        if self.cfg.ep_migrate_budget > 0 {
+            // incremental mode: a bounded, interconnect-charged replica
+            // plan instead of the free whole-placement swap
+            self.adopt_migration(&weights, false);
+            return;
+        }
         let Some(pl) = self.model.placement.as_ref() else { return };
+        let before = pl.expected_max_load(&weights);
+        let candidate = pl.rebalance_from(&weights);
+        let after = candidate.expected_max_load(&weights);
+        if after < before - 1e-9 {
+            self.metrics.rebalances += 1;
+            self.metrics.rebalance_delta.add(before - after);
+            self.model.placement = Some(candidate);
+        }
+    }
+
+    /// The tracked traffic mix as per-expert weights: the running rows'
+    /// informative footprints plus (when `include_running` is false, ONLY)
+    /// the class predictions of everything queued. `None` until the tracker
+    /// has seen something — or when this loop is not EP / not
+    /// footprint-tracked at all.
+    fn tracked_mix_weights(&self, include_running: bool) -> Option<Vec<f32>> {
+        let tr = self.tracker.as_ref()?;
+        let pl = self.model.placement.as_ref()?;
         let mut weights = vec![0.0f32; pl.n_experts()];
         let mut any = false;
-        for s in self.batcher.live_slots() {
-            if let Some(fp) = tr.slot_footprint(s) {
-                if fp.is_informative() {
-                    for (acc, &w) in weights.iter_mut().zip(fp.weights()) {
-                        *acc += w;
+        if include_running {
+            for s in self.batcher.live_slots() {
+                if let Some(fp) = tr.slot_footprint(s) {
+                    if fp.is_informative() {
+                        for (acc, &w) in weights.iter_mut().zip(fp.weights()) {
+                            *acc += w;
+                        }
+                        any = true;
                     }
-                    any = true;
                 }
             }
         }
@@ -608,18 +677,60 @@ impl<'m> ServeLoop<'m> {
                 any = true;
             }
         }
-        if !any {
-            return; // keep the clock armed until the tracker warms up
+        any.then_some(weights)
+    }
+
+    /// Footprint-driven replica prefetch (`--ep-prefetch`): when requests
+    /// are queued and their classes have known footprints, run the
+    /// migration planner over the QUEUED mix alone, so replicas for the
+    /// experts that traffic is about to hit are resident — and their
+    /// interconnect charge underway — before the requests admit. Rides the
+    /// same budget/cap/adoption gate as rebalance-driven migration; a
+    /// placement already serving the predicted mix well plans nothing and
+    /// the call is free.
+    fn maybe_prefetch(&mut self) {
+        if !self.cfg.ep_prefetch || self.queue.is_empty() {
+            return;
         }
-        self.frees_since_rebalance = 0;
-        let before = pl.expected_max_load(&weights);
-        let candidate = pl.rebalance_from(&weights);
-        let after = candidate.expected_max_load(&weights);
-        if after < before - 1e-9 {
-            self.metrics.rebalances += 1;
-            self.metrics.rebalance_delta.add(before - after);
-            self.model.placement = Some(candidate);
+        let Some(weights) = self.tracked_mix_weights(false) else { return };
+        self.adopt_migration(&weights, true);
+    }
+
+    /// Plan a bounded migration toward `weights` and adopt it iff the
+    /// expected straggler saving over [`MIGRATION_HORIZON_LAYER_FORWARDS`]
+    /// beats the interconnect charge for the copies. Adopted plans update
+    /// the live placement immediately (routing may use the new replicas at
+    /// once) while their transfer seconds join `migration_backlog_s`, to be
+    /// drained against subsequent step time in [`ServeLoop::charge_step`].
+    fn adopt_migration(&mut self, weights: &[f32], prefetch: bool) -> bool {
+        let Some(pl) = self.model.placement.as_ref() else { return false };
+        let cap = Placement::residency_cap(
+            pl.n_experts(),
+            pl.n_gpus(),
+            self.cfg.ep_replica_slack,
+        );
+        let Some(plan) =
+            crate::ep::plan_migration(pl, weights, self.cfg.ep_migrate_budget, cap)
+        else {
+            return false;
+        };
+        let migrate_s = self.ep_cost.migration_seconds(plan.copies);
+        let benefit_s = (plan.expected_before - plan.expected_after)
+            * self.ep_cost.expert_load_s
+            * MIGRATION_HORIZON_LAYER_FORWARDS;
+        if benefit_s <= migrate_s {
+            return false; // skew too small / too brief to pay the transfer
         }
+        self.metrics.migrations += 1;
+        self.metrics.migration_ops.add(plan.ops.len() as f64);
+        self.metrics.migration_bytes += plan.copies as f64 * self.ep_cost.expert_bytes;
+        self.metrics.rebalance_delta.add(plan.expected_before - plan.expected_after);
+        if prefetch {
+            self.metrics.prefetches += 1;
+        }
+        self.migration_backlog_s += migrate_s;
+        self.model.placement = Some(plan.placement);
+        true
     }
 
     /// Footprint-aware slot eviction (`--ep-evict`): at most one row per
@@ -1527,6 +1638,16 @@ impl<'m> ServeLoop<'m> {
         if let Some(pl) = &self.model.placement {
             let sel_refs: Vec<&ExpertSet> = selected.iter().collect();
             sim += self.cost.ep_step(pl, &sel_refs, n_tokens, &self.ep_cost);
+            // Drain pending migration traffic against this step: the
+            // transfer shares the interconnect with serving, so each step
+            // absorbs at most its own duration of backlog (a step at most
+            // doubles) until the adopted plans are fully paid for.
+            if self.migration_backlog_s > 0.0 {
+                let drain = self.migration_backlog_s.min(sim);
+                sim += drain;
+                self.migration_backlog_s -= drain;
+                self.metrics.migration_seconds += drain;
+            }
             let max_load =
                 selected.iter().map(|s| pl.max_load(s)).max().unwrap_or(0);
             self.metrics.max_gpu_load.add(max_load as f64);

@@ -22,6 +22,9 @@ pub struct EpCostModel {
     pub bytes_per_token: f64,
     /// Fixed per-layer synchronization overhead, seconds.
     pub sync_overhead_s: f64,
+    /// Bytes of weights one expert replica occupies — what a placement
+    /// migration copy moves over the interconnect.
+    pub expert_bytes: f64,
 }
 
 impl Default for EpCostModel {
@@ -34,6 +37,7 @@ impl Default for EpCostModel {
             interconnect_bw: 450e9,
             bytes_per_token: 7168.0 * 2.0,
             sync_overhead_s: 4e-6,
+            expert_bytes: 44e6,
         }
     }
 }
@@ -60,14 +64,23 @@ impl EpCostModel {
         straggler + a2a + self.sync_overhead_s
     }
 
-    /// Even token spread helper (the decode scheduler dispatches each
-    /// token's chosen experts; for latency accounting we spread tokens
-    /// uniformly, the paper does the same for its Max/GPU metric).
-    pub fn uniform_tokens(&self, n_tokens: usize, n_gpus: usize) -> Vec<usize> {
-        let base = n_tokens / n_gpus;
-        let extra = n_tokens % n_gpus;
-        (0..n_gpus).map(|g| base + usize::from(g < extra)).collect()
+    /// Interconnect time to move `copies` expert replicas between GPUs —
+    /// the charge for one adopted [`crate::ep::MigrationPlan`]. The serve
+    /// loop accumulates this into a backlog drained against subsequent step
+    /// time, so migration overlaps decoding instead of stalling it.
+    pub fn migration_seconds(&self, copies: usize) -> f64 {
+        copies as f64 * self.expert_bytes / self.interconnect_bw
     }
+}
+
+/// Even token spread helper (the decode scheduler dispatches each token's
+/// chosen experts; for latency accounting we spread tokens uniformly, the
+/// paper does the same for its Max/GPU metric). A free function — it reads
+/// no cost-model state.
+pub fn uniform_tokens(n_tokens: usize, n_gpus: usize) -> Vec<usize> {
+    let base = n_tokens / n_gpus;
+    let extra = n_tokens % n_gpus;
+    (0..n_gpus).map(|g| base + usize::from(g < extra)).collect()
 }
 
 #[cfg(test)]
@@ -79,7 +92,7 @@ mod tests {
     fn latency_tracks_max_load() {
         let model = EpCostModel::default();
         let p = Placement::new(16, 4, PlacementKind::Contiguous);
-        let toks = model.uniform_tokens(8, 4);
+        let toks = uniform_tokens(8, 4);
         let balanced = ExpertSet::from_indices(16, &[0, 4, 8, 12]);
         let skewed = ExpertSet::from_indices(16, &[0, 1, 2, 3]);
         let t_bal = model.layer_latency(&p, &balanced, &toks);
@@ -91,7 +104,7 @@ mod tests {
     fn empty_selection_costs_only_overheads() {
         let model = EpCostModel::default();
         let p = Placement::new(8, 2, PlacementKind::Contiguous);
-        let toks = model.uniform_tokens(4, 2);
+        let toks = uniform_tokens(4, 2);
         let t = model.layer_latency(&p, &ExpertSet::empty(8), &toks);
         let a2a = 2.0 * 4.0 * model.bytes_per_token / model.interconnect_bw;
         assert!((t - (a2a + model.sync_overhead_s)).abs() < 1e-12);
@@ -99,10 +112,21 @@ mod tests {
 
     #[test]
     fn uniform_tokens_sums() {
-        let model = EpCostModel::default();
-        let v = model.uniform_tokens(10, 3);
+        let v = uniform_tokens(10, 3);
         assert_eq!(v.iter().sum::<usize>(), 10);
         assert_eq!(v, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn migration_charge_is_linear_in_copies() {
+        let model = EpCostModel::default();
+        assert_eq!(model.migration_seconds(0), 0.0);
+        let one = model.migration_seconds(1);
+        assert!((one - model.expert_bytes / model.interconnect_bw).abs() < 1e-18);
+        assert!((model.migration_seconds(3) - 3.0 * one).abs() < 1e-15);
+        // ~44 MB over ~450 GB/s ≈ 98 µs — the same order as one EP decode
+        // step, which is why the charge drains over several steps.
+        assert!(one > 5e-5 && one < 5e-4, "{one}");
     }
 
     #[test]
@@ -112,7 +136,7 @@ mod tests {
         // and strictly increasing whenever the straggler gains an expert.
         let model = EpCostModel::default();
         let p = Placement::new(16, 4, PlacementKind::Contiguous);
-        let toks = model.uniform_tokens(8, 4);
+        let toks = uniform_tokens(8, 4);
         let mut prev = 0.0f64;
         for load in 1..=4usize {
             // GPU 0 hosts experts 0..4 under the contiguous split: select
@@ -136,7 +160,7 @@ mod tests {
         // pathology the paper's §5 balances against.
         let model = EpCostModel::default();
         let p = Placement::new(16, 4, PlacementKind::Contiguous);
-        let toks = model.uniform_tokens(8, 4);
+        let toks = uniform_tokens(8, 4);
         let lone = ExpertSet::from_indices(16, &[0, 1, 2, 3]);
         let spread = ExpertSet::from_indices(16, &[0, 1, 2, 3, 4, 5, 6, 8, 9, 10, 12, 13, 14]);
         assert_eq!(p.max_load(&lone), 4);
@@ -155,7 +179,7 @@ mod tests {
         let p = Placement::new(8, 2, PlacementKind::Contiguous);
         let empty = ExpertSet::empty(8);
         let at = |n: usize| {
-            model.layer_latency(&p, &empty, &model.uniform_tokens(n, 2))
+            model.layer_latency(&p, &empty, &uniform_tokens(n, 2))
                 - model.sync_overhead_s
         };
         let t4 = at(4);

@@ -1,0 +1,279 @@
+//! Incremental, interconnect-charged placement migration (PR 6).
+//!
+//! The legacy `--ep-rebalance` lever swapped the whole expert → GPU
+//! assignment in one free instant ([`Placement::rebalance_from`]). Real
+//! deployments move expert weights over the interconnect, a few at a time,
+//! while serving continues — the replication design of arxiv 2605.11537.
+//! [`plan_migration`] is the bounded analogue: starting from the live
+//! placement it greedily picks at most `budget` operations per step —
+//! **copies** (add a replica of a hot-adjacent expert on an under-cap GPU)
+//! and **free drops** (remove a replica that currently receives no routed
+//! traffic from an at-cap GPU, provably load-invariant, to open the slot a
+//! copy needs) — each adopted only when the expected MaxLoad under the
+//! tracked weights strictly improves.
+//!
+//! Charging contract (enforced by the serve loop, see
+//! [`crate::coordinator::serve_loop`]): a plan's weight movement is
+//! `copies × EpCostModel::expert_bytes` over `EpCostModel::interconnect_bw`
+//! ([`crate::ep::comm::EpCostModel::migration_seconds`]), accumulated into a
+//! backlog that drains against subsequent step time (the transfer overlaps
+//! decoding; a step at most doubles). Drops are bookkeeping-only — no bytes
+//! move. The plan itself never touches tokens or KV: it is cost-only by the
+//! PR 5 discipline.
+//!
+//! Determinism: candidate scans run in ascending (expert, GPU) order and a
+//! later candidate replaces an earlier one only on strict (1e-9) improvement,
+//! so equal-quality ties keep the lowest indices and the planner is a pure
+//! function of `(placement, weights, budget, cap)`.
+
+use super::placement::Placement;
+
+/// One physical placement-change operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationOp {
+    /// Copy the expert's weights onto `to` (charged: one expert of bytes).
+    Copy { expert: usize, to: usize },
+    /// Drop the replica resident on `from` (free: nothing moves).
+    Drop { expert: usize, from: usize },
+}
+
+/// A bounded placement-migration step: the op list, the resulting
+/// placement, and the expected-MaxLoad movement that justified it.
+#[derive(Debug, Clone)]
+pub struct MigrationPlan {
+    /// Operations in application order, `len() ≤ budget`.
+    pub ops: Vec<MigrationOp>,
+    /// Number of `Copy` ops — the unit the interconnect charge scales with.
+    pub copies: usize,
+    /// Expected MaxLoad of the starting placement under the weights.
+    pub expected_before: f64,
+    /// Expected MaxLoad after applying every op (strictly below
+    /// `expected_before`).
+    pub expected_after: f64,
+    /// The placement with all ops applied.
+    pub placement: Placement,
+}
+
+/// Best single replica copy strictly improving on `cur`: scans experts with
+/// positive weight (ascending) × under-cap non-hosting GPUs (ascending) and
+/// keeps the strictly best `(expert, to, expected_after)`.
+fn best_copy(
+    pl: &Placement,
+    weights: &[f32],
+    cap: usize,
+    cur: f64,
+) -> Option<(usize, usize, f64)> {
+    let mut best: Option<(usize, usize, f64)> = None;
+    for (j, &w) in weights.iter().enumerate() {
+        if w <= 0.0 {
+            continue; // a zero-traffic replica can never attract load away
+        }
+        for t in 0..pl.n_gpus() {
+            if pl.residency(t) >= cap || pl.hosts(t, j) {
+                continue;
+            }
+            let mut trial = pl.clone();
+            trial.add_replica(j, t);
+            let after = trial.expected_max_load(weights);
+            let bar = best.map_or(cur, |(_, _, b)| b);
+            if after < bar - 1e-9 {
+                best = Some((j, t, after));
+            }
+        }
+    }
+    best
+}
+
+/// Plan one bounded migration step from `current` under the tracked
+/// per-expert `weights`: at most `budget` ops, every GPU's residency kept
+/// ≤ `cap` ([`Placement::residency_cap`]). Returns `None` when no plan
+/// strictly improves expected MaxLoad — including `budget == 0`, a cap-full
+/// topology with nothing droppable, or weights already balanced. The caller
+/// decides adoption by weighing `expected_before − expected_after` against
+/// the interconnect charge for `copies`.
+pub fn plan_migration(
+    current: &Placement,
+    weights: &[f32],
+    budget: usize,
+    cap: usize,
+) -> Option<MigrationPlan> {
+    assert_eq!(weights.len(), current.n_experts(), "weights must cover every expert");
+    if budget == 0 {
+        return None;
+    }
+    let expected_before = current.expected_max_load(weights);
+    let mut pl = current.clone();
+    let mut cur = expected_before;
+    let mut ops: Vec<MigrationOp> = Vec::new();
+    let mut copies = 0usize;
+    while ops.len() < budget {
+        if let Some((j, t, after)) = best_copy(&pl, weights, cap, cur) {
+            pl.add_replica(j, t);
+            ops.push(MigrationOp::Copy { expert: j, to: t });
+            copies += 1;
+            cur = after;
+            continue;
+        }
+        // No direct copy improves. If the budget still has room for a
+        // drop + the copy it unblocks, try freeing a slot on an at-cap GPU
+        // by dropping a replica that receives no routed traffic (removing a
+        // never-chosen option leaves the greedy routing walk bit-identical,
+        // so the drop itself is load-invariant).
+        let mut advanced = false;
+        if ops.len() + 2 <= budget {
+            let routed = pl.route_weights(weights).1;
+            'drops: for g in 0..pl.n_gpus() {
+                if pl.residency(g) < cap {
+                    continue;
+                }
+                let droppable: Vec<usize> = pl
+                    .experts_on(g)
+                    .iter()
+                    .copied()
+                    .filter(|&j| {
+                        pl.n_replicas(j) > 1 && (weights[j] == 0.0 || routed[j] != g)
+                    })
+                    .collect();
+                for j in droppable {
+                    let mut trial = pl.clone();
+                    trial.drop_replica(j, g);
+                    if let Some((cj, ct, after)) = best_copy(&trial, weights, cap, cur)
+                    {
+                        trial.add_replica(cj, ct);
+                        ops.push(MigrationOp::Drop { expert: j, from: g });
+                        ops.push(MigrationOp::Copy { expert: cj, to: ct });
+                        copies += 1;
+                        cur = after;
+                        pl = trial;
+                        advanced = true;
+                        break 'drops;
+                    }
+                }
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    if ops.is_empty() || cur >= expected_before - 1e-9 {
+        return None;
+    }
+    Some(MigrationPlan {
+        ops,
+        copies,
+        expected_before,
+        expected_after: cur,
+        placement: pl,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ep::placement::PlacementKind;
+
+    #[test]
+    fn replicates_second_hottest_expert_off_the_hot_gpu() {
+        // Contiguous 8-on-2: GPU0 = {0..3} carries 0.6 + 0.5 + 0.02, GPU1
+        // only 0.04. Expert 0 routes first (ascending walk, all loads zero,
+        // tie → lowest GPU) so replicating IT can't move anything; the
+        // payoff copy is expert 1 → GPU1, which dodges expert 0's 0.6.
+        let pl = Placement::new(8, 2, PlacementKind::Contiguous);
+        let mut w = vec![0.01f32; 8];
+        w[0] = 0.6;
+        w[1] = 0.5;
+        let plan = plan_migration(&pl, &w, 1, 8).expect("skew must yield a plan");
+        assert_eq!(plan.ops, vec![MigrationOp::Copy { expert: 1, to: 1 }]);
+        assert_eq!(plan.copies, 1);
+        assert!(plan.expected_after < plan.expected_before - 1e-9);
+        assert!((plan.expected_before - 1.12).abs() < 1e-6);
+        assert!((plan.expected_after - 0.62).abs() < 1e-6);
+        assert_eq!(plan.placement.replicas(1), &[0, 1]);
+        assert!(!plan.placement.is_partition());
+    }
+
+    #[test]
+    fn respects_the_op_budget() {
+        let pl = Placement::new(16, 4, PlacementKind::Contiguous);
+        let mut w = vec![0.05f32; 16];
+        for j in 0..4 {
+            w[j] = 1.0; // pile the hot experts onto GPU 0
+        }
+        for budget in 1..=4usize {
+            if let Some(plan) = plan_migration(&pl, &w, budget, 16) {
+                assert!(plan.ops.len() <= budget, "budget {budget}: {:?}", plan.ops);
+                assert!(plan.copies <= budget);
+                assert!(plan.expected_after < plan.expected_before - 1e-9);
+            }
+        }
+        // a generous budget does find work on this skew
+        let plan = plan_migration(&pl, &w, 3, 16).expect("skew must yield a plan");
+        assert!(!plan.ops.is_empty() && plan.ops.len() <= 3);
+    }
+
+    #[test]
+    fn is_deterministic() {
+        let pl = Placement::new(12, 3, PlacementKind::RoundRobin);
+        let w: Vec<f32> = (0..12).map(|j| ((j * 7 + 1) % 5) as f32 * 0.2).collect();
+        let a = plan_migration(&pl, &w, 2, 8);
+        let b = plan_migration(&pl, &w, 2, 8);
+        match (a, b) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.ops, y.ops);
+                assert_eq!(x.expected_after.to_bits(), y.expected_after.to_bits());
+            }
+            _ => panic!("planner must be a pure function of its inputs"),
+        }
+    }
+
+    #[test]
+    fn cap_full_partition_yields_no_plan() {
+        // Even 8-on-2 split at slack 1.0: both GPUs sit exactly at cap 4 and
+        // the partition has no multi-replica expert to drop → nothing fits.
+        let pl = Placement::new(8, 2, PlacementKind::Contiguous);
+        let mut w = vec![0.01f32; 8];
+        w[0] = 1.0;
+        let cap = Placement::residency_cap(8, 2, 1.0);
+        assert_eq!(cap, 4);
+        assert!(plan_migration(&pl, &w, 4, cap).is_none());
+    }
+
+    #[test]
+    fn balanced_weights_yield_no_plan() {
+        let pl = Placement::new(8, 2, PlacementKind::Contiguous);
+        assert!(plan_migration(&pl, &[0.25f32; 8], 4, 8).is_none());
+        // and a zero budget never plans, whatever the skew
+        let mut w = vec![0.01f32; 8];
+        w[0] = 1.0;
+        assert!(plan_migration(&pl, &w, 0, 8).is_none());
+    }
+
+    #[test]
+    fn free_drop_unblocks_a_copy_on_an_at_cap_gpu() {
+        // GPU0 = {0, 1}, GPU1 = {1, 2, 3}; expert 1 is replicated but gets
+        // no traffic. At cap 2 no GPU can take a copy directly, yet
+        // dropping expert 1's idle GPU0 replica (routes to GPU1 — removing
+        // a never-chosen option is load-invariant) opens the slot for the
+        // winning copy: expert 3 → GPU0 (0.7 → 0.6 expected MaxLoad).
+        let pl =
+            Placement::from_replicas(2, vec![vec![0], vec![0, 1], vec![1], vec![1]]);
+        let w = [0.5f32, 0.0, 0.6, 0.1];
+        assert!((pl.expected_max_load(&w) - 0.7).abs() < 1e-6);
+        let plan = plan_migration(&pl, &w, 2, 2).expect("drop+copy must plan");
+        assert_eq!(
+            plan.ops,
+            vec![
+                MigrationOp::Drop { expert: 1, from: 0 },
+                MigrationOp::Copy { expert: 3, to: 0 },
+            ]
+        );
+        assert_eq!(plan.copies, 1, "only the copy moves bytes");
+        assert!((plan.expected_after - 0.6).abs() < 1e-6);
+        assert_eq!(plan.placement.replicas(1), &[1]);
+        assert_eq!(plan.placement.replicas(3), &[0, 1]);
+        assert!(plan.placement.residency(0) <= 2 && plan.placement.residency(1) <= 2);
+        // with budget 1 the pair does not fit → no plan at all
+        assert!(plan_migration(&pl, &w, 1, 2).is_none());
+    }
+}

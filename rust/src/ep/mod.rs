@@ -1,9 +1,37 @@
 //! Expert-parallelism substrate (§5 of the paper): expert→GPU placement,
 //! per-GPU load accounting, and the interconnect/straggler model that turns
 //! MaxLoad into layer latency.
+//!
+//! # The replica / migration / prefetch contract (PR 6)
+//!
+//! * **Replica routing** ([`placement`]): a [`Placement`] maps each expert
+//!   to ≥ 1 hosting GPU. Load accounting walks selected experts in
+//!   ascending index order and charges each to its currently least-loaded
+//!   replica (tie: lowest GPU). On a one-replica-per-expert partition this
+//!   is bit-identical to the legacy `gpu_of` accumulation; replication is
+//!   bounded by a per-GPU residency cap of `⌈slack·N/G⌉` expert copies
+//!   (`--ep-replica-slack`).
+//! * **Migration charging** ([`migrate`] + [`comm`]): placement changes are
+//!   physical. A migration step is a bounded op plan (≤ `--ep-migrate-budget`
+//!   copies/drops) whose copies cost
+//!   [`EpCostModel::migration_seconds`] — `copies × expert_bytes` over the
+//!   interconnect — charged into the serve loop's backlog and drained
+//!   against subsequent step time (the transfer overlaps decode). Plans are
+//!   adopted only when the expected-MaxLoad win, amortized over a horizon
+//!   of layer forwards, beats that charge.
+//! * **Prefetch** ([`crate::coordinator::serve_loop`]): the same planner run
+//!   over the *queued* classes' predicted footprints, so replicas for
+//!   traffic about to admit are resident (and paid for) before it lands.
+//!
+//! Everything above moves only the simulated clock: token streams and KV
+//! contents stay byte-identical to non-EP runs (the PR 5 cost-only
+//! discipline, pinned by `rust/tests/ep_serve.rs` and
+//! `rust/tests/ep_migrate.rs`).
 
 pub mod comm;
+pub mod migrate;
 pub mod placement;
 
-pub use comm::EpCostModel;
+pub use comm::{uniform_tokens, EpCostModel};
+pub use migrate::{plan_migration, MigrationOp, MigrationPlan};
 pub use placement::{Placement, PlacementKind};

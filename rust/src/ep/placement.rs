@@ -1,9 +1,33 @@
 //! Expert → GPU placement for expert-parallel (EP) deployments (§5).
 //!
-//! The experts of each layer form a partition E = ∪_g E_g across G GPU
-//! groups. Serving systems place experts contiguously (DeepSeek-style),
-//! round-robin, or randomly (after load-balancing shuffles); the placement
-//! policy is an ablation axis in `benches/ablations.rs`.
+//! Since PR 6 a placement is a **replica set**, not a strict partition:
+//! every expert is resident on at least one GPU, and hot experts may be
+//! copied to several (the incremental-migration lever in [`crate::ep::migrate`],
+//! following the replication design of arxiv 2605.11537). The load-accounting
+//! contract:
+//!
+//!  * **Routing.** [`Placement::loads`] / [`Placement::weighted_loads`] walk
+//!    the experts in ascending index order and send each expert's whole load
+//!    to its currently least-loaded replica, tie-breaking toward the lowest
+//!    GPU index. The walk is deterministic, and on a partition (every expert
+//!    exactly one host) it reduces bit-for-bit to the legacy
+//!    `loads[gpu_of[j]] += w` accumulation — pinned by
+//!    `prop_slack_one_reproduces_partition_bitwise` below. Online greedy in
+//!    index order is a heuristic: a replica only pays off when the expert's
+//!    other hosts are busier at its routing turn, which is exactly the
+//!    condition the migration planner evaluates before copying.
+//!  * **Capacity.** Per-GPU residency is bounded by
+//!    [`Placement::residency_cap`]: at replica slack `F ≥ 1`
+//!    (`--ep-replica-slack F`) a GPU holds at most `⌈F·N/G⌉` experts, so
+//!    replication's memory overhead is explicit and bounded. Slack 1.0
+//!    leaves no headroom beyond the balanced partition's largest block.
+//!  * **Coverage.** Every expert keeps ≥ 1 replica at all times
+//!    ([`Placement::drop_replica`] refuses to orphan an expert).
+//!
+//! Construction ([`Placement::new`]) still produces the classic partitions —
+//! contiguous (DeepSeek-style), round-robin, or seeded-random blocks;
+//! replicas appear only through migration or prefetch. The placement policy
+//! remains an ablation axis in `benches/ablations.rs`.
 
 use crate::util::rng::Rng;
 
@@ -17,14 +41,16 @@ pub enum PlacementKind {
     Random(u64),
 }
 
-/// An expert → GPU-group assignment.
+/// An expert → GPU-group replica assignment (see the module docs for the
+/// routing / capacity / coverage contract).
 #[derive(Debug, Clone)]
 pub struct Placement {
     n_experts: usize,
     n_gpus: usize,
-    /// gpu_of[j] = GPU group hosting expert j.
-    gpu_of: Vec<usize>,
-    /// experts_of[g] = experts hosted on GPU g (ascending).
+    /// replicas_of[j] = GPUs hosting a copy of expert j (ascending, never
+    /// empty).
+    replicas_of: Vec<Vec<usize>>,
+    /// experts_of[g] = experts resident on GPU g (ascending).
     experts_of: Vec<Vec<usize>>,
 }
 
@@ -61,11 +87,31 @@ impl Placement {
                 }
             }
         }
+        Placement::from_replicas(n_gpus, gpu_of.into_iter().map(|g| vec![g]).collect())
+    }
+
+    /// Build a placement from explicit replica sets (`replicas_of[j]` = the
+    /// GPUs hosting expert j). Host lists are sorted and deduplicated; every
+    /// expert needs at least one in-range host.
+    pub fn from_replicas(n_gpus: usize, mut replicas_of: Vec<Vec<usize>>) -> Placement {
+        assert!(n_gpus > 0, "need at least one GPU");
+        let n_experts = replicas_of.len();
+        assert!(n_experts > 0, "need at least one expert");
         let mut experts_of = vec![Vec::new(); n_gpus];
-        for (j, &g) in gpu_of.iter().enumerate() {
-            experts_of[g].push(j);
+        for (j, hosts) in replicas_of.iter_mut().enumerate() {
+            hosts.sort_unstable();
+            hosts.dedup();
+            assert!(!hosts.is_empty(), "expert {j} has no replica");
+            assert!(
+                *hosts.last().unwrap() < n_gpus,
+                "expert {j} hosted on GPU {} of {n_gpus}",
+                hosts.last().unwrap()
+            );
+            for &g in hosts.iter() {
+                experts_of[g].push(j);
+            }
         }
-        Placement { n_experts, n_gpus, gpu_of, experts_of }
+        Placement { n_experts, n_gpus, replicas_of, experts_of }
     }
 
     #[inline]
@@ -78,45 +124,145 @@ impl Placement {
         self.n_gpus
     }
 
+    /// The expert's primary (lowest-indexed) host — under a partition this
+    /// is its only host, the legacy `gpu_of[j]`.
     #[inline]
     pub fn gpu_of(&self, expert: usize) -> usize {
-        self.gpu_of[expert]
+        self.replicas_of[expert][0]
     }
 
+    /// All GPUs hosting a copy of the expert (ascending, never empty).
+    #[inline]
+    pub fn replicas(&self, expert: usize) -> &[usize] {
+        &self.replicas_of[expert]
+    }
+
+    #[inline]
+    pub fn n_replicas(&self, expert: usize) -> usize {
+        self.replicas_of[expert].len()
+    }
+
+    /// Whether `gpu` holds a copy of `expert`.
+    pub fn hosts(&self, gpu: usize, expert: usize) -> bool {
+        self.replicas_of[expert].binary_search(&gpu).is_ok()
+    }
+
+    /// Experts resident on the GPU (replicas included), ascending.
     pub fn experts_on(&self, gpu: usize) -> &[usize] {
         &self.experts_of[gpu]
     }
 
-    /// Per-GPU load Load_g(S) = |S ∩ E_g| for a selected set.
+    /// Number of expert copies resident on the GPU — what
+    /// [`Placement::residency_cap`] bounds.
+    pub fn residency(&self, gpu: usize) -> usize {
+        self.experts_of[gpu].len()
+    }
+
+    /// True iff every expert has exactly one replica (the legacy shape;
+    /// every [`Placement::new`] / [`Placement::rebalance_from`] result).
+    pub fn is_partition(&self) -> bool {
+        self.replicas_of.iter().all(|hosts| hosts.len() == 1)
+    }
+
+    /// Per-GPU residency bound at replica slack `F ≥ 1`: `⌈F·N/G⌉` expert
+    /// copies (never below the balanced partition's largest block, so a
+    /// fresh placement always fits its own cap).
+    pub fn residency_cap(n_experts: usize, n_gpus: usize, slack: f64) -> usize {
+        assert!(n_gpus > 0, "need at least one GPU");
+        assert!(slack.is_finite() && slack >= 1.0, "replica slack {slack} must be ≥ 1");
+        let raw = slack * n_experts as f64 / n_gpus as f64;
+        // tolerate f64 noise just below an integer boundary
+        let cap = (raw - 1e-9).ceil() as usize;
+        cap.max(n_experts.div_ceil(n_gpus))
+    }
+
+    /// Per-GPU load Load_g(S) for a selected set: each selected expert
+    /// counts once, on its least-loaded replica at its (ascending-order)
+    /// routing turn; ties go to the lowest GPU index.
     pub fn loads(&self, selected: &crate::selection::ExpertSet) -> Vec<usize> {
         let mut loads = vec![0usize; self.n_gpus];
         for j in selected.iter() {
-            loads[self.gpu_of[j]] += 1;
+            let mut best = self.replicas_of[j][0];
+            for &g in &self.replicas_of[j][1..] {
+                if loads[g] < loads[best] {
+                    best = g;
+                }
+            }
+            loads[best] += 1;
         }
         loads
     }
 
-    /// MaxLoad(S) — the synchronization straggler (§5.1).
+    /// MaxLoad(S) — the synchronization straggler (§5.1), replica-resolved.
     pub fn max_load(&self, selected: &crate::selection::ExpertSet) -> usize {
         self.loads(selected).into_iter().max().unwrap_or(0)
     }
 
-    /// Expected per-GPU load under fractional per-expert weights (the
-    /// tracked traffic mix): `Σ_{j ∈ E_g} w_j` — the continuous analogue
-    /// of [`Placement::loads`] that rebalancing optimizes against.
-    pub fn weighted_loads(&self, weights: &[f32]) -> Vec<f64> {
+    /// Replica-resolved routing of fractional per-expert weights (the
+    /// tracked traffic mix): walks experts in ascending index order, sends
+    /// each expert's whole weight to its currently least-loaded replica
+    /// (tie: lowest GPU index), and returns the per-GPU loads plus the host
+    /// each expert's weight landed on — the migration planner uses the
+    /// routing to find replicas that receive no traffic.
+    pub fn route_weights(&self, weights: &[f32]) -> (Vec<f64>, Vec<usize>) {
         assert_eq!(weights.len(), self.n_experts, "weights must cover every expert");
         let mut loads = vec![0.0f64; self.n_gpus];
+        let mut routed = vec![0usize; self.n_experts];
         for (j, &w) in weights.iter().enumerate() {
-            loads[self.gpu_of[j]] += w as f64;
+            let mut best = self.replicas_of[j][0];
+            for &g in &self.replicas_of[j][1..] {
+                if loads[g] < loads[best] {
+                    best = g;
+                }
+            }
+            routed[j] = best;
+            loads[best] += w as f64;
         }
-        loads
+        (loads, routed)
+    }
+
+    /// Expected per-GPU load under fractional per-expert weights — the
+    /// continuous analogue of [`Placement::loads`] that rebalancing and
+    /// migration planning optimize against.
+    pub fn weighted_loads(&self, weights: &[f32]) -> Vec<f64> {
+        self.route_weights(weights).0
     }
 
     /// Expected MaxLoad under per-expert weights — what
-    /// [`Placement::rebalance_from`] minimizes.
+    /// [`Placement::rebalance_from`] and `ep::migrate::plan_migration`
+    /// minimize.
     pub fn expected_max_load(&self, weights: &[f32]) -> f64 {
         self.weighted_loads(weights).into_iter().fold(0.0, f64::max)
+    }
+
+    /// Add a replica of `expert` on `gpu`. Returns false (no-op) when the
+    /// GPU already hosts it. Callers enforce [`Placement::residency_cap`];
+    /// the placement itself only maintains coverage and consistency.
+    pub fn add_replica(&mut self, expert: usize, gpu: usize) -> bool {
+        assert!(expert < self.n_experts && gpu < self.n_gpus, "replica out of range");
+        let hosts = &mut self.replicas_of[expert];
+        let Err(pos) = hosts.binary_search(&gpu) else { return false };
+        hosts.insert(pos, gpu);
+        let row = &mut self.experts_of[gpu];
+        let pos = row.binary_search(&expert).unwrap_err();
+        row.insert(pos, expert);
+        true
+    }
+
+    /// Drop the replica of `expert` on `gpu`. Returns false (no-op) when
+    /// the GPU does not host it — or when it holds the expert's LAST
+    /// replica: coverage is an invariant, an expert can never be orphaned.
+    pub fn drop_replica(&mut self, expert: usize, gpu: usize) -> bool {
+        assert!(expert < self.n_experts && gpu < self.n_gpus, "replica out of range");
+        if self.replicas_of[expert].len() < 2 {
+            return false;
+        }
+        let Ok(pos) = self.replicas_of[expert].binary_search(&gpu) else { return false };
+        self.replicas_of[expert].remove(pos);
+        let row = &mut self.experts_of[gpu];
+        let pos = row.binary_search(&expert).expect("experts_of out of sync");
+        row.remove(pos);
+        true
     }
 
     /// Greedy expert → GPU reassignment minimizing expected MaxLoad under
@@ -125,10 +271,13 @@ impl Placement {
     /// onto the GPU with the least accumulated weight — LPT scheduling.
     /// Per-GPU expert COUNTS stay balanced within one (same capacity rule
     /// as construction), so memory residency never skews even when the
-    /// weight mass does. LPT under the count constraint is a heuristic:
-    /// callers that hold an incumbent placement should adopt the result
-    /// only when [`Placement::expected_max_load`] strictly improves (the
-    /// serve loop's `--ep-rebalance` step does exactly that).
+    /// weight mass does. The result is always a strict partition (one
+    /// replica per expert): this is the legacy `--ep-migrate-budget 0`
+    /// instantaneous swap; `ep::migrate::plan_migration` is the
+    /// replica-aware, bounded alternative. LPT under the count constraint
+    /// is a heuristic: callers that hold an incumbent placement should
+    /// adopt the result only when [`Placement::expected_max_load`] strictly
+    /// improves (the serve loop's `--ep-rebalance` step does exactly that).
     ///
     /// Deterministic: ties break toward the lower expert index and the
     /// lower GPU index. Weights must be finite and non-negative.
@@ -163,22 +312,14 @@ impl Placement {
             acc[g] += weights[j] as f64;
             counts[g] += 1;
         }
-        let mut experts_of = vec![Vec::new(); self.n_gpus];
-        for (j, &g) in gpu_of.iter().enumerate() {
-            experts_of[g].push(j);
-        }
-        Placement {
-            n_experts: self.n_experts,
-            n_gpus: self.n_gpus,
-            gpu_of,
-            experts_of,
-        }
+        Placement::from_replicas(self.n_gpus, gpu_of.into_iter().map(|g| vec![g]).collect())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ep::comm::{uniform_tokens, EpCostModel};
     use crate::selection::ExpertSet;
 
     #[test]
@@ -187,6 +328,7 @@ mod tests {
         assert_eq!(p.experts_on(0), &[0, 1, 2, 3]);
         assert_eq!(p.experts_on(1), &[4, 5, 6, 7]);
         assert_eq!(p.gpu_of(5), 1);
+        assert!(p.is_partition());
     }
 
     #[test]
@@ -211,19 +353,56 @@ mod tests {
         let a = Placement::new(32, 4, PlacementKind::Random(1));
         let b = Placement::new(32, 4, PlacementKind::Random(1));
         let c = Placement::new(32, 4, PlacementKind::Random(2));
-        assert_eq!(a.gpu_of, b.gpu_of);
-        assert_ne!(a.gpu_of, c.gpu_of);
+        assert_eq!(a.replicas_of, b.replicas_of);
+        assert_ne!(a.replicas_of, c.replicas_of);
         // still a partition with balanced sizes
+        assert!(a.is_partition());
         let mut all: Vec<usize> = (0..4).flat_map(|g| a.experts_on(g).to_vec()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..32).collect::<Vec<_>>());
     }
 
+    /// Shared consistency check: `replicas_of` and `experts_of` agree, every
+    /// expert has ≥ 1 replica, host lists are sorted + deduplicated, and no
+    /// GPU holds more than `cap` copies.
+    fn check_coverage_and_capacity(p: &Placement, cap: usize) -> Result<(), String> {
+        let mut replica_counts = vec![0usize; p.n_experts()];
+        for g in 0..p.n_gpus() {
+            if p.residency(g) > cap {
+                return Err(format!("GPU {g} holds {} > cap {cap}", p.residency(g)));
+            }
+            for &j in p.experts_on(g) {
+                if !p.hosts(g, j) {
+                    return Err(format!("expert {j} listed on GPU {g} but hosts() says no"));
+                }
+                replica_counts[j] += 1;
+            }
+        }
+        for (j, &c) in replica_counts.iter().enumerate() {
+            if c == 0 {
+                return Err(format!("expert {j} has no replica (coverage broken)"));
+            }
+            if c != p.n_replicas(j) {
+                return Err(format!(
+                    "expert {j}: experts_of says {c} replicas, replicas_of says {}",
+                    p.n_replicas(j)
+                ));
+            }
+            if !p.hosts(p.gpu_of(j), j) {
+                return Err(format!("expert {j}: primary host not in replica set"));
+            }
+        }
+        Ok(())
+    }
+
     #[test]
-    fn prop_every_placement_is_a_partition() {
-        // Invariant for all three kinds at arbitrary (N, G): every expert
-        // is placed exactly once, `gpu_of` and `experts_of` agree, and
-        // block sizes stay balanced within one expert.
+    fn prop_every_placement_covers_and_fits() {
+        // The PR 6 generalization of `prop_every_placement_is_a_partition`:
+        // for all three kinds at arbitrary (N, G), construction yields an
+        // exact balanced partition (one replica per expert), and after a
+        // random sequence of capacity-respecting add_replica / drop_replica
+        // mutations the placement still satisfies coverage (every expert
+        // ≥ 1 replica) and the per-GPU residency cap.
         use crate::util::check::forall;
         use crate::util::rng::Rng;
         forall(
@@ -237,47 +416,186 @@ mod tests {
                     1 => PlacementKind::RoundRobin,
                     _ => PlacementKind::Random(r.next_u64()),
                 };
-                (n_experts, n_gpus, kind)
+                (n_experts, n_gpus, kind, r.next_u64())
             },
-            |&(n_experts, n_gpus, kind)| {
+            |&(n_experts, n_gpus, kind, mut_seed)| {
                 let p = Placement::new(n_experts, n_gpus, kind);
-                let mut seen = vec![0usize; n_experts];
-                for g in 0..n_gpus {
-                    for &j in p.experts_on(g) {
-                        if p.gpu_of(j) != g {
-                            return Err(format!(
-                                "{kind:?}: expert {j} listed on GPU {g} but gpu_of says {}",
-                                p.gpu_of(j)
-                            ));
-                        }
-                        seen[j] += 1;
-                    }
+                // fresh construction: exactly a partition, balanced within
+                // one, within the slack-1.0 cap
+                if !p.is_partition() {
+                    return Err(format!("{kind:?}: construction is not a partition"));
                 }
-                if let Some(j) = seen.iter().position(|&c| c != 1) {
-                    return Err(format!(
-                        "{kind:?} N={n_experts} G={n_gpus}: expert {j} placed {} times",
-                        seen[j]
-                    ));
-                }
+                let cap1 = Placement::residency_cap(n_experts, n_gpus, 1.0);
+                check_coverage_and_capacity(&p, cap1)?;
                 let sizes: Vec<usize> =
                     (0..n_gpus).map(|g| p.experts_on(g).len()).collect();
-                let (lo, hi) = (
-                    *sizes.iter().min().unwrap(),
-                    *sizes.iter().max().unwrap(),
-                );
+                let (lo, hi) =
+                    (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
                 if hi - lo > 1 {
                     return Err(format!(
                         "{kind:?} N={n_experts} G={n_gpus}: unbalanced sizes {sizes:?}"
                     ));
                 }
-                // loads() of the full set must equal the block sizes.
+                // loads() of the full set must equal the block sizes on a
+                // partition (no routing freedom)
                 let full = crate::selection::ExpertSet::full(n_experts);
                 if p.loads(&full) != sizes {
                     return Err("loads(full) disagrees with experts_on sizes".into());
                 }
+                // random replica churn under a slack-1.5 cap: the invariant
+                // must survive arbitrary capacity-respecting mutations
+                let cap = Placement::residency_cap(n_experts, n_gpus, 1.5);
+                let mut q = p.clone();
+                let mut r = Rng::new(mut_seed);
+                for _ in 0..8 {
+                    let (j, g) = (r.below(n_experts), r.below(n_gpus));
+                    if q.residency(g) < cap {
+                        q.add_replica(j, g);
+                    }
+                    let (j, g) = (r.below(n_experts), r.below(n_gpus));
+                    q.drop_replica(j, g); // refuses to orphan internally
+                }
+                check_coverage_and_capacity(&q, cap)?;
+                // routing conserves mass whatever the replica shape
+                let total: usize = q.loads(&full).iter().sum();
+                if total != n_experts {
+                    return Err(format!("routing lost mass: {total} != {n_experts}"));
+                }
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prop_slack_one_reproduces_partition_bitwise() {
+        // Backward-compatibility pin (PR 6): a slack-1.0 placement — i.e.
+        // any fresh construction, which has one replica per expert — must
+        // reproduce the pre-replica partition semantics EXACTLY, for all
+        // three kinds: `loads`, `max_load`, `weighted_loads`,
+        // `expected_max_load`, and `EpCostModel::layer_latency` bit-equal
+        // to the legacy `loads[gpu_of[j]] += w` accumulation.
+        use crate::util::check::forall;
+        use crate::util::rng::Rng;
+        forall(
+            0x51AC,
+            150,
+            |r: &mut Rng| {
+                let n_gpus = 1 + r.below(8);
+                let n_experts = n_gpus + r.below(64);
+                let kind = match r.below(3) {
+                    0 => PlacementKind::Contiguous,
+                    1 => PlacementKind::RoundRobin,
+                    _ => PlacementKind::Random(r.next_u64()),
+                };
+                (n_experts, n_gpus, kind, r.next_u64())
+            },
+            |&(n_experts, n_gpus, kind, seed)| {
+                let p = Placement::new(n_experts, n_gpus, kind);
+                let mut r = Rng::new(seed);
+                let sel_idx: Vec<usize> =
+                    (0..n_experts).filter(|_| r.below(2) == 0).collect();
+                let sel = ExpertSet::from_indices(n_experts, &sel_idx);
+                let weights: Vec<f32> = (0..n_experts).map(|_| r.f32()).collect();
+
+                // integer loads: legacy accumulation over gpu_of
+                let mut ref_loads = vec![0usize; n_gpus];
+                for j in sel.iter() {
+                    ref_loads[p.gpu_of(j)] += 1;
+                }
+                if p.loads(&sel) != ref_loads {
+                    return Err(format!("{kind:?}: loads diverged from partition"));
+                }
+                if p.max_load(&sel) != ref_loads.iter().copied().max().unwrap_or(0) {
+                    return Err("max_load diverged".into());
+                }
+
+                // weighted loads: bit-equal f64 accumulation in the same
+                // (ascending index) order the legacy code used
+                let mut ref_w = vec![0.0f64; n_gpus];
+                for (j, &w) in weights.iter().enumerate() {
+                    ref_w[p.gpu_of(j)] += w as f64;
+                }
+                let got_w = p.weighted_loads(&weights);
+                for (g, (a, b)) in got_w.iter().zip(&ref_w).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("GPU {g}: weighted load {a} != legacy {b}"));
+                    }
+                }
+                let ref_max = ref_w.into_iter().fold(0.0, f64::max);
+                if p.expected_max_load(&weights).to_bits() != ref_max.to_bits() {
+                    return Err("expected_max_load diverged".into());
+                }
+
+                // layer latency: same ints in, same arithmetic, bit-equal out
+                let model = EpCostModel::default();
+                let toks = uniform_tokens(1 + r.below(32), n_gpus);
+                let straggler = ref_loads
+                    .iter()
+                    .zip(&toks)
+                    .map(|(&l, &t)| {
+                        l as f64 * model.expert_load_s
+                            + (l * t) as f64 * model.expert_compute_s
+                    })
+                    .fold(0.0f64, f64::max);
+                let total_tokens: usize = toks.iter().sum();
+                let a2a = 2.0 * total_tokens as f64 * model.bytes_per_token
+                    / model.interconnect_bw;
+                let want = straggler + a2a + model.sync_overhead_s;
+                let got = model.layer_latency(&p, &sel, &toks);
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!("layer_latency {got} != legacy {want}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn replica_routing_splits_load_to_least_loaded_host() {
+        // Experts 0, 1 on GPU 0; 3 on GPU 1; 2 replicated on both. At
+        // expert 2's routing turn GPU 0 already carries {0, 1}, so its load
+        // lands on GPU 1 — the partition alternative (2 pinned to GPU 0)
+        // would hit MaxLoad 3.
+        let p = Placement::from_replicas(2, vec![vec![0], vec![0], vec![0, 1], vec![1]]);
+        let sel = ExpertSet::from_indices(4, &[0, 1, 2]);
+        assert_eq!(p.loads(&sel), vec![2, 1]);
+        assert_eq!(p.max_load(&sel), 2);
+        // tie-break: alone, the replicated expert routes to its lowest host
+        let lone = ExpertSet::from_indices(4, &[2]);
+        assert_eq!(p.loads(&lone), vec![1, 0]);
+        // weighted routing follows the same walk and reports the hosts
+        let (wl, routed) = p.route_weights(&[1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(routed, vec![0, 0, 1, 1]);
+        assert!((wl[0] - 2.0).abs() < 1e-12 && (wl[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_and_drop_replica_maintain_invariants() {
+        let mut p = Placement::new(6, 2, PlacementKind::Contiguous);
+        assert!(p.is_partition());
+        assert!(p.add_replica(0, 1));
+        assert!(!p.add_replica(0, 1), "duplicate replica must be a no-op");
+        assert_eq!(p.replicas(0), &[0, 1]);
+        assert_eq!(p.n_replicas(0), 2);
+        assert_eq!(p.residency(1), 4);
+        assert!(p.hosts(1, 0) && p.experts_on(1).contains(&0));
+        assert!(!p.is_partition());
+        assert!(p.drop_replica(0, 0));
+        assert_eq!(p.replicas(0), &[1]);
+        assert!(!p.drop_replica(0, 1), "the last replica must never drop");
+        assert_eq!(p.gpu_of(0), 1, "primary follows the surviving replica");
+        assert!(!p.drop_replica(3, 1), "dropping a non-resident copy is a no-op");
+    }
+
+    #[test]
+    fn residency_cap_formula() {
+        // ⌈F·N/G⌉, never below the balanced partition's largest block
+        assert_eq!(Placement::residency_cap(8, 2, 1.0), 4);
+        assert_eq!(Placement::residency_cap(8, 2, 1.1), 5);
+        assert_eq!(Placement::residency_cap(8, 2, 1.5), 6);
+        assert_eq!(Placement::residency_cap(8, 2, 2.0), 8);
+        assert_eq!(Placement::residency_cap(10, 3, 1.0), 4);
+        assert_eq!(Placement::residency_cap(6, 4, 1.0), 2);
     }
 
     #[test]
@@ -308,7 +626,7 @@ mod tests {
         let w: Vec<f32> = (0..10).map(|j| (j as f32 * 0.37).sin().abs()).collect();
         let a = p.rebalance_from(&w);
         let b = p.rebalance_from(&w);
-        assert_eq!(a.gpu_of, b.gpu_of);
+        assert_eq!(a.replicas_of, b.replicas_of);
         let sizes: Vec<usize> = (0..3).map(|g| a.experts_on(g).len()).collect();
         assert_eq!(sizes.iter().sum::<usize>(), 10);
         assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
@@ -339,18 +657,10 @@ mod tests {
                 let w: Vec<f32> = (0..n).map(|_| r.f32()).collect();
                 let p = Placement::new(n, g, PlacementKind::Contiguous);
                 let reb = p.rebalance_from(&w);
-                let mut seen = vec![0usize; n];
-                for gpu in 0..g {
-                    for &j in reb.experts_on(gpu) {
-                        if reb.gpu_of(j) != gpu {
-                            return Err("gpu_of/experts_of disagree".into());
-                        }
-                        seen[j] += 1;
-                    }
+                if !reb.is_partition() {
+                    return Err("rebalance_from must yield a partition".into());
                 }
-                if seen.iter().any(|&c| c != 1) {
-                    return Err("not a partition".into());
-                }
+                check_coverage_and_capacity(&reb, Placement::residency_cap(n, g, 1.0))?;
                 let sizes: Vec<usize> =
                     (0..g).map(|gpu| reb.experts_on(gpu).len()).collect();
                 if sizes.iter().max().unwrap() - sizes.iter().min().unwrap() > 1 {

@@ -135,7 +135,7 @@ impl DecodeCostModel {
         n_tokens: usize,
         ep_model: &EpCostModel,
     ) -> f64 {
-        let toks = ep_model.uniform_tokens(n_tokens, placement.n_gpus());
+        let toks = crate::ep::uniform_tokens(n_tokens, placement.n_gpus());
         // scale mini layers to full-scale layer count cyclically
         let mut total = self.hw.step_overhead_s;
         for l in 0..self.geo.n_layers {

@@ -140,6 +140,21 @@ pub struct ServeMetrics {
     /// Expected-MaxLoad improvement of each adopted rebalance (before −
     /// after under the tracked mix weights; positive by construction).
     pub rebalance_delta: Summary,
+    /// Incremental migration plans adopted (`--ep-migrate-budget`; plans
+    /// whose straggler saving did not beat the interconnect charge are
+    /// discarded and not counted).
+    pub migrations: u64,
+    /// Operations (copies + drops) per adopted migration plan — `max` is
+    /// per-step-bounded by the configured budget.
+    pub migration_ops: Summary,
+    /// Total expert-weight bytes moved by adopted migrations.
+    pub migration_bytes: f64,
+    /// Simulated interconnect seconds of migration traffic actually drained
+    /// into step time (the backlog charge, see `ServeLoop::charge_step`).
+    pub migration_seconds: f64,
+    /// Migration plans adopted from the prefetch path (`--ep-prefetch`,
+    /// queued-mix weights only; a subset of `migrations`).
+    pub prefetches: u64,
     /// Speculative: proposed / accepted bonus counts.
     pub spec_proposed: u64,
     pub spec_accepted: u64,
@@ -335,6 +350,11 @@ impl ServeMetrics {
             "rebalance_delta_mean".into(),
             Json::num(self.rebalance_delta.mean()),
         );
+        m.insert("migrations".into(), Json::num(self.migrations as f64));
+        m.insert("migration_ops_max".into(), Json::num(self.migration_ops.max));
+        m.insert("migration_bytes".into(), Json::num(self.migration_bytes));
+        m.insert("migration_seconds".into(), Json::num(self.migration_seconds));
+        m.insert("prefetches".into(), Json::num(self.prefetches as f64));
         m.insert("p50_step_us".into(), Json::num(self.step_latency.quantile_us(0.5)));
         m.insert("p99_step_us".into(), Json::num(self.step_latency.quantile_us(0.99)));
         m.insert(
@@ -492,6 +512,12 @@ mod tests {
         m.evictions = 2;
         m.rebalances = 1;
         m.rebalance_delta.add(1.5);
+        m.migrations = 2;
+        m.migration_ops.add(3.0);
+        m.migration_ops.add(1.0);
+        m.migration_bytes = 2.0 * 44e6;
+        m.migration_seconds = 2.0e-4;
+        m.prefetches = 1;
         let j = m.to_json();
         assert_eq!(j.get("gpu_load_integral").and_then(|v| v.as_f64()), Some(1.5));
         assert_eq!(j.get("evictions").and_then(|v| v.as_f64()), Some(2.0));
@@ -500,6 +526,11 @@ mod tests {
             j.get("rebalance_delta_mean").and_then(|v| v.as_f64()),
             Some(1.5)
         );
+        assert_eq!(j.get("migrations").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(j.get("migration_ops_max").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get("migration_bytes").and_then(|v| v.as_f64()), Some(88e6));
+        assert_eq!(j.get("migration_seconds").and_then(|v| v.as_f64()), Some(2.0e-4));
+        assert_eq!(j.get("prefetches").and_then(|v| v.as_f64()), Some(1.0));
         let by_gpu = j.get("gpu_load_mean_by_gpu").and_then(|v| v.as_arr()).unwrap();
         assert_eq!(by_gpu.len(), 2);
         assert_eq!(by_gpu[0].as_f64(), Some(2.0));

@@ -200,4 +200,34 @@ mod tests {
             admission_score(&spreads, &running, None)
         );
     }
+
+    #[test]
+    fn replica_aware_scoring_forgives_experts_with_an_idle_replica() {
+        // PR 6: `max_load` resolves replicas, so the leave-one-out unions
+        // the admission/eviction planners score are replica-aware for
+        // free. Expert 3 lives on the hot GPU0 in the partition, but with
+        // a replica on idle GPU1 the candidate that drags it in no longer
+        // grows the straggler — the penalty disappears.
+        let partition = Placement::new(8, 2, PlacementKind::Contiguous);
+        let replicated = Placement::from_replicas(
+            2,
+            vec![
+                vec![0],
+                vec![0],
+                vec![0],
+                vec![0, 1], // expert 3: replica on the idle GPU
+                vec![1],
+                vec![1],
+                vec![1],
+                vec![1],
+            ],
+        );
+        let running = ExpertSet::from_indices(8, &[0, 1, 2]);
+        let cand = ExpertSet::from_indices(8, &[3]);
+        let s_part = admission_score(&cand, &running, Some(&partition));
+        let s_repl = admission_score(&cand, &running, Some(&replicated));
+        assert_eq!(s_part, -1.0, "partition: +1 expert on the straggler GPU");
+        assert_eq!(s_repl, 0.0, "replica routes to the idle GPU, no penalty");
+        assert!(s_repl > s_part);
+    }
 }

@@ -11,6 +11,14 @@
 //!
 //! Algorithm 6 = warm-up (top-k0 per token) + Algorithm 5 + shared
 //! refinement. The paper's Table 2 configuration is (k0=1, m_g=5).
+//!
+//! **Replica sets (PR 6):** the per-GPU rounds iterate replica groups —
+//! [`Placement::experts_on`] lists every expert RESIDENT on the GPU, so a
+//! replicated expert appears in several groups. The shared `selected` set
+//! dedups it (whichever group reaches it first claims it; later groups'
+//! cursors skip it), and the per-round MaxLoad bound still holds because
+//! replica-aware routing can only place a selected expert on a less-loaded
+//! host than the partition would have.
 
 use super::expert_set::ExpertSet;
 use super::greedy::warmup_set;
@@ -102,6 +110,24 @@ mod tests {
         // plain greedy would take {0,1,2,3}; gpu-aware takes top-2 per GPU
         assert_eq!(s.to_vec(), vec![0, 1, 4, 5]);
         assert_eq!(p.max_load(&s), 2);
+    }
+
+    #[test]
+    fn replicated_expert_claimed_once_across_groups() {
+        // Expert 1 is replicated on both GPUs, so it shows up in both
+        // candidate lists. GPU0's round claims it (highest utility there);
+        // GPU1's cursor must skip the duplicate and take its best
+        // unclaimed expert instead of re-adding or double-counting it.
+        let p = Placement::from_replicas(2, vec![vec![0], vec![0, 1], vec![1], vec![1]]);
+        let utility = [0.5, 9.0, 1.0, 0.8];
+        let s = gpu_aware_greedy(&utility, &p, 1, &ExpertSet::empty(4));
+        assert_eq!(s.to_vec(), vec![1, 2]);
+        // routing resolves each selection to one replica: never more than
+        // one expert per GPU here
+        assert_eq!(p.max_load(&s), 1);
+        // a second round picks up the leftovers, still deduplicated
+        let s2 = gpu_aware_greedy(&utility, &p, 2, &ExpertSet::empty(4));
+        assert_eq!(s2.to_vec(), vec![0, 1, 2, 3]);
     }
 
     #[test]

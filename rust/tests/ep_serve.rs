@@ -18,6 +18,16 @@
 //!    committed history, and under row-independent routing the final
 //!    outputs are byte-identical to an uninterrupted run (the
 //!    eviction/resume KV contract in `model/moe_model.rs`).
+//!
+//! 3. **Replication & migration are cost-only (PR 6).** Replica-set
+//!    placements, the incremental migration planner, and footprint
+//!    prefetch may only move the sim clock: under a placement-blind
+//!    policy the tokens (and, when admission order is pinned, the KV
+//!    digest) stay byte-identical to the non-EP run, every adopted plan
+//!    strictly improves expected MaxLoad, and per-plan copies never
+//!    exceed `--ep-migrate-budget`. At `--ep-replica-slack 1.0` the
+//!    residency caps are exactly the partition block sizes, so the
+//!    planner can never act at all.
 
 use std::collections::BTreeMap;
 
@@ -298,4 +308,122 @@ fn rebalance_under_vanilla_is_cost_only_and_only_improves() {
             "adopted a rebalance that did not improve expected MaxLoad"
         );
     }
+}
+
+#[test]
+fn replicated_migration_and_prefetch_keep_vanilla_outputs() {
+    // The full PR 6 stack — replica slack, incremental migration, and
+    // footprint prefetch — against the plain non-EP FIFO baseline. Under
+    // vanilla routing no placement decision may touch tokens; every
+    // adopted plan must have strictly improved expected MaxLoad and must
+    // fit the per-plan op budget.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let mut reqs: Vec<Request> = Vec::new();
+    for id in 0..8u64 {
+        let mut r = Request::new(id, prompt_of(3, (id % 2) * 41 + 13, vocab), 5);
+        r.domain = if id % 2 == 0 { "migA".into() } else { "migB".into() };
+        reqs.push(r);
+    }
+    let base = baseline_outputs(&mut model, cfg("vanilla"), &reqs);
+    let mut c = cfg("vanilla");
+    c.admission = AdmissionKind::FootprintAware;
+    c.ep = ep2();
+    c.ep_rebalance = 1;
+    c.ep_replica_slack = 2.0;
+    c.ep_migrate_budget = 2;
+    c.ep_prefetch = true;
+    let report = Scheduler::new(&mut model, c)
+        .expect("scheduler")
+        .run(reqs)
+        .expect("run");
+    assert_eq!(
+        report.outputs, base,
+        "replication/migration/prefetch leaked into vanilla routing"
+    );
+    // Budget > 0 routes every rebalance tick through the migration
+    // planner; the legacy whole-placement swap must never fire.
+    assert_eq!(report.metrics.rebalances, 0, "swap path ran in migration mode");
+    assert!(report.metrics.prefetches <= report.metrics.migrations);
+    if report.metrics.migrations > 0 {
+        assert!(
+            report.metrics.migration_ops.max <= 2.0,
+            "a plan exceeded --ep-migrate-budget"
+        );
+        assert!(report.metrics.migration_bytes > 0.0, "copies moved no weight bytes");
+        assert!(
+            report.metrics.migration_seconds > 0.0,
+            "adopted migrations were never charged to the sim clock"
+        );
+        assert!(
+            report.metrics.rebalance_delta.min > 0.0,
+            "adopted a plan that did not improve expected MaxLoad"
+        );
+    }
+}
+
+#[test]
+fn replication_stack_is_kv_byte_identical_on_uniform_traffic() {
+    // Single-class traffic pins the admission order itself: every queued
+    // candidate predicts the same footprint, score ties resolve FIFO, so
+    // the non-EP and full-replication arms admit identically and even the
+    // KV digest must match byte for byte — only the sim clock may move.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let reqs: Vec<Request> = (0..6u64)
+        .map(|id| {
+            let mut r = Request::new(id, prompt_of(3 + id as usize % 2, id + 51, vocab), 5);
+            r.domain = "mono".into();
+            r
+        })
+        .collect();
+    let mut base_cfg = cfg("vanilla");
+    base_cfg.admission = AdmissionKind::FootprintAware;
+    let (base_out, base_metrics) = run_staggered(&mut model, base_cfg.clone(), &reqs);
+    let base_kv = model.kv_digest();
+    let mut c = base_cfg;
+    c.ep = ep2();
+    c.ep_rebalance = 1;
+    c.ep_replica_slack = 2.0;
+    c.ep_migrate_budget = 2;
+    c.ep_prefetch = true;
+    let (out, metrics) = run_staggered(&mut model, c, &reqs);
+    let kv = model.kv_digest();
+    assert_eq!(out, base_out, "replication stack changed generated tokens");
+    assert_eq!(kv, base_kv, "replication stack changed KV state");
+    assert!(
+        (metrics.sim_seconds - base_metrics.sim_seconds).abs() > 1e-12,
+        "EP arm never charged through the comm model"
+    );
+}
+
+#[test]
+fn slack_one_caps_the_partition_so_nothing_can_migrate() {
+    // tiny = 8 experts on 2 GPUs: at slack 1.0 the residency cap is
+    // exactly the contiguous block size (4), every GPU is at cap, and the
+    // planner has no legal copy — end to end, migrations must be zero and
+    // the run must behave like static placement.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let mut reqs: Vec<Request> = Vec::new();
+    for id in 0..6u64 {
+        let mut r = Request::new(id, prompt_of(3, (id % 2) * 23 + 9, vocab), 5);
+        r.domain = if id % 2 == 0 { "capA".into() } else { "capB".into() };
+        reqs.push(r);
+    }
+    let base = baseline_outputs(&mut model, cfg("vanilla"), &reqs);
+    let mut c = cfg("vanilla");
+    c.admission = AdmissionKind::FootprintAware;
+    c.ep = ep2();
+    c.ep_rebalance = 1;
+    c.ep_migrate_budget = 2; // planner armed, but the cap starves it
+    let report = Scheduler::new(&mut model, c)
+        .expect("scheduler")
+        .run(reqs)
+        .expect("run");
+    assert_eq!(report.outputs, base);
+    assert_eq!(report.metrics.migrations, 0, "copied a replica past a full cap");
+    assert_eq!(report.metrics.migration_bytes, 0.0);
+    assert_eq!(report.metrics.migration_seconds, 0.0);
+    assert_eq!(report.metrics.prefetches, 0);
 }
