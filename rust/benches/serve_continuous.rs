@@ -491,6 +491,250 @@ fn spec_mixed_phase_scenario() {
     println!("[spec        ] wrote BENCH_spec.json");
 }
 
+// Shared-prefix cache scenario (PR 7): two-turn templated traffic on the
+// serving preset — turn 2 resubmits each conversation's full turn-1
+// history (prompt ++ generated) plus a short follow-up. With
+// `--prefix-cache-mb` on, the slot-free hook keeps each finished row's
+// prefix KV, so every turn-2 admission restores the cached bytes and
+// chunk-prefills only the follow-up suffix.
+const PFX_N: usize = 8;
+const PFX_BATCH: usize = 4;
+const PFX_PROMPT_LEN: usize = 24;
+const PFX_MAX_NEW: usize = 8;
+const PFX_TURN2_EXTRA: usize = 4;
+const PFX_CACHE_MB: usize = 64;
+const PFX_MIN_TOKENS: usize = 4;
+
+/// Deterministic per-conversation turn-1 prompts (templated traffic: one
+/// arithmetic pattern, one seed per conversation).
+fn pfx_prompt(seed: u64, vocab: u64) -> Vec<u32> {
+    (0..PFX_PROMPT_LEN as u64)
+        .map(|i| ((seed.wrapping_mul(37) + i * 11 + 5) % vocab) as u32)
+        .collect()
+}
+
+/// One arm's numbers from a two-turn [`pfx_run`]. The turn-2 TTFT mean is
+/// the [`xshare::metrics::Summary`] delta between the drains, so both arms
+/// are scored on exactly the (potentially) warm-prefix admissions.
+struct PfxArm {
+    outputs: BTreeMap<u64, Vec<u32>>,
+    turn2_ttft_mean_s: f64,
+    tokens_prompt: u64,
+    prefix_hits: u64,
+    prefix_misses: u64,
+    prefix_inserts: u64,
+    restored_tokens: u64,
+}
+
+/// Two-turn run under one config: submit turn 1, drain, snapshot TTFT,
+/// submit turn 2, drain, report.
+fn pfx_run(
+    model: &mut MoeModel,
+    cfg: &ServeConfig,
+    turn1: &[Request],
+    turn2: &[Request],
+) -> PfxArm {
+    let mut core = ServeLoop::new(model, cfg.clone()).expect("serve loop");
+    for r in turn1 {
+        core.submit(r.clone()).expect("submit turn 1");
+    }
+    while core.has_work() {
+        core.step().expect("step");
+    }
+    let (t1_sum, t1_n) = (core.metrics().ttft.sum, core.metrics().ttft.n);
+    for r in turn2 {
+        core.submit(r.clone()).expect("submit turn 2");
+    }
+    while core.has_work() {
+        core.step().expect("step");
+    }
+    let report = core.report();
+    let m = &report.metrics;
+    assert_eq!(m.ttft.n - t1_n, PFX_N as u64, "one TTFT sample per turn-2 request");
+    PfxArm {
+        outputs: report.outputs,
+        turn2_ttft_mean_s: (m.ttft.sum - t1_sum) / (m.ttft.n - t1_n) as f64,
+        tokens_prompt: m.tokens_prompt,
+        prefix_hits: m.prefix_hits,
+        prefix_misses: m.prefix_misses,
+        prefix_inserts: m.prefix_inserts,
+        restored_tokens: m.prefill_restored_tokens,
+    }
+}
+
+/// **Shared-prefix cache scenario**: same two-turn conversations, vanilla
+/// routing, chunked prefill — once with the cache disabled (every turn-2
+/// prompt re-prefills its whole history) and once with
+/// `--prefix-cache-mb`/`--prefix-min-tokens` on (turn 2 restores the
+/// cached history and prefills only the follow-up). Cache restore is
+/// byte-lossless by contract, so outputs must be identical; the warm arm
+/// must then win strictly on turn-2 TTFT. Emits `BENCH_prefix.json`.
+fn prefix_shared_cache_scenario() {
+    println!(
+        "\n# shared-prefix KV cache — two-turn templated traffic, cache-off vs \
+         --prefix-cache-mb {PFX_CACHE_MB} ({PRESET}, B={PFX_BATCH}, {PFX_N} \
+         conversations × {PFX_PROMPT_LEN}-token prompts, {PFX_MAX_NEW} new, \
+         +{PFX_TURN2_EXTRA} follow-up)"
+    );
+    let mut model = load_model(PRESET);
+    let vocab = model.dims().vocab as u64;
+    let cold_cfg = ServeConfig {
+        preset: PRESET.into(),
+        policy: PolicyKind::Vanilla,
+        batch_size: PFX_BATCH,
+        max_new_tokens: PFX_MAX_NEW,
+        prefill_chunk: PREFILL_CHUNK,
+        ..Default::default()
+    };
+    let warm_cfg = ServeConfig {
+        prefix_cache_mb: PFX_CACHE_MB,
+        prefix_min_tokens: PFX_MIN_TOKENS,
+        ..cold_cfg.clone()
+    };
+
+    let turn1: Vec<Request> = (0..PFX_N as u64)
+        .map(|id| Request::new(id, pfx_prompt(id, vocab), PFX_MAX_NEW))
+        .collect();
+
+    // Turn-2 prompts extend each conversation's actual turn-1 tokens, so a
+    // probe run supplies the histories. Vanilla routing is row-independent,
+    // so the probe's outputs are byte-identical to both arms' turn-1
+    // outputs (the warm arm's turn-2 hits assert exactly that).
+    let probe = Scheduler::new(&mut model, cold_cfg.clone())
+        .expect("probe scheduler")
+        .run(turn1.clone())
+        .expect("probe run");
+    let turn2: Vec<Request> = turn1
+        .iter()
+        .map(|r| {
+            let mut prompt = r.prompt.clone();
+            prompt.extend_from_slice(&probe.outputs[&r.id]);
+            for i in 0..PFX_TURN2_EXTRA as u64 {
+                prompt.push(((r.id.wrapping_mul(53) + i * 17 + 29) % vocab) as u32);
+            }
+            Request::new(100 + r.id, prompt, PFX_MAX_NEW)
+        })
+        .collect();
+
+    let cold = pfx_run(&mut model, &cold_cfg, &turn1, &turn2);
+    let warm = pfx_run(&mut model, &warm_cfg, &turn1, &turn2);
+
+    let mut table = Table::new(&[
+        "prefix cache",
+        "prompt_toks",
+        "restored",
+        "hits",
+        "turn2_ttft_s",
+        "ttft_delta",
+    ]);
+    let rows: [(&str, &PfxArm, String); 2] = [
+        ("off", &cold, "-".into()),
+        (
+            "on",
+            &warm,
+            format!("{:+.1}%", pct(warm.turn2_ttft_mean_s, cold.turn2_ttft_mean_s)),
+        ),
+    ];
+    for (name, r, delta) in &rows {
+        table.row(&[
+            name.to_string(),
+            r.tokens_prompt.to_string(),
+            r.restored_tokens.to_string(),
+            r.prefix_hits.to_string(),
+            fmt(r.turn2_ttft_mean_s, 4),
+            delta.clone(),
+        ]);
+    }
+    table.print("serve_continuous — shared-prefix cache, two-turn traffic");
+    println!(
+        "[prefix      ] warm vs cold turn-2 TTFT {:+.1}%, restored {} of {} \
+         prompt tokens",
+        pct(warm.turn2_ttft_mean_s, cold.turn2_ttft_mean_s),
+        warm.restored_tokens,
+        cold.tokens_prompt,
+    );
+
+    assert_eq!(
+        cold.outputs, warm.outputs,
+        "cache restore is byte-lossless by contract — enabling it must not \
+         change a single generated token"
+    );
+    assert_eq!(cold.prefix_hits, 0, "cache-off arm must never consult the cache");
+    assert_eq!(cold.restored_tokens, 0, "cache-off arm must prefill everything");
+    assert_eq!(
+        warm.prefix_hits, PFX_N as u64,
+        "every turn-2 admission extends a finished turn-1 row — all must hit"
+    );
+    assert!(
+        warm.prefix_inserts >= PFX_N as u64,
+        "every finished turn-1 row must offer its prefix KV back"
+    );
+    assert!(
+        warm.restored_tokens > 0 && warm.tokens_prompt < cold.tokens_prompt,
+        "restores must replace prefill work ({} restored, {} vs {} prefilled)",
+        warm.restored_tokens,
+        warm.tokens_prompt,
+        cold.tokens_prompt
+    );
+    assert!(
+        warm.turn2_ttft_mean_s < cold.turn2_ttft_mean_s,
+        "ACCEPTANCE: warm-prefix turn-2 TTFT must be strictly lower than the \
+         cache-disabled baseline at byte-identical outputs ({} vs {})",
+        warm.turn2_ttft_mean_s,
+        cold.turn2_ttft_mean_s
+    );
+
+    let hit_rate =
+        warm.prefix_hits as f64 / (warm.prefix_hits + warm.prefix_misses).max(1) as f64;
+    let json = xshare::util::json::Json::obj(vec![
+        ("scenario", xshare::util::json::Json::str("prefix_shared_cache")),
+        ("preset", xshare::util::json::Json::str(PRESET)),
+        ("conversations", xshare::util::json::Json::num(PFX_N as f64)),
+        ("prompt_len", xshare::util::json::Json::num(PFX_PROMPT_LEN as f64)),
+        ("max_new_tokens", xshare::util::json::Json::num(PFX_MAX_NEW as f64)),
+        ("turn2_extra", xshare::util::json::Json::num(PFX_TURN2_EXTRA as f64)),
+        ("prefix_cache_mb", xshare::util::json::Json::num(PFX_CACHE_MB as f64)),
+        ("prefix_min_tokens", xshare::util::json::Json::num(PFX_MIN_TOKENS as f64)),
+        ("prefill_chunk", xshare::util::json::Json::num(PREFILL_CHUNK as f64)),
+        (
+            "cold_turn2_ttft_mean_s",
+            xshare::util::json::Json::num(cold.turn2_ttft_mean_s),
+        ),
+        (
+            "warm_turn2_ttft_mean_s",
+            xshare::util::json::Json::num(warm.turn2_ttft_mean_s),
+        ),
+        (
+            "ttft_gain_pct",
+            xshare::util::json::Json::num(pct(
+                warm.turn2_ttft_mean_s,
+                cold.turn2_ttft_mean_s,
+            )),
+        ),
+        ("prefix_hits", xshare::util::json::Json::num(warm.prefix_hits as f64)),
+        (
+            "prefix_inserts",
+            xshare::util::json::Json::num(warm.prefix_inserts as f64),
+        ),
+        ("hit_rate", xshare::util::json::Json::num(hit_rate)),
+        (
+            "restored_tokens",
+            xshare::util::json::Json::num(warm.restored_tokens as f64),
+        ),
+        (
+            "cold_prompt_tokens",
+            xshare::util::json::Json::num(cold.tokens_prompt as f64),
+        ),
+        (
+            "warm_prompt_tokens",
+            xshare::util::json::Json::num(warm.tokens_prompt as f64),
+        ),
+    ])
+    .dump();
+    emit_bench("BENCH_prefix.json", &json);
+    println!("[prefix      ] wrote BENCH_prefix.json");
+}
+
 // Admission scenario (PR 3): heterogeneous two-dataset mix under queue
 // backlog, FIFO vs footprint-aware co-scheduling.
 const ADM_N_REQUESTS: usize = 24;
@@ -1012,6 +1256,7 @@ fn simulate_admission(kind: AdmissionKind) -> f64 {
                 placement: None,
                 top_k: SIM_TOP_K,
                 spec: None,
+                prefix: None,
             };
             let Some(entry) = queue.pop_next(&ctx) else { break };
             tracker.on_admit(slot, &entry.req);
@@ -1077,9 +1322,10 @@ fn admission_sim_scenario() {
 
 fn main() {
     // Scenario filter: `cargo bench --bench serve_continuous -- spec`
-    // runs only the mixed-phase speculation scenario and `-- ep` the two
-    // expert-parallel scenarios (CI executes both filters and uploads
-    // BENCH_spec.json / BENCH_ep_serve.json / BENCH_ep_migrate.json); no
+    // runs only the mixed-phase speculation scenario, `-- ep` the two
+    // expert-parallel scenarios, and `-- prefix` the shared-prefix cache
+    // scenario (CI executes the filters and uploads BENCH_spec.json /
+    // BENCH_ep_serve.json / BENCH_ep_migrate.json / BENCH_prefix.json); no
     // filter runs everything. `--write-bench <dir>` additionally mirrors
     // every emitted BENCH_*.json into `<dir>` — the recipe for refreshing
     // the reference snapshots under `benchmarks/`.
@@ -1108,6 +1354,10 @@ fn main() {
         let mut model = load_model(PRESET);
         ep_serve_scenario(&mut model);
         ep_migrate_scenario(&mut model);
+        return;
+    }
+    if only.as_deref() == Some("prefix") {
+        prefix_shared_cache_scenario();
         return;
     }
     println!(
@@ -1199,4 +1449,5 @@ fn main() {
     ep_migrate_scenario(&mut model);
     admission_sim_scenario();
     spec_mixed_phase_scenario();
+    prefix_shared_cache_scenario();
 }

@@ -123,6 +123,16 @@ pub struct ServeConfig {
     /// sets so replicas are resident (and paid for) before that traffic
     /// admits. Requires `--ep-migrate-budget` > 0. Off by default.
     pub ep_prefetch: bool,
+    /// Shared-prefix KV cache budget in MiB (`--prefix-cache-mb`):
+    /// releasing rows offer their committed-prefix KV to a VRAM-budgeted
+    /// LRU cache; admissions whose prompt extends a cached entry restore
+    /// the slab and prefill only the suffix (see
+    /// `coordinator::prefix_cache`). 0 = off (the default).
+    pub prefix_cache_mb: usize,
+    /// Minimum prefix length worth caching (`--prefix-min-tokens`): slabs
+    /// shorter than this are not offered — a tiny restore saves less than
+    /// its bookkeeping. Must be ≥ 1; only consulted when the cache is on.
+    pub prefix_min_tokens: usize,
     /// Expert-parallel topology (None = single GPU).
     pub ep: Option<EpConfig>,
     /// Server bind address.
@@ -152,6 +162,8 @@ impl Default for ServeConfig {
             ep_replica_slack: 1.0,
             ep_migrate_budget: 0,
             ep_prefetch: false,
+            prefix_cache_mb: 0,
+            prefix_min_tokens: 8,
             ep: None,
             addr: "127.0.0.1:7431".into(),
             seed: 0,
@@ -173,7 +185,8 @@ impl ServeConfig {
             "preset", "policy", "batch_size", "spec_len", "spec_adaptive", "spec_draft",
             "prefill_chunk", "hardware", "admission", "max_queue", "footprint_decay",
             "ep_evict", "ep_rebalance", "ep_replica_slack", "ep_migrate_budget",
-            "ep_prefetch", "ep", "addr", "seed", "max_new_tokens",
+            "ep_prefetch", "prefix_cache_mb", "prefix_min_tokens", "ep", "addr", "seed",
+            "max_new_tokens",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -232,6 +245,12 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("ep_prefetch") {
             cfg.ep_prefetch = v.as_bool().context("ep_prefetch")?;
+        }
+        if let Some(v) = root.get("prefix_cache_mb") {
+            cfg.prefix_cache_mb = v.as_usize().context("prefix_cache_mb")?;
+        }
+        if let Some(v) = root.get("prefix_min_tokens") {
+            cfg.prefix_min_tokens = v.as_usize().context("prefix_min_tokens")?;
         }
         if let Some(v) = root.get("addr") {
             cfg.addr = v.as_str().context("addr")?.to_string();
@@ -308,6 +327,13 @@ impl ServeConfig {
         }
         if args.bool("ep-prefetch") {
             self.ep_prefetch = true;
+        }
+        if args.has("prefix-cache-mb") {
+            self.prefix_cache_mb = args.usize_or("prefix-cache-mb", self.prefix_cache_mb);
+        }
+        if args.has("prefix-min-tokens") {
+            self.prefix_min_tokens =
+                args.usize_or("prefix-min-tokens", self.prefix_min_tokens);
         }
         if let Some(v) = args.get("addr") {
             self.addr = v.to_string();
@@ -391,6 +417,12 @@ impl ServeConfig {
             bail!(
                 "--ep-prefetch needs --ep-migrate-budget B: prefetch schedules \
                  bounded replica migrations for the predicted queued mix"
+            );
+        }
+        if self.prefix_min_tokens == 0 {
+            bail!(
+                "prefix_min_tokens must be ≥ 1: a zero-length prefix has no KV to \
+                 restore, and every cached entry must leave a prompt suffix to feed"
             );
         }
         if let Some(ep) = &self.ep {
@@ -697,6 +729,41 @@ mod tests {
         assert!(cfg.ep_prefetch);
         let bad = Args::parse(
             "--ep-gpus 2 --ep-replica-slack 0.5".split_whitespace().map(String::from),
+        );
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn prefix_cache_knobs_roundtrip_and_validation() {
+        // defaults: cache off, a sane minimum prefix
+        let d = ServeConfig::default();
+        assert_eq!(d.prefix_cache_mb, 0);
+        assert_eq!(d.prefix_min_tokens, 8);
+
+        let p = write_tmp(
+            "prefix.json",
+            r#"{"prefix_cache_mb":64,"prefix_min_tokens":4}"#,
+        );
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.prefix_cache_mb, 64);
+        assert_eq!(cfg.prefix_min_tokens, 4);
+
+        // a zero minimum would admit empty prefixes that cannot restore
+        let bad = write_tmp("prefix_bad.json", r#"{"prefix_min_tokens":0}"#);
+        let err = ServeConfig::from_json_file(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("prefix_min_tokens"), "{err:#}");
+
+        // CLI spellings
+        let args = Args::parse(
+            "--prefix-cache-mb 128 --prefix-min-tokens 6"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.prefix_cache_mb, 128);
+        assert_eq!(cfg.prefix_min_tokens, 6);
+        let bad = Args::parse(
+            "--prefix-min-tokens 0".split_whitespace().map(String::from),
         );
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }

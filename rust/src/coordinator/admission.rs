@@ -166,8 +166,14 @@ impl std::error::Error for SubmitError {}
 #[derive(Debug, Clone)]
 pub struct QueuedEntry {
     pub req: Request,
-    /// Sim-clock at submission (queue-wait accounting, EDF deadlines).
+    /// Sim-clock at the ORIGINAL submission (TTFT anchoring, EDF
+    /// deadlines). Preserved across eviction requeues.
     pub submit_sim: f64,
+    /// Sim-clock at which the entry joined THIS queue stint (fresh
+    /// submission or eviction requeue). Queue-wait accounting measures
+    /// from here, so a requeued row's time being *served* before its
+    /// eviction never counts as queue wait.
+    pub enqueue_sim: f64,
     /// Monotone submission counter — the FIFO tiebreak every policy
     /// ultimately falls back to.
     pub seq_no: u64,
@@ -231,6 +237,11 @@ pub struct AdmissionContext<'a> {
     pub top_k: usize,
     /// Spec-grouping refinement state (adaptive speculation only).
     pub spec: Option<SpecGrouping<'a>>,
+    /// Shared-prefix KV cache, when serving with one (prefix-aware
+    /// admission: a queued request whose prompt extends a cached prefix
+    /// skips that much prefill, so it is cheap to admit). Probed
+    /// read-only — admission scoring never touches hit/miss stats.
+    pub prefix: Option<&'a super::prefix_cache::PrefixCache>,
 }
 
 /// Picks which queued entry is admitted into the next free slot.
@@ -327,6 +338,15 @@ pub fn aging_bonus(skipped: u64, top_k: usize) -> f64 {
 /// bound is unchanged by spec grouping.
 pub const SPEC_GROUP_WEIGHT: f64 = 0.5;
 
+/// Weight of the warm-prefix admission bonus, scaled by the fraction of
+/// the candidate's prompt a cached prefix covers (so the bonus lives in
+/// `[0, PREFIX_HIT_WEIGHT]`). Kept at a quarter expert so the full
+/// admission score stays inside `(-top_k, top_k + SPEC_GROUP_WEIGHT +
+/// PREFIX_HIT_WEIGHT)` and the aging bonus — slope `2·top_k + 1` per
+/// [`STARVATION_HORIZON`] skips — still strictly clears the whole widened
+/// range: warm prefixes break ties, they never starve cold traffic.
+pub const PREFIX_HIT_WEIGHT: f64 = 0.25;
+
 /// Greedy expected-overlap co-scheduling (EP-aware when placed).
 pub struct FootprintAware;
 
@@ -371,7 +391,19 @@ impl AdmissionPolicy for FootprintAware {
                 .as_ref()
                 .map(|sg| sg.bonus(&FootprintTracker::class_key(&e.req)))
                 .unwrap_or(0.0);
-            let score = base + spec_bonus + aging_bonus(e.skipped, ctx.top_k);
+            // Warm-prefix refinement: a candidate whose prompt extends a
+            // cached KV prefix restores instead of prefilling that many
+            // positions — prefer it proportionally to the covered prompt
+            // fraction (bounded by PREFIX_HIT_WEIGHT — a tiebreak, never
+            // worth a whole expert of overlap).
+            let prefix_bonus = ctx
+                .prefix
+                .map(|c| {
+                    PREFIX_HIT_WEIGHT * c.probe(&e.req.prompt) as f64
+                        / e.req.prompt.len() as f64
+                })
+                .unwrap_or(0.0);
+            let score = base + spec_bonus + prefix_bonus + aging_bonus(e.skipped, ctx.top_k);
             // strictly-greater keeps the earliest seq_no on ties
             if best.map(|(_, s)| score > s).unwrap_or(true) {
                 best = Some((i, score));
@@ -431,13 +463,16 @@ impl AdmissionQueue {
     /// Re-enqueue a preempted (evicted) request. Unlike
     /// [`AdmissionQueue::submit`], this never applies backpressure — a
     /// request the system already accepted must not be droppable — and it
-    /// carries the caller-preserved submission time and absolute deadline
-    /// (an eviction must not reset a request's SLO clock or its queue-wait
-    /// origin). The entry joins the back of submission order.
-    pub fn requeue(&mut self, req: Request, submit_sim: f64, deadline_sim: Option<f64>) {
+    /// carries the caller-preserved ORIGINAL submission time and absolute
+    /// deadline (an eviction must not reset a request's SLO clock), while
+    /// `now_sim` stamps this stint's `enqueue_sim` so queue-wait
+    /// accounting measures only the incremental requeue wait. The entry
+    /// joins the back of submission order.
+    pub fn requeue(&mut self, req: Request, submit_sim: f64, deadline_sim: Option<f64>, now_sim: f64) {
         let entry = QueuedEntry {
             req,
             submit_sim,
+            enqueue_sim: now_sim,
             seq_no: self.next_seq,
             deadline_sim,
             skipped: 0,
@@ -459,6 +494,7 @@ impl AdmissionQueue {
         let entry = QueuedEntry {
             req,
             submit_sim: now_sim,
+            enqueue_sim: now_sim,
             seq_no: self.next_seq,
             deadline_sim,
             skipped: 0,
@@ -631,6 +667,7 @@ mod tests {
             placement: None,
             top_k: 2,
             spec: None,
+            prefix: None,
         }
     }
 
@@ -751,6 +788,7 @@ mod tests {
             placement: None,
             top_k: 2,
             spec: None,
+            prefix: None,
         };
         let first = q.pop_next(&c).unwrap();
         assert_eq!(first.req.id, 0);
@@ -774,6 +812,7 @@ mod tests {
             placement: None,
             top_k: 2,
             spec: None,
+            prefix: None,
         };
         let picked = q.pop_next(&c).unwrap();
         assert_eq!(picked.req.id, 2, "same-class request must jump the queue");
@@ -831,6 +870,7 @@ mod tests {
                 placement: None,
                 top_k: 2,
                 spec: None,
+                prefix: None,
             };
             let picked = q.pop_next(&ctx).unwrap();
             frees += 1;
@@ -886,6 +926,7 @@ mod tests {
             placement: None,
             top_k: 2,
             spec: Some(SpecGrouping { ctl: &ctl, running_classes: &classes }),
+            prefix: None,
         };
         assert_eq!(
             q.pop_next(&c).unwrap().req.id,
@@ -903,6 +944,7 @@ mod tests {
             placement: None,
             top_k: 2,
             spec: None,
+            prefix: None,
         };
         assert_eq!(q2.pop_next(&c2).unwrap().req.id, 0);
     }
@@ -935,15 +977,78 @@ mod tests {
         q.submit(req(0), 5.0).unwrap();
         assert!(q.submit(req(1), 5.0).is_err(), "bounded queue full");
         // an evicted request re-enters even at capacity, keeping its
-        // original submission time and absolute deadline
-        q.requeue(req(2), 1.25, Some(9.0));
+        // original submission time and absolute deadline, while the
+        // queue-wait anchor re-stamps to the requeue instant
+        q.requeue(req(2), 1.25, Some(9.0), 6.0);
         assert_eq!(q.len(), 2);
         let first = q.pop_next(&ctx()).unwrap();
         assert_eq!(first.req.id, 0);
+        assert_eq!(first.enqueue_sim, first.submit_sim);
         let re = q.pop_next(&ctx()).unwrap();
         assert_eq!(re.req.id, 2);
         assert_eq!(re.submit_sim, 1.25);
         assert_eq!(re.deadline_sim, Some(9.0));
+        assert_eq!(re.enqueue_sim, 6.0, "queue wait must re-anchor at requeue");
+    }
+
+    #[test]
+    fn prefix_hit_bonus_prefers_warm_candidate() {
+        use super::super::prefix_cache::PrefixCache;
+        // Two queued requests of the SAME traffic class (identical
+        // predicted footprints, so their overlap bases tie exactly); one's
+        // prompt extends a cached prefix. With the cache in context, the
+        // warm request must jump the FIFO tie.
+        let warm_prompt: Vec<u32> = (10..30).collect();
+        let cold_prompt: Vec<u32> = (100..120).collect();
+        let mut cache = PrefixCache::new(1 << 20, 4);
+        let kv = crate::model::KvPrefix {
+            len: 16,
+            k: vec![vec![0.0f32; 2 * 16 * 4]; 2],
+            v: vec![vec![0.0f32; 2 * 16 * 4]; 2],
+        };
+        assert!(cache.insert(&warm_prompt[..16], kv));
+
+        // A warmed tracker with one informative running row, so the
+        // footprint policy actually scores (an empty union or an
+        // uninformative queue short-circuits straight to FIFO).
+        let mk = |id: u64, prompt: Vec<u32>| {
+            let mut r = Request::new(id, prompt, 4);
+            r.domain = "t".into();
+            r
+        };
+        let mut tr = FootprintTracker::new(4, 2);
+        tr.on_admit(0, &mk(9, vec![1, 2, 3]));
+        tr.observe_row(0, &[0.5, 0.4, 0.05, 0.05]);
+
+        let mut q = AdmissionQueue::new(AdmissionKind::FootprintAware, 0);
+        q.submit(mk(0, cold_prompt), 0.0).unwrap(); // earlier seq_no
+        q.submit(mk(1, warm_prompt), 0.0).unwrap();
+        let mut c = ctx();
+        c.tracker = Some(&tr);
+        c.running_slots = &[0];
+        c.prefix = Some(&cache);
+        assert_eq!(q.pop_next(&c).unwrap().req.id, 1, "warm prefix must win the tie");
+        // same queue without the cache: the earlier submission wins
+        let mut q2 = AdmissionQueue::new(AdmissionKind::FootprintAware, 0);
+        q2.submit(mk(0, (100..120).collect()), 0.0).unwrap();
+        q2.submit(mk(1, (10..30).collect()), 0.0).unwrap();
+        let mut c2 = ctx();
+        c2.tracker = Some(&tr);
+        c2.running_slots = &[0];
+        assert_eq!(q2.pop_next(&c2).unwrap().req.id, 0);
+    }
+
+    #[test]
+    fn prefix_bonus_is_bounded_below_aging_dominance() {
+        // The widened score range (overlap + spec bonus + prefix bonus)
+        // must still be cleared by the post-horizon aging bonus, or the
+        // starvation guarantee silently breaks.
+        let top_k = 4;
+        let widened_max = top_k as f64 + SPEC_GROUP_WEIGHT + PREFIX_HIT_WEIGHT;
+        assert!(-(top_k as f64) + aging_bonus(STARVATION_HORIZON, top_k) > widened_max);
+        // and the per-entry bonus itself never exceeds PREFIX_HIT_WEIGHT
+        // (probe coverage is < 1 because a suffix must remain to feed)
+        assert!(PREFIX_HIT_WEIGHT < SPEC_GROUP_WEIGHT);
     }
 
     #[test]

@@ -29,6 +29,16 @@
 //! continuation is byte-identical to an uninterrupted run — pinned by
 //! `rust/tests/ep_serve.rs`.
 //!
+//! With the shared-prefix cache on (PR 7), the recompute is usually
+//! skipped: the preemption offers the victim's committed-history KV slab
+//! to [`super::prefix_cache`], and since the requeued prompt IS that
+//! history, the resume admission finds it as an ordinary cache hit and
+//! restores the bytes instead of re-prefilling them (the cache-restore KV
+//! contract, same file) — same tokens either way, with the
+//! restore-vs-recompute split reported in `resume_restores` /
+//! `resume_recomputes`. When the slab has been LRU-evicted by then, the
+//! full recompute path above still applies unchanged.
+//!
 //! ## Bounds
 //!
 //! * At most one eviction per serving step (the serve loop's driver).

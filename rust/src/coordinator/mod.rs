@@ -9,6 +9,7 @@ pub mod admission;
 pub mod batcher;
 pub mod eviction;
 pub mod fidelity;
+pub mod prefix_cache;
 pub mod request;
 pub mod scheduler;
 pub mod serve_loop;
@@ -18,6 +19,7 @@ pub use admission::{AdmissionKind, AdmissionPolicy, AdmissionQueue, SubmitError}
 pub use batcher::Batcher;
 pub use eviction::{EvictionPlan, EVICTION_BUDGET, EVICTION_MARGIN};
 pub use fidelity::{compare, Fidelity};
+pub use prefix_cache::{PrefixCache, PrefixCacheStats};
 pub use request::{Phase, Request, SeqState};
 pub use scheduler::Scheduler;
 pub use serve_loop::{RunReport, ServeLoop, StepOutcome};

@@ -1,0 +1,347 @@
+//! VRAM-budgeted shared-prefix KV cache (PR 7).
+//!
+//! Production MoE traffic is dominated by shared system prompts, few-shot
+//! templates and multi-turn chat that replays the whole history every
+//! turn — redundant prefill work. This cache stores the KV slab of a
+//! finished (or preempted) row's processed prefix, keyed by an FNV-1a hash
+//! of the token prefix itself; a later request whose prompt extends a
+//! cached prefix restores the slab into its slot
+//! ([`crate::model::MoeModel::restore_prefix`]) and chunk-prefills only
+//! the suffix. Eviction resume rides the same path: the preempted row's
+//! committed history is offered here at preemption, so re-admission
+//! restores instead of re-prefilling from scratch.
+//!
+//! Correctness leans entirely on the cache-restore KV contract in
+//! `model/moe_model.rs`: KV bytes at a position depend only on the token
+//! stream at and below it, so a slab is valid for ANY row whose prompt
+//! starts with the entry's exact token sequence. Entries are matched on
+//! the full token prefix (the hash is an index, the token comparison is
+//! the authority), and a hit always leaves at least one prompt token to
+//! feed — the first generated token needs real last-position logits.
+//!
+//! Budgeting is bytes-denominated LRU: inserts evict least-recently-touched
+//! entries until the new slab fits; slabs larger than the whole budget are
+//! refused outright. Lookups hand out a **clone** of the slab, so an entry
+//! evicted while a hit is mid-restore cannot corrupt the restore (pinned
+//! in `rust/tests/prefix_cache.rs`).
+
+use std::collections::HashMap;
+
+use crate::model::KvPrefix;
+use crate::util::fnv::Fnv;
+
+/// Order-stable FNV-1a hash of a token prefix (the cache key, and the
+/// same `util::fnv` the footprint tracker keys unlabeled classes with).
+pub fn prefix_hash(tokens: &[u32]) -> u64 {
+    let mut h = Fnv::new();
+    for &t in tokens {
+        h.update_u32(t);
+    }
+    h.finish()
+}
+
+/// Lifetime counters (mirrored into `ServeMetrics` by the serve loop).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Lookups that matched a cached prefix.
+    pub hits: u64,
+    /// Lookups that matched nothing.
+    pub misses: u64,
+    /// Slabs admitted into the cache.
+    pub inserts: u64,
+    /// Slabs LRU-evicted to make room.
+    pub evictions: u64,
+}
+
+/// One resident slab: the exact token prefix it covers, its KV bytes, and
+/// per-entry accounting.
+struct Entry {
+    tokens: Vec<u32>,
+    kv: KvPrefix,
+    bytes: usize,
+    hits: u64,
+    /// LRU clock value at the last insert/hit touch.
+    last_touch: u64,
+}
+
+/// The cache. `budget_bytes == 0` disables it entirely (every probe is 0,
+/// every lookup a no-stat miss, every insert refused) — the serve loop
+/// checks [`PrefixCache::enabled`] once and skips the wiring.
+pub struct PrefixCache {
+    entries: HashMap<u64, Entry>,
+    budget_bytes: usize,
+    min_tokens: usize,
+    bytes_used: usize,
+    cached_tokens: usize,
+    clock: u64,
+    pub stats: PrefixCacheStats,
+}
+
+impl PrefixCache {
+    /// `budget_bytes`: total resident-slab budget (0 = disabled).
+    /// `min_tokens`: shortest prefix worth caching — tiny slabs churn the
+    /// LRU for restores that save almost nothing.
+    pub fn new(budget_bytes: usize, min_tokens: usize) -> PrefixCache {
+        PrefixCache {
+            entries: HashMap::new(),
+            budget_bytes,
+            min_tokens: min_tokens.max(1),
+            bytes_used: 0,
+            cached_tokens: 0,
+            clock: 0,
+            stats: PrefixCacheStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget_bytes > 0
+    }
+
+    pub fn min_tokens(&self) -> usize {
+        self.min_tokens
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.bytes_used
+    }
+
+    /// Token positions resident across all entries (the metrics gauge).
+    pub fn cached_tokens(&self) -> usize {
+        self.cached_tokens
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Length of the longest cached prefix of `prompt` that a restore
+    /// could use, or 0. Read-only — no stats, no LRU touch — so admission
+    /// scoring can probe every queued candidate without skewing hit
+    /// accounting. A usable prefix must leave at least one prompt token to
+    /// feed (see module docs), hence the strict `< prompt.len()` bound.
+    pub fn probe(&self, prompt: &[u32]) -> usize {
+        let mut best = 0usize;
+        for e in self.entries.values() {
+            if e.tokens.len() > best
+                && e.tokens.len() < prompt.len()
+                && prompt[..e.tokens.len()] == e.tokens[..]
+            {
+                best = e.tokens.len();
+            }
+        }
+        best
+    }
+
+    /// Longest-prefix lookup for an admission: on a hit, bump the entry's
+    /// LRU/hit accounting and return a CLONE of its slab (decoupled from
+    /// later evictions); on a miss, count the miss. Disabled caches count
+    /// nothing.
+    pub fn lookup(&mut self, prompt: &[u32]) -> Option<KvPrefix> {
+        if !self.enabled() {
+            return None;
+        }
+        let best = self.probe(prompt);
+        if best == 0 {
+            self.stats.misses += 1;
+            return None;
+        }
+        let hash = prefix_hash(&prompt[..best]);
+        let e = self.entries.get_mut(&hash).expect("probe matched a resident entry");
+        self.clock += 1;
+        e.last_touch = self.clock;
+        e.hits += 1;
+        self.stats.hits += 1;
+        Some(e.kv.clone())
+    }
+
+    /// Offer a slab for the exact token prefix `tokens`. Refused (false)
+    /// when the cache is disabled, the prefix is below `min_tokens`, the
+    /// slab alone exceeds the whole budget, or an entry for these tokens
+    /// is already resident (byte-identical by the KV contract — the
+    /// resident copy just gets an LRU touch). Otherwise LRU entries are
+    /// evicted until the slab fits, and it is inserted (true).
+    pub fn insert(&mut self, tokens: &[u32], kv: KvPrefix) -> bool {
+        debug_assert_eq!(tokens.len(), kv.len, "slab length mismatch");
+        if !self.enabled() || tokens.len() < self.min_tokens {
+            return false;
+        }
+        let bytes = kv.bytes();
+        if bytes > self.budget_bytes {
+            return false;
+        }
+        let hash = prefix_hash(tokens);
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&hash) {
+            e.last_touch = self.clock;
+            return false;
+        }
+        while self.bytes_used + bytes > self.budget_bytes {
+            self.evict_lru();
+        }
+        self.bytes_used += bytes;
+        self.cached_tokens += tokens.len();
+        self.stats.inserts += 1;
+        self.entries.insert(
+            hash,
+            Entry { tokens: tokens.to_vec(), kv, bytes, hits: 0, last_touch: self.clock },
+        );
+        true
+    }
+
+    /// Drop the least-recently-touched entry.
+    fn evict_lru(&mut self) {
+        let victim = self
+            .entries
+            .iter()
+            .min_by_key(|(_, e)| e.last_touch)
+            .map(|(&h, _)| h)
+            .expect("evict_lru on an empty cache (slab fit was pre-checked)");
+        let e = self.entries.remove(&victim).unwrap();
+        self.bytes_used -= e.bytes;
+        self.cached_tokens -= e.tokens.len();
+        self.stats.evictions += 1;
+    }
+
+    /// Per-entry hit count for the exact prefix `tokens` (test/debug
+    /// introspection).
+    pub fn entry_hits(&self, tokens: &[u32]) -> Option<u64> {
+        self.entries.get(&prefix_hash(tokens)).map(|e| e.hits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic slab: `layers` layers of `per_layer` f32s each for K
+    /// and V, filled with a recognizable value.
+    fn slab(len: usize, layers: usize, per_token: usize, fill: f32) -> KvPrefix {
+        let layer = vec![fill; len * per_token];
+        KvPrefix { len, k: vec![layer.clone(); layers], v: vec![layer; layers] }
+    }
+
+    /// Bytes of `slab(len, 2, 4, _)`: 2 layers × (K+V) × len×4 f32s.
+    fn slab_bytes(len: usize) -> usize {
+        2 * 2 * len * 4 * 4
+    }
+
+    #[test]
+    fn hash_is_order_and_content_sensitive() {
+        assert_eq!(prefix_hash(&[1, 2, 3]), prefix_hash(&[1, 2, 3]));
+        assert_ne!(prefix_hash(&[1, 2, 3]), prefix_hash(&[3, 2, 1]));
+        assert_ne!(prefix_hash(&[1, 2]), prefix_hash(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn insert_lookup_roundtrip_longest_match_wins() {
+        let mut c = PrefixCache::new(1 << 20, 2);
+        assert!(c.insert(&[7, 8], slab(2, 2, 4, 1.0)));
+        assert!(c.insert(&[7, 8, 9, 10], slab(4, 2, 4, 2.0)));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.cached_tokens(), 6);
+        // the longer of the two matching prefixes is chosen
+        let hit = c.lookup(&[7, 8, 9, 10, 11, 12]).expect("hit");
+        assert_eq!(hit.len, 4);
+        assert_eq!(hit.k[0][0], 2.0);
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.entry_hits(&[7, 8, 9, 10]), Some(1));
+        assert_eq!(c.entry_hits(&[7, 8]), Some(0));
+        // an unrelated prompt is a miss
+        assert!(c.lookup(&[1, 2, 3]).is_none());
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn match_must_leave_a_suffix_to_feed() {
+        // A prompt equal to (or shorter than) a cached prefix cannot use
+        // it: the first generated token needs real last-position logits.
+        let mut c = PrefixCache::new(1 << 20, 2);
+        assert!(c.insert(&[7, 8, 9], slab(3, 2, 4, 1.0)));
+        assert_eq!(c.probe(&[7, 8, 9]), 0);
+        assert_eq!(c.probe(&[7, 8]), 0);
+        assert_eq!(c.probe(&[7, 8, 9, 10]), 3);
+        assert!(c.lookup(&[7, 8, 9]).is_none());
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn probe_is_stat_free() {
+        let mut c = PrefixCache::new(1 << 20, 2);
+        assert!(c.insert(&[7, 8], slab(2, 2, 4, 1.0)));
+        for _ in 0..5 {
+            assert_eq!(c.probe(&[7, 8, 9]), 2);
+            assert_eq!(c.probe(&[1, 2, 3]), 0);
+        }
+        assert_eq!(c.stats, PrefixCacheStats { inserts: 1, ..Default::default() });
+    }
+
+    #[test]
+    fn min_tokens_and_oversize_refusals() {
+        let mut c = PrefixCache::new(slab_bytes(4), 3);
+        assert!(!c.insert(&[1, 2], slab(2, 2, 4, 1.0)), "below min_tokens");
+        assert!(!c.insert(&[1, 2, 3, 4, 5], slab(5, 2, 4, 1.0)), "exceeds whole budget");
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.stats.inserts, 0);
+        assert_eq!(c.stats.evictions, 0);
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_resident_copy() {
+        let mut c = PrefixCache::new(1 << 20, 2);
+        assert!(c.insert(&[7, 8, 9], slab(3, 2, 4, 1.0)));
+        assert!(!c.insert(&[7, 8, 9], slab(3, 2, 4, 9.0)), "already resident");
+        assert_eq!(c.stats.inserts, 1);
+        assert_eq!(c.cached_tokens(), 3);
+        let hit = c.lookup(&[7, 8, 9, 10]).expect("hit");
+        assert_eq!(hit.k[0][0], 1.0, "the first copy stays");
+    }
+
+    #[test]
+    fn lru_eviction_under_tight_budget() {
+        // Budget fits exactly two 3-token slabs. Insert A, B; touch A via
+        // a lookup; inserting C must evict B (least recently touched).
+        let mut c = PrefixCache::new(2 * slab_bytes(3), 3);
+        assert!(c.insert(&[1, 1, 1], slab(3, 2, 4, 1.0))); // A
+        assert!(c.insert(&[2, 2, 2], slab(3, 2, 4, 2.0))); // B
+        assert!(c.lookup(&[1, 1, 1, 9]).is_some()); // touch A
+        assert!(c.insert(&[3, 3, 3], slab(3, 2, 4, 3.0))); // C evicts B
+        assert_eq!(c.stats.evictions, 1);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.probe(&[2, 2, 2, 9]), 0, "B evicted");
+        assert_eq!(c.probe(&[1, 1, 1, 9]), 3, "A survived (recently touched)");
+        assert_eq!(c.probe(&[3, 3, 3, 9]), 3);
+        assert!(c.bytes_used() <= c.budget_bytes());
+        assert_eq!(c.cached_tokens(), 6);
+    }
+
+    #[test]
+    fn hit_clone_survives_concurrent_eviction() {
+        // The mid-restore safety property: a slab handed out by `lookup`
+        // stays intact even when the entry is evicted before the restore
+        // finishes.
+        let mut c = PrefixCache::new(slab_bytes(3), 3);
+        assert!(c.insert(&[1, 1, 1], slab(3, 2, 4, 7.0)));
+        let held = c.lookup(&[1, 1, 1, 9]).expect("hit");
+        assert!(c.insert(&[2, 2, 2], slab(3, 2, 4, 8.0)), "evicts the held entry");
+        assert_eq!(c.stats.evictions, 1);
+        assert_eq!(c.probe(&[1, 1, 1, 9]), 0, "entry gone");
+        assert!(held.k.iter().chain(held.v.iter()).all(|l| l.iter().all(|&x| x == 7.0)));
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut c = PrefixCache::new(0, 2);
+        assert!(!c.enabled());
+        assert!(!c.insert(&[1, 2, 3], slab(3, 2, 4, 1.0)));
+        assert!(c.lookup(&[1, 2, 3, 4]).is_none());
+        assert_eq!(c.stats, PrefixCacheStats::default(), "disabled caches count nothing");
+    }
+}

@@ -216,6 +216,31 @@ impl SeqState {
     pub fn prompt_remaining(&self) -> usize {
         self.req.prompt.len() - self.prompt_idx
     }
+
+    /// Skip the first `n` prompt positions whose KV was restored from the
+    /// prefix cache: identical committed-history state (pos, prompt_idx,
+    /// next_token, n-gram index) to feeding them through the model, with
+    /// no forwards. Only legal on a freshly placed row, and a suffix must
+    /// remain — the first generated token needs real last-position logits
+    /// (the cache-restore KV contract in `model/moe_model.rs`).
+    pub fn restore_prefix_state(&mut self, n: usize) {
+        debug_assert_eq!(self.phase, Phase::PrefillChunk);
+        assert!(
+            self.pos == 0 && self.prompt_idx == 0,
+            "prefix restore into a row that already advanced"
+        );
+        assert!(
+            n >= 1 && n < self.req.prompt.len(),
+            "restore of {n} must leave a prompt suffix to feed ({} tokens)",
+            self.req.prompt.len()
+        );
+        for &t in &self.req.prompt[..n] {
+            self.ngram.push(t);
+        }
+        self.pos = n;
+        self.prompt_idx = n;
+        self.next_token = self.req.prompt[n];
+    }
 }
 
 #[cfg(test)]
@@ -324,6 +349,33 @@ mod tests {
         w.advance_prefill(42);
         w.commit(7);
         assert_eq!(w.ngram.history(), s.ngram.history());
+    }
+
+    #[test]
+    fn restore_prefix_state_matches_prefill_walk() {
+        // Skipping n restored positions must leave the identical row state
+        // (pos, prompt_idx, next_token, n-gram history) as advancing over
+        // them through the model.
+        let req = Request::new(1, vec![10, 11, 12, 13, 14], 2);
+        let mut r = SeqState::new(req.clone());
+        r.restore_prefix_state(3);
+        let mut w = SeqState::new(req);
+        w.advance_prefill_by(3, 99);
+        assert_eq!((r.pos, r.prompt_idx, r.next_token), (w.pos, w.prompt_idx, w.next_token));
+        assert_eq!(r.ngram.history(), w.ngram.history());
+        assert_eq!(r.phase, Phase::PrefillChunk);
+        assert_eq!(r.prompt_remaining(), 2);
+        // and the suffix prefill continues exactly as the cold walk would
+        assert!(r.advance_prefill_by(2, 42));
+        assert_eq!(r.generated, vec![42]);
+        assert_eq!(r.pos, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "leave a prompt suffix")]
+    fn restore_prefix_state_rejects_whole_prompt() {
+        let mut s = SeqState::new(Request::new(1, vec![1, 2, 3], 1));
+        s.restore_prefix_state(3);
     }
 
     #[test]

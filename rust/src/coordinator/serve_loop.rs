@@ -127,6 +127,19 @@
 //! resident (and paid for) before the traffic that needs them admits.
 //! All of it is cost-only: tokens and KV stay byte-identical to non-EP
 //! runs (`rust/tests/ep_migrate.rs`).
+//!
+//! ## Shared-prefix KV cache (PR 7)
+//!
+//! With `--prefix-cache-mb` set, releasing rows (finish AND eviction)
+//! offer their committed-prefix KV to a VRAM-budgeted LRU cache
+//! ([`super::prefix_cache`]); an admission whose prompt extends a cached
+//! entry restores the slab into its slot ([`MoeModel::restore_prefix`])
+//! and chunk-prefills only the suffix — byte-identical to the cold path
+//! by the cache-restore KV contract in `model/moe_model.rs`, pinned by
+//! `rust/tests/prefix_cache.rs`. Footprint admission adds a bounded
+//! warm-prefix bonus ([`super::admission::PREFIX_HIT_WEIGHT`]), and
+//! eviction resume becomes a restore instead of a recompute whenever the
+//! victim's offered slab is still resident.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -139,6 +152,7 @@ use super::admission::{
 };
 use super::batcher::Batcher;
 use super::eviction;
+use super::prefix_cache::PrefixCache;
 use super::request::{Phase, Request};
 use super::speculative::{effective_batch_scores_ragged, greedy_accept, SpecDepthController};
 use crate::config::{ServeConfig, SpecDraft};
@@ -302,6 +316,12 @@ pub struct ServeLoop<'m> {
     /// decoding, so a step at most doubles and the charge never stalls the
     /// loop outright.
     migration_backlog_s: f64,
+    /// Shared-prefix KV cache (`--prefix-cache-mb`, see
+    /// [`super::prefix_cache`]): releasing rows offer their committed
+    /// prefix, admissions whose prompt extends a cached entry restore the
+    /// slab and chunk-prefill only the suffix. Disabled (zero-budget) by
+    /// default.
+    prefix_cache: PrefixCache,
     started: Instant,
 }
 
@@ -361,6 +381,7 @@ impl<'m> ServeLoop<'m> {
             ttft_pending: Vec::new(),
             frees_since_rebalance: 0,
             migration_backlog_s: 0.0,
+            prefix_cache: PrefixCache::new(0, 1),
             started: Instant::now(),
         };
         sl.reset()?;
@@ -379,6 +400,10 @@ impl<'m> ServeLoop<'m> {
         });
         self.frees_since_rebalance = 0;
         self.migration_backlog_s = 0.0;
+        self.prefix_cache = PrefixCache::new(
+            self.cfg.prefix_cache_mb * 1024 * 1024,
+            self.cfg.prefix_min_tokens,
+        );
         self.metrics = ServeMetrics::new(self.model.dims().n_layers);
         self.outputs.clear();
         self.domains.clear();
@@ -773,6 +798,10 @@ impl<'m> ServeLoop<'m> {
     /// the slot metadata is kept for a row's whole occupancy, so this
     /// holds whether or not its first token has committed.
     fn preempt(&mut self, victim: usize, now_sim: f64) -> u64 {
+        // Offer the victim's committed-history KV to the prefix cache
+        // BEFORE the slot releases: its requeued prompt IS that history, so
+        // the resume admission can restore the slab instead of recomputing.
+        self.offer_to_cache(victim);
         let pending = self.ttft_pending[victim].take();
         let seq = self.release_slot(victim);
         let id = seq.req.id;
@@ -781,7 +810,7 @@ impl<'m> ServeLoop<'m> {
             None => (now_sim, None), // unreachable: admission always sets it
         };
         let req = eviction::requeue_request(seq);
-        self.queue.requeue(req, submit_sim, deadline_sim);
+        self.queue.requeue(req, submit_sim, deadline_sim, now_sim);
         self.metrics.evictions += 1;
         id
     }
@@ -904,6 +933,7 @@ impl<'m> ServeLoop<'m> {
                     ctl: &self.depth_ctl,
                     running_classes: &running_classes,
                 }),
+                prefix: self.prefix_cache.enabled().then_some(&self.prefix_cache),
             };
             let Some(entry) = self.queue.pop_next(&ctx) else { break };
             // Footprint-overlap gauge: what the greedy objective predicted
@@ -925,14 +955,17 @@ impl<'m> ServeLoop<'m> {
             }
             let id = entry.req.id;
             let class = entry.req.priority;
-            // Evicted requests keep their ORIGINAL submission clock, so
-            // only the first admission records a queue wait; a row that
-            // already committed its first token (non-empty resume prefix)
-            // must not re-record TTFT either — both are measured once.
-            if entry.req.evictions == 0 {
-                self.metrics.record_queue_wait(now_sim - entry.submit_sim);
-            }
+            // Queue-wait accounting is per STINT: a fresh request measures
+            // from submission, an eviction-requeued one from its requeue
+            // instant (`enqueue_sim`), so time spent being SERVED between
+            // stints never counts as queue wait and no stint's wait is
+            // dropped. (`submit_sim` still anchors TTFT and deadlines.)
+            self.metrics.record_queue_wait(now_sim - entry.enqueue_sim);
+            // A row that already committed its first token (non-empty
+            // resume prefix) must not re-record TTFT — measured once, from
+            // the original submission.
             let ttft_recorded = !entry.req.resume_prefix.is_empty();
+            let was_resume = entry.req.evictions > 0;
             if was_running {
                 self.metrics.admitted_in_flight += 1;
             }
@@ -944,6 +977,35 @@ impl<'m> ServeLoop<'m> {
             }
             if let Some(tr) = &mut self.tracker {
                 tr.on_admit(slot, &self.batcher.seq(slot).req);
+            }
+            // Prefix-cache restore: if the prompt extends a cached prefix,
+            // copy the slab into this row and fast-forward the phase state
+            // — the suffix (always ≥ 1 token) chunk-prefills as usual. The
+            // cache-restore KV contract (`model/moe_model.rs`) makes this
+            // byte-identical to a cold prefill of the whole prompt. An
+            // eviction-requeued row's prompt is its committed history, so
+            // the slab its preemption offered back is a natural hit here —
+            // resume restores instead of recomputing.
+            if self.prefix_cache.enabled() {
+                match self.prefix_cache.lookup(&self.batcher.seq(slot).req.prompt) {
+                    Some(kv) => {
+                        let n = kv.len;
+                        self.model
+                            .restore_prefix(slot, &kv)
+                            .expect("cached prefix extracted from this model must fit");
+                        self.batcher.seq_mut(slot).restore_prefix_state(n);
+                        self.metrics.prefill_restored_tokens += n as u64;
+                        if was_resume {
+                            self.metrics.resume_restores += 1;
+                        }
+                    }
+                    None => {
+                        if was_resume {
+                            self.metrics.resume_recomputes += 1;
+                        }
+                    }
+                }
+                self.sync_prefix_metrics();
             }
             self.ttft_pending[slot] = Some(PendingTtft {
                 submit_sim: entry.submit_sim,
@@ -979,8 +1041,45 @@ impl<'m> ServeLoop<'m> {
     /// (tokens committed before any eviction stitched in front of this
     /// stint's).
     fn finish_slot(&mut self, slot: usize) -> (u64, Vec<u32>) {
+        self.offer_to_cache(slot);
         let done = self.release_slot(slot);
         (done.req.id, done.full_output())
+    }
+
+    /// Offer the releasing row's committed-prefix KV to the prefix cache
+    /// (no-op when the cache is disabled). The offered token string is
+    /// exactly the processed prefix — `(prompt ++ generated)[0..pos]` —
+    /// whose KV the row holds; mid-prefill rows offer their consumed
+    /// prompt, decoding rows everything committed except the last token
+    /// (fed next step, its KV not yet written). Refusals (below
+    /// `--prefix-min-tokens`, oversize, duplicate) are free.
+    fn offer_to_cache(&mut self, slot: usize) {
+        if !self.prefix_cache.enabled() {
+            return;
+        }
+        let Some(seq) = self.batcher.get(slot) else { return };
+        let len = seq.pos;
+        if len < self.prefix_cache.min_tokens() {
+            return;
+        }
+        let from_prompt = seq.prompt_idx.min(len);
+        let mut toks: Vec<u32> = seq.req.prompt[..from_prompt].to_vec();
+        toks.extend_from_slice(&seq.generated[..len - from_prompt]);
+        if let Ok(kv) = self.model.extract_prefix(slot, len) {
+            self.prefix_cache.insert(&toks, kv);
+        }
+        self.sync_prefix_metrics();
+    }
+
+    /// Mirror the prefix cache's counters and resident-tokens gauge into
+    /// the run metrics (called after every cache-touching operation).
+    fn sync_prefix_metrics(&mut self) {
+        let s = self.prefix_cache.stats;
+        self.metrics.prefix_hits = s.hits;
+        self.metrics.prefix_misses = s.misses;
+        self.metrics.prefix_inserts = s.inserts;
+        self.metrics.prefix_evictions = s.evictions;
+        self.metrics.prefix_cached_tokens = self.prefix_cache.cached_tokens() as u64;
     }
 
     /// Current KV position of the sequence occupying `slot`, if any

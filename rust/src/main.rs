@@ -25,11 +25,12 @@ const USAGE: &str = "usage: xshare <serve|run|client|info> [--flags]
   serve  --preset P --policy POL [--batch N] [--spec-len L] [--spec-adaptive]
          [--spec-draft model|lookup] [--prefill-chunk T] [--admission A]
          [--max-queue Q] [--footprint-decay D] [--ep-gpus G] [--ep-evict]
-         [--ep-rebalance N] [--addr A] [--config F]
+         [--ep-rebalance N] [--prefix-cache-mb MB] [--prefix-min-tokens N]
+         [--addr A] [--config F]
   run    --preset P --policy POL --requests N [--batch N] [--spec-len L]
          [--spec-adaptive] [--spec-draft D] [--prefill-chunk T]
          [--admission A] [--ep-gpus G] [--ep-evict] [--ep-rebalance N]
-         [--seed S]
+         [--prefix-cache-mb MB] [--prefix-min-tokens N] [--seed S]
   client --addr A --prompt 1,2,3 [--max-new-tokens N] [--id I]
          [--priority P] [--deadline-ms D] [--stream]
   info   --preset P
@@ -42,7 +43,11 @@ spec:      --spec-adaptive adapts per-row draft depth per traffic class;
 ep:        --ep-gpus G [--ep-placement P] deploys expert-parallel; with
            footprint admission, --ep-evict preempts far-worse-fitting rows
            (lossless resume) and --ep-rebalance N re-places experts by the
-           tracked class mix every N slot frees";
+           tracked class mix every N slot frees
+prefix:    --prefix-cache-mb MB caches released rows' prefix KV under an
+           LRU VRAM budget; admissions extending a cached prefix restore
+           it and prefill only the suffix (--prefix-min-tokens N gates
+           what is worth keeping)";
 
 fn main() {
     if let Err(e) = real_main() {

@@ -198,6 +198,32 @@ pub struct ServeMetrics {
     /// the continuous-batching "late joiner" count (always 0 under
     /// batch-at-a-time serving of uniform-length requests).
     pub admitted_in_flight: u64,
+    /// Prefix-cache lookups whose prompt extended a cached entry (slab
+    /// restored, suffix-only prefill).
+    pub prefix_hits: u64,
+    /// Prefix-cache lookups that found no usable entry.
+    pub prefix_misses: u64,
+    /// Slabs admitted into the prefix cache (finish/eviction offers that
+    /// passed the min-tokens/budget gates).
+    pub prefix_inserts: u64,
+    /// Slabs LRU-evicted from the prefix cache to fit the VRAM budget.
+    pub prefix_evictions: u64,
+    /// Tokens currently resident in the prefix cache (gauge, mirrored at
+    /// every cache-touching operation).
+    pub prefix_cached_tokens: u64,
+    /// Prompt positions satisfied by cache restore instead of a prefill
+    /// forward. The restore-vs-recompute split: restored positions never
+    /// land in [`ServeMetrics::tokens_prompt`], which keeps counting only
+    /// positions actually forwarded.
+    pub prefill_restored_tokens: u64,
+    /// Eviction-resume admissions whose history was still cached — the
+    /// recompute was skipped entirely or partially.
+    pub resume_restores: u64,
+    /// Eviction-resume admissions that re-prefilled their whole history
+    /// because the offered slab had already been evicted (counted only
+    /// when the cache is enabled; with the cache off every resume
+    /// recomputes and neither counter moves).
+    pub resume_recomputes: u64,
 }
 
 impl ServeMetrics {
@@ -403,6 +429,20 @@ impl ServeMetrics {
             "admitted_in_flight".into(),
             Json::num(self.admitted_in_flight as f64),
         );
+        m.insert("prefix_hits".into(), Json::num(self.prefix_hits as f64));
+        m.insert("prefix_misses".into(), Json::num(self.prefix_misses as f64));
+        m.insert("prefix_inserts".into(), Json::num(self.prefix_inserts as f64));
+        m.insert("prefix_evictions".into(), Json::num(self.prefix_evictions as f64));
+        m.insert(
+            "prefix_cached_tokens".into(),
+            Json::num(self.prefix_cached_tokens as f64),
+        );
+        m.insert(
+            "prefill_restored_tokens".into(),
+            Json::num(self.prefill_restored_tokens as f64),
+        );
+        m.insert("resume_restores".into(), Json::num(self.resume_restores as f64));
+        m.insert("resume_recomputes".into(), Json::num(self.resume_recomputes as f64));
         Json::Obj(m)
     }
 }
@@ -534,6 +574,31 @@ mod tests {
         let by_gpu = j.get("gpu_load_mean_by_gpu").and_then(|v| v.as_arr()).unwrap();
         assert_eq!(by_gpu.len(), 2);
         assert_eq!(by_gpu[0].as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn prefix_cache_gauges_dump() {
+        let mut m = ServeMetrics::new(1);
+        m.prefix_hits = 3;
+        m.prefix_misses = 5;
+        m.prefix_inserts = 4;
+        m.prefix_evictions = 1;
+        m.prefix_cached_tokens = 48;
+        m.prefill_restored_tokens = 36;
+        m.resume_restores = 2;
+        m.resume_recomputes = 1;
+        let j = m.to_json();
+        assert_eq!(j.get("prefix_hits").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get("prefix_misses").and_then(|v| v.as_f64()), Some(5.0));
+        assert_eq!(j.get("prefix_inserts").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(j.get("prefix_evictions").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("prefix_cached_tokens").and_then(|v| v.as_f64()), Some(48.0));
+        assert_eq!(
+            j.get("prefill_restored_tokens").and_then(|v| v.as_f64()),
+            Some(36.0)
+        );
+        assert_eq!(j.get("resume_restores").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(j.get("resume_recomputes").and_then(|v| v.as_f64()), Some(1.0));
     }
 
     #[test]

@@ -6,5 +6,7 @@ pub mod moe_model;
 pub mod sampler;
 
 pub use draft::{DraftModel, DraftRunner};
-pub use moe_model::{MoeModel, PrefillInput, PrefillOutput, RoutingMode, StepInput, StepOutput};
+pub use moe_model::{
+    KvPrefix, MoeModel, PrefillInput, PrefillOutput, RoutingMode, StepInput, StepOutput,
+};
 pub use sampler::{argmax, sample, Sampling};

@@ -43,6 +43,25 @@
 //! (pinned by `rust/tests/ep_serve.rs`). The victim slot's stale bytes
 //! beyond a later occupant's `pos` are masked by the attention kernel,
 //! exactly as for ordinary slot reuse after a finish.
+//!
+//! ## The cache-restore KV contract
+//!
+//! The prefix cache (`coordinator::prefix_cache`) copies KV bytes OUT of a
+//! row ([`MoeModel::extract_prefix`]) and back INTO a (possibly different)
+//! row later ([`MoeModel::restore_prefix`]), skipping the prefill forwards
+//! for the restored positions. This is byte-faithful for the same reason
+//! the replays above are: the K/V written at position `p` depend only on
+//! the token embedding at `p`, the layer weights and the row's cache
+//! prefix `< p`. A stored slab therefore carries everything a prefill of
+//! the same token prefix would have produced, bit for bit, regardless of
+//! which row it lands in — restore-then-suffix-prefill leaves the identical
+//! cache state (and identical `kv_row_digest`) as a cold chunk prefill of
+//! the whole prompt. Two provisos, both enforced by the coordinator: the
+//! restored tokens must be an exact prefix of the new prompt (the cache is
+//! keyed and verified on the token stream), and at least the prompt's last
+//! token must still be fed through the model — the first generated token
+//! needs real last-position logits, which no slab stores. Pinned across
+//! policies × chunk sizes by `rust/tests/prefix_cache.rs`.
 
 use anyhow::{bail, Result};
 
@@ -107,6 +126,34 @@ pub struct PrefillOutput {
     /// Per-layer router probability matrices `[max_batch × N]` (rows
     /// `0..tokens.len()` are the chunk positions), if requested.
     pub probs: Option<Vec<ScoreMatrix>>,
+}
+
+/// A compact copy of one row's KV prefix — what the prefix cache stores
+/// and [`MoeModel::restore_prefix`] writes back. Per layer, the first
+/// `len` positions of every head, packed `[n_heads][len][head_dim]` (the
+/// row-internal cache layout with the sequence axis truncated to `len`).
+/// See "The cache-restore KV contract" in the module docs for why these
+/// bytes are position-portable across rows.
+#[derive(Debug, Clone)]
+pub struct KvPrefix {
+    /// Prefix length in token positions.
+    pub len: usize,
+    /// Per-layer K prefix, `n_heads * len * head_dim` f32s each.
+    pub k: Vec<Vec<f32>>,
+    /// Per-layer V prefix, same packing as `k`.
+    pub v: Vec<Vec<f32>>,
+}
+
+impl KvPrefix {
+    /// VRAM a resident copy of this slab occupies (the prefix cache's
+    /// budget currency): every K and V f32 across layers.
+    pub fn bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .map(|l| l.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
 }
 
 /// Outputs of one decode step.
@@ -198,6 +245,86 @@ impl MoeModel {
             }
         }
         h.finish()
+    }
+
+    /// Copy the first `len` KV positions of `row` out of every layer's
+    /// cache into a compact [`KvPrefix`] slab (the prefix cache's unit of
+    /// storage). Pure read — the row's cache is untouched.
+    pub fn extract_prefix(&self, row: usize, len: usize) -> Result<KvPrefix> {
+        let m = self.dims();
+        if row >= m.max_batch {
+            bail!("extract_prefix row {row} out of range (max_batch {})", m.max_batch);
+        }
+        if len == 0 || len > m.max_seq {
+            bail!("extract_prefix len {len} outside 1..={}", m.max_seq);
+        }
+        let slab = m.n_heads * m.max_seq * m.head_dim;
+        let head = m.max_seq * m.head_dim;
+        let take = len * m.head_dim;
+        let copy_rows = |caches: &[HostTensor]| -> Result<Vec<Vec<f32>>> {
+            caches
+                .iter()
+                .map(|t| {
+                    let data = t.as_f32()?;
+                    let mut out = Vec::with_capacity(m.n_heads * take);
+                    for h in 0..m.n_heads {
+                        let at = row * slab + h * head;
+                        out.extend_from_slice(&data[at..at + take]);
+                    }
+                    Ok(out)
+                })
+                .collect()
+        };
+        let k = copy_rows(&self.k_cache)?;
+        let v = copy_rows(&self.v_cache)?;
+        Ok(KvPrefix { len, k, v })
+    }
+
+    /// Write a [`KvPrefix`] slab into positions `0..prefix.len` of `row`
+    /// across every layer — the warm half of the cache-restore KV contract
+    /// (module docs): byte-identical to prefilling the slab's tokens into
+    /// the row, without the forwards. Positions ≥ `prefix.len` are left
+    /// as-is (masked until the row advances past them).
+    pub fn restore_prefix(&mut self, row: usize, prefix: &KvPrefix) -> Result<()> {
+        let m = self.dims().clone();
+        if row >= m.max_batch {
+            bail!("restore_prefix row {row} out of range (max_batch {})", m.max_batch);
+        }
+        if prefix.len == 0 || prefix.len > m.max_seq {
+            bail!("restore_prefix len {} outside 1..={}", prefix.len, m.max_seq);
+        }
+        if prefix.k.len() != m.n_layers || prefix.v.len() != m.n_layers {
+            bail!(
+                "restore_prefix slab has {}+{} layers, model has {}",
+                prefix.k.len(),
+                prefix.v.len(),
+                m.n_layers
+            );
+        }
+        let slab = m.n_heads * m.max_seq * m.head_dim;
+        let head = m.max_seq * m.head_dim;
+        let take = prefix.len * m.head_dim;
+        let mut write_rows = |caches: &mut [HostTensor], src: &[Vec<f32>]| -> Result<()> {
+            for (t, layer) in caches.iter_mut().zip(src) {
+                if layer.len() != m.n_heads * take {
+                    bail!(
+                        "restore_prefix layer slab has {} f32s, geometry needs {}",
+                        layer.len(),
+                        m.n_heads * take
+                    );
+                }
+                if let HostTensor::F32 { data, .. } = t {
+                    for h in 0..m.n_heads {
+                        let at = row * slab + h * head;
+                        data[at..at + take].copy_from_slice(&layer[h * take..(h + 1) * take]);
+                    }
+                }
+            }
+            Ok(())
+        };
+        write_rows(&mut self.k_cache, &prefix.k)?;
+        write_rows(&mut self.v_cache, &prefix.v)?;
+        Ok(())
     }
 
     /// Forget all cache state (fresh serving run).

@@ -116,6 +116,7 @@ fn prop_fifo_policy_matches_pre_refactor_admission_order() {
                                 placement: None,
                                 top_k: 1,
                                 spec: None,
+                                prefix: None,
                             };
                             let Some(entry) = queue.pop_next(&ctx) else { break };
                             let id = entry.req.id;
@@ -444,6 +445,7 @@ fn prop_footprint_admission_is_starvation_free() {
                     placement: None,
                     top_k,
                     spec: None,
+                    prefix: None,
                 };
                 let picked = q.pop_next(&ctx).expect("queue never empty");
                 frees += 1;

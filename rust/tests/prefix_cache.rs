@@ -1,0 +1,382 @@
+//! Shared-prefix KV cache suite (PR 7). Three pins:
+//!
+//!  * **warm ≡ cold**: restoring a cached prefix slab and prefilling only
+//!    the suffix leaves byte-identical KV (`kv_row_digest`) and logits as
+//!    a cold chunk prefill of the whole prompt — across selection policies
+//!    and chunk sizes (the cache-restore KV contract in
+//!    `model/moe_model.rs`).
+//!  * **serving equivalence**: a ServeLoop with the cache on produces
+//!    byte-identical outputs to one with it off, while actually hitting
+//!    (warm turn-2 traffic) and restoring instead of recomputing on
+//!    eviction resume.
+//!  * **accounting fixes**: queue-wait is recorded per stint (incremental
+//!    on requeue, never double or dropped) and TTFT fires exactly once per
+//!    request from its ORIGINAL submission — including across mid-prefill
+//!    eviction and slot reuse.
+
+use xshare::config::ServeConfig;
+use xshare::coordinator::prefix_cache::PrefixCache;
+use xshare::coordinator::{Request, Scheduler, ServeLoop};
+use xshare::model::{MoeModel, PrefillInput};
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+use xshare::selection::PolicyKind;
+use xshare::util::check::forall;
+
+fn tiny_model() -> MoeModel {
+    let manifest = Manifest::load(&artifacts_root().join("tiny"))
+        .expect("tiny artifacts missing — run `make artifacts`");
+    assert!(
+        manifest.has_prefill(),
+        "tiny artifacts predate the prefill program — re-run `make artifacts`"
+    );
+    MoeModel::new(Engine::load(manifest).unwrap()).unwrap()
+}
+
+fn cfg(policy: &str, chunk: usize, max_new: usize) -> ServeConfig {
+    ServeConfig {
+        preset: "tiny".into(),
+        policy: PolicyKind::parse(policy).expect("policy"),
+        batch_size: 4,
+        prefill_chunk: chunk,
+        max_new_tokens: max_new,
+        ..Default::default()
+    }
+}
+
+fn warm_cfg(policy: &str, chunk: usize, max_new: usize) -> ServeConfig {
+    ServeConfig {
+        prefix_cache_mb: 64,
+        prefix_min_tokens: 2,
+        ..cfg(policy, chunk, max_new)
+    }
+}
+
+fn prompt_of(len: usize, seed: u64, vocab: u64) -> Vec<u32> {
+    (0..len as u64).map(|i| ((seed.wrapping_mul(31) + i * 7 + 3) % vocab) as u32).collect()
+}
+
+/// Feed `tokens` into `row` starting at `start_pos`, `chunk` positions per
+/// invocation, returning the final chunk's logits.
+fn prefill_all(
+    model: &mut MoeModel,
+    policy: &dyn xshare::selection::SelectionPolicy,
+    row: usize,
+    start_pos: usize,
+    tokens: &[u32],
+    chunk: usize,
+) -> Vec<f32> {
+    let cap = model.prefill_capacity();
+    let mut pos = start_pos;
+    let mut last = Vec::new();
+    for piece in tokens.chunks(chunk.min(cap)) {
+        let out = model
+            .prefill_chunk(&PrefillInput {
+                row,
+                start_pos: pos,
+                tokens: piece,
+                policy,
+                collect_probs: false,
+            })
+            .expect("prefill chunk");
+        pos += piece.len();
+        last = out.last_logits;
+    }
+    last
+}
+
+#[test]
+fn warm_restore_byte_identical_across_policies_and_chunk_sizes() {
+    // THE cache-restore contract. For random prompts, split points,
+    // policies and chunk sizes: extract the first n positions after a cold
+    // prefill, reset, restore them, prefill only the suffix — final KV
+    // digest and last logits must match the cold arm bit for bit.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let policies = ["vanilla", "batch:6:1", "spec:1:0:2", "lynx:2", "skip:0.3", "opp:1"];
+    forall(
+        37,
+        10,
+        |rng| {
+            let policy = policies[rng.below(policies.len())];
+            let prompt_len = 3 + rng.below(8); // 3..=10
+            let split = 1 + rng.below(prompt_len - 1); // 1..=len-1: suffix stays
+            let chunk = 1 + rng.below(4); // 1..=4 (tiny capacity is 4)
+            let seed = rng.below(1000) as u64;
+            (policy, prompt_len, split, chunk, seed)
+        },
+        |&(policy, prompt_len, split, chunk, seed)| {
+            let prompt = prompt_of(prompt_len, seed, vocab);
+            let pol = PolicyKind::parse(policy).unwrap().build();
+
+            // cold arm: whole prompt from a fresh cache
+            model.reset();
+            let cold_logits = prefill_all(&mut model, pol.as_ref(), 0, 0, &prompt, chunk);
+            let cold_digest = model.kv_row_digest(0);
+            let slab = model.extract_prefix(0, split).map_err(|e| format!("{e:#}"))?;
+
+            // warm arm: restore the n-prefix, prefill only the suffix
+            model.reset();
+            model.restore_prefix(0, &slab).map_err(|e| format!("{e:#}"))?;
+            let warm_logits =
+                prefill_all(&mut model, pol.as_ref(), 0, split, &prompt[split..], chunk);
+            let warm_digest = model.kv_row_digest(0);
+
+            if warm_digest != cold_digest {
+                return Err(format!(
+                    "[{policy} chunk={chunk} split={split}/{prompt_len}] KV digest \
+                     diverged after restore"
+                ));
+            }
+            if warm_logits != cold_logits {
+                return Err(format!(
+                    "[{policy} chunk={chunk} split={split}/{prompt_len}] last logits \
+                     diverged after restore"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn restore_is_row_portable() {
+    // The contract's portability clause: a slab extracted from one row
+    // restores into a DIFFERENT row with identical end state — K/V at a
+    // position depend only on the token, the weights and the cache prefix,
+    // never on the row index.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let prompt = prompt_of(8, 21, vocab);
+    let pol = PolicyKind::parse("vanilla").unwrap().build();
+
+    model.reset();
+    prefill_all(&mut model, pol.as_ref(), 0, 0, &prompt, 4);
+    let cold_digest = model.kv_row_digest(0);
+    let slab = model.extract_prefix(0, 5).unwrap();
+
+    model.reset();
+    model.restore_prefix(2, &slab).unwrap();
+    prefill_all(&mut model, pol.as_ref(), 2, 5, &prompt[5..], 4);
+    assert_eq!(
+        model.kv_row_digest(2),
+        cold_digest,
+        "row-2 restore of a row-0 slab must land the same bytes"
+    );
+}
+
+#[test]
+fn lru_eviction_with_real_slabs_and_mid_restore_hit() {
+    // Tight-budget LRU over model-extracted slabs, with a hit mid-restore:
+    // a clone handed out by lookup() must survive the entry's eviction and
+    // still restore byte-identically.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let pol = PolicyKind::parse("vanilla").unwrap().build();
+    let prompt_a = prompt_of(8, 1, vocab);
+    let prompt_b = prompt_of(8, 2, vocab);
+
+    model.reset();
+    prefill_all(&mut model, pol.as_ref(), 0, 0, &prompt_a, 4);
+    let cold_digest_a = model.kv_row_digest(0);
+    let slab_a = model.extract_prefix(0, 6).unwrap();
+    model.reset();
+    prefill_all(&mut model, pol.as_ref(), 0, 0, &prompt_b, 4);
+    let slab_b = model.extract_prefix(0, 6).unwrap();
+
+    // budget fits exactly one slab
+    let mut cache = PrefixCache::new(slab_a.bytes(), 1);
+    assert!(cache.insert(&prompt_a[..6], slab_a));
+    // the hit is mid-restore: the clone is out, then B's insert evicts A
+    let held = cache.lookup(&prompt_a).expect("resident entry hits");
+    assert!(cache.insert(&prompt_b[..6], slab_b));
+    assert_eq!(cache.stats.evictions, 1, "budget for one slab forces LRU eviction");
+    assert_eq!(cache.probe(&prompt_a), 0, "A is gone from the cache");
+
+    // the held clone still restores A byte-identically
+    model.reset();
+    model.restore_prefix(0, &held).unwrap();
+    prefill_all(&mut model, pol.as_ref(), 0, 6, &prompt_a[6..], 4);
+    assert_eq!(model.kv_row_digest(0), cold_digest_a);
+}
+
+/// Drive `core` until idle, asserting step() never errors.
+fn drain(core: &mut ServeLoop) {
+    while core.has_work() {
+        core.step().expect("step");
+    }
+}
+
+#[test]
+fn warm_serving_byte_identical_with_hits() {
+    // Two-turn traffic through a full ServeLoop: turn 2 extends turn 1's
+    // prompt+output. With the cache on, outputs must stay byte-identical
+    // to the cache-off loop while the turn-2 admissions actually hit and
+    // skip prefill forwards for the restored positions.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let t1_prompt = prompt_of(8, 42, vocab);
+    let max_new = 3;
+
+    let mut run = |c: ServeConfig, model: &mut MoeModel| {
+        let mut core = ServeLoop::new(model, c).unwrap();
+        core.submit(Request::new(1, t1_prompt.clone(), max_new)).unwrap();
+        let mut t1_out = Vec::new();
+        while core.has_work() {
+            for (id, toks) in core.step().expect("step").finished {
+                if id == 1 {
+                    t1_out = toks;
+                }
+            }
+        }
+        // turn 2: the full turn-1 conversation plus a fresh user turn
+        let mut t2_prompt = t1_prompt.clone();
+        t2_prompt.extend_from_slice(&t1_out);
+        t2_prompt.extend_from_slice(&prompt_of(3, 43, vocab));
+        core.submit(Request::new(2, t2_prompt, max_new)).unwrap();
+        drain(&mut core);
+        core.report()
+    };
+
+    let cold = run(cfg("vanilla", 4, max_new), &mut model);
+    let warm = run(warm_cfg("vanilla", 4, max_new), &mut model);
+
+    assert_eq!(warm.outputs, cold.outputs, "cache restore must not change tokens");
+    assert!(warm.metrics.prefix_hits > 0, "turn 2 must hit the cache");
+    assert!(warm.metrics.prefix_inserts > 0);
+    assert!(warm.metrics.prefill_restored_tokens > 0);
+    assert!(
+        warm.metrics.tokens_prompt < cold.metrics.tokens_prompt,
+        "restored positions must not be re-forwarded ({} vs {})",
+        warm.metrics.tokens_prompt,
+        cold.metrics.tokens_prompt
+    );
+    assert_eq!(cold.metrics.prefix_hits, 0, "disabled cache never hits");
+    assert_eq!(cold.metrics.prefix_inserts, 0);
+}
+
+#[test]
+fn eviction_resume_restores_from_cache_losslessly() {
+    // The resume-accounting tentpole wire: a row evicted mid-generation
+    // offers its history to the cache; its re-admission restores the slab
+    // instead of re-prefilling — same tokens as a run that was never
+    // evicted, with the restore visible in the metrics.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let prompt = prompt_of(6, 7, vocab);
+    let max_new = 4;
+
+    // baseline: never evicted
+    let base = Scheduler::new(&mut model, warm_cfg("vanilla", 4, max_new))
+        .unwrap()
+        .run(vec![Request::new(1, prompt.clone(), max_new)])
+        .unwrap();
+
+    // evicted after its second commit, resumed via cache restore
+    let mut core = ServeLoop::new(&mut model, warm_cfg("vanilla", 4, max_new)).unwrap();
+    core.submit(Request::new(1, prompt.clone(), max_new)).unwrap();
+    let mut committed = 0;
+    while committed < 2 {
+        committed += core.step().expect("step").committed;
+    }
+    let evicted = core.evict_slot(0);
+    assert!(evicted.is_some(), "decode row must be evictable");
+    drain(&mut core);
+    let resumed = core.report();
+
+    assert_eq!(resumed.outputs, base.outputs, "eviction resume must be lossless");
+    assert_eq!(resumed.metrics.evictions, 1);
+    assert_eq!(
+        resumed.metrics.resume_restores, 1,
+        "the offered slab must satisfy the resume admission"
+    );
+    assert_eq!(resumed.metrics.resume_recomputes, 0);
+    assert!(resumed.metrics.prefill_restored_tokens > 0);
+    assert!(
+        resumed.metrics.tokens_prompt < base.metrics.tokens_prompt + prompt.len() as u64,
+        "resume must not re-forward the whole history"
+    );
+}
+
+#[test]
+fn queue_wait_records_one_incremental_sample_per_stint() {
+    // Satellite-1 regression: eviction resume must record the SECOND
+    // stint's incremental wait (here 0: the requeue is re-admitted at the
+    // same sim instant), never re-record the first stint's wait (the
+    // double-record bug) and never drop the sample (the old guard).
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let mut core = ServeLoop::new(&mut model, cfg("vanilla", 1, 6)).unwrap();
+    core.submit(Request::new(1, prompt_of(4, 3, vocab), 6)).unwrap();
+    let mut committed = 0;
+    while committed < 2 {
+        committed += core.step().expect("step").committed;
+    }
+    let m = core.metrics();
+    assert_eq!(m.queue_wait.n, 1, "first admission records the first stint");
+    let first_sum = m.queue_wait.sum;
+    assert!(m.sim_seconds > 0.0, "sim must have advanced before the eviction");
+
+    core.evict_slot(0).expect("occupied slot evicts");
+    drain(&mut core);
+    let m = core.metrics();
+    assert_eq!(m.queue_wait.n, 2, "requeue stint records its own sample");
+    assert!(
+        (m.queue_wait.sum - first_sum).abs() < 1e-12,
+        "incremental wait is 0 for an immediate re-admission; {} re-recorded \
+         time the row spent being SERVED",
+        m.queue_wait.sum - first_sum
+    );
+}
+
+#[test]
+fn mid_prefill_eviction_keeps_exactly_one_ttft_from_original_submit() {
+    // Satellite-2 pin (a): a row evicted before its first token still gets
+    // exactly one TTFT sample, measured from the ORIGINAL submission — the
+    // resume admission must not drop the pending entry or re-anchor it.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let mut core = ServeLoop::new(&mut model, cfg("vanilla", 2, 3)).unwrap();
+    core.submit(Request::new(1, prompt_of(8, 9, vocab), 3)).unwrap();
+    let o = core.step().expect("step");
+    assert_eq!(o.committed, 0, "one chunk of 2 over an 8-token prompt is mid-prefill");
+    assert_eq!(core.metrics().ttft.n, 0);
+    let sim_at_evict = core.metrics().sim_seconds;
+    assert!(sim_at_evict > 0.0);
+
+    core.evict_slot(0).expect("mid-prefill row evicts");
+    drain(&mut core);
+    let m = core.metrics();
+    assert_eq!(m.ttft.n, 1, "exactly one TTFT sample across the eviction");
+    assert!(
+        m.ttft.min >= sim_at_evict,
+        "TTFT {} anchored at the original submit must cover the pre-eviction \
+         steps ({} s)",
+        m.ttft.min,
+        sim_at_evict
+    );
+}
+
+#[test]
+fn slot_reuse_does_not_inherit_ttft_state() {
+    // Satellite-2 pin (b): two requests through the same slot record one
+    // TTFT each — the second admission overwrites the slot's pending entry
+    // instead of inheriting `recorded` (or the clock) from the first.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let mut core = ServeLoop::new(&mut model, cfg("vanilla", 1, 2)).unwrap();
+    core.submit(Request::new(1, prompt_of(3, 1, vocab), 2)).unwrap();
+    drain(&mut core);
+    assert_eq!(core.metrics().ttft.n, 1);
+    let sim_at_resubmit = core.metrics().sim_seconds;
+    core.submit(Request::new(2, prompt_of(3, 2, vocab), 2)).unwrap();
+    drain(&mut core);
+    let m = core.metrics();
+    assert_eq!(m.ttft.n, 2, "slot reuse must record the second request's TTFT");
+    assert!(
+        m.ttft.max < sim_at_resubmit,
+        "TTFT {} reaches past the resubmit instant {} — the reused slot \
+         anchored the second request on the first one's clock",
+        m.ttft.max,
+        sim_at_resubmit
+    );
+}
