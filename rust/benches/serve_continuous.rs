@@ -98,6 +98,12 @@ struct ModeResult {
     spec_stalled_steps: u64,
     spec_accepted: u64,
     spec_acceptance_rate: f64,
+    tokens_prompt: u64,
+    prompt_tps: f64,
+    mean_activated: f64,
+    prefill_waves: u64,
+    prefill_streams_saved: u64,
+    rows_per_wave_mean: f64,
 }
 
 impl ModeResult {
@@ -156,6 +162,12 @@ fn serve_continuous_with(
         spec_stalled_steps: report.metrics.spec_stalled_steps,
         spec_accepted: report.metrics.spec_accepted,
         spec_acceptance_rate: report.metrics.acceptance_rate(),
+        tokens_prompt: report.metrics.tokens_prompt,
+        prompt_tps: report.metrics.prompt_tokens_per_s(),
+        mean_activated: report.metrics.mean_activated(),
+        prefill_waves: report.metrics.prefill_waves,
+        prefill_streams_saved: report.metrics.prefill_streams_saved,
+        rows_per_wave_mean: report.metrics.prefill_rows_per_wave.mean(),
         outputs: report.outputs,
     }
 }
@@ -213,6 +225,12 @@ fn serve_batched(
         spec_stalled_steps: 0,
         spec_accepted: 0,
         spec_acceptance_rate: 0.0,
+        tokens_prompt: 0,
+        prompt_tps: 0.0,
+        mean_activated: 0.0,
+        prefill_waves: 0,
+        prefill_streams_saved: 0,
+        rows_per_wave_mean: 0.0,
     }
 }
 
@@ -320,6 +338,203 @@ fn long_prompt_scenario(model: &mut MoeModel) {
         );
     }
     table.print("serve_continuous — long-prompt chunked prefill TTFT");
+}
+
+/// **Fused prefill wave scenario (PR 8)**: the same prompt-heavy Poisson
+/// load as [`long_prompt_scenario`], chunked prefill on — once with the
+/// pre-PR8 sequential per-chunk charging (setup hook) and once with the
+/// default fused multi-row waves. The charging toggle never changes which
+/// forwards run, so outputs must be byte-identical; the fused arm must
+/// then win strictly on prompt-tokens/s (one per-forward overhead + one
+/// dense-weight stream per wave instead of per chunk) and on mean TTFT.
+/// A third arm turns on `--chunk-shared-selection` (lossy: all positions
+/// of a chunk share one expert set per layer) and reports its activated-
+/// experts reduction *with* its routing-fidelity delta side by side —
+/// never silently. Emits `BENCH_prefill_fused.json`.
+fn prefill_fused_scenario(model: &mut MoeModel) {
+    println!(
+        "\n# fused prefill waves — wave-charged vs sequential chunk charging \
+         ({LONG_N_REQUESTS} reqs × {LONG_PROMPT_LEN}-token prompts, \
+         chunk={PREFILL_CHUNK}, {LONG_MAX_NEW} new)"
+    );
+    let vocab = model.dims().vocab;
+    let mut arrivals = long_prompt_trace(vocab);
+
+    // Calibrate the arrival window against the chunked vanilla busy time so
+    // multiple rows genuinely co-prefill (waves with one row fuse nothing).
+    let mut probe_cfg = base_cfg("vanilla");
+    probe_cfg.max_new_tokens = LONG_MAX_NEW;
+    probe_cfg.prefill_chunk = PREFILL_CHUNK;
+    let probe_reqs: Vec<Request> = arrivals.iter().map(|(_, r)| r.clone()).collect();
+    let probe = Scheduler::new(model, probe_cfg.clone())
+        .expect("probe scheduler")
+        .run(probe_reqs)
+        .expect("probe run");
+    let busy = probe.metrics.sim_seconds;
+    let t_last = arrivals.last().map(|(t, _)| *t).unwrap_or(0.0).max(1e-12);
+    let scale = ARRIVAL_WINDOW_FRAC * busy / t_last;
+    for (t, _) in arrivals.iter_mut() {
+        *t *= scale;
+    }
+
+    let cfg = probe_cfg;
+    let seq = serve_continuous_with(model, &cfg, &arrivals, |core| {
+        core.set_sequential_prefill_charging(true)
+    });
+    let fused = serve_continuous(model, &cfg, &arrivals);
+
+    // The toggle is charge-only: identical forwards, identical tokens.
+    assert_eq!(
+        seq.outputs, fused.outputs,
+        "fused wave charging changed generated tokens — it must be cost-only"
+    );
+    assert_eq!(seq.tokens_prompt, fused.tokens_prompt, "prompt-token accounting diverged");
+    assert_eq!(seq.prefill_waves, 0, "sequential charging must record no waves");
+    assert!(
+        fused.prefill_waves > 0 && fused.prefill_streams_saved > 0,
+        "the Poisson long-prompt mix never co-prefilled two rows — scenario \
+         is not exercising wave fusion"
+    );
+    assert!(
+        fused.prompt_tps > seq.prompt_tps,
+        "ACCEPTANCE: fused waves must yield strictly higher prompt-tokens/s \
+         than sequential chunk charging at byte-equal outputs ({} vs {})",
+        fused.prompt_tps,
+        seq.prompt_tps
+    );
+    assert!(
+        fused.ttft_mean_s < seq.ttft_mean_s,
+        "ACCEPTANCE: fused waves must cut mean TTFT ({} vs {})",
+        fused.ttft_mean_s,
+        seq.ttft_mean_s
+    );
+
+    // Opt-in lossy arm: chunk-shared expert selection on top of the waves.
+    // Distortion is measured against the exact fused arm and reported as a
+    // first-class number next to the activation win.
+    let shared_cfg = ServeConfig { chunk_shared_selection: true, ..cfg.clone() };
+    let shared = serve_continuous(model, &shared_cfg, &arrivals);
+    let fid = xshare::coordinator::compare(&fused.outputs, &shared.outputs);
+    assert!(
+        fid.token_match.is_finite() && (0.0..=1.0).contains(&fid.token_match),
+        "shared-selection fidelity must be a finite fraction, got {}",
+        fid.token_match
+    );
+    assert!(
+        shared.mean_activated < fused.mean_activated,
+        "ACCEPTANCE: chunk-shared selection must activate strictly fewer \
+         experts per forward ({} vs {})",
+        shared.mean_activated,
+        fused.mean_activated
+    );
+    let shared_drop_pts = (1.0 - fid.token_match) * 100.0;
+
+    let mut table = Table::new(&[
+        "arm",
+        "tokens",
+        "prompt_toks",
+        "prompt_tps",
+        "ttft_mean_s",
+        "waves",
+        "streams_saved",
+        "mean_act",
+        "token_match",
+    ]);
+    for (arm, r, tm) in [
+        ("sequential", &seq, "-".to_string()),
+        ("fused", &fused, "1.0000 (exact)".to_string()),
+        ("fused+shared", &shared, format!("{:.4}", fid.token_match)),
+    ] {
+        table.row(&[
+            arm.to_string(),
+            r.tokens.to_string(),
+            r.tokens_prompt.to_string(),
+            fmt(r.prompt_tps, 1),
+            fmt(r.ttft_mean_s, 4),
+            r.prefill_waves.to_string(),
+            r.prefill_streams_saved.to_string(),
+            fmt(r.mean_activated, 2),
+            tm,
+        ]);
+    }
+    table.print("serve_continuous — fused prefill waves vs sequential charging");
+    println!(
+        "[prefill_fused] prompt-tokens/s {:+.1}%, mean TTFT {:+.1}%, \
+         rows/wave {:.2}; shared selection: activated {:+.1}%, \
+         token-match {:.4} ({:.2} pts drop)",
+        pct(fused.prompt_tps, seq.prompt_tps),
+        pct(fused.ttft_mean_s, seq.ttft_mean_s),
+        fused.rows_per_wave_mean,
+        pct(shared.mean_activated, fused.mean_activated),
+        fid.token_match,
+        shared_drop_pts,
+    );
+
+    let json = xshare::util::json::Json::obj(vec![
+        ("scenario", xshare::util::json::Json::str("prefill_fused")),
+        ("preset", xshare::util::json::Json::str(PRESET)),
+        ("requests", xshare::util::json::Json::num(LONG_N_REQUESTS as f64)),
+        ("prompt_len", xshare::util::json::Json::num(LONG_PROMPT_LEN as f64)),
+        ("prefill_chunk", xshare::util::json::Json::num(PREFILL_CHUNK as f64)),
+        ("tokens_out", xshare::util::json::Json::num(fused.tokens as f64)),
+        (
+            "prompt_tokens",
+            xshare::util::json::Json::num(fused.tokens_prompt as f64),
+        ),
+        ("seq_prompt_tps", xshare::util::json::Json::num(seq.prompt_tps)),
+        (
+            "fused_prompt_tps",
+            xshare::util::json::Json::num(fused.prompt_tps),
+        ),
+        (
+            "prompt_tps_gain_pct",
+            xshare::util::json::Json::num(pct(fused.prompt_tps, seq.prompt_tps)),
+        ),
+        ("seq_ttft_mean_s", xshare::util::json::Json::num(seq.ttft_mean_s)),
+        (
+            "fused_ttft_mean_s",
+            xshare::util::json::Json::num(fused.ttft_mean_s),
+        ),
+        (
+            "ttft_gain_pct",
+            xshare::util::json::Json::num(pct(fused.ttft_mean_s, seq.ttft_mean_s)),
+        ),
+        (
+            "prefill_waves",
+            xshare::util::json::Json::num(fused.prefill_waves as f64),
+        ),
+        (
+            "rows_per_wave_mean",
+            xshare::util::json::Json::num(fused.rows_per_wave_mean),
+        ),
+        (
+            "prefill_streams_saved",
+            xshare::util::json::Json::num(fused.prefill_streams_saved as f64),
+        ),
+        (
+            "fused_mean_activated",
+            xshare::util::json::Json::num(fused.mean_activated),
+        ),
+        (
+            "shared_mean_activated",
+            xshare::util::json::Json::num(shared.mean_activated),
+        ),
+        (
+            "shared_activated_delta_pct",
+            xshare::util::json::Json::num(pct(shared.mean_activated, fused.mean_activated)),
+        ),
+        (
+            "shared_token_match",
+            xshare::util::json::Json::num(fid.token_match),
+        ),
+        (
+            "shared_drop_pts",
+            xshare::util::json::Json::num(shared_drop_pts),
+        ),
+    ])
+    .dump();
+    emit_bench("BENCH_prefill_fused.json", &json);
+    println!("[prefill_fused] wrote BENCH_prefill_fused.json");
 }
 
 // Mixed-phase speculation scenario (PR 4): long-prompt Poisson arrivals
@@ -1323,10 +1538,11 @@ fn admission_sim_scenario() {
 fn main() {
     // Scenario filter: `cargo bench --bench serve_continuous -- spec`
     // runs only the mixed-phase speculation scenario, `-- ep` the two
-    // expert-parallel scenarios, and `-- prefix` the shared-prefix cache
-    // scenario (CI executes the filters and uploads BENCH_spec.json /
-    // BENCH_ep_serve.json / BENCH_ep_migrate.json / BENCH_prefix.json); no
-    // filter runs everything. `--write-bench <dir>` additionally mirrors
+    // expert-parallel scenarios, `-- prefix` the shared-prefix cache
+    // scenario, and `-- prefill_fused` the fused prefill-wave scenario
+    // (CI executes the filters and uploads BENCH_spec.json /
+    // BENCH_ep_serve.json / BENCH_ep_migrate.json / BENCH_prefix.json /
+    // BENCH_prefill_fused.json); no filter runs everything. `--write-bench <dir>` additionally mirrors
     // every emitted BENCH_*.json into `<dir>` — the recipe for refreshing
     // the reference snapshots under `benchmarks/`.
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -1358,6 +1574,11 @@ fn main() {
     }
     if only.as_deref() == Some("prefix") {
         prefix_shared_cache_scenario();
+        return;
+    }
+    if only.as_deref() == Some("prefill_fused") {
+        let mut model = load_model(PRESET);
+        prefill_fused_scenario(&mut model);
         return;
     }
     println!(
@@ -1444,6 +1665,7 @@ fn main() {
     table.print("serve_continuous — continuous admission vs gather-batch worker");
 
     long_prompt_scenario(&mut model);
+    prefill_fused_scenario(&mut model);
     admission_scenario(&mut model);
     ep_serve_scenario(&mut model);
     ep_migrate_scenario(&mut model);

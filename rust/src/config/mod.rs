@@ -80,6 +80,16 @@ pub struct ServeConfig {
     /// (requires the preset to ship `prefill_attn_router`). Bounded by the
     /// compiled `max_seq` at `ServeLoop` construction.
     pub prefill_chunk: usize,
+    /// Chunk-batched expert selection (`--chunk-shared-selection`): within
+    /// a prefill wave, pool the per-position router scores and run the
+    /// paper's modular greedy objective once, so every position of a chunk
+    /// shares one expert set per layer (cheaper fused forwards). **Lossy**:
+    /// routing may differ from exact per-position top-k, so the serving
+    /// harness measures the distortion through `coordinator::fidelity` and
+    /// reports it as a first-class metric (`shared_selection_fidelity`) —
+    /// never silently. Requires chunked prefill (`prefill_chunk` ≥ 2). Off
+    /// by default (exact routing, byte-identical outputs).
+    pub chunk_shared_selection: bool,
     /// Hardware cost profile for OTPS accounting.
     pub hardware: String,
     /// Admission policy: which queued request takes the next free batch
@@ -153,6 +163,7 @@ impl Default for ServeConfig {
             spec_adaptive: false,
             spec_draft: SpecDraft::Model,
             prefill_chunk: 1,
+            chunk_shared_selection: false,
             hardware: "h100".into(),
             admission: AdmissionKind::Fifo,
             max_queue: 0,
@@ -183,7 +194,8 @@ impl ServeConfig {
 
         let known = [
             "preset", "policy", "batch_size", "spec_len", "spec_adaptive", "spec_draft",
-            "prefill_chunk", "hardware", "admission", "max_queue", "footprint_decay",
+            "prefill_chunk", "chunk_shared_selection", "hardware", "admission",
+            "max_queue", "footprint_decay",
             "ep_evict", "ep_rebalance", "ep_replica_slack", "ep_migrate_budget",
             "ep_prefetch", "prefix_cache_mb", "prefix_min_tokens", "ep", "addr", "seed",
             "max_new_tokens",
@@ -217,6 +229,9 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("prefill_chunk") {
             cfg.prefill_chunk = v.as_usize().context("prefill_chunk")?;
+        }
+        if let Some(v) = root.get("chunk_shared_selection") {
+            cfg.chunk_shared_selection = v.as_bool().context("chunk_shared_selection")?;
         }
         if let Some(v) = root.get("hardware") {
             cfg.hardware = v.as_str().context("hardware")?.to_string();
@@ -298,6 +313,9 @@ impl ServeConfig {
         if args.has("prefill-chunk") {
             self.prefill_chunk = args.usize_or("prefill-chunk", self.prefill_chunk);
         }
+        if args.bool("chunk-shared-selection") {
+            self.chunk_shared_selection = true;
+        }
         if let Some(v) = args.get("hardware") {
             self.hardware = v.to_string();
         }
@@ -371,6 +389,13 @@ impl ServeConfig {
             // compiled max_seq is checked against the manifest at ServeLoop
             // construction; this is the config-level sanity ceiling
             bail!("prefill_chunk {} is beyond any compiled sequence length", self.prefill_chunk);
+        }
+        if self.chunk_shared_selection && self.prefill_chunk <= 1 {
+            bail!(
+                "--chunk-shared-selection needs chunked prefill (--prefill-chunk T ≥ 2): \
+                 sharing one expert set across a chunk's positions is meaningless when \
+                 every chunk is a single token"
+            );
         }
         if !(0.0..=1.0).contains(&self.footprint_decay) || !self.footprint_decay.is_finite()
         {
@@ -764,6 +789,38 @@ mod tests {
         assert_eq!(cfg.prefix_min_tokens, 6);
         let bad = Args::parse(
             "--prefix-min-tokens 0".split_whitespace().map(String::from),
+        );
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn chunk_shared_selection_roundtrip_and_validation() {
+        // default: exact per-position routing (byte-identical outputs)
+        assert!(!ServeConfig::default().chunk_shared_selection);
+
+        let p = write_tmp(
+            "shared_sel.json",
+            r#"{"prefill_chunk":8,"chunk_shared_selection":true}"#,
+        );
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert!(cfg.chunk_shared_selection);
+        assert_eq!(cfg.prefill_chunk, 8);
+
+        // shared selection without chunked prefill is a config error
+        let bad = write_tmp("shared_sel_bad.json", r#"{"chunk_shared_selection":true}"#);
+        let err = ServeConfig::from_json_file(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("chunk-shared-selection"), "{err:#}");
+
+        // CLI spellings
+        let args = Args::parse(
+            "--prefill-chunk 16 --chunk-shared-selection"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert!(cfg.chunk_shared_selection);
+        let bad = Args::parse(
+            "--chunk-shared-selection".split_whitespace().map(String::from),
         );
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }

@@ -140,6 +140,32 @@
 //! warm-prefix bonus ([`super::admission::PREFIX_HIT_WEIGHT`]), and
 //! eviction resume becomes a restore instead of a recompute whenever the
 //! victim's offered slab is still resident.
+//!
+//! ## Fused prefill waves (PR 8)
+//!
+//! Chunk plans no longer charge per row: each [`ServeLoop::run_chunk_plans`]
+//! round issues one prefill invocation per still-advancing plan and
+//! charges the whole round ONCE — a single target forward over the
+//! per-layer union of the rows' routed experts
+//! ([`MoeModel::wave_union`]) and the round's total token count
+//! ([`DecodeCostModel::prefill_wave`]; under EP one
+//! [`EpCostModel::layer_latency`]-priced step on the unioned
+//! [`Placement::loads`]). N co-prefilling rows thus share one amortized
+//! per-layer weight stream, exactly the lever continuous batching gives
+//! decode. Routing is untouched — tokens and `kv_row_digest` stay
+//! byte-identical to the sequential chunk walk
+//! ([`ServeLoop::set_sequential_prefill_charging`] restores the old
+//! accounting for pins/benches; pinned across policies × chunk sizes ×
+//! co-prefilling rows by `rust/tests/prefill_equivalence.rs`). Opt-in
+//! `--chunk-shared-selection` additionally pools each chunk's
+//! per-position router scores through the paper's modular greedy
+//! objective ([`crate::selection::shared_chunk_set`]) so all positions
+//! share one expert set per layer — lossy, so it ships with
+//! fidelity-delta accounting
+//! ([`ServeLoop::record_shared_selection_fidelity`], measured by the
+//! harness through [`super::fidelity::compare`]) while the wave metrics
+//! (`prefill_waves`, `prefill_streams_saved`, rows-per-wave,
+//! prompt-tokens/s) report the amortization first-class.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -322,6 +348,11 @@ pub struct ServeLoop<'m> {
     /// slab and chunk-prefill only the suffix. Disabled (zero-budget) by
     /// default.
     prefix_cache: PrefixCache,
+    /// Charge chunk-prefill invocations individually instead of fusing
+    /// each round of co-prefilling rows into one wave charge (restores
+    /// the pre-PR8 cost accounting). Bench/pin instrumentation — tokens
+    /// and KV are identical either way; only the charge differs.
+    sequential_prefill_charging: bool,
     started: Instant,
 }
 
@@ -382,6 +413,7 @@ impl<'m> ServeLoop<'m> {
             frees_since_rebalance: 0,
             migration_backlog_s: 0.0,
             prefix_cache: PrefixCache::new(0, 1),
+            sequential_prefill_charging: false,
             started: Instant::now(),
         };
         sl.reset()?;
@@ -436,6 +468,28 @@ impl<'m> ServeLoop<'m> {
     /// on the serving path.
     pub fn set_legacy_spec_gate(&mut self, on: bool) {
         self.legacy_spec_gate = on;
+    }
+
+    /// Restore the pre-PR8 per-invocation prefill charging: every chunk
+    /// invocation pays its own full per-layer weight stream instead of
+    /// the round's rows sharing one fused wave charge. Instrumentation
+    /// for benches and byte-identity pins
+    /// (`rust/tests/prefill_equivalence.rs`) — routing, tokens and KV are
+    /// unaffected; only cost accounting moves.
+    pub fn set_sequential_prefill_charging(&mut self, on: bool) {
+        self.sequential_prefill_charging = on;
+    }
+
+    /// Attach a measured shared-selection fidelity sample (`token_match`
+    /// from [`super::fidelity::compare`] of a `--chunk-shared-selection`
+    /// run against its exact-routing baseline). The loop cannot compute
+    /// this itself — it would need a second, baseline run of the same
+    /// trace — so the harness that ran both (bench scenario, tests, CLI
+    /// A/B) reports the delta here and it lands in `to_json` as
+    /// `shared_selection_fidelity` / `shared_selection_drop_pts`, never
+    /// silently.
+    pub fn record_shared_selection_fidelity(&mut self, token_match: f64) {
+        self.metrics.record_shared_selection_fidelity(token_match);
     }
 
     /// Pin every decoding row's draft depth (clamped to `[0, spec_len]`),
@@ -1171,11 +1225,14 @@ impl<'m> ServeLoop<'m> {
             return self.plain_step(slots, &[]);
         }
 
-        let rest: Vec<usize> = slots
-            .iter()
-            .copied()
-            .filter(|s| !plans.iter().any(|p| p.slot == *s))
-            .collect();
+        // Slot-membership table instead of a per-slot linear scan of the
+        // plans (slots × plans was quadratic in the batch width).
+        let mut is_chunk = vec![false; self.model.max_batch()];
+        for p in &plans {
+            is_chunk[p.slot] = true;
+        }
+        let rest: Vec<usize> =
+            slots.iter().copied().filter(|&s| !is_chunk[s]).collect();
 
         let mut events = StepEvents::default();
         if !rest.is_empty() {
@@ -1200,54 +1257,94 @@ impl<'m> ServeLoop<'m> {
         Ok(events)
     }
 
-    /// Advance every chunk plan through the prefill artifact (possibly
-    /// several invocations for chunks beyond the compiled capacity),
-    /// charge each invocation as one target forward over its true token
-    /// count, and commit prompt progress per row. Plans are truncated to
-    /// what the target actually consumed (max_seq-boundary tails continue
-    /// one token per step) so the draft shadow stays aligned.
+    /// Advance every chunk plan through the prefill artifact in
+    /// round-robin **waves**: round r issues one invocation per plan that
+    /// still has tokens (and cache window) left, and the whole round is
+    /// charged ONCE — a single fused target forward over the per-layer
+    /// UNION of the rows' routed experts and the round's total token
+    /// count ([`ServeLoop::charge_wave`]). N co-prefilling rows thus
+    /// share one amortized per-layer weight stream, exactly the lever
+    /// continuous batching gives decode. Routing stays per row per
+    /// position — the invocations are byte-identical to the sequential
+    /// walk, only the charge fuses (the prefill-wave contract in
+    /// `model/moe_model.rs`). Plans are truncated to what the target
+    /// actually consumed (max_seq-boundary tails continue one token per
+    /// step) so the draft shadow stays aligned.
     fn run_chunk_plans(&mut self, plans: &mut [ChunkPlan]) -> Result<StepEvents> {
         let cap = self.model.prefill_capacity();
         let max_seq = self.model.dims().max_seq;
+        let shared = self.cfg.chunk_shared_selection;
         let mut events = StepEvents::default();
-        for plan in plans.iter_mut() {
-            let mut consumed = 0usize;
-            let mut last_logits: Option<Vec<f32>> = None;
-            while consumed < plan.tokens.len() {
-                let start = plan.start + consumed;
-                if start + cap > max_seq {
-                    break; // remainder continues one-token-per-step
+        let mut consumed = vec![0usize; plans.len()];
+        let mut last_logits: Vec<Option<Vec<f32>>> = vec![None; plans.len()];
+        loop {
+            // One wave: at most one invocation per still-advancing plan.
+            let mut issued = 0usize;
+            let mut wave_tokens = 0usize;
+            let mut wave_selected: Vec<Vec<ExpertSet>> = Vec::new();
+            for (i, plan) in plans.iter().enumerate() {
+                if consumed[i] >= plan.tokens.len() {
+                    continue;
                 }
-                let n = (plan.tokens.len() - consumed).min(cap);
+                let start = plan.start + consumed[i];
+                if start + cap > max_seq {
+                    continue; // remainder continues one-token-per-step
+                }
+                let n = (plan.tokens.len() - consumed[i]).min(cap);
                 let out = self.model.prefill_chunk(&PrefillInput {
                     row: plan.slot,
                     start_pos: start,
-                    tokens: &plan.tokens[consumed..consumed + n],
+                    tokens: &plan.tokens[consumed[i]..consumed[i] + n],
                     policy: self.policy.as_ref(),
+                    shared_selection: shared,
                     collect_probs: self.tracker.is_some(),
                 })?;
-                // One target forward over the true chunk geometry: n tokens
-                // amortize the per-layer weight stream — the TTFT lever.
-                let sim_s = self.charge_step(&out.activated, &out.selected, n, 0.0);
-                self.metrics.record_prefill(&out.activated, sim_s, n as u64);
+                issued += 1;
+                if self.sequential_prefill_charging {
+                    // Pre-PR8 accounting: every invocation pays its own
+                    // full per-layer weight stream.
+                    let sim_s =
+                        self.charge_step(&out.activated, &out.selected, n, 0.0);
+                    self.metrics.record_prefill(&out.activated, sim_s, n as u64);
+                } else {
+                    // Activation/token gauges record per invocation; the
+                    // round's sim charge lands once below.
+                    self.metrics.record_prefill(&out.activated, 0.0, n as u64);
+                    wave_tokens += n;
+                    wave_selected.push(out.selected);
+                }
                 // Prompt-time router scores feed the row's footprint: every
                 // chunk position is one observation for the slot's EMA.
                 if let (Some(tr), Some(probs)) = (&mut self.tracker, &out.probs) {
                     let layers: Vec<&ScoreMatrix> = probs.iter().collect();
-                    for i in 0..n {
-                        tr.observe_step(plan.slot, i, &layers);
+                    for j in 0..n {
+                        tr.observe_step(plan.slot, j, &layers);
                     }
                 }
-                last_logits = Some(out.last_logits);
-                consumed += n;
+                last_logits[i] = Some(out.last_logits);
+                consumed[i] += n;
             }
-            // A max_seq-boundary break leaves a tail for later steps: the
+            if issued == 0 {
+                break;
+            }
+            if !self.sequential_prefill_charging {
+                // One fused charge for the whole round: the per-layer
+                // union is the set one shared weight stream must cover,
+                // the wave's token total what it amortizes over.
+                let (acts, sets) = MoeModel::wave_union(&wave_selected);
+                let sim_s = self.charge_wave(&acts, &sets, wave_tokens);
+                self.metrics.record_prefill_wave(issued, sim_s);
+            }
+        }
+        for (i, plan) in plans.iter_mut().enumerate() {
+            // A max_seq-boundary skip leaves a tail for later steps: the
             // draft must only shadow what the target actually consumed.
-            plan.tokens.truncate(consumed);
-            let am = argmax(&last_logits.expect("chunk ran at least once")) as u32;
+            plan.tokens.truncate(consumed[i]);
+            let am =
+                argmax(last_logits[i].as_ref().expect("chunk ran at least once")) as u32;
             let seq = self.batcher.seq_mut(plan.slot);
             let id = seq.req.id;
-            if seq.advance_prefill_by(consumed, am) {
+            if seq.advance_prefill_by(consumed[i], am) {
                 // the chunk's last logits committed the first GENERATED
                 // token; record_prefill only counted the prompt tokens
                 events.first_token_slots.push(plan.slot);
@@ -1398,12 +1495,14 @@ impl<'m> ServeLoop<'m> {
         let n_experts = self.model.dims().n_experts;
 
         let mut chunk_plans = self.chunk_plans(slots);
-        // Riders: every live row NOT advancing via the chunk artifact.
-        let riders: Vec<usize> = slots
-            .iter()
-            .copied()
-            .filter(|s| !chunk_plans.iter().any(|p| p.slot == *s))
-            .collect();
+        // Riders: every live row NOT advancing via the chunk artifact
+        // (membership table, not a per-slot scan of the plans).
+        let mut is_chunk = vec![false; b_max];
+        for p in &chunk_plans {
+            is_chunk[p.slot] = true;
+        }
+        let riders: Vec<usize> =
+            slots.iter().copied().filter(|&s| !is_chunk[s]).collect();
         debug_assert!(!riders.is_empty(), "spec step needs at least one decode row");
 
         // Per-rider depth (0 for prefill riders and unplanned decode rows).
@@ -1759,6 +1858,28 @@ impl<'m> ServeLoop<'m> {
             sim += self.cost.target_step(&scaled, n_tokens).total_seconds;
         }
         sim
+    }
+
+    /// One fused charge for a prefill wave (the PR 8 charging split):
+    /// under EP exactly a [`ServeLoop::charge_step`] on the wave's
+    /// unioned per-layer sets — the per-layer [`EpCostModel`] pricing,
+    /// straggler gauges and migration drain apply once per wave instead
+    /// of once per row; dense, the [`DecodeCostModel::prefill_wave`]
+    /// entry point over the unioned activation counts and the wave's
+    /// total token count. A one-invocation wave charges exactly what the
+    /// sequential path would (union of one = itself).
+    fn charge_wave(
+        &mut self,
+        activated: &[usize],
+        selected: &[ExpertSet],
+        n_tokens: usize,
+    ) -> f64 {
+        if self.model.placement.is_some() {
+            self.charge_step(activated, selected, n_tokens, 0.0)
+        } else {
+            let scaled = self.cost.scale_activations(activated);
+            self.cost.prefill_wave(&scaled, n_tokens).total_seconds
+        }
     }
 }
 

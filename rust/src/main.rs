@@ -26,11 +26,12 @@ const USAGE: &str = "usage: xshare <serve|run|client|info> [--flags]
          [--spec-draft model|lookup] [--prefill-chunk T] [--admission A]
          [--max-queue Q] [--footprint-decay D] [--ep-gpus G] [--ep-evict]
          [--ep-rebalance N] [--prefix-cache-mb MB] [--prefix-min-tokens N]
-         [--addr A] [--config F]
+         [--chunk-shared-selection] [--addr A] [--config F]
   run    --preset P --policy POL --requests N [--batch N] [--spec-len L]
          [--spec-adaptive] [--spec-draft D] [--prefill-chunk T]
          [--admission A] [--ep-gpus G] [--ep-evict] [--ep-rebalance N]
-         [--prefix-cache-mb MB] [--prefix-min-tokens N] [--seed S]
+         [--prefix-cache-mb MB] [--prefix-min-tokens N]
+         [--chunk-shared-selection] [--seed S]
   client --addr A --prompt 1,2,3 [--max-new-tokens N] [--id I]
          [--priority P] [--deadline-ms D] [--stream]
   info   --preset P
@@ -47,7 +48,12 @@ ep:        --ep-gpus G [--ep-placement P] deploys expert-parallel; with
 prefix:    --prefix-cache-mb MB caches released rows' prefix KV under an
            LRU VRAM budget; admissions extending a cached prefix restore
            it and prefill only the suffix (--prefix-min-tokens N gates
-           what is worth keeping)";
+           what is worth keeping)
+prefill:   co-prefilling rows are charged as fused multi-row waves (one
+           weight stream per layer per wave); --chunk-shared-selection
+           (needs --prefill-chunk >= 2) additionally shares one expert
+           set across each chunk's positions — lossy, with the routing
+           fidelity delta reported in metrics, never silently";
 
 fn main() {
     if let Err(e) = real_main() {

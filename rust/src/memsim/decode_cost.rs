@@ -76,6 +76,25 @@ impl DecodeCostModel {
         (0..self.geo.n_layers).map(|l| mini[l % mini.len()]).collect()
     }
 
+    /// Latency of one **fused prefill wave**: every co-prefilling row's
+    /// chunk forward in one serving-step round, charged as a SINGLE pass
+    /// over the per-layer UNION of their activated experts and the total
+    /// token count. This is the prefill-axis analogue of the amortization
+    /// continuous batching gives decode — the per-layer weight stream
+    /// loads once for the wave instead of once per row, so the memory
+    /// term grows with the union (sublinear in rows when activations
+    /// overlap, and even for disjoint rows one shared stream of the
+    /// combined set beats N separate full streams' fixed dense bytes and
+    /// layer overheads). Charging only; token routing stays row-local and
+    /// byte-identical (see the wave contract in `model/moe_model.rs`).
+    pub fn prefill_wave(
+        &self,
+        activated_union_per_layer: &[usize],
+        total_tokens: usize,
+    ) -> StepBreakdown {
+        self.target_step(activated_union_per_layer, total_tokens)
+    }
+
     /// One draft-model decode step (speculative decoding).
     pub fn draft_step(&self) -> f64 {
         if self.geo.draft_bytes_per_step == 0.0 {
@@ -258,6 +277,35 @@ mod tests {
         // no drafting rows → no draft charge
         assert_eq!(m.draft_cost(&[0, 0]), 0.0);
         assert_eq!(m.draft_cost(&[]), 0.0);
+    }
+
+    #[test]
+    fn fused_wave_charge_beats_sequential_per_row_charges() {
+        // The tentpole lever: one wave over the unioned activations and
+        // the summed token count must cost strictly less than charging
+        // each row's forward separately — even with fully DISJOINT
+        // activations (the union pays the combined expert bytes once,
+        // the sequential walk pays dense bytes + layer overheads twice).
+        let m = model();
+        let row_a = [30usize; 36];
+        let row_b = [40usize; 36];
+        let union_disjoint = [70usize; 36];
+        let seq = m.target_step(&row_a, 8).total_seconds + m.target_step(&row_b, 8).total_seconds;
+        let fused = m.prefill_wave(&union_disjoint, 16).total_seconds;
+        assert!(fused < seq, "fused {fused} !< sequential {seq}");
+
+        // overlapping activations amortize even harder: same experts on
+        // both rows ⇒ the union streams HALF the expert bytes of the
+        // sequential walk on top of the fixed-cost saving
+        let union_overlap = [40usize; 36]; // row_b's experts cover row_a's
+        let fused_overlap = m.prefill_wave(&union_overlap, 16).total_seconds;
+        assert!(fused_overlap < fused);
+
+        // a solo wave degenerates to exactly the single-row charge
+        let solo = m.prefill_wave(&row_a, 8);
+        let single = m.target_step(&row_a, 8);
+        assert_eq!(solo.total_seconds, single.total_seconds);
+        assert_eq!(solo.bytes, single.bytes);
     }
 
     #[test]

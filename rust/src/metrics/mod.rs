@@ -224,6 +224,24 @@ pub struct ServeMetrics {
     /// when the cache is enabled; with the cache off every resume
     /// recomputes and neither counter moves).
     pub resume_recomputes: u64,
+    /// Fused prefill waves executed: one wave = every co-prefilling row's
+    /// chunk invocation in one serving-step round, charged ONCE over the
+    /// unioned activations and total token count (0 under sequential
+    /// per-invocation charging and under one-token prefill).
+    pub prefill_waves: u64,
+    /// Chunk invocations fused per wave — the weight-stream amortization
+    /// factor (mean/max double as the rows-per-wave histogram).
+    pub prefill_rows_per_wave: Summary,
+    /// Per-layer weight streams saved by wave fusion: Σ over waves of
+    /// (fused invocations − 1). Each saved stream is one full per-layer
+    /// weight pass the sequential walk would have paid again.
+    pub prefill_streams_saved: u64,
+    /// Shared-selection routing distortion (`--chunk-shared-selection`):
+    /// token-match fraction of a lossy run against its exact baseline, one
+    /// sample per harness comparison ([`ServeMetrics::record_shared_selection_fidelity`]).
+    /// Empty when sharing is off — the derived gauges then report exactly
+    /// zero distortion, never NaN.
+    pub shared_selection_fidelity: Summary,
 }
 
 impl ServeMetrics {
@@ -262,6 +280,53 @@ impl ServeMetrics {
         self.sim_seconds += sim_s;
         self.prefill_forwards += 1;
         self.tokens_prompt += prompt_tokens;
+    }
+
+    /// Record one fused prefill wave: `fused_invocations` chunk forwards
+    /// charged as a single amortized pass costing `sim_s`. Rides on top of
+    /// the per-invocation [`ServeMetrics::record_prefill`] calls (which
+    /// carry the token/activation accounting at zero cost each), so the
+    /// wave owns the simulated time and the fusion gauges.
+    pub fn record_prefill_wave(&mut self, fused_invocations: usize, sim_s: f64) {
+        self.sim_seconds += sim_s;
+        self.prefill_waves += 1;
+        self.prefill_rows_per_wave.add(fused_invocations as f64);
+        self.prefill_streams_saved += fused_invocations.saturating_sub(1) as u64;
+    }
+
+    /// Record one shared-selection fidelity comparison (token-match
+    /// fraction in `[0, 1]` from `coordinator::fidelity::compare`).
+    pub fn record_shared_selection_fidelity(&mut self, token_match: f64) {
+        assert!(
+            token_match.is_finite(),
+            "shared-selection fidelity must be a finite token-match fraction"
+        );
+        self.shared_selection_fidelity.add(token_match);
+    }
+
+    /// Shared-selection token-match fraction: 1.0 (no distortion) until a
+    /// comparison is recorded — sharing off must read as exactly lossless.
+    pub fn shared_selection_token_match(&self) -> f64 {
+        if self.shared_selection_fidelity.n == 0 {
+            1.0
+        } else {
+            self.shared_selection_fidelity.mean()
+        }
+    }
+
+    /// Shared-selection accuracy drop in percentage points (≥ 0; exactly
+    /// 0.0 when sharing is off or lossless).
+    pub fn shared_selection_drop_pts(&self) -> f64 {
+        (1.0 - self.shared_selection_token_match()) * 100.0
+    }
+
+    /// Prompt tokens prefilled per simulated second — the prefill-axis
+    /// throughput the fused-wave bench compares charging modes by.
+    pub fn prompt_tokens_per_s(&self) -> f64 {
+        if self.sim_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_prompt as f64 / self.sim_seconds
     }
 
     /// Record one request's first-token latency: the aggregate summary,
@@ -443,6 +508,28 @@ impl ServeMetrics {
         );
         m.insert("resume_restores".into(), Json::num(self.resume_restores as f64));
         m.insert("resume_recomputes".into(), Json::num(self.resume_recomputes as f64));
+        m.insert("prefill_waves".into(), Json::num(self.prefill_waves as f64));
+        m.insert(
+            "prefill_rows_per_wave_mean".into(),
+            Json::num(self.prefill_rows_per_wave.mean()),
+        );
+        m.insert(
+            "prefill_rows_per_wave_max".into(),
+            Json::num(self.prefill_rows_per_wave.max),
+        );
+        m.insert(
+            "prefill_streams_saved".into(),
+            Json::num(self.prefill_streams_saved as f64),
+        );
+        m.insert("prompt_tokens_per_s".into(), Json::num(self.prompt_tokens_per_s()));
+        m.insert(
+            "shared_selection_fidelity".into(),
+            Json::num(self.shared_selection_token_match()),
+        );
+        m.insert(
+            "shared_selection_drop_pts".into(),
+            Json::num(self.shared_selection_drop_pts()),
+        );
         Json::Obj(m)
     }
 }
@@ -599,6 +686,74 @@ mod tests {
         );
         assert_eq!(j.get("resume_restores").and_then(|v| v.as_f64()), Some(2.0));
         assert_eq!(j.get("resume_recomputes").and_then(|v| v.as_f64()), Some(1.0));
+    }
+
+    #[test]
+    fn prefill_wave_gauges_accumulate_and_dump() {
+        let mut m = ServeMetrics::new(2);
+        // two invocations ride one wave: per-invocation accounting at zero
+        // cost each, the wave owns the fused charge
+        m.record_prefill(&[4, 6], 0.0, 8);
+        m.record_prefill(&[2, 3], 0.0, 5);
+        m.record_prefill_wave(2, 0.5);
+        // a solo wave saves nothing
+        m.record_prefill(&[1, 1], 0.0, 2);
+        m.record_prefill_wave(1, 0.25);
+        assert_eq!(m.prefill_waves, 2);
+        assert_eq!(m.prefill_streams_saved, 1);
+        assert!((m.prefill_rows_per_wave.mean() - 1.5).abs() < 1e-12);
+        assert_eq!(m.prefill_rows_per_wave.max, 2.0);
+        assert_eq!(m.tokens_prompt, 15);
+        assert!((m.sim_seconds - 0.75).abs() < 1e-12);
+        assert!((m.prompt_tokens_per_s() - 15.0 / 0.75).abs() < 1e-9);
+        let j = m.to_json();
+        assert_eq!(j.get("prefill_waves").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(
+            j.get("prefill_rows_per_wave_mean").and_then(|v| v.as_f64()),
+            Some(1.5)
+        );
+        assert_eq!(
+            j.get("prefill_rows_per_wave_max").and_then(|v| v.as_f64()),
+            Some(2.0)
+        );
+        assert_eq!(j.get("prefill_streams_saved").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(
+            j.get("prompt_tokens_per_s").and_then(|v| v.as_f64()),
+            Some(m.prompt_tokens_per_s())
+        );
+    }
+
+    #[test]
+    fn shared_selection_fidelity_defaults_lossless_and_never_nan() {
+        // sharing off: no samples, yet the gauges read exactly lossless
+        let m = ServeMetrics::new(1);
+        assert_eq!(m.shared_selection_token_match(), 1.0);
+        assert_eq!(m.shared_selection_drop_pts(), 0.0);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("shared_selection_fidelity").and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        assert_eq!(
+            j.get("shared_selection_drop_pts").and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+
+        // sharing on: harness-recorded comparisons average in
+        let mut m = ServeMetrics::new(1);
+        m.record_shared_selection_fidelity(0.9);
+        m.record_shared_selection_fidelity(0.7);
+        assert!((m.shared_selection_token_match() - 0.8).abs() < 1e-12);
+        assert!((m.shared_selection_drop_pts() - 20.0).abs() < 1e-9);
+        assert!(m.shared_selection_token_match().is_finite());
+        assert!(m.shared_selection_drop_pts().is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn shared_selection_fidelity_rejects_nan() {
+        let mut m = ServeMetrics::new(1);
+        m.record_shared_selection_fidelity(f64::NAN);
     }
 
     #[test]

@@ -62,12 +62,38 @@
 //! token must still be fed through the model — the first generated token
 //! needs real last-position logits, which no slab stores. Pinned across
 //! policies × chunk sizes by `rust/tests/prefix_cache.rs`.
+//!
+//! ## The prefill-wave charging contract
+//!
+//! The coordinator fuses all chunk invocations of one serving step into
+//! **waves** (PR 8): each round issues at most one [`MoeModel::prefill_chunk`]
+//! per co-prefilling row, and the round is charged as ONE target forward
+//! over [`MoeModel::wave_union`] of the invocations' routed sets and the
+//! round's total token count. This is pure cost accounting: the
+//! invocations themselves are exactly the sequential walk's (same rows,
+//! same cache windows, same per-position routing), so tokens, logits and
+//! `kv_row_digest` are byte-identical whether charges fuse or not —
+//! pinned across policies × chunk sizes × co-prefilling rows by
+//! `rust/tests/prefill_equivalence.rs`. What justifies the fused charge
+//! physically: the wave's rows stream each layer's expert weights once,
+//! as decode's continuous batching does — the per-layer set one stream
+//! must cover is the union, its token count the wave's total.
+//!
+//! With `--chunk-shared-selection` ([`PrefillInput::shared_selection`])
+//! routing itself changes: each layer pools the chunk's per-position
+//! router probs through the modular greedy objective
+//! ([`crate::selection::shared_chunk_set`] — per-position top-1 warm-up
+//! ∪ greedy top-`top_k` by pooled mass) and every position refines within
+//! that one set. Lossy by design; the serve loop reports the distortion
+//! through `coordinator::fidelity` as `shared_selection_fidelity`, never
+//! silently.
 
 use anyhow::{bail, Result};
 
 use crate::runtime::{Arg, Engine, HostTensor};
 use crate::selection::{
-    refine, ExpertSet, Routing, ScoreMatrix, SelectionContext, SelectionPolicy,
+    refine, shared_chunk_set, ExpertSet, Routing, ScoreMatrix, SelectionContext,
+    SelectionPolicy,
 };
 use crate::ep::Placement;
 use crate::util::fnv::Fnv;
@@ -109,6 +135,14 @@ pub struct PrefillInput<'a> {
     /// chunking is an execution optimisation, not a routing change — see
     /// `rust/tests/prefill_equivalence.rs`).
     pub policy: &'a dyn SelectionPolicy,
+    /// Opt-in lossy chunk-batched selection (`--chunk-shared-selection`):
+    /// instead of routing every chunk position independently, pool the
+    /// chunk's per-position router probs through the modular greedy
+    /// objective ([`crate::selection::shared_chunk_set`]) and refine all
+    /// positions within that ONE set per layer. Changes routing — the
+    /// serve loop ships it with fidelity-delta accounting, never
+    /// silently (see the prefill-wave contract in the module docs).
+    pub shared_selection: bool,
     /// Return the per-layer router probability matrices (admission-time
     /// footprint estimation captures prompt-time scores from here).
     pub collect_probs: bool,
@@ -218,6 +252,32 @@ impl MoeModel {
     /// at `max_batch` so the chunk borrows the batch-shaped programs).
     pub fn prefill_capacity(&self) -> usize {
         self.engine.manifest().prefill_chunk_capacity()
+    }
+
+    /// Per-layer union of routed expert sets across the invocations of
+    /// one prefill wave — what the coordinator charges a fused wave over
+    /// (the prefill-wave contract in the module docs). Input: each
+    /// invocation's [`PrefillOutput::selected`] (all with the same layer
+    /// count); output: per-layer `(|union|, union)` — the activation
+    /// counts and sets one amortized weight stream per layer must serve.
+    /// Empty input (a wave that issued nothing) yields empty vecs.
+    pub fn wave_union(per_invocation: &[Vec<ExpertSet>]) -> (Vec<usize>, Vec<ExpertSet>) {
+        let Some(first) = per_invocation.first() else {
+            return (Vec::new(), Vec::new());
+        };
+        let mut sets = first.clone();
+        for inv in &per_invocation[1..] {
+            debug_assert_eq!(
+                inv.len(),
+                sets.len(),
+                "wave invocations disagree on layer count"
+            );
+            for (u, s) in sets.iter_mut().zip(inv) {
+                u.union_with(s);
+            }
+        }
+        let acts = sets.iter().map(|s| s.len()).collect();
+        (acts, sets)
     }
 
     /// Order-stable FNV-1a digest over every KV-cache byte (all layers,
@@ -470,8 +530,9 @@ impl MoeModel {
     /// decoding concurrently in the same step are routed by the serve loop
     /// without the chunk row in their batch, which batch-coupled policies
     /// observe — as they do any change in batch composition.) Batch-level
-    /// sharing across a chunk is a quality/cost trade documented as an open
-    /// item in ROADMAP.md.
+    /// sharing across a chunk is the opt-in
+    /// [`PrefillInput::shared_selection`] quality/cost trade — lossy, with
+    /// fidelity-delta accounting (the prefill-wave contract above).
     pub fn prefill_chunk(&mut self, input: &PrefillInput) -> Result<PrefillOutput> {
         let m = self.dims().clone();
         let b = m.max_batch;
@@ -558,23 +619,35 @@ impl MoeModel {
 
             let mut gates = vec![0.0f32; b * m.n_experts];
             let mut union = ExpertSet::empty(m.n_experts);
-            for i in 0..t {
-                let rows_i = [i];
-                let groups_i = [vec![i]];
-                let ctx = SelectionContext {
-                    probs: &probs_m,
-                    logits: &logits_m,
-                    rows: &rows_i,
-                    requests: &groups_i,
-                    colsum_hint: Some(probs_m.row(i)),
-                    placement: self.placement.as_ref(),
-                    top_k: m.top_k,
-                };
-                let routing = input.policy.route(&ctx);
-                let lo = i * m.n_experts;
-                gates[lo..lo + m.n_experts]
-                    .copy_from_slice(&routing.gates.flat()[lo..lo + m.n_experts]);
+            if input.shared_selection && t > 1 {
+                // Chunk-batched selection: ONE set per layer from the
+                // pooled per-position probs (per-position top-1 warm-up ∪
+                // greedy top-k by pooled mass), every position refined
+                // within it. Lossy — see the prefill-wave contract above.
+                let rows_t: Vec<usize> = (0..t).collect();
+                let set = shared_chunk_set(&probs_m, &rows_t, m.top_k);
+                let routing = refine(&logits_m, &rows_t, &set, m.top_k);
+                gates.copy_from_slice(routing.gates.flat());
                 union.union_with(&routing.activated);
+            } else {
+                for i in 0..t {
+                    let rows_i = [i];
+                    let groups_i = [vec![i]];
+                    let ctx = SelectionContext {
+                        probs: &probs_m,
+                        logits: &logits_m,
+                        rows: &rows_i,
+                        requests: &groups_i,
+                        colsum_hint: Some(probs_m.row(i)),
+                        placement: self.placement.as_ref(),
+                        top_k: m.top_k,
+                    };
+                    let routing = input.policy.route(&ctx);
+                    let lo = i * m.n_experts;
+                    gates[lo..lo + m.n_experts]
+                        .copy_from_slice(&routing.gates.flat()[lo..lo + m.n_experts]);
+                    union.union_with(&routing.activated);
+                }
             }
             activated.push(union.len());
             selected.push(union);
@@ -608,6 +681,40 @@ impl MoeModel {
         let last_logits = lf[(t - 1) * m.vocab..t * m.vocab].to_vec();
 
         Ok(PrefillOutput { last_logits, activated, selected, probs: probs_acc })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(n: usize, idx: &[usize]) -> ExpertSet {
+        ExpertSet::from_indices(n, idx)
+    }
+
+    #[test]
+    fn wave_union_unions_per_layer() {
+        let a = vec![set(8, &[0, 1]), set(8, &[2])];
+        let b = vec![set(8, &[1, 3]), set(8, &[2, 4])];
+        let (acts, sets) = MoeModel::wave_union(&[a, b]);
+        assert_eq!(acts, vec![3, 2]);
+        assert_eq!(sets[0].to_vec(), vec![0, 1, 3]);
+        assert_eq!(sets[1].to_vec(), vec![2, 4]);
+    }
+
+    #[test]
+    fn wave_union_of_one_is_identity() {
+        let a = vec![set(4, &[0, 2]), set(4, &[1])];
+        let (acts, sets) = MoeModel::wave_union(std::slice::from_ref(&a));
+        assert_eq!(acts, vec![2, 1]);
+        assert_eq!(sets[0].to_vec(), a[0].to_vec());
+        assert_eq!(sets[1].to_vec(), a[1].to_vec());
+    }
+
+    #[test]
+    fn wave_union_empty_input_is_empty() {
+        let (acts, sets) = MoeModel::wave_union(&[]);
+        assert!(acts.is_empty() && sets.is_empty());
     }
 }
 

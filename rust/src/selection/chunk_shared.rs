@@ -1,0 +1,128 @@
+//! **Chunk-shared expert selection** (`--chunk-shared-selection`): the
+//! paper's batch-level sharing applied to the prefill axis.
+//!
+//! Within one chunk invocation every position normally routes
+//! independently (lossless — chunking is an execution optimisation, not a
+//! routing change). This wrapper instead pools the chunk's per-position
+//! router probabilities into one batch utility and picks ONE set per
+//! layer with the same modular greedy objective Algorithm 2 applies
+//! across a decode batch: a per-position top-1 warm-up (every position
+//! keeps its argmax expert — the quality floor) plus `top_k` greedy
+//! additions by pooled probability mass. All positions then refine within
+//! the shared set ([`crate::selection::refine`]), so a whole chunk — and,
+//! through the coordinator's wave union, every co-prefilling row — streams
+//! one small expert set per layer instead of up to `T × top_k` distinct
+//! experts.
+//!
+//! Lossy by design: restricted positions whose true top-k falls outside
+//! the shared set route differently. The serve loop therefore ships the
+//! mode with fidelity-delta accounting (`coordinator::fidelity` →
+//! `shared_selection_fidelity`), never silently — see the prefill-wave
+//! contract in `model/moe_model.rs`.
+
+use super::expert_set::ExpertSet;
+use super::greedy::{greedy_select, warmup_set};
+use super::scores::ScoreMatrix;
+
+/// One shared expert set for the chunk positions `rows` of one layer:
+/// `greedy_select(pooled colsum, top_k, ∪ per-position top-1)`.
+///
+/// Size bound `|S| ≤ |rows| + top_k` (warm-up contributes at most one
+/// expert per position, usually far fewer — prompt positions overlap
+/// heavily on hot experts), versus up to `|rows| × top_k` for
+/// per-position routing; every position's top-1 expert is always in `S`.
+pub fn shared_chunk_set(probs: &ScoreMatrix, rows: &[usize], top_k: usize) -> ExpertSet {
+    let warm = warmup_set(probs, rows, 1);
+    let n = probs.n_experts();
+    let mut utility = vec![0.0f32; n];
+    for &i in rows {
+        for (u, &p) in utility.iter_mut().zip(probs.row(i)) {
+            *u += p;
+        }
+    }
+    greedy_select(&utility, top_k, &warm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::refine::refine;
+    use crate::selection::scores::{softmax_in_place, topk_indices};
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn random_probs(r: &mut Rng, t: usize, n: usize) -> ScoreMatrix {
+        let rows: Vec<Vec<f32>> = (0..t)
+            .map(|_| {
+                let mut row: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 2.0)).collect();
+                softmax_in_place(&mut row);
+                row
+            })
+            .collect();
+        ScoreMatrix::from_rows(&rows)
+    }
+
+    #[test]
+    fn overlapping_positions_share_a_small_set() {
+        // Three positions all concentrated on experts {0, 1}: the shared
+        // set is far below 3 × top_k.
+        let probs = ScoreMatrix::from_rows(&[
+            vec![0.6, 0.3, 0.05, 0.03, 0.02],
+            vec![0.5, 0.4, 0.04, 0.03, 0.03],
+            vec![0.55, 0.35, 0.04, 0.03, 0.03],
+        ]);
+        let s = shared_chunk_set(&probs, &[0, 1, 2], 2);
+        // warm-up = {0} (every top-1), greedy adds the 2 best pooled = {1, 2}
+        assert!(s.contains(0) && s.contains(1));
+        assert!(s.len() <= 3);
+    }
+
+    #[test]
+    fn prop_top1_kept_and_size_bounded() {
+        forall(
+            811,
+            150,
+            |r: &mut Rng| {
+                let t = 2 + r.below(14);
+                let n = 4 + r.below(60);
+                let top_k = 1 + r.below(4);
+                (t, n, top_k, r.next_u64())
+            },
+            |&(t, n, top_k, seed)| {
+                let mut r = Rng::new(seed);
+                let probs = random_probs(&mut r, t, n);
+                let rows: Vec<usize> = (0..t).collect();
+                let s = shared_chunk_set(&probs, &rows, top_k);
+                crate::prop_assert!(
+                    s.len() <= t + top_k,
+                    "|S|={} > T+k={}",
+                    s.len(),
+                    t + top_k
+                );
+                for &i in &rows {
+                    let top1 = topk_indices(probs.row(i), 1)[0];
+                    crate::prop_assert!(s.contains(top1), "position {i} lost its top-1");
+                }
+                // Refinement within S activates at most |S| experts and
+                // still routes every position (the fidelity floor: each
+                // position has ≥ its top-1 available).
+                let routed = refine(&probs, &rows, &s, top_k);
+                crate::prop_assert!(routed.n_activated() <= s.len(), "activated beyond S");
+                for i in 0..t {
+                    crate::prop_assert!(!routed.chosen[i].is_empty(), "position {i} unrouted");
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shared_set_is_deterministic() {
+        let mut r = Rng::new(99);
+        let probs = random_probs(&mut r, 6, 32);
+        let rows: Vec<usize> = (0..6).collect();
+        let a = shared_chunk_set(&probs, &rows, 2);
+        let b = shared_chunk_set(&probs, &rows, 2);
+        assert_eq!(a.to_vec(), b.to_vec());
+    }
+}

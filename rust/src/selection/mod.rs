@@ -15,6 +15,8 @@
 //!
 //! * [`greedy`] — Algorithm 1 (optimal by modularity, Corollary 3.3).
 //! * [`batch_aware`] — Algorithm 2 (warm-up + greedy + refinement).
+//! * [`chunk_shared`] — the modular greedy objective pooled over a prefill
+//!   chunk's positions (opt-in `--chunk-shared-selection`, lossy).
 //! * [`spec_aware`] — Algorithms 3-4 (hierarchical, speculation-aware).
 //! * [`gpu_aware`] — Algorithms 5-6 (EP MaxLoad-balanced).
 //! * [`baselines`] — vanilla top-k, LYNX-Lat, Dynamic-Skipping,
@@ -25,6 +27,7 @@
 
 pub mod baselines;
 pub mod batch_aware;
+pub mod chunk_shared;
 pub mod expert_set;
 pub mod footprint;
 pub mod gpu_aware;
@@ -34,6 +37,7 @@ pub mod refine;
 pub mod scores;
 pub mod spec_aware;
 
+pub use chunk_shared::shared_chunk_set;
 pub use expert_set::ExpertSet;
 pub use footprint::{admission_score, Footprint};
 pub use policy::{PolicyKind, SelectionContext, SelectionPolicy};

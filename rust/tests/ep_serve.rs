@@ -28,6 +28,12 @@
 //!    exceed `--ep-migrate-budget`. At `--ep-replica-slack 1.0` the
 //!    residency caps are exactly the partition block sizes, so the
 //!    planner can never act at all.
+//!
+//! 4. **Prefill-wave charging is cost-only (PR 8).** Fusing a round of
+//!    co-prefilling chunk invocations into ONE EP charge over the unioned
+//!    per-layer sets may only move the sim clock: tokens and the KV
+//!    digest stay byte-identical to per-invocation charging, and the
+//!    wave gauges partition the chunk forwards exactly.
 
 use std::collections::BTreeMap;
 
@@ -81,7 +87,19 @@ fn run_staggered(
     c: ServeConfig,
     reqs: &[Request],
 ) -> (BTreeMap<u64, Vec<u32>>, ServeMetrics) {
+    run_staggered_with(model, c, reqs, false)
+}
+
+/// [`run_staggered`] with the pre-PR8 per-invocation prefill charging
+/// toggled on demand (the wave-charging pin's control arm).
+fn run_staggered_with(
+    model: &mut MoeModel,
+    c: ServeConfig,
+    reqs: &[Request],
+    sequential_prefill_charging: bool,
+) -> (BTreeMap<u64, Vec<u32>>, ServeMetrics) {
     let mut core = ServeLoop::new(model, c).expect("serve loop");
+    core.set_sequential_prefill_charging(sequential_prefill_charging);
     for r in &reqs[..2] {
         core.submit(r.clone()).unwrap();
     }
@@ -160,6 +178,48 @@ fn ep_speculative_serving_matches_non_ep_byte_for_byte() {
     assert_eq!(
         ep_metrics.spec_proposed, base_metrics.spec_proposed,
         "speculation planning must not see the cost model"
+    );
+}
+
+#[test]
+fn ep_wave_charging_is_cost_only_and_fuses_rounds() {
+    // PR 8 under EP: fused wave charging routes each round's unioned
+    // per-layer sets through the EP comm model ONCE instead of once per
+    // co-prefilling row. Cost-only — tokens and the KV digest must stay
+    // byte-identical to the sequentially-charged EP run — while the sim
+    // clock moves and both the EP and the wave gauges stay live.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let reqs: Vec<Request> = (0..4u64)
+        .map(|id| Request::new(id, prompt_of(6 + id as usize % 2, id + 61, vocab), 4))
+        .collect();
+    let mut c = cfg("vanilla");
+    c.batch_size = 3;
+    c.prefill_chunk = 3;
+    c.max_new_tokens = 4;
+    c.ep = ep2();
+    let (seq_out, seq_metrics) = run_staggered_with(&mut model, c.clone(), &reqs, true);
+    let seq_kv = model.kv_digest();
+    let (wave_out, wave_metrics) = run_staggered_with(&mut model, c, &reqs, false);
+    let wave_kv = model.kv_digest();
+    assert_eq!(wave_out, seq_out, "EP wave charging changed generated tokens");
+    assert_eq!(wave_kv, seq_kv, "EP wave charging changed KV state");
+    assert_eq!(seq_metrics.prefill_waves, 0, "sequential charging recorded waves");
+    assert!(wave_metrics.prefill_waves > 0, "no waves under chunked EP prefill");
+    assert_eq!(
+        wave_metrics.prefill_forwards,
+        wave_metrics.prefill_waves + wave_metrics.prefill_streams_saved,
+        "wave/stream accounting must partition the chunk forwards"
+    );
+    assert_eq!(wave_metrics.prefill_forwards, seq_metrics.prefill_forwards);
+    assert_eq!(wave_metrics.tokens_prompt, seq_metrics.tokens_prompt);
+    // The fused charge is a different EP charge, not a skipped one.
+    assert!(wave_metrics.gpu_load_integral > 0.0);
+    assert!(wave_metrics.max_gpu_load.n > 0);
+    assert!(
+        wave_metrics.prefill_streams_saved == 0
+            || (wave_metrics.sim_seconds - seq_metrics.sim_seconds).abs() > 1e-12,
+        "fused rounds charged exactly like sequential despite saved streams"
     );
 }
 

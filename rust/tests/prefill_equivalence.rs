@@ -252,6 +252,182 @@ fn chunked_step_outcome_reports_prefill_tokens() {
     assert_eq!(o3.finished.len(), 1);
 }
 
+/// Run a staggered-admission trace and return (report, per-row KV digests).
+/// `sequential_charging` toggles the pre-PR8 per-invocation prefill
+/// accounting ([`ServeLoop::set_sequential_prefill_charging`]).
+fn run_staggered_trace(
+    model: &mut MoeModel,
+    c: ServeConfig,
+    requests: &[Request],
+    offsets: &[usize],
+    sequential_charging: bool,
+) -> Result<(xshare::coordinator::RunReport, Vec<u64>), String> {
+    let b_max = model.max_batch();
+    let mut core = ServeLoop::new(model, c).map_err(|e| format!("{e:#}"))?;
+    core.set_sequential_prefill_charging(sequential_charging);
+    let mut pending: BTreeMap<usize, Vec<Request>> = BTreeMap::new();
+    for (r, &off) in requests.iter().zip(offsets) {
+        pending.entry(off).or_default().push(r.clone());
+    }
+    let mut step_no = 0usize;
+    loop {
+        if let Some(batch) = pending.remove(&step_no) {
+            for r in batch {
+                core.submit(r).unwrap();
+            }
+        }
+        if !core.has_work() {
+            if pending.is_empty() {
+                break;
+            }
+            step_no += 1;
+            continue;
+        }
+        core.step().map_err(|e| format!("{e:#}"))?;
+        step_no += 1;
+    }
+    let report = core.report();
+    drop(core);
+    let kv = (0..b_max).map(|r| model.kv_row_digest(r)).collect();
+    Ok((report, kv))
+}
+
+#[test]
+fn fused_waves_byte_identical_to_sequential_charging() {
+    // THE PR 8 wave pin: across every select/route shape in the tree,
+    // chunk sizes, staggered admission and 1–4 co-prefilling rows, fused
+    // wave charging (the default) and the pre-PR8 per-invocation charging
+    // must produce byte-identical tokens AND byte-identical per-row KV
+    // digests — waves fuse the charge, never the computation. The fused
+    // run must also expose the amortization in its gauges: waves counted,
+    // a weight stream saved whenever ≥2 rows actually co-prefilled, and
+    // simulated time never above the sequential charge.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let policies = ["vanilla", "batch:6:1", "spec:1:0:2", "lynx:2", "skip:0.3", "opp:1"];
+    forall(
+        37,
+        6,
+        |rng| {
+            let policy = policies[rng.below(policies.len())];
+            let n = 1 + rng.below(4); // 1..=4 co-prefilling rows
+            let chunk = 2 + rng.below(7); // 2..=8
+            let lens: Vec<usize> = (0..n).map(|_| 3 + rng.below(8)).collect();
+            let offsets: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+            let max_new = 2 + rng.below(3);
+            let seed = rng.below(1000) as u64;
+            (policy, chunk, lens, offsets, max_new, seed)
+        },
+        |&(policy, chunk, ref lens, ref offsets, max_new, seed)| {
+            let requests: Vec<Request> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &len)| {
+                    Request::new(i as u64, prompt_of(len, seed + i as u64, vocab), max_new)
+                })
+                .collect();
+            let (seq_report, seq_kv) = run_staggered_trace(
+                &mut model,
+                cfg(policy, chunk, max_new),
+                &requests,
+                offsets,
+                true,
+            )?;
+            let (fused_report, fused_kv) = run_staggered_trace(
+                &mut model,
+                cfg(policy, chunk, max_new),
+                &requests,
+                offsets,
+                false,
+            )?;
+            if fused_report.outputs != seq_report.outputs {
+                return Err(format!(
+                    "[{policy} chunk={chunk}] fused outputs diverged: {:?} vs {:?}",
+                    fused_report.outputs, seq_report.outputs
+                ));
+            }
+            if fused_kv != seq_kv {
+                return Err(format!("[{policy} chunk={chunk}] per-row KV digests diverged"));
+            }
+            let (fm, sm) = (&fused_report.metrics, &seq_report.metrics);
+            if fm.tokens_prompt != sm.tokens_prompt || fm.prefill_forwards != sm.prefill_forwards
+            {
+                return Err("token/forward accounting diverged between charging modes".into());
+            }
+            if sm.prefill_waves != 0 {
+                return Err("sequential charging must record no waves".into());
+            }
+            if fm.prefill_forwards > 0 && fm.prefill_waves == 0 {
+                return Err("fused run with chunk forwards recorded no waves".into());
+            }
+            if fm.prefill_waves > 0
+                && fm.prefill_forwards != fm.prefill_waves + fm.prefill_streams_saved
+            {
+                return Err(format!(
+                    "stream accounting broken: {} forwards, {} waves, {} saved",
+                    fm.prefill_forwards, fm.prefill_waves, fm.prefill_streams_saved
+                ));
+            }
+            // The amortized charge never exceeds the per-invocation charge
+            // (equal when every wave held a single row), so prompt
+            // throughput can only improve.
+            if fm.sim_seconds > sm.sim_seconds + 1e-9 {
+                return Err(format!(
+                    "fused charge {} above sequential {}",
+                    fm.sim_seconds, sm.sim_seconds
+                ));
+            }
+            if fm.prefill_streams_saved > 0 && fm.sim_seconds >= sm.sim_seconds {
+                return Err("saved streams but no simulated-time saving".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shared_selection_distortion_reported_never_silent() {
+    // The lossy mode's accounting contract: a --chunk-shared-selection run
+    // reports its routing distortion through the fidelity machinery — a
+    // finite token-match in [0, 1] — while a sharing-off run reads as
+    // exactly lossless (drop 0.0) without recording anything.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let requests: Vec<Request> =
+        (0..3).map(|i| Request::new(i, prompt_of(8, 40 + i, vocab), 4)).collect();
+    let offsets = [0usize, 0, 1];
+
+    let (base_report, _) =
+        run_staggered_trace(&mut model, cfg("vanilla", 4, 4), &requests, &offsets, false)
+            .unwrap();
+    // off-mode: delta exactly 0, nothing recorded
+    assert_eq!(base_report.metrics.shared_selection_fidelity.n, 0);
+    assert_eq!(base_report.metrics.shared_selection_token_match(), 1.0);
+    assert_eq!(base_report.metrics.shared_selection_drop_pts(), 0.0);
+
+    let shared_cfg = ServeConfig { chunk_shared_selection: true, ..cfg("vanilla", 4, 4) };
+    let mut core = ServeLoop::new(&mut model, shared_cfg).unwrap();
+    for r in &requests {
+        core.submit(r.clone()).unwrap();
+    }
+    core.drain().unwrap();
+    let shared_outputs = core.report().outputs;
+    let f = xshare::coordinator::compare(&base_report.outputs, &shared_outputs);
+    assert!(f.token_match.is_finite(), "fidelity must never be NaN");
+    assert!((0.0..=1.0).contains(&f.token_match));
+    // the harness owns the A/B, so it attaches the measured delta
+    core.record_shared_selection_fidelity(f.token_match);
+    let shared_metrics = core.report().metrics;
+
+    assert_eq!(shared_metrics.shared_selection_fidelity.n, 1);
+    assert!((shared_metrics.shared_selection_token_match() - f.token_match).abs() < 1e-12);
+    let drop_pts = shared_metrics.shared_selection_drop_pts();
+    assert!(drop_pts.is_finite() && drop_pts >= 0.0);
+    let j = shared_metrics.to_json();
+    assert!(j.get("shared_selection_fidelity").is_some());
+    assert!(j.get("shared_selection_drop_pts").is_some());
+}
+
 #[test]
 fn serve_loop_rejects_chunks_beyond_compiled_seq_len() {
     let mut model = tiny_model();

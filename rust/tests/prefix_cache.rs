@@ -75,6 +75,7 @@ fn prefill_all(
                 start_pos: pos,
                 tokens: piece,
                 policy,
+                shared_selection: false,
                 collect_probs: false,
             })
             .expect("prefill chunk");
