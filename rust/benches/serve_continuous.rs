@@ -1535,14 +1535,213 @@ fn admission_sim_scenario() {
     );
 }
 
+// Fleet scenario (PR 9): N replica serve loops, footprint-affine routing
+// vs class-blind round-robin on a heterogeneous two-template burst.
+const FLEET_REPLICAS: usize = 2;
+const FLEET_N_REQUESTS: usize = 24;
+const FLEET_MAX_NEW: usize = 10;
+
+/// The admission scenario's two templated classes, but in a PAIRS pattern
+/// (ids 0,1 → tplA; 2,3 → tplB; 4,5 → tplA; …). The pairing matters: with
+/// a strictly alternating A,B,A,B trace, round-robin at N=2 would unmix
+/// the classes *by parity accident* and tie the affinity arm. Pairs make
+/// the baseline honest — class-blind rotation splits EVERY class across
+/// BOTH replicas, while rendezvous affinity separates them purely.
+/// Priorities double as TTFT class labels (tplA=0, tplB=1) so the merged
+/// fleet metrics report per-class TTFT directly.
+fn fleet_template_requests() -> Vec<Request> {
+    let tpl_a: Vec<u32> = vec![70, 75, 80, 72, 78, 74];
+    let tpl_b: Vec<u32> = vec![430, 436, 440, 433, 428, 438];
+    (0..FLEET_N_REQUESTS as u64)
+        .map(|id| {
+            let (prompt, domain, priority) = if id % 4 < 2 {
+                (tpl_a.clone(), "tplA", 0)
+            } else {
+                (tpl_b.clone(), "tplB", 1)
+            };
+            let mut r = Request::new(id, prompt, FLEET_MAX_NEW);
+            r.domain = domain.into();
+            r.priority = priority;
+            r
+        })
+        .collect()
+}
+
+/// Serve the fleet template burst under one routing mode: all requests
+/// submitted at sim t=0 (burst backlog — routing decides everything),
+/// then drained to completion.
+fn serve_fleet(affinity: &str) -> (xshare::fleet::FleetReport, BTreeMap<u64, Vec<u32>>) {
+    let mut cfg = base_cfg("vanilla");
+    cfg.batch_size = ADM_BATCH;
+    cfg.max_new_tokens = FLEET_MAX_NEW;
+    cfg.fleet_replicas = FLEET_REPLICAS;
+    cfg.fleet_affinity = xshare::fleet::AffinityMode::parse(affinity).expect("affinity");
+    let dir = xshare::runtime::artifacts_root().join(PRESET);
+    let mut fleet = xshare::fleet::Fleet::from_preset_dir(&dir, &cfg).expect("fleet");
+    for r in fleet_template_requests() {
+        fleet.submit(r).expect("live fleet").expect("unbounded queue");
+    }
+    fleet.drain().expect("drain");
+    let report = fleet.report().expect("report");
+    let outputs = fleet.outputs().clone();
+    (report, outputs)
+}
+
+/// **Fleet scenario** (real model, N real serve loops on threads): on a
+/// heterogeneous two-template burst, footprint-affine routing must beat
+/// class-blind round-robin at equal replica count on BOTH aggregate
+/// throughput and per-class TTFT — same-class requests share expert
+/// footprints, so keeping a class on its home replica keeps each
+/// replica's per-step activated-expert union narrow, while round-robin
+/// doubles every batch's union by mixing the templates. Vanilla routing
+/// is row-independent, so outputs are byte-identical across routing
+/// modes (and to a single serve loop) — the win is pure locality.
+fn fleet_scenario(model: &mut MoeModel) {
+    println!(
+        "\n# fleet — footprint-affine routing vs round-robin \
+         ({FLEET_REPLICAS} replicas, {FLEET_N_REQUESTS} reqs, B={ADM_BATCH}, \
+         vanilla routing, burst backlog)"
+    );
+    // The two classes must have DISTINCT rendezvous homes at this replica
+    // count, or the comparison measures nothing (pinned in fleet::router
+    // unit tests too — this guards the bench against key/score drift).
+    let home_a = xshare::fleet::FleetRouter::preferred("tplA", FLEET_REPLICAS);
+    let home_b = xshare::fleet::FleetRouter::preferred("tplB", FLEET_REPLICAS);
+    assert_ne!(home_a, home_b, "bench classes must map to distinct replicas");
+
+    // Single-loop probe: the byte-identity reference.
+    let mut cfg = base_cfg("vanilla");
+    cfg.batch_size = ADM_BATCH;
+    cfg.max_new_tokens = FLEET_MAX_NEW;
+    let probe = Scheduler::new(model, cfg)
+        .expect("probe scheduler")
+        .run(fleet_template_requests())
+        .expect("probe run");
+
+    let (aff, aff_out) = serve_fleet("class");
+    let (rr, rr_out) = serve_fleet("round-robin");
+
+    assert_eq!(
+        aff_out, probe.outputs,
+        "fleet (class affinity) outputs diverged from the single serve loop"
+    );
+    assert_eq!(
+        rr_out, probe.outputs,
+        "fleet (round-robin) outputs diverged from the single serve loop"
+    );
+
+    let ttft_class = |m: &xshare::metrics::ServeMetrics, class: u32| {
+        m.ttft_by_class.get(&class).map(|s| s.mean()).unwrap_or(f64::NAN)
+    };
+    let mut table = Table::new(&[
+        "routing",
+        "tokens",
+        "makespan_s",
+        "otps",
+        "activated/layer/step",
+        "ttft_tplA_s",
+        "ttft_tplB_s",
+        "spills",
+        "failovers",
+    ]);
+    for (name, r) in [("class-affine", &aff), ("round-robin", &rr)] {
+        let m = &r.aggregate;
+        table.row(&[
+            name.to_string(),
+            m.tokens_out.to_string(),
+            fmt(m.sim_seconds, 4),
+            fmt(m.otps(), 1),
+            fmt(m.mean_activated(), 2),
+            fmt(ttft_class(m, 0), 4),
+            fmt(ttft_class(m, 1), 4),
+            r.spills.to_string(),
+            r.failovers.to_string(),
+        ]);
+    }
+    table.print("serve_continuous — fleet routing, two-template burst");
+    println!(
+        "[fleet       ] class-affine vs round-robin: aggregate otps {:+.1}%, \
+         ttft tplA {:+.1}%, ttft tplB {:+.1}%",
+        pct(aff.aggregate.otps(), rr.aggregate.otps()),
+        pct(ttft_class(&aff.aggregate, 0), ttft_class(&rr.aggregate, 0)),
+        pct(ttft_class(&aff.aggregate, 1), ttft_class(&rr.aggregate, 1)),
+    );
+
+    // The tentpole claims, asserted: strictly higher aggregate throughput
+    // AND strictly lower same-class TTFT for both classes, at equal
+    // replica count, with byte-identical outputs (checked above).
+    assert!(
+        aff.aggregate.otps() > rr.aggregate.otps(),
+        "class-affine routing must beat round-robin on aggregate OTPS \
+         ({} vs {})",
+        aff.aggregate.otps(),
+        rr.aggregate.otps()
+    );
+    for class in [0u32, 1] {
+        assert!(
+            ttft_class(&aff.aggregate, class) < ttft_class(&rr.aggregate, class),
+            "class-affine routing must beat round-robin on class-{class} TTFT \
+             ({} vs {})",
+            ttft_class(&aff.aggregate, class),
+            ttft_class(&rr.aggregate, class)
+        );
+    }
+
+    // Compact per-arm rollup (full per-replica detail stays available via
+    // FleetReport::to_json; the snapshot keeps the headline numbers flat
+    // and reviewable like the other BENCH_*.json artifacts).
+    use xshare::util::json::Json;
+    let arm = |r: &xshare::fleet::FleetReport| {
+        Json::obj(vec![
+            ("tokens", Json::num(r.aggregate.tokens_out as f64)),
+            ("makespan_s", Json::num(r.aggregate.sim_seconds)),
+            ("otps", Json::num(r.aggregate.otps())),
+            ("activated_mean", Json::num(r.aggregate.mean_activated())),
+            ("ttft_tplA_s", Json::num(ttft_class(&r.aggregate, 0))),
+            ("ttft_tplB_s", Json::num(ttft_class(&r.aggregate, 1))),
+            ("spills", Json::num(r.spills as f64)),
+            ("failovers", Json::num(r.failovers as f64)),
+            (
+                "per_replica_requests_done",
+                Json::arr(
+                    r.replicas.iter().map(|p| Json::num(p.requests_done as f64)),
+                ),
+            ),
+        ])
+    };
+    let json = Json::obj(vec![
+        ("scenario", Json::str("fleet_routing")),
+        ("preset", Json::str(PRESET)),
+        ("replicas", Json::num(FLEET_REPLICAS as f64)),
+        ("requests", Json::num(FLEET_N_REQUESTS as f64)),
+        ("batch", Json::num(ADM_BATCH as f64)),
+        ("max_new_tokens", Json::num(FLEET_MAX_NEW as f64)),
+        ("otps_gain_pct", Json::num(pct(aff.aggregate.otps(), rr.aggregate.otps()))),
+        (
+            "ttft_tplA_delta_pct",
+            Json::num(pct(ttft_class(&aff.aggregate, 0), ttft_class(&rr.aggregate, 0))),
+        ),
+        (
+            "ttft_tplB_delta_pct",
+            Json::num(pct(ttft_class(&aff.aggregate, 1), ttft_class(&rr.aggregate, 1))),
+        ),
+        ("class_affine", arm(&aff)),
+        ("round_robin", arm(&rr)),
+    ])
+    .dump();
+    emit_bench("BENCH_fleet.json", &json);
+    println!("[fleet       ] wrote BENCH_fleet.json");
+}
+
 fn main() {
     // Scenario filter: `cargo bench --bench serve_continuous -- spec`
     // runs only the mixed-phase speculation scenario, `-- ep` the two
     // expert-parallel scenarios, `-- prefix` the shared-prefix cache
-    // scenario, and `-- prefill_fused` the fused prefill-wave scenario
-    // (CI executes the filters and uploads BENCH_spec.json /
-    // BENCH_ep_serve.json / BENCH_ep_migrate.json / BENCH_prefix.json /
-    // BENCH_prefill_fused.json); no filter runs everything. `--write-bench <dir>` additionally mirrors
+    // scenario, `-- prefill_fused` the fused prefill-wave scenario, and
+    // `-- fleet` the fleet-routing scenario (CI executes the filters and
+    // uploads BENCH_spec.json / BENCH_ep_serve.json / BENCH_ep_migrate.json
+    // / BENCH_prefix.json / BENCH_prefill_fused.json / BENCH_fleet.json);
+    // no filter runs everything. `--write-bench <dir>` additionally mirrors
     // every emitted BENCH_*.json into `<dir>` — the recipe for refreshing
     // the reference snapshots under `benchmarks/`.
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -1579,6 +1778,11 @@ fn main() {
     if only.as_deref() == Some("prefill_fused") {
         let mut model = load_model(PRESET);
         prefill_fused_scenario(&mut model);
+        return;
+    }
+    if only.as_deref() == Some("fleet") {
+        let mut model = load_model(PRESET);
+        fleet_scenario(&mut model);
         return;
     }
     println!(
@@ -1672,4 +1876,5 @@ fn main() {
     admission_sim_scenario();
     spec_mixed_phase_scenario();
     prefix_shared_cache_scenario();
+    fleet_scenario(&mut model);
 }

@@ -143,6 +143,26 @@ pub struct ServeConfig {
     /// shorter than this are not offered — a tiny restore saves less than
     /// its bookkeeping. Must be ≥ 1; only consulted when the cache is on.
     pub prefix_min_tokens: usize,
+    /// Fleet tier (`--fleet-replicas N`): run N independent serve-loop
+    /// replicas, each on its own thread, behind the footprint-affine
+    /// router (`fleet::Fleet`). 1 (default) = the single-loop path,
+    /// byte-unchanged.
+    pub fleet_replicas: usize,
+    /// Fleet routing mode (`--fleet-affinity class|round-robin`): `class`
+    /// (default) sends each request to the rendezvous-preferred replica of
+    /// its traffic class so in-batch expert sharing compounds per replica;
+    /// `round-robin` is the class-blind baseline the fleet bench compares
+    /// against.
+    pub fleet_affinity: crate::fleet::AffinityMode,
+    /// Queue-depth high-water mark (`--fleet-high-water Q`): an affine
+    /// target whose admission queue has reached Q is Busy, and the submit
+    /// spills to the least-loaded healthy replica instead. 0 (default) =
+    /// no backpressure spilling (pure affinity). Needs ≥ 2 replicas.
+    pub fleet_high_water: usize,
+    /// Health-probe clock (`--fleet-probe-every N`): every N fleet submits
+    /// the router re-probes every live replica's queue depth and refreshes
+    /// its Healthy/Busy state (Dead is terminal). Must be ≥ 1.
+    pub fleet_probe_every: usize,
     /// Expert-parallel topology (None = single GPU).
     pub ep: Option<EpConfig>,
     /// Server bind address.
@@ -175,6 +195,10 @@ impl Default for ServeConfig {
             ep_prefetch: false,
             prefix_cache_mb: 0,
             prefix_min_tokens: 8,
+            fleet_replicas: 1,
+            fleet_affinity: crate::fleet::AffinityMode::Class,
+            fleet_high_water: 0,
+            fleet_probe_every: 16,
             ep: None,
             addr: "127.0.0.1:7431".into(),
             seed: 0,
@@ -197,8 +221,9 @@ impl ServeConfig {
             "prefill_chunk", "chunk_shared_selection", "hardware", "admission",
             "max_queue", "footprint_decay",
             "ep_evict", "ep_rebalance", "ep_replica_slack", "ep_migrate_budget",
-            "ep_prefetch", "prefix_cache_mb", "prefix_min_tokens", "ep", "addr", "seed",
-            "max_new_tokens",
+            "ep_prefetch", "prefix_cache_mb", "prefix_min_tokens", "fleet_replicas",
+            "fleet_affinity", "fleet_high_water", "fleet_probe_every", "ep", "addr",
+            "seed", "max_new_tokens",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -266,6 +291,20 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("prefix_min_tokens") {
             cfg.prefix_min_tokens = v.as_usize().context("prefix_min_tokens")?;
+        }
+        if let Some(v) = root.get("fleet_replicas") {
+            cfg.fleet_replicas = v.as_usize().context("fleet_replicas")?;
+        }
+        if let Some(v) = root.get("fleet_affinity") {
+            cfg.fleet_affinity =
+                crate::fleet::AffinityMode::parse(v.as_str().context("fleet_affinity")?)
+                    .map_err(anyhow::Error::msg)?;
+        }
+        if let Some(v) = root.get("fleet_high_water") {
+            cfg.fleet_high_water = v.as_usize().context("fleet_high_water")?;
+        }
+        if let Some(v) = root.get("fleet_probe_every") {
+            cfg.fleet_probe_every = v.as_usize().context("fleet_probe_every")?;
         }
         if let Some(v) = root.get("addr") {
             cfg.addr = v.as_str().context("addr")?.to_string();
@@ -352,6 +391,21 @@ impl ServeConfig {
         if args.has("prefix-min-tokens") {
             self.prefix_min_tokens =
                 args.usize_or("prefix-min-tokens", self.prefix_min_tokens);
+        }
+        if args.has("fleet-replicas") {
+            self.fleet_replicas = args.usize_or("fleet-replicas", self.fleet_replicas);
+        }
+        if let Some(v) = args.get("fleet-affinity") {
+            self.fleet_affinity =
+                crate::fleet::AffinityMode::parse(v).map_err(anyhow::Error::msg)?;
+        }
+        if args.has("fleet-high-water") {
+            self.fleet_high_water =
+                args.usize_or("fleet-high-water", self.fleet_high_water);
+        }
+        if args.has("fleet-probe-every") {
+            self.fleet_probe_every =
+                args.usize_or("fleet-probe-every", self.fleet_probe_every);
         }
         if let Some(v) = args.get("addr") {
             self.addr = v.to_string();
@@ -443,6 +497,18 @@ impl ServeConfig {
                 "--ep-prefetch needs --ep-migrate-budget B: prefetch schedules \
                  bounded replica migrations for the predicted queued mix"
             );
+        }
+        if self.fleet_replicas == 0 {
+            bail!("fleet_replicas must be ≥ 1 (1 = the single-loop path)");
+        }
+        if self.fleet_high_water > 0 && self.fleet_replicas < 2 {
+            bail!(
+                "--fleet-high-water needs --fleet-replicas ≥ 2: backpressure \
+                 spilling has nowhere to spill with a single replica"
+            );
+        }
+        if self.fleet_probe_every == 0 {
+            bail!("fleet_probe_every must be ≥ 1 (probe every N fleet submits)");
         }
         if self.prefix_min_tokens == 0 {
             bail!(
@@ -822,6 +888,59 @@ mod tests {
         let bad = Args::parse(
             "--chunk-shared-selection".split_whitespace().map(String::from),
         );
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn fleet_knobs_roundtrip_and_validation() {
+        use crate::fleet::AffinityMode;
+        // defaults: single loop, class affinity, no backpressure spilling
+        let d = ServeConfig::default();
+        assert_eq!(d.fleet_replicas, 1);
+        assert_eq!(d.fleet_affinity, AffinityMode::Class);
+        assert_eq!(d.fleet_high_water, 0);
+        assert_eq!(d.fleet_probe_every, 16);
+
+        let p = write_tmp(
+            "fleet.json",
+            r#"{"fleet_replicas":3,"fleet_affinity":"round-robin",
+               "fleet_high_water":8,"fleet_probe_every":4}"#,
+        );
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.fleet_replicas, 3);
+        assert_eq!(cfg.fleet_affinity, AffinityMode::RoundRobin);
+        assert_eq!(cfg.fleet_high_water, 8);
+        assert_eq!(cfg.fleet_probe_every, 4);
+
+        // zero replicas cannot serve anything
+        let bad = write_tmp("fleet_bad.json", r#"{"fleet_replicas":0}"#);
+        let err = ServeConfig::from_json_file(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("fleet_replicas"), "{err:#}");
+        // backpressure spilling with one replica has nowhere to spill
+        let bad = write_tmp("fleet_bad2.json", r#"{"fleet_high_water":4}"#);
+        let err = ServeConfig::from_json_file(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("fleet-replicas"), "{err:#}");
+        // a zero probe clock never probes
+        let bad = write_tmp("fleet_bad3.json", r#"{"fleet_probe_every":0}"#);
+        assert!(ServeConfig::from_json_file(&bad).is_err());
+        // unknown routing mode fails loudly
+        let bad = write_tmp("fleet_bad4.json", r#"{"fleet_affinity":"random"}"#);
+        assert!(ServeConfig::from_json_file(&bad).is_err());
+
+        // CLI spellings
+        let args = Args::parse(
+            "--fleet-replicas 2 --fleet-affinity class --fleet-high-water 6 \
+             --fleet-probe-every 8"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.fleet_replicas, 2);
+        assert_eq!(cfg.fleet_affinity, AffinityMode::Class);
+        assert_eq!(cfg.fleet_high_water, 6);
+        assert_eq!(cfg.fleet_probe_every, 8);
+        let bad =
+            Args::parse("--fleet-high-water 4".split_whitespace().map(String::from));
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 

@@ -560,20 +560,13 @@ impl FootprintTracker {
         self
     }
 
-    /// The class key queued and running requests aggregate under.
+    /// The class key queued and running requests aggregate under — the
+    /// shared [`Request::class_key`] derivation, so the fleet router
+    /// (`fleet::FleetRouter`) and footprint admission provably agree on
+    /// every request's class (reference-vector pins live in
+    /// `coordinator::request` and the parity test in `tests/fleet.rs`).
     pub fn class_key(req: &Request) -> String {
-        if !req.domain.is_empty() {
-            return req.domain.clone();
-        }
-        // Prompt-content hash: unlabeled duplicate/templated traffic still
-        // shares a class. Hash the ORIGINAL prompt only — an evicted
-        // request re-feeds its generated tokens as prompt, and changing
-        // class mid-request would orphan its profile.
-        let mut h = crate::util::fnv::Fnv::new();
-        for &t in req.original_prompt() {
-            h.update_u32(t);
-        }
-        format!("prompt:{:016x}", h.finish())
+        req.class_key()
     }
 
     /// Predicted footprint for a queued request (its class profile), if its

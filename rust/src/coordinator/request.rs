@@ -52,6 +52,25 @@ impl Request {
     pub fn original_prompt(&self) -> &[u32] {
         &self.prompt[..self.prompt.len() - self.resume_prefix.len()]
     }
+
+    /// The traffic-class key this request aggregates under — THE class
+    /// identity shared by footprint admission
+    /// (`admission::FootprintTracker`), per-class speculation EMAs, TTFT
+    /// breakdowns, and the fleet router's affinity assignment. A labeled
+    /// request is its domain tag; an unlabeled one hashes the ORIGINAL
+    /// prompt (templated/duplicate traffic shares a class, and an evicted
+    /// request re-feeding generated tokens as prompt stays in the class it
+    /// started in).
+    pub fn class_key(&self) -> String {
+        if !self.domain.is_empty() {
+            return self.domain.clone();
+        }
+        let mut h = crate::util::fnv::Fnv::new();
+        for &t in self.original_prompt() {
+            h.update_u32(t);
+        }
+        format!("prompt:{:016x}", h.finish())
+    }
 }
 
 /// Phase of a sequence occupying a slot — the per-row state machine the
@@ -376,6 +395,31 @@ mod tests {
     fn restore_prefix_state_rejects_whole_prompt() {
         let mut s = SeqState::new(Request::new(1, vec![1, 2, 3], 1));
         s.restore_prefix_state(3);
+    }
+
+    #[test]
+    fn class_key_reference_vectors() {
+        // Pinned FNV-1a reference vectors (computed independently of
+        // `util::fnv`): the fleet router and footprint admission both key
+        // on exactly these strings, so the derivation must never drift.
+        let tpl_a = Request::new(1, vec![70, 75, 80, 72, 78, 74], 4);
+        assert_eq!(tpl_a.class_key(), "prompt:806942a48f164ce4");
+        let tpl_b = Request::new(2, vec![430, 436, 440, 433, 428, 438], 4);
+        assert_eq!(tpl_b.class_key(), "prompt:b0997d7b9e8edea4");
+        let small = Request::new(3, vec![1, 2, 3], 4);
+        assert_eq!(small.class_key(), "prompt:fd1f0f4381eb0395");
+
+        // A domain label overrides the prompt hash …
+        let mut labeled = Request::new(4, vec![1, 2, 3], 4);
+        labeled.domain = "gpqa".into();
+        assert_eq!(labeled.class_key(), "gpqa");
+
+        // … and resume re-feeds keep the original class: the key hashes
+        // only the original prompt slice.
+        let mut resumed = Request::new(5, vec![1, 2, 3], 4);
+        resumed.prompt.extend_from_slice(&[9, 8]);
+        resumed.resume_prefix = vec![9, 8];
+        assert_eq!(resumed.class_key(), "prompt:fd1f0f4381eb0395");
     }
 
     #[test]

@@ -545,6 +545,53 @@ impl<'m> ServeLoop<'m> {
         }
     }
 
+    /// Re-enter a failed-over request with its ORIGIN submission clock:
+    /// the fleet feeds a dead replica's in-flight rows back through here
+    /// with their committed history as `resume_prefix` (the eviction
+    /// lossless-resume shape) and the submit/deadline anchors of the
+    /// original submission, so TTFT and deadline accounting stay pinned to
+    /// when the client actually submitted — not to the failover instant.
+    /// Same serve-ability validation as [`ServeLoop::submit`]; bypasses
+    /// queue backpressure exactly like eviction requeue does (the request
+    /// was already admitted once — bouncing it now would drop accepted
+    /// work).
+    pub fn resubmit(
+        &mut self,
+        req: Request,
+        submit_sim: f64,
+        deadline_sim: Option<f64>,
+    ) -> std::result::Result<(), SubmitError> {
+        if req.prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt { id: req.id });
+        }
+        let max_seq = self.model.dims().max_seq;
+        if req.prompt.len() + req.max_new_tokens > max_seq + 1 {
+            return Err(SubmitError::PromptTooLong {
+                id: req.id,
+                len: req.prompt.len(),
+                budget: req.max_new_tokens,
+                max_seq,
+            });
+        }
+        let id = req.id;
+        let domain = req.domain.clone();
+        self.queue.requeue(req, submit_sim, deadline_sim, self.metrics.sim_seconds);
+        self.domains.insert(id, domain);
+        Ok(())
+    }
+
+    /// Advance an IDLE loop's sim clock to fleet time `t` (no-op when work
+    /// is live or `t` is in the past). The fleet driver calls this after
+    /// every `run_until` wave so an idle replica's clock tracks fleet time
+    /// — otherwise a request landing on a long-idle replica would anchor
+    /// its TTFT/deadline clocks in that replica's past and report negative
+    /// waits relative to the fleet.
+    pub fn advance_idle_to(&mut self, t: f64) {
+        if !self.has_work() && t > self.metrics.sim_seconds {
+            self.metrics.sim_seconds = t;
+        }
+    }
+
     /// Queued or running work remains.
     pub fn has_work(&self) -> bool {
         self.batcher.running() > 0 || !self.queue.is_empty()

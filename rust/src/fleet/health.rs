@@ -1,0 +1,118 @@
+//! Replica health states and the probe clock.
+//!
+//! Three states, one-way into `Dead`:
+//!
+//! * `Healthy` — routable, preferred target eligible.
+//! * `Busy` — the replica's admission queue has reached the configured
+//!   high-water mark; the router spills its affine traffic to the
+//!   least-loaded healthy replica until a later probe sees the queue
+//!   drained. Only entered when backpressure is enabled
+//!   (`--fleet-high-water` > 0).
+//! * `Dead` — the replica thread is gone (channel closed, step error, or
+//!   the kill instrumentation hook). Terminal: a dead replica is never
+//!   routed to again, and its in-flight rows fail over through the
+//!   lossless resume contract ([`super::Fleet`]).
+//!
+//! The probe clock is submission-driven, not wall-driven: every
+//! `probe_every` fleet submits ([`HealthTracker::tick`] fires on the
+//! first submit, then every Nth), the fleet re-reads each live replica's
+//! queue depth and feeds it to [`HealthTracker::observe`]. Between
+//! probes the states are sticky — exactly the staleness a real balancer
+//! has between health checks, which is why the router ALSO checks the
+//! instantaneous queue depth of its chosen target on every route (the
+//! probe protects the fleet from replicas it has not touched lately; the
+//! per-route check protects the hot path).
+
+/// Routing-relevant state of one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    /// Queue at/over the high-water mark as of the last probe.
+    Busy,
+    /// Replica thread gone. Terminal.
+    Dead,
+}
+
+/// Per-replica health registry + the submission-driven probe clock.
+#[derive(Debug)]
+pub struct HealthTracker {
+    probe_every: usize,
+    submits: usize,
+    states: Vec<HealthState>,
+}
+
+impl HealthTracker {
+    /// `probe_every` is validated ≥ 1 at config parse time.
+    pub fn new(n_replicas: usize, probe_every: usize) -> HealthTracker {
+        assert!(probe_every >= 1, "probe_every must be ≥ 1");
+        HealthTracker {
+            probe_every,
+            submits: 0,
+            states: vec![HealthState::Healthy; n_replicas],
+        }
+    }
+
+    /// Advance the probe clock by one submit; true when this submit should
+    /// probe (the very first submit probes, then every `probe_every`th).
+    pub fn tick(&mut self) -> bool {
+        let fire = self.submits % self.probe_every == 0;
+        self.submits += 1;
+        fire
+    }
+
+    /// Fold one probed queue depth into replica `i`'s state. Dead is
+    /// terminal; otherwise Busy iff backpressure is on (`high_water` > 0)
+    /// and the queue has reached the mark.
+    pub fn observe(&mut self, i: usize, queued: usize, high_water: usize) {
+        if self.states[i] == HealthState::Dead {
+            return;
+        }
+        self.states[i] = if high_water > 0 && queued >= high_water {
+            HealthState::Busy
+        } else {
+            HealthState::Healthy
+        };
+    }
+
+    /// Mark replica `i` dead (terminal).
+    pub fn mark_dead(&mut self, i: usize) {
+        self.states[i] = HealthState::Dead;
+    }
+
+    pub fn state(&self, i: usize) -> HealthState {
+        self.states[i]
+    }
+
+    /// Replicas not marked dead.
+    pub fn alive(&self) -> usize {
+        self.states.iter().filter(|&&s| s != HealthState::Dead).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_clock_fires_first_then_every_nth() {
+        let mut h = HealthTracker::new(2, 3);
+        let fires: Vec<bool> = (0..7).map(|_| h.tick()).collect();
+        assert_eq!(fires, [true, false, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn busy_tracks_high_water_and_dead_is_terminal() {
+        let mut h = HealthTracker::new(2, 1);
+        h.observe(0, 5, 4);
+        assert_eq!(h.state(0), HealthState::Busy);
+        h.observe(0, 3, 4);
+        assert_eq!(h.state(0), HealthState::Healthy);
+        // high_water 0 = backpressure off: never Busy
+        h.observe(0, 1000, 0);
+        assert_eq!(h.state(0), HealthState::Healthy);
+        h.mark_dead(0);
+        h.observe(0, 0, 4);
+        assert_eq!(h.state(0), HealthState::Dead, "dead is terminal");
+        assert_eq!(h.alive(), 1);
+    }
+}

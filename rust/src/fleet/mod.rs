@@ -1,0 +1,513 @@
+//! Fleet tier: N replica serve loops behind a footprint-affine router.
+//!
+//! One [`crate::coordinator::ServeLoop`] saturates one simulated
+//! accelerator; the fleet is the horizontal axis. Each replica owns a full
+//! engine + serving core on its own thread ([`replica`]), and the fleet
+//! routes every submit by the request's **traffic-class key** — the same
+//! [`crate::coordinator::Request::class_key`] footprint admission
+//! aggregates under. Class-affine routing is what makes N replicas more
+//! than N× a mixed pool: same-class requests share expert footprints, so
+//! steering a class to a home replica keeps each replica's in-batch
+//! activated-expert union narrow, which is precisely the quantity the
+//! memsim cost model charges per step. `benches/serve_continuous.rs --
+//! fleet` pins the claim: on a heterogeneous two-template trace, class
+//! affinity beats class-blind round-robin on aggregate OTPS *and*
+//! same-class TTFT at equal replica count, with byte-identical outputs.
+//!
+//! Routing ([`router`]) is rendezvous assignment overridden by
+//! backpressure and health ([`health`]): a preferred replica whose queue
+//! has reached `--fleet-high-water` spills to the least-loaded healthy
+//! replica, and `Dead` replicas fall out of every class's preference
+//! order without reshuffling the rest.
+//!
+//! ## Failover is lossless (the resume contract, one level up)
+//!
+//! The fleet mirrors every in-flight request's committed history from the
+//! per-step token deltas. When a replica dies (step error, thread gone, or
+//! the [`Fleet::kill_replica`] instrumentation hook), each stranded row is
+//! rebuilt exactly like slot eviction rebuilds a preempted row
+//! ([`crate::coordinator::eviction`]): committed history becomes the new
+//! prompt and [`crate::coordinator::Request::resume_prefix`], the budget
+//! shrinks by what was produced, and the request re-enters the router —
+//! landing on the class's next-preferred live replica with its **origin**
+//! submit clock and absolute deadline ([`crate::coordinator::ServeLoop::resubmit`]).
+//! Under row-independent selection the continuation is byte-identical and
+//! the TTFT sample stays origin-anchored and exactly-once: if first token
+//! was already committed, the sample lives in the dead replica's final
+//! metrics snapshot (captured by the kill hook) and survives into the
+//! merged rollup; if not, the resubmitted row records it on the new
+//! replica — `rust/tests/fleet.rs` pins both paths.
+//!
+//! Fleet-wide metrics are [`crate::metrics::ServeMetrics::merge`] over
+//! replica snapshots: counters sum, histograms merge, clocks take the
+//! makespan max — so aggregate OTPS is total tokens over fleet makespan,
+//! not a sum of per-replica rates.
+
+pub mod health;
+pub mod replica;
+pub mod router;
+
+pub use health::{HealthState, HealthTracker};
+pub use replica::{Pumped, ReplicaHandle, ReplicaStatus};
+pub use router::{rendezvous_score, AffinityMode, FleetRouter, ReplicaSnapshot};
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::{Request, SubmitError};
+use crate::metrics::ServeMetrics;
+use crate::model::MoeModel;
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+/// Fleet-side mirror of one in-flight request — everything failover needs
+/// to rebuild it losslessly on another replica.
+#[derive(Debug, Clone)]
+struct Inflight {
+    /// The request as originally submitted (prompt/budget untouched).
+    original: Request,
+    /// Every token the owning replica has committed so far (accumulated
+    /// from step deltas).
+    committed: Vec<u32>,
+    /// Owning replica index.
+    replica: usize,
+    /// Origin submission clock (replica sim time at first admission).
+    submit_sim: f64,
+    /// Origin absolute deadline, if any.
+    deadline_sim: Option<f64>,
+}
+
+/// N replica serve loops + router + health + the failover mirror.
+pub struct Fleet {
+    replicas: Vec<ReplicaHandle>,
+    router: FleetRouter,
+    health: HealthTracker,
+    high_water: usize,
+    inflight: BTreeMap<u64, Inflight>,
+    /// Finished outputs by request id (complete generation incl. any
+    /// resumed prefix), for batch-style callers; server-style callers
+    /// stream off [`Pumped`] instead.
+    outputs: BTreeMap<u64, Vec<u32>>,
+    /// Final metrics of dead replicas (captured by the kill hook / last
+    /// wave), folded into [`Fleet::report`].
+    dead_metrics: BTreeMap<usize, ServeMetrics>,
+    /// Requests finished per replica (the replica cores discard finished
+    /// rows between waves, so the fleet keeps the tally).
+    done_by_replica: Vec<u64>,
+    /// Rows re-entered through the router after a replica death.
+    failovers: u64,
+}
+
+/// One replica's row in [`Fleet::report`].
+pub struct ReplicaReport {
+    pub metrics: ServeMetrics,
+    pub status: ReplicaStatus,
+    pub dead: bool,
+    pub requests_done: u64,
+}
+
+/// Fleet rollup: merged aggregate + per-replica breakdown.
+pub struct FleetReport {
+    pub aggregate: ServeMetrics,
+    pub replicas: Vec<ReplicaReport>,
+    pub spills: u64,
+    pub failovers: u64,
+}
+
+impl FleetReport {
+    pub fn to_json(&self) -> Json {
+        let rows = self.replicas.iter().map(|r| {
+            Json::obj(vec![
+                ("queued", Json::num(r.status.queued as f64)),
+                ("running", Json::num(r.status.running as f64)),
+                ("sim_seconds", Json::num(r.metrics.sim_seconds)),
+                ("tokens_out", Json::num(r.metrics.tokens_out as f64)),
+                ("otps", Json::num(r.metrics.otps())),
+                ("requests_done", Json::num(r.requests_done as f64)),
+                ("dead", Json::Bool(r.dead)),
+            ])
+        });
+        Json::obj(vec![
+            ("aggregate", self.aggregate.to_json()),
+            ("replicas", Json::arr(rows)),
+            ("spills", Json::num(self.spills as f64)),
+            ("failovers", Json::num(self.failovers as f64)),
+        ])
+    }
+}
+
+impl Fleet {
+    /// Spawn one replica per builder. Every replica runs the SAME config
+    /// (fleet knobs in `cfg` are read here; the per-replica serving core
+    /// ignores them).
+    pub fn spawn<F>(cfg: &ServeConfig, builders: Vec<F>) -> Result<Fleet>
+    where
+        F: FnOnce() -> Result<MoeModel> + Send + 'static,
+    {
+        let n = builders.len();
+        if n == 0 {
+            bail!("fleet needs at least one replica");
+        }
+        let mut replicas = Vec::with_capacity(n);
+        for (i, build) in builders.into_iter().enumerate() {
+            replicas.push(
+                ReplicaHandle::spawn(cfg.clone(), build)
+                    .with_context(|| format!("spawning fleet replica {i}"))?,
+            );
+        }
+        Ok(Fleet {
+            replicas,
+            router: FleetRouter::new(cfg.fleet_affinity, cfg.fleet_high_water),
+            health: HealthTracker::new(n, cfg.fleet_probe_every),
+            high_water: cfg.fleet_high_water,
+            inflight: BTreeMap::new(),
+            outputs: BTreeMap::new(),
+            dead_metrics: BTreeMap::new(),
+            done_by_replica: vec![0; n],
+            failovers: 0,
+        })
+    }
+
+    /// Spawn `cfg.fleet_replicas` replicas of the preset at `dir`, each
+    /// loading its own engine in its own thread (PJRT handles are not
+    /// `Send`).
+    pub fn from_preset_dir(dir: &std::path::Path, cfg: &ServeConfig) -> Result<Fleet> {
+        let builders: Vec<_> = (0..cfg.fleet_replicas.max(1))
+            .map(|_| {
+                let dir = dir.to_path_buf();
+                move || Manifest::load(&dir).and_then(Engine::load).and_then(MoeModel::new)
+            })
+            .collect();
+        Fleet::spawn(cfg, builders)
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// True while any request is in flight anywhere in the fleet.
+    pub fn has_work(&self) -> bool {
+        !self.inflight.is_empty()
+    }
+
+    /// Rows re-routed after replica deaths so far.
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    /// Submits the router sent away from their affine target.
+    pub fn spills(&self) -> u64 {
+        self.router.spills()
+    }
+
+    /// Which replica currently owns in-flight request `id` (tests/benches).
+    pub fn replica_of(&self, id: u64) -> Option<usize> {
+        self.inflight.get(&id).map(|f| f.replica)
+    }
+
+    /// The fleet's committed-history mirror for in-flight request `id`.
+    pub fn committed_of(&self, id: u64) -> Option<&[u32]> {
+        self.inflight.get(&id).map(|f| f.committed.as_slice())
+    }
+
+    /// Finished outputs accumulated so far (complete generations).
+    pub fn outputs(&self) -> &BTreeMap<u64, Vec<u32>> {
+        &self.outputs
+    }
+
+    /// Drop accumulated outputs (long-lived server workers consume results
+    /// from [`Pumped`] and must keep this map from growing forever —
+    /// the fleet sibling of [`crate::coordinator::ServeLoop::discard_finished`]).
+    pub fn discard_outputs(&mut self) {
+        self.outputs.clear();
+    }
+
+    fn snapshots(&self) -> Vec<ReplicaSnapshot> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, h)| ReplicaSnapshot {
+                queued: h.status().queued,
+                running: h.status().running,
+                health: if h.is_dead() { HealthState::Dead } else { self.health.state(i) },
+            })
+            .collect()
+    }
+
+    /// Probe every live replica and fold fresh queue depths into the
+    /// health registry (the probe clock fires this from `submit`).
+    fn refresh_health(&mut self) {
+        for i in 0..self.replicas.len() {
+            if self.replicas[i].is_dead() {
+                self.health.mark_dead(i);
+                continue;
+            }
+            match self.replicas[i].probe() {
+                Ok(st) => self.health.observe(i, st.queued, self.high_water),
+                Err(_) => self.health.mark_dead(i),
+            }
+        }
+    }
+
+    /// Route and submit one request. Outer `Err` = the fleet itself cannot
+    /// take work (all replicas dead); inner `Err` = a typed per-request
+    /// rejection from the chosen replica's admission. `Ok(Ok(i))` returns
+    /// the replica index the request landed on.
+    pub fn submit(&mut self, req: Request) -> Result<std::result::Result<usize, SubmitError>> {
+        if self.health.tick() {
+            self.refresh_health();
+        }
+        let key = req.class_key();
+        loop {
+            let snaps = self.snapshots();
+            let Some(target) = self.router.route(&key, &snaps) else {
+                bail!("fleet has no live replica");
+            };
+            match self.replicas[target].submit(req.clone()) {
+                Ok(Ok(submit_sim)) => {
+                    let deadline_sim =
+                        req.deadline_ms.map(|ms| submit_sim + ms as f64 / 1e3);
+                    self.inflight.insert(
+                        req.id,
+                        Inflight {
+                            original: req,
+                            committed: Vec::new(),
+                            replica: target,
+                            submit_sim,
+                            deadline_sim,
+                        },
+                    );
+                    return Ok(Ok(target));
+                }
+                Ok(Err(e)) => return Ok(Err(e)),
+                Err(_) => {
+                    // Replica died on contact: fail over its rows and let
+                    // the router re-pick for this request.
+                    self.on_replica_death(target)?;
+                }
+            }
+        }
+    }
+
+    /// Start one wave command on every live replica, collect EVERY reply
+    /// (the one-outstanding-command protocol: all replicas must be idle
+    /// before any failover resubmits touch them), absorb the products,
+    /// and return what was combined plus how many replicas took part.
+    /// Replicas that died starting or finishing the wave are failed over
+    /// afterwards.
+    fn wave(
+        &mut self,
+        start: impl Fn(&mut ReplicaHandle) -> Result<()>,
+    ) -> Result<(Pumped, usize)> {
+        let mut started = Vec::new();
+        let mut newly_dead = Vec::new();
+        for i in 0..self.replicas.len() {
+            if self.replicas[i].is_dead() {
+                continue; // its rows were failed over when it died
+            }
+            match start(&mut self.replicas[i]) {
+                Ok(()) => started.push(i),
+                Err(_) => newly_dead.push(i),
+            }
+        }
+        let participants = started.len();
+        let mut combined = Pumped::default();
+        for i in started {
+            match self.replicas[i].collect_pumped() {
+                Ok(p) => {
+                    self.absorb(i, &p);
+                    combined.finished.extend(p.finished);
+                    combined.deltas.extend(p.deltas);
+                    combined.steps += p.steps;
+                }
+                Err(_) => newly_dead.push(i),
+            }
+        }
+        for i in newly_dead {
+            self.on_replica_death(i)?;
+        }
+        Ok((combined, participants))
+    }
+
+    /// Advance every live replica's sim clock to `t` (stepping whatever
+    /// work each has). Absorbs deltas/finishes; replica deaths mid-wave
+    /// fail over.
+    pub fn run_until(&mut self, t: f64) -> Result<()> {
+        self.wave(|h| h.start_run_until(t))?;
+        Ok(())
+    }
+
+    /// One serving step on every live replica (the server worker's
+    /// cadence). Returns the combined outcome for response dispatch.
+    pub fn pump(&mut self) -> Result<Pumped> {
+        let (combined, _) = self.wave(ReplicaHandle::start_pump)?;
+        Ok(combined)
+    }
+
+    /// Run the whole fleet to completion (batch-style callers). Loops
+    /// because failover can hand a dying replica's rows to replicas that
+    /// already drained.
+    pub fn drain(&mut self) -> Result<()> {
+        while self.has_work() {
+            let (_, participants) = self.wave(ReplicaHandle::start_drain)?;
+            if participants == 0 && self.has_work() {
+                bail!("fleet has in-flight requests but no live replica");
+            }
+        }
+        Ok(())
+    }
+
+    /// Submit a timed trace and run it to completion: for each `(t, req)`
+    /// (non-decreasing `t`), advance the fleet to `t`, submit, then drain.
+    /// Per-request admission rejections are returned; replica deaths fail
+    /// over transparently.
+    pub fn run_arrivals(
+        &mut self,
+        arrivals: Vec<(f64, Request)>,
+    ) -> Result<Vec<(u64, SubmitError)>> {
+        let mut rejected = Vec::new();
+        for (t, req) in arrivals {
+            self.run_until(t)?;
+            let id = req.id;
+            if let Err(e) = self.submit(req)? {
+                rejected.push((id, e));
+            }
+        }
+        self.drain()?;
+        Ok(rejected)
+    }
+
+    /// Fold one replica's wave products into the fleet mirror.
+    fn absorb(&mut self, replica: usize, p: &Pumped) {
+        for (id, delta) in &p.deltas {
+            if let Some(f) = self.inflight.get_mut(id) {
+                f.committed.extend_from_slice(delta);
+                f.replica = replica;
+            }
+        }
+        for (id, out) in &p.finished {
+            self.inflight.remove(id);
+            self.outputs.insert(*id, out.clone());
+            self.done_by_replica[replica] += 1;
+        }
+    }
+
+    /// Instrumented replica crash (tests/benches): capture the dying
+    /// replica's final metrics (preserving its recorded TTFT samples),
+    /// strand its in-flight rows, then fail them over.
+    pub fn kill_replica(&mut self, i: usize) -> Result<()> {
+        if let Ok(m) = self.replicas[i].kill() {
+            self.dead_metrics.insert(i, *m);
+        }
+        self.on_replica_death(i)
+    }
+
+    /// A replica is gone: mark it dead and re-enter every row it owned
+    /// through the router as an origin-anchored resume. Worklist, not
+    /// recursion — a failover target can itself die on contact.
+    fn on_replica_death(&mut self, i: usize) -> Result<()> {
+        let mut dead_list = vec![i];
+        while let Some(dead) = dead_list.pop() {
+            self.health.mark_dead(dead);
+            let stranded: Vec<u64> = self
+                .inflight
+                .iter()
+                .filter(|(_, f)| f.replica == dead)
+                .map(|(&id, _)| id)
+                .collect();
+            for id in stranded {
+                let f = self.inflight.get(&id).expect("stranded row in mirror").clone();
+                // Rebuild exactly like eviction's requeue_request, from the
+                // fleet-side mirror (the replica's SeqState is gone).
+                let mut req = f.original.clone();
+                req.evictions += 1;
+                if !f.committed.is_empty() {
+                    req.max_new_tokens = req.max_new_tokens.saturating_sub(f.committed.len());
+                    req.prompt.extend_from_slice(&f.committed);
+                    req.resume_prefix.extend_from_slice(&f.committed);
+                }
+                let key = req.class_key();
+                loop {
+                    let snaps = self.snapshots();
+                    let Some(target) = self.router.route(&key, &snaps) else {
+                        bail!("fleet has no live replica for failover of request {id}");
+                    };
+                    match self.replicas[target].resubmit(req.clone(), f.submit_sim, f.deadline_sim)
+                    {
+                        Ok(Ok(_)) => {
+                            let row = self.inflight.get_mut(&id).expect("mirror row");
+                            row.replica = target;
+                            self.failovers += 1;
+                            break;
+                        }
+                        Ok(Err(_)) => {
+                            // Resume admission bypasses backpressure; a typed
+                            // rejection here means the request itself is
+                            // unservable — drop it from the mirror.
+                            self.inflight.remove(&id);
+                            break;
+                        }
+                        Err(_) => {
+                            self.health.mark_dead(target);
+                            dead_list.push(target);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot fleet-wide metrics: merged aggregate (counters summed,
+    /// histograms merged, clocks maxed) + per-replica rows. Dead replicas
+    /// contribute their final captured snapshot.
+    pub fn report(&mut self) -> Result<FleetReport> {
+        let mut rows = Vec::with_capacity(self.replicas.len());
+        for i in 0..self.replicas.len() {
+            let dead = self.replicas[i].is_dead();
+            let mut metrics = if dead {
+                self.dead_metrics.get(&i).cloned().unwrap_or_default()
+            } else {
+                match self.replicas[i].metrics() {
+                    Ok(m) => *m,
+                    // Died on contact: fall back to its last captured
+                    // snapshot, if any.
+                    Err(_) => self.dead_metrics.get(&i).cloned().unwrap_or_default(),
+                }
+            };
+            metrics.requests_done = self.done_by_replica[i];
+            rows.push(ReplicaReport {
+                metrics,
+                status: self.replicas[i].status(),
+                dead: self.replicas[i].is_dead(),
+                requests_done: self.done_by_replica[i],
+            });
+        }
+        let mut aggregate = ServeMetrics::default();
+        for r in &rows {
+            aggregate.merge(&r.metrics);
+        }
+        Ok(FleetReport {
+            aggregate,
+            replicas: rows,
+            spills: self.router.spills(),
+            failovers: self.failovers,
+        })
+    }
+
+    /// Graceful teardown (drops queued work; call [`Fleet::drain`] first
+    /// if completion matters).
+    pub fn shutdown(&mut self) {
+        for h in &mut self.replicas {
+            h.shutdown();
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

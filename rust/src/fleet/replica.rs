@@ -1,0 +1,426 @@
+//! One serve-loop replica on its own thread, driven over a synchronous
+//! command channel.
+//!
+//! PJRT handles are not `Send`, so — exactly like the TCP server's worker
+//! — each replica thread constructs its own engine/model and owns the
+//! live [`ServeLoop`] for its whole lifetime; the fleet only ever talks
+//! to it through [`Cmd`]s. The protocol is strictly request/reply: every
+//! command gets exactly one [`ReplicaReply`], and every reply carries a
+//! [`ReplicaStatus`] snapshot (queue depth, slot occupancy, sim clock),
+//! so the fleet's routing mirror refreshes on every interaction for free.
+//!
+//! The fleet drives replicas in lockstep sim-time waves: `RunUntil(t)`
+//! steps while work remains and the clock is behind `t`, then
+//! [`ServeLoop::advance_idle_to`] snaps an idle clock forward so a later
+//! submit anchors its TTFT/deadline at fleet time, not in the replica's
+//! idle past. Commands are *started* on every replica and *collected*
+//! afterwards ([`ReplicaHandle::start_run_until`] /
+//! [`ReplicaHandle::collect_pumped`]), so N replica threads step their
+//! waves concurrently — the fleet thread never serializes them.
+//!
+//! A step error inside a wave is answered with [`CmdResult::Dead`] and
+//! the thread exits: the serving core's state is suspect at that point,
+//! and the fleet's failover path re-enters the dead replica's rows
+//! elsewhere. `Kill` is the instrumentation hook for exactly that path —
+//! it returns the final metrics snapshot (so TTFT samples already
+//! recorded on the dying replica survive into the fleet rollup) and then
+//! exits the thread, stranding all in-flight KV like a real crash would.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::{Request, ServeLoop, StepOutcome, SubmitError};
+use crate::metrics::ServeMetrics;
+use crate::model::MoeModel;
+
+/// Point-in-time routing view of a replica.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaStatus {
+    /// Requests waiting in the replica's admission queue.
+    pub queued: usize,
+    /// Sequences occupying batch slots.
+    pub running: usize,
+    /// The replica's sim clock (seconds).
+    pub clock: f64,
+}
+
+/// What one pump/wave/drain produced, with per-request ids intact.
+#[derive(Debug, Default)]
+pub struct Pumped {
+    /// Finished requests: (id, complete generation including any resumed
+    /// prefix) — same shape as [`StepOutcome::finished`].
+    pub finished: Vec<(u64, Vec<u32>)>,
+    /// Tokens newly committed, per request id (the streaming deltas AND
+    /// the fleet's committed-history mirror feed).
+    pub deltas: Vec<(u64, Vec<u32>)>,
+    /// Serving steps executed.
+    pub steps: u64,
+}
+
+impl Pumped {
+    fn absorb(&mut self, outcome: StepOutcome) {
+        self.finished.extend(outcome.finished);
+        self.deltas.extend(outcome.deltas);
+        self.steps += 1;
+    }
+}
+
+/// Commands the fleet sends; each yields exactly one [`ReplicaReply`].
+enum Cmd {
+    /// Submit a fresh request at the replica's current clock.
+    Submit(Request),
+    /// Re-enter a failed-over request with its origin submit/deadline
+    /// anchors (the lossless resume contract).
+    Resubmit { req: Request, submit_sim: f64, deadline_sim: Option<f64> },
+    /// Step while work remains and the clock is behind `t`, then snap an
+    /// idle clock to `t`.
+    RunUntil(f64),
+    /// At most one step (the server worker's cadence).
+    Pump,
+    /// Step until no work remains.
+    Drain,
+    /// Status refresh only (the health probe).
+    Probe,
+    /// Metrics snapshot (wall clock stamped).
+    Metrics,
+    /// Instrumented crash: final metrics snapshot, then the thread exits
+    /// with all in-flight rows stranded.
+    Kill,
+    /// Graceful exit (fleet teardown).
+    Shutdown,
+}
+
+/// Per-command payload; the status snapshot rides alongside in
+/// [`ReplicaReply`].
+enum CmdResult {
+    Submitted(std::result::Result<f64, SubmitError>),
+    Pumped(Pumped),
+    Metrics(Box<ServeMetrics>),
+    Ack,
+    /// The replica failed mid-command (step error); the thread is gone.
+    Dead(String),
+}
+
+struct ReplicaReply {
+    result: CmdResult,
+    status: ReplicaStatus,
+}
+
+/// Fleet-side handle: command sender, reply receiver, last-seen status.
+pub struct ReplicaHandle {
+    tx: Sender<Cmd>,
+    rx: Receiver<ReplicaReply>,
+    status: ReplicaStatus,
+    thread: Option<std::thread::JoinHandle<()>>,
+    dead: bool,
+    /// A started-but-uncollected wave command is outstanding.
+    pending: bool,
+}
+
+impl ReplicaHandle {
+    /// Spawn a replica thread: `build` constructs the model INSIDE the
+    /// thread (PJRT handles are not `Send`); `spawn` blocks until the
+    /// model is loaded and the serving core constructed, or fails.
+    pub fn spawn(
+        cfg: ServeConfig,
+        build: impl FnOnce() -> Result<MoeModel> + Send + 'static,
+    ) -> Result<ReplicaHandle> {
+        let (cmd_tx, cmd_rx) = channel::<Cmd>();
+        let (reply_tx, reply_rx) = channel::<ReplicaReply>();
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let thread = std::thread::spawn(move || {
+            let mut model = match build() {
+                Ok(m) => m,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            match ServeLoop::new(&mut model, cfg) {
+                Ok(core) => {
+                    let _ = ready_tx.send(Ok(()));
+                    replica_loop(core, cmd_rx, reply_tx);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                }
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(ReplicaHandle {
+                tx: cmd_tx,
+                rx: reply_rx,
+                status: ReplicaStatus::default(),
+                thread: Some(thread),
+                dead: false,
+                pending: false,
+            }),
+            Ok(Err(msg)) => {
+                let _ = thread.join();
+                bail!("fleet replica failed to start: {msg}")
+            }
+            Err(_) => {
+                let _ = thread.join();
+                bail!("fleet replica died during startup")
+            }
+        }
+    }
+
+    /// Last status mirror (refreshed by every reply).
+    pub fn status(&self) -> ReplicaStatus {
+        self.status
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    fn send(&mut self, cmd: Cmd) -> Result<()> {
+        debug_assert!(!self.pending, "replica already has an outstanding command");
+        if self.dead {
+            bail!("replica is dead");
+        }
+        if self.tx.send(cmd).is_err() {
+            self.mark_gone();
+            bail!("replica thread gone");
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<CmdResult> {
+        match self.rx.recv() {
+            Ok(reply) => {
+                self.status = reply.status;
+                if let CmdResult::Dead(msg) = reply.result {
+                    self.mark_gone();
+                    bail!("replica died mid-command: {msg}");
+                }
+                Ok(reply.result)
+            }
+            Err(_) => {
+                self.mark_gone();
+                bail!("replica thread gone");
+            }
+        }
+    }
+
+    fn call(&mut self, cmd: Cmd) -> Result<CmdResult> {
+        self.send(cmd)?;
+        self.recv()
+    }
+
+    fn mark_gone(&mut self) {
+        self.dead = true;
+        self.pending = false;
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Submit a fresh request. Outer `Err` = the replica itself is gone
+    /// (route elsewhere); inner `Err` = a typed submit rejection from the
+    /// serving core (surface to the client). `Ok(Ok(t))` returns the
+    /// replica clock the submission was anchored at.
+    pub fn submit(
+        &mut self,
+        req: Request,
+    ) -> Result<std::result::Result<f64, SubmitError>> {
+        match self.call(Cmd::Submit(req))? {
+            CmdResult::Submitted(r) => Ok(r),
+            _ => bail!("replica protocol violation: unexpected reply to Submit"),
+        }
+    }
+
+    /// Re-enter a failed-over request with origin anchors.
+    pub fn resubmit(
+        &mut self,
+        req: Request,
+        submit_sim: f64,
+        deadline_sim: Option<f64>,
+    ) -> Result<std::result::Result<f64, SubmitError>> {
+        match self.call(Cmd::Resubmit { req, submit_sim, deadline_sim })? {
+            CmdResult::Submitted(r) => Ok(r),
+            _ => bail!("replica protocol violation: unexpected reply to Resubmit"),
+        }
+    }
+
+    /// Start a sim-time wave (collect with [`ReplicaHandle::collect_pumped`]).
+    pub fn start_run_until(&mut self, t: f64) -> Result<()> {
+        self.send(Cmd::RunUntil(t))?;
+        self.pending = true;
+        Ok(())
+    }
+
+    /// Start a single-step pump (collect with [`ReplicaHandle::collect_pumped`]).
+    pub fn start_pump(&mut self) -> Result<()> {
+        self.send(Cmd::Pump)?;
+        self.pending = true;
+        Ok(())
+    }
+
+    /// Start a full drain (collect with [`ReplicaHandle::collect_pumped`]).
+    pub fn start_drain(&mut self) -> Result<()> {
+        self.send(Cmd::Drain)?;
+        self.pending = true;
+        Ok(())
+    }
+
+    /// Collect the reply of a started wave/pump/drain.
+    pub fn collect_pumped(&mut self) -> Result<Pumped> {
+        debug_assert!(self.pending, "no outstanding command to collect");
+        self.pending = false;
+        match self.recv()? {
+            CmdResult::Pumped(p) => Ok(p),
+            _ => bail!("replica protocol violation: unexpected reply to wave"),
+        }
+    }
+
+    /// Refresh the status mirror (the health probe).
+    pub fn probe(&mut self) -> Result<ReplicaStatus> {
+        self.call(Cmd::Probe)?;
+        Ok(self.status)
+    }
+
+    /// Metrics snapshot (replica keeps serving).
+    pub fn metrics(&mut self) -> Result<Box<ServeMetrics>> {
+        match self.call(Cmd::Metrics)? {
+            CmdResult::Metrics(m) => Ok(m),
+            _ => bail!("replica protocol violation: unexpected reply to Metrics"),
+        }
+    }
+
+    /// Instrumented crash: final metrics back, thread gone, in-flight rows
+    /// stranded. The handle is dead afterwards.
+    pub fn kill(&mut self) -> Result<Box<ServeMetrics>> {
+        let result = self.call(Cmd::Kill)?;
+        self.mark_gone();
+        match result {
+            CmdResult::Metrics(m) => Ok(m),
+            _ => bail!("replica protocol violation: unexpected reply to Kill"),
+        }
+    }
+
+    /// Graceful teardown (drops any idle work; fleet drains first).
+    pub fn shutdown(&mut self) {
+        if self.dead {
+            return;
+        }
+        if self.tx.send(Cmd::Shutdown).is_ok() {
+            let _ = self.rx.recv();
+        }
+        self.mark_gone();
+    }
+}
+
+impl Drop for ReplicaHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn status_of(core: &ServeLoop<'_>) -> ReplicaStatus {
+    ReplicaStatus {
+        queued: core.queued(),
+        running: core.running(),
+        clock: core.metrics().sim_seconds,
+    }
+}
+
+/// The replica thread body: serve commands until Shutdown/Kill/step error.
+fn replica_loop(
+    mut core: ServeLoop<'_>,
+    cmd_rx: Receiver<Cmd>,
+    reply_tx: Sender<ReplicaReply>,
+) {
+    let started = Instant::now();
+    let snapshot = |core: &mut ServeLoop<'_>| {
+        let mut m = core.metrics().clone();
+        m.wall_seconds = started.elapsed().as_secs_f64();
+        Box::new(m)
+    };
+    for cmd in cmd_rx {
+        let mut exit = false;
+        let result = match cmd {
+            Cmd::Submit(req) => {
+                let at = core.metrics().sim_seconds;
+                CmdResult::Submitted(core.submit(req).map(|()| at))
+            }
+            Cmd::Resubmit { req, submit_sim, deadline_sim } => CmdResult::Submitted(
+                core.resubmit(req, submit_sim, deadline_sim).map(|()| submit_sim),
+            ),
+            Cmd::RunUntil(t) => {
+                let wave = (|| -> Result<Pumped> {
+                    let mut p = Pumped::default();
+                    while core.has_work() && core.metrics().sim_seconds < t {
+                        p.absorb(core.step()?);
+                    }
+                    core.advance_idle_to(t);
+                    core.discard_finished();
+                    Ok(p)
+                })();
+                match wave {
+                    Ok(p) => CmdResult::Pumped(p),
+                    Err(e) => {
+                        exit = true;
+                        CmdResult::Dead(format!("{e:#}"))
+                    }
+                }
+            }
+            Cmd::Pump => {
+                if core.has_work() {
+                    match core.step() {
+                        Ok(outcome) => {
+                            let mut p = Pumped::default();
+                            p.absorb(outcome);
+                            core.discard_finished();
+                            CmdResult::Pumped(p)
+                        }
+                        Err(e) => {
+                            exit = true;
+                            CmdResult::Dead(format!("{e:#}"))
+                        }
+                    }
+                } else {
+                    CmdResult::Pumped(Pumped::default())
+                }
+            }
+            Cmd::Drain => {
+                let drained = (|| -> Result<Pumped> {
+                    let mut p = Pumped::default();
+                    while core.has_work() {
+                        p.absorb(core.step()?);
+                    }
+                    core.discard_finished();
+                    Ok(p)
+                })();
+                match drained {
+                    Ok(p) => CmdResult::Pumped(p),
+                    Err(e) => {
+                        exit = true;
+                        CmdResult::Dead(format!("{e:#}"))
+                    }
+                }
+            }
+            Cmd::Probe => CmdResult::Ack,
+            Cmd::Metrics => CmdResult::Metrics(snapshot(&mut core)),
+            Cmd::Kill => {
+                exit = true;
+                CmdResult::Metrics(snapshot(&mut core))
+            }
+            Cmd::Shutdown => {
+                exit = true;
+                CmdResult::Ack
+            }
+        };
+        let status = status_of(&core);
+        if reply_tx.send(ReplicaReply { result, status }).is_err() {
+            return; // fleet gone
+        }
+        if exit {
+            return;
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Footprint-affine request routing over replica serve loops.
+//!
+//! The affinity map is rendezvous hashing (highest-random-weight): a
+//! request's traffic-class key — the SAME [`crate::coordinator::Request::class_key`]
+//! footprint admission aggregates under — scores against every replica
+//! index with FNV-1a, and the live replica with the highest score is the
+//! class's preferred target. Rendezvous gives the two properties a fleet
+//! needs and simple modulo hashing lacks: every class has a total
+//! preference order over replicas (so a dead replica's classes fall
+//! through to their second choice without reshuffling anyone else), and
+//! the assignment is stateless — any router instance, including a rebuilt
+//! one, computes the same map.
+//!
+//! Affinity is overridden by two signals, in order:
+//!
+//! * **health**: `Dead` replicas are never candidates; a `Busy` preferred
+//!   target (probe-observed queue at the high-water mark) spills.
+//! * **queue-depth backpressure**: when the preferred target's
+//!   instantaneous queue has reached the high-water mark, the submit
+//!   spills to the least-loaded healthy replica (min queued, then min
+//!   running, then lowest index). Spills are counted — a spilling fleet
+//!   is measurably trading expert-sharing locality for tail latency.
+//!
+//! `round-robin` mode is the class-blind baseline (skips dead replicas
+//! only) that `benches/serve_continuous.rs -- fleet` compares against.
+
+use crate::util::fnv::Fnv;
+
+use super::health::HealthState;
+
+/// Fleet routing mode (`--fleet-affinity`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AffinityMode {
+    /// Footprint-class rendezvous affinity (default).
+    Class,
+    /// Class-blind rotation — the baseline balancer.
+    RoundRobin,
+}
+
+impl AffinityMode {
+    pub fn parse(s: &str) -> Result<AffinityMode, String> {
+        match s {
+            "class" | "affinity" => Ok(AffinityMode::Class),
+            "round-robin" | "round_robin" | "rr" => Ok(AffinityMode::RoundRobin),
+            other => {
+                Err(format!("unknown fleet affinity '{other}' (class | round-robin)"))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for AffinityMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AffinityMode::Class => write!(f, "class"),
+            AffinityMode::RoundRobin => write!(f, "round-robin"),
+        }
+    }
+}
+
+/// What the router sees of one replica at route time: the live queue
+/// depth and slot occupancy (from the replica's last status mirror) plus
+/// its health state.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSnapshot {
+    pub queued: usize,
+    pub running: usize,
+    pub health: HealthState,
+}
+
+/// Rendezvous score of `key` on `replica`: FNV-1a over the key bytes
+/// followed by the replica index (LE u64). Public so tests can pin the
+/// class→replica map independently of the router.
+pub fn rendezvous_score(key: &str, replica: usize) -> u64 {
+    let mut h = Fnv::new();
+    h.update_bytes(key.as_bytes());
+    h.update_bytes(&(replica as u64).to_le_bytes());
+    h.finish()
+}
+
+/// The routing decision-maker. Holds only routing state (round-robin
+/// cursor, spill counter) — replica status lives with the fleet, health
+/// with [`super::health::HealthTracker`], and both arrive per route as
+/// [`ReplicaSnapshot`]s.
+#[derive(Debug)]
+pub struct FleetRouter {
+    mode: AffinityMode,
+    high_water: usize,
+    rr_next: usize,
+    spills: u64,
+}
+
+impl FleetRouter {
+    pub fn new(mode: AffinityMode, high_water: usize) -> FleetRouter {
+        FleetRouter { mode, high_water, rr_next: 0, spills: 0 }
+    }
+
+    pub fn mode(&self) -> AffinityMode {
+        self.mode
+    }
+
+    /// Submits routed away from their affine target by backpressure.
+    pub fn spills(&self) -> u64 {
+        self.spills
+    }
+
+    /// The class's health-blind rendezvous preference among `n` replicas —
+    /// the affinity map itself, introspectable for tests and benches.
+    pub fn preferred(key: &str, n: usize) -> usize {
+        assert!(n >= 1, "no replicas");
+        (0..n).max_by_key(|&i| rendezvous_score(key, i)).unwrap()
+    }
+
+    /// Pick the replica for one submit. `None` when every replica is dead.
+    pub fn route(&mut self, key: &str, snaps: &[ReplicaSnapshot]) -> Option<usize> {
+        match self.mode {
+            AffinityMode::RoundRobin => {
+                let n = snaps.len();
+                for off in 0..n {
+                    let i = (self.rr_next + off) % n;
+                    if snaps[i].health != HealthState::Dead {
+                        self.rr_next = (i + 1) % n;
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            AffinityMode::Class => {
+                let target = snaps
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.health != HealthState::Dead)
+                    .max_by_key(|&(i, _)| rendezvous_score(key, i))
+                    .map(|(i, _)| i)?;
+                let over = snaps[target].health == HealthState::Busy
+                    || (self.high_water > 0 && snaps[target].queued >= self.high_water);
+                if !over {
+                    return Some(target);
+                }
+                // Spill: least-loaded live replica (fewest queued, then
+                // fewest running, then lowest index — fully deterministic).
+                let spill = snaps
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.health != HealthState::Dead)
+                    .min_by_key(|&(i, s)| (s.queued, s.running, i))
+                    .map(|(i, _)| i)?;
+                if spill != target {
+                    self.spills += 1;
+                }
+                Some(spill)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn healthy(queued: usize) -> ReplicaSnapshot {
+        ReplicaSnapshot { queued, running: 0, health: HealthState::Healthy }
+    }
+
+    #[test]
+    fn affinity_mode_parses_and_displays() {
+        assert_eq!(AffinityMode::parse("class").unwrap(), AffinityMode::Class);
+        assert_eq!(AffinityMode::parse("affinity").unwrap(), AffinityMode::Class);
+        assert_eq!(
+            AffinityMode::parse("round-robin").unwrap(),
+            AffinityMode::RoundRobin
+        );
+        assert_eq!(AffinityMode::parse("rr").unwrap(), AffinityMode::RoundRobin);
+        assert!(AffinityMode::parse("hash").is_err());
+        assert_eq!(AffinityMode::Class.to_string(), "class");
+        assert_eq!(AffinityMode::RoundRobin.to_string(), "round-robin");
+    }
+
+    #[test]
+    fn rendezvous_assignment_is_stable_and_separates_the_bench_templates() {
+        // The two-template trace's domain keys land on DISTINCT replicas
+        // at N = 2 — the separation the fleet bench's affinity arm relies
+        // on. Pinned values: any change to the key bytes or score layout
+        // must show up here, not silently reshuffle the fleet.
+        assert_eq!(FleetRouter::preferred("tplA", 2), 1);
+        assert_eq!(FleetRouter::preferred("tplB", 2), 0);
+        // Growing the fleet only ever moves a class to a NEW replica or
+        // leaves it alone (rendezvous monotonicity at these pins).
+        assert_eq!(FleetRouter::preferred("tplA", 3), 1);
+        assert_eq!(FleetRouter::preferred("tplB", 3), 2);
+        // Same-class requests agree regardless of router instance.
+        let mut a = FleetRouter::new(AffinityMode::Class, 0);
+        let mut b = FleetRouter::new(AffinityMode::Class, 0);
+        let snaps = [healthy(0), healthy(0)];
+        assert_eq!(a.route("tplA", &snaps), b.route("tplA", &snaps));
+    }
+
+    #[test]
+    fn class_mode_skips_dead_and_falls_through_in_preference_order() {
+        let mut r = FleetRouter::new(AffinityMode::Class, 0);
+        let mut snaps = [healthy(0), healthy(0)];
+        assert_eq!(r.route("tplA", &snaps), Some(1));
+        snaps[1].health = HealthState::Dead;
+        // tplA falls through to its next-preferred live replica; tplB is
+        // undisturbed (no global reshuffle).
+        assert_eq!(r.route("tplA", &snaps), Some(0));
+        assert_eq!(r.route("tplB", &snaps), Some(0));
+        snaps[0].health = HealthState::Dead;
+        assert_eq!(r.route("tplA", &snaps), None, "all dead: unroutable");
+        assert_eq!(r.spills(), 0, "falling through a dead replica is not a spill");
+    }
+
+    #[test]
+    fn class_mode_spills_at_high_water_to_least_loaded() {
+        let mut r = FleetRouter::new(AffinityMode::Class, 2);
+        // tplA prefers replica 1; its queue is at the mark → spill to the
+        // least-loaded live replica.
+        let snaps = [healthy(1), healthy(2), healthy(0)];
+        assert_eq!(r.route("tplA", &snaps), Some(2));
+        assert_eq!(r.spills(), 1);
+        // Below the mark: pure affinity, no spill.
+        let snaps = [healthy(1), healthy(1), healthy(0)];
+        assert_eq!(r.route("tplA", &snaps), Some(1));
+        assert_eq!(r.spills(), 1);
+        // A probe-stale Busy state spills even when the instantaneous
+        // queue reads below the mark.
+        let mut snaps = [healthy(0), healthy(0), healthy(0)];
+        snaps[1].health = HealthState::Busy;
+        assert_eq!(r.route("tplA", &snaps), Some(0));
+        assert_eq!(r.spills(), 2);
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_dead() {
+        let mut r = FleetRouter::new(AffinityMode::RoundRobin, 0);
+        let mut snaps = [healthy(0), healthy(0), healthy(0)];
+        let picks: Vec<_> = (0..4).map(|_| r.route("anything", &snaps).unwrap()).collect();
+        assert_eq!(picks, [0, 1, 2, 0], "class-blind rotation");
+        snaps[1].health = HealthState::Dead;
+        let picks: Vec<_> = (0..4).map(|_| r.route("anything", &snaps).unwrap()).collect();
+        assert_eq!(picks, [2, 0, 2, 0], "dead replica skipped, rotation continues");
+    }
+}

@@ -19,6 +19,9 @@
 //! * [`coordinator`] — request lifecycle: queues, continuous batcher,
 //!   decode scheduler, speculative verify loop.
 //! * [`server`]    — JSON-lines TCP front-end + client.
+//! * [`fleet`]     — N serve-loop replicas behind a footprint-affine
+//!   router: rendezvous class assignment, queue-depth backpressure,
+//!   health states, lossless failover through the resume contract.
 //! * [`memsim`]    — H100/TPU memory-hierarchy cost model → OTPS estimates.
 //! * [`ep`]        — expert-parallel placement and per-GPU load accounting.
 //! * [`gen`]       — synthetic workload generator (domain-clustered gate
@@ -32,6 +35,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod ep;
+pub mod fleet;
 pub mod gen;
 pub mod memsim;
 pub mod metrics;

@@ -26,7 +26,8 @@ const USAGE: &str = "usage: xshare <serve|run|client|info> [--flags]
          [--spec-draft model|lookup] [--prefill-chunk T] [--admission A]
          [--max-queue Q] [--footprint-decay D] [--ep-gpus G] [--ep-evict]
          [--ep-rebalance N] [--prefix-cache-mb MB] [--prefix-min-tokens N]
-         [--chunk-shared-selection] [--addr A] [--config F]
+         [--chunk-shared-selection] [--fleet-replicas N] [--fleet-affinity M]
+         [--fleet-high-water Q] [--fleet-probe-every N] [--addr A] [--config F]
   run    --preset P --policy POL --requests N [--batch N] [--spec-len L]
          [--spec-adaptive] [--spec-draft D] [--prefill-chunk T]
          [--admission A] [--ep-gpus G] [--ep-evict] [--ep-rebalance N]
@@ -53,7 +54,20 @@ prefill:   co-prefilling rows are charged as fused multi-row waves (one
            weight stream per layer per wave); --chunk-shared-selection
            (needs --prefill-chunk >= 2) additionally shares one expert
            set across each chunk's positions — lossy, with the routing
-           fidelity delta reported in metrics, never silently";
+           fidelity delta reported in metrics, never silently
+fleet:     --fleet-replicas N serves N independent replica loops (one
+           engine each) behind a footprint-affine router: each request's
+           traffic-class key picks a home replica by rendezvous hashing,
+           keeping same-class (footprint-sharing) requests together so
+           per-replica expert unions stay narrow. --fleet-affinity
+           class|round-robin selects the router (round-robin is the
+           class-blind baseline); --fleet-high-water Q spills a submit to
+           the least-loaded replica when the affine target's queue
+           reaches Q (0 = no backpressure); --fleet-probe-every N sets
+           the health-probe cadence in submits. A replica that dies has
+           its in-flight rows failed over losslessly: committed history
+           resumes on the next-preferred replica, byte-identical, with
+           origin-anchored TTFT/deadline accounting";
 
 fn main() {
     if let Err(e) = real_main() {

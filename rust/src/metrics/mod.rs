@@ -34,6 +34,23 @@ impl Summary {
             self.sum / self.n as f64
         }
     }
+
+    /// Fold another accumulator into this one: identical to having added
+    /// the other side's samples here one by one. Empty sides are neutral —
+    /// min/max only combine when both sides actually saw samples.
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.n += other.n;
+        self.sum += other.sum;
+    }
 }
 
 /// Fixed-boundary latency histogram (µs buckets, log-spaced).
@@ -67,6 +84,21 @@ impl LatencyHistogram {
 
     pub fn mean_us(&self) -> f64 {
         self.summary.mean()
+    }
+
+    /// Fold another histogram into this one (bucket-wise; both sides use
+    /// the fixed default boundaries, asserted here). Quantiles of the
+    /// merge weight every underlying sample, exactly as if all had been
+    /// recorded into one histogram.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(
+            self.bounds_us, other.bounds_us,
+            "histogram bucket boundaries diverged"
+        );
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.summary.merge(&other.summary);
     }
 
     /// Approximate quantile in seconds (bucket boundaries are µs).
@@ -400,6 +432,134 @@ impl ServeMetrics {
         self.spec_accepted as f64 / self.spec_proposed as f64
     }
 
+    /// Fold another replica's metrics into this one — the fleet rollup.
+    ///
+    /// Merge semantics by field kind:
+    /// - **counters** (token/request/step tallies, cache and EP event
+    ///   counts) sum;
+    /// - **distributions** ([`Summary`] accumulators and
+    ///   [`LatencyHistogram`]s) merge sample-exactly, so aggregate means
+    ///   and quantiles weight every replica's samples;
+    /// - **clocks** (`sim_seconds`, `wall_seconds`) take the MAX: replicas
+    ///   run concurrently, so the fleet makespan is the slowest replica's
+    ///   clock and aggregate OTPS is Σ tokens / max clock — summing clocks
+    ///   would report serial time and understate fleet throughput N-fold;
+    /// - **keyed maps** and **per-index gauge vectors** merge entrywise
+    ///   (vectors resize to the longer side).
+    ///
+    /// `other` is destructured exhaustively (no `..` rest pattern): adding
+    /// a field to [`ServeMetrics`] without deciding its merge rule is a
+    /// compile error, so no field can silently drop out of the rollup.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        let ServeMetrics {
+            tokens_out,
+            tokens_prompt,
+            prefill_forwards,
+            prefill_tokens_per_step,
+            requests_done,
+            sim_seconds,
+            wall_seconds,
+            steps,
+            activated,
+            max_gpu_load,
+            gpu_loads,
+            gpu_load_integral,
+            evictions,
+            rebalances,
+            rebalance_delta,
+            migrations,
+            migration_ops,
+            migration_bytes,
+            migration_seconds,
+            prefetches,
+            spec_proposed,
+            spec_accepted,
+            spec_depth,
+            spec_accept_by_class,
+            spec_stalled_steps,
+            step_latency,
+            wall_step_latency,
+            ttft,
+            ttft_hist,
+            ttft_by_class,
+            queue_wait,
+            queue_wait_hist,
+            queue_depth,
+            queue_rejected,
+            deadline_misses,
+            deadline_total,
+            footprint_overlap,
+            admitted_in_flight,
+            prefix_hits,
+            prefix_misses,
+            prefix_inserts,
+            prefix_evictions,
+            prefix_cached_tokens,
+            prefill_restored_tokens,
+            resume_restores,
+            resume_recomputes,
+            prefill_waves,
+            prefill_rows_per_wave,
+            prefill_streams_saved,
+            shared_selection_fidelity,
+        } = other;
+
+        self.tokens_out += tokens_out;
+        self.tokens_prompt += tokens_prompt;
+        self.prefill_forwards += prefill_forwards;
+        self.prefill_tokens_per_step.merge(prefill_tokens_per_step);
+        self.requests_done += requests_done;
+        self.sim_seconds = self.sim_seconds.max(*sim_seconds);
+        self.wall_seconds = self.wall_seconds.max(*wall_seconds);
+        self.steps += steps;
+        merge_summary_vec(&mut self.activated, activated);
+        self.max_gpu_load.merge(max_gpu_load);
+        merge_summary_vec(&mut self.gpu_loads, gpu_loads);
+        self.gpu_load_integral += gpu_load_integral;
+        self.evictions += evictions;
+        self.rebalances += rebalances;
+        self.rebalance_delta.merge(rebalance_delta);
+        self.migrations += migrations;
+        self.migration_ops.merge(migration_ops);
+        self.migration_bytes += migration_bytes;
+        self.migration_seconds += migration_seconds;
+        self.prefetches += prefetches;
+        self.spec_proposed += spec_proposed;
+        self.spec_accepted += spec_accepted;
+        self.spec_depth.merge(spec_depth);
+        for (class, s) in spec_accept_by_class {
+            self.spec_accept_by_class.entry(class.clone()).or_default().merge(s);
+        }
+        self.spec_stalled_steps += spec_stalled_steps;
+        self.step_latency.merge(step_latency);
+        self.wall_step_latency.merge(wall_step_latency);
+        self.ttft.merge(ttft);
+        self.ttft_hist.merge(ttft_hist);
+        for (class, s) in ttft_by_class {
+            self.ttft_by_class.entry(*class).or_default().merge(s);
+        }
+        self.queue_wait.merge(queue_wait);
+        self.queue_wait_hist.merge(queue_wait_hist);
+        self.queue_depth.merge(queue_depth);
+        self.queue_rejected += queue_rejected;
+        self.deadline_misses += deadline_misses;
+        self.deadline_total += deadline_total;
+        self.footprint_overlap.merge(footprint_overlap);
+        self.admitted_in_flight += admitted_in_flight;
+        self.prefix_hits += prefix_hits;
+        self.prefix_misses += prefix_misses;
+        self.prefix_inserts += prefix_inserts;
+        self.prefix_evictions += prefix_evictions;
+        self.prefix_cached_tokens += prefix_cached_tokens;
+        self.prefill_restored_tokens += prefill_restored_tokens;
+        self.resume_restores += resume_restores;
+        self.resume_recomputes += resume_recomputes;
+        self.prefill_waves += prefill_waves;
+        self.prefill_rows_per_wave.merge(prefill_rows_per_wave);
+        self.prefill_streams_saved += prefill_streams_saved;
+        self.shared_selection_fidelity.merge(shared_selection_fidelity);
+    }
+
     /// JSON dump for reports.
     pub fn to_json(&self) -> Json {
         let mut m: BTreeMap<String, Json> = BTreeMap::new();
@@ -531,6 +691,18 @@ impl ServeMetrics {
             Json::num(self.shared_selection_drop_pts()),
         );
         Json::Obj(m)
+    }
+}
+
+/// Element-wise merge of per-index gauge vectors (per-layer activation,
+/// per-GPU load): the destination resizes to the longer side so no
+/// replica's trailing entries are dropped.
+fn merge_summary_vec(into: &mut Vec<Summary>, from: &[Summary]) {
+    if into.len() < from.len() {
+        into.resize(from.len(), Summary::default());
+    }
+    for (s, o) in into.iter_mut().zip(from) {
+        s.merge(o);
     }
 }
 
@@ -754,6 +926,111 @@ mod tests {
     fn shared_selection_fidelity_rejects_nan() {
         let mut m = ServeMetrics::new(1);
         m.record_shared_selection_fidelity(f64::NAN);
+    }
+
+    #[test]
+    fn summary_merge_matches_interleaved_adds() {
+        let mut a = Summary::default();
+        let mut b = Summary::default();
+        let mut whole = Summary::default();
+        for (i, v) in [3.0, 9.0, 1.0, 4.0, 7.0].iter().enumerate() {
+            if i % 2 == 0 { a.add(*v) } else { b.add(*v) }
+            whole.add(*v);
+        }
+        a.merge(&b);
+        assert_eq!((a.n, a.sum, a.min, a.max), (whole.n, whole.sum, whole.min, whole.max));
+        // empty sides are neutral in both directions — min/max must not
+        // pick up the zero-initialized fields of an empty accumulator
+        let empty = Summary::default();
+        let before = a.clone();
+        a.merge(&empty);
+        assert_eq!((a.n, a.min, a.max), (before.n, before.min, before.max));
+        let mut fresh = Summary::default();
+        fresh.merge(&a);
+        assert_eq!((fresh.n, fresh.sum, fresh.min, fresh.max), (a.n, a.sum, a.min, a.max));
+    }
+
+    #[test]
+    fn histogram_merge_matches_single_recorder() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        let mut whole = LatencyHistogram::default();
+        for i in 1..=100 {
+            let s = i as f64 * 1e-5;
+            if i % 2 == 0 { a.record_seconds(s) } else { b.record_seconds(s) }
+            whole.record_seconds(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.mean_us(), whole.mean_us());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile_us(q), whole.quantile_us(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn serve_metrics_merge_sums_counters_and_maxes_clocks() {
+        // Two concurrent replicas: counters sum, distributions pool, and
+        // the merged clock is the slowest replica (fleet makespan), so the
+        // aggregate OTPS is Σ tokens / max clock.
+        let mut a = ServeMetrics::new(2);
+        a.record_step(&[10, 20], 1.0, 8);
+        a.record_ttft(0.2, 0, Some(false));
+        a.record_queue_wait(0.05);
+        a.requests_done = 1;
+        a.prefix_hits = 2;
+        a.record_spec_accept("tplA", 1.0);
+        let mut b = ServeMetrics::new(2);
+        b.record_step(&[30, 40], 1.0, 4);
+        b.record_step(&[30, 40], 1.0, 4);
+        b.record_ttft(0.4, 1, Some(true));
+        b.requests_done = 2;
+        b.wall_seconds = 0.5;
+        b.record_spec_accept("tplA", 0.5);
+        b.record_spec_accept("tplB", 0.0);
+
+        a.merge(&b);
+        assert_eq!(a.tokens_out, 16);
+        assert_eq!(a.steps, 3);
+        assert_eq!(a.requests_done, 3);
+        assert_eq!(a.prefix_hits, 2);
+        // clocks: max(1.0, 2.0), not 3.0
+        assert_eq!(a.sim_seconds, 2.0);
+        assert_eq!(a.wall_seconds, 0.5);
+        assert_eq!(a.otps(), 8.0, "aggregate OTPS = Σ tokens / makespan");
+        // distributions pool every replica's samples
+        assert_eq!(a.ttft.n, 2);
+        assert!((a.ttft.mean() - 0.3).abs() < 1e-12);
+        assert_eq!(a.ttft_hist.count(), 2);
+        assert_eq!(a.queue_wait.n, 1);
+        assert_eq!(a.step_latency.count(), 3);
+        // keyed maps merge per key
+        assert_eq!(a.ttft_by_class[&0].n, 1);
+        assert_eq!(a.ttft_by_class[&1].n, 1);
+        assert!((a.spec_accept_by_class["tplA"].mean() - 0.75).abs() < 1e-12);
+        assert_eq!(a.spec_accept_by_class["tplB"].n, 1);
+        // deadline accounting survives
+        assert_eq!(a.deadline_total, 2);
+        assert_eq!(a.deadline_misses, 1);
+        // per-layer activation pools both replicas' forwards
+        assert_eq!(a.activated[0].n, 3);
+        assert_eq!(a.activated[0].max, 30.0);
+        assert_eq!(a.mean_activated(), 25.0);
+    }
+
+    #[test]
+    fn serve_metrics_merge_resizes_gauge_vectors() {
+        // A 4-GPU replica folds into a 2-GPU accumulator without dropping
+        // the trailing GPUs (and layer-count mismatches likewise resize).
+        let mut a = ServeMetrics::new(1);
+        a.record_gpu_loads(&[3, 1]);
+        let mut b = ServeMetrics::new(1);
+        b.record_gpu_loads(&[1, 1, 5, 2]);
+        a.merge(&b);
+        assert_eq!(a.gpu_loads.len(), 4);
+        assert_eq!(a.gpu_loads[0].mean(), 2.0);
+        assert_eq!(a.gpu_loads[2].mean(), 5.0);
+        assert_eq!(a.gpu_loads[2].n, 1);
     }
 
     #[test]

@@ -48,6 +48,7 @@ use anyhow::{Context, Result};
 
 use crate::config::ServeConfig;
 use crate::coordinator::{Request, ServeLoop};
+use crate::fleet::Fleet;
 use crate::model::MoeModel;
 use crate::runtime::{Engine, Manifest};
 pub use protocol::{decode_response, Frame, Response};
@@ -105,20 +106,37 @@ impl Server {
 
         let worker_stop = stop.clone();
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
-        let worker_thread = std::thread::spawn(move || {
-            let model = Manifest::load(&artifacts_dir)
-                .and_then(Engine::load)
-                .and_then(MoeModel::new);
-            match model {
-                Ok(model) => {
-                    let _ = ready_tx.send(Ok(()));
-                    worker_loop(model, cfg, job_rx, worker_stop);
+        let worker_thread = if cfg.fleet_replicas > 1 {
+            // Fleet tier: N replica serve loops behind the footprint-affine
+            // router. The fleet spawns one engine per replica thread; this
+            // worker only routes jobs and pumps waves.
+            std::thread::spawn(move || {
+                match Fleet::from_preset_dir(&artifacts_dir, &cfg) {
+                    Ok(fleet) => {
+                        let _ = ready_tx.send(Ok(()));
+                        fleet_worker_loop(fleet, job_rx, worker_stop);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                    }
                 }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
+            })
+        } else {
+            std::thread::spawn(move || {
+                let model = Manifest::load(&artifacts_dir)
+                    .and_then(Engine::load)
+                    .and_then(MoeModel::new);
+                match model {
+                    Ok(model) => {
+                        let _ = ready_tx.send(Ok(()));
+                        worker_loop(model, cfg, job_rx, worker_stop);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                    }
                 }
-            }
-        });
+            })
+        };
         match ready_rx.recv() {
             Ok(Ok(())) => {}
             Ok(Err(msg)) => anyhow::bail!("server worker failed to load model: {msg}"),
@@ -404,6 +422,108 @@ fn worker_loop(
                     }
                     continue 'serve; // rebuild the core
                 }
+            }
+        }
+    }
+}
+
+/// Fleet-tier sibling of [`submit_job`]: remap the id, route through the
+/// fleet. The outer error (no live replica) is as final as a typed
+/// rejection — the job still gets exactly one reply.
+fn submit_fleet_job(
+    fleet: &mut Fleet,
+    responders: &mut BTreeMap<u64, Responder>,
+    next_internal: &mut u64,
+    (mut req, tx): Job,
+) {
+    let internal = *next_internal;
+    *next_internal += 1;
+    let client_id = req.id;
+    let stream = req.stream;
+    req.id = internal;
+    match fleet.submit(req) {
+        Ok(Ok(_replica)) => {
+            responders.insert(internal, Responder { tx, stream });
+        }
+        Ok(Err(e)) => {
+            let e = e.with_id(client_id);
+            let _ = tx.send(WorkerReply::Final(Err(WireError {
+                code: Some(e.code()),
+                msg: e.to_string(),
+            })));
+        }
+        Err(e) => {
+            let _ = tx.send(WorkerReply::Final(Err(WireError::plain(format!("{e:#}")))));
+        }
+    }
+}
+
+/// Fleet-tier worker: same job contract as [`worker_loop`] (exactly one
+/// final reply per job, streaming deltas per step), but each iteration
+/// pumps one step on EVERY live replica. Replica deaths fail over inside
+/// [`Fleet::pump`] — in-flight jobs resume on another replica with their
+/// streams intact. A fleet-fatal error (no live replica left for rows in
+/// flight) answers everything and then serves errors until shutdown:
+/// unlike the single-loop worker there is no cheap rebuild of N engines.
+fn fleet_worker_loop(mut fleet: Fleet, job_rx: Receiver<Job>, stop: Arc<AtomicBool>) {
+    let mut next_internal: u64 = 0;
+    let mut responders: BTreeMap<u64, Responder> = BTreeMap::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            // Graceful shutdown: finish in-flight sequences, reject nothing
+            // silently.
+            while fleet.has_work() {
+                match fleet.pump() {
+                    Ok(p) => dispatch_outcome(&mut responders, &p.deltas, p.finished),
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        for (_, r) in std::mem::take(&mut responders) {
+                            let _ = r
+                                .tx
+                                .send(WorkerReply::Final(Err(WireError::plain(msg.clone()))));
+                        }
+                        break;
+                    }
+                }
+            }
+            return;
+        }
+        if !fleet.has_work() {
+            match job_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(job) => {
+                    submit_fleet_job(&mut fleet, &mut responders, &mut next_internal, job)
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        while let Ok(job) = job_rx.try_recv() {
+            submit_fleet_job(&mut fleet, &mut responders, &mut next_internal, job);
+        }
+        match fleet.pump() {
+            Ok(p) => {
+                dispatch_outcome(&mut responders, &p.deltas, p.finished);
+                fleet.discard_outputs();
+            }
+            Err(e) => {
+                // Fleet-fatal (no live replica): answer everything in
+                // flight, then serve the error until shutdown.
+                let msg = format!("{e:#}");
+                for (_, r) in std::mem::take(&mut responders) {
+                    let _ = r.tx.send(WorkerReply::Final(Err(WireError::plain(msg.clone()))));
+                }
+                while !stop.load(Ordering::SeqCst) {
+                    match job_rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok((_, tx)) => {
+                            let _ = tx.send(WorkerReply::Final(Err(WireError::plain(
+                                msg.clone(),
+                            ))));
+                        }
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                return;
             }
         }
     }

@@ -1,0 +1,239 @@
+//! Fleet-tier integration tests over the tiny artifact preset: class-key
+//! parity with footprint admission, byte-identity of fleet serving against
+//! the single serve loop (and across routing modes), lossless failover on
+//! replica death (mid-decode and mid-prefill), and queue-depth spill.
+//!
+//! Byte-identity holds because the default policy is vanilla top-k —
+//! row-independent selection — so WHERE a row runs (which replica, which
+//! batch mix, before or after a failover resume) cannot change WHAT it
+//! generates. These are the fleet-level analogues of the eviction/resume
+//! pins in `ep_serve.rs`.
+
+use xshare::config::ServeConfig;
+use xshare::coordinator::admission::FootprintTracker;
+use xshare::coordinator::{Request, Scheduler};
+use xshare::fleet::{Fleet, FleetRouter};
+use xshare::model::MoeModel;
+use xshare::runtime::{artifacts_root, Engine, Manifest};
+
+fn tiny_model() -> MoeModel {
+    let manifest = Manifest::load(&artifacts_root().join("tiny"))
+        .expect("tiny artifacts missing — run `make artifacts`");
+    MoeModel::new(Engine::load(manifest).unwrap()).unwrap()
+}
+
+fn fleet_cfg(replicas: usize, affinity: &str) -> ServeConfig {
+    ServeConfig {
+        preset: "tiny".into(),
+        batch_size: 4,
+        max_new_tokens: 8,
+        fleet_replicas: replicas,
+        fleet_affinity: xshare::fleet::AffinityMode::parse(affinity).unwrap(),
+        ..Default::default()
+    }
+}
+
+fn tiny_fleet(cfg: &ServeConfig) -> Fleet {
+    Fleet::from_preset_dir(&artifacts_root().join("tiny"), cfg).unwrap()
+}
+
+/// Two well-separated traffic classes whose rendezvous preferences land on
+/// DISTINCT replicas at N = 2 (pinned in `fleet::router` unit tests):
+/// "tplA" → replica 1, "tplB" → replica 0.
+fn two_class_trace() -> Vec<Request> {
+    let mut reqs = Vec::new();
+    for i in 0..8u64 {
+        let (domain, prompt) = if i % 2 == 0 {
+            ("tplA", vec![3 + i as u32, 4, 5])
+        } else {
+            ("tplB", vec![20 + i as u32, 21, 22])
+        };
+        let mut r = Request::new(i, prompt, 4 + (i % 3) as usize);
+        r.domain = domain.into();
+        reqs.push(r);
+    }
+    reqs
+}
+
+fn single_loop_outputs(
+    requests: Vec<Request>,
+) -> std::collections::BTreeMap<u64, Vec<u32>> {
+    let mut model = tiny_model();
+    let cfg = ServeConfig {
+        preset: "tiny".into(),
+        batch_size: 4,
+        max_new_tokens: 8,
+        ..Default::default()
+    };
+    Scheduler::new(&mut model, cfg).unwrap().run(requests).unwrap().outputs
+}
+
+#[test]
+fn class_key_parity_between_admission_and_fleet_router() {
+    // The fleet routes by Request::class_key; footprint admission
+    // aggregates under FootprintTracker::class_key. They must be the SAME
+    // derivation — a drift here silently decorrelates routing affinity
+    // from the footprint classes it exists to exploit.
+    let mut with_domain = Request::new(1, vec![1, 2, 3], 4);
+    with_domain.domain = "gpqa".into();
+    let anon = Request::new(2, vec![1, 2, 3], 4);
+    let mut resumed = Request::new(3, vec![1, 2, 3, 9, 9], 2);
+    resumed.resume_prefix = vec![9, 9];
+    for req in [&with_domain, &anon, &resumed] {
+        assert_eq!(FootprintTracker::class_key(req), req.class_key());
+    }
+    // And the router consumes exactly this key: same preferred replica for
+    // requests of the same class, regardless of which derivation produced
+    // the key string.
+    let n = 4;
+    assert_eq!(
+        FleetRouter::preferred(&FootprintTracker::class_key(&with_domain), n),
+        FleetRouter::preferred(&with_domain.class_key(), n),
+    );
+}
+
+#[test]
+fn fleet_outputs_match_single_loop_across_routing_modes() {
+    let requests = two_class_trace();
+    let reference = single_loop_outputs(requests.clone());
+
+    for affinity in ["class", "round-robin"] {
+        let cfg = fleet_cfg(2, affinity);
+        let mut fleet = tiny_fleet(&cfg);
+        for r in requests.clone() {
+            fleet.submit(r).unwrap().unwrap();
+        }
+        fleet.drain().unwrap();
+        assert_eq!(
+            fleet.outputs(),
+            &reference,
+            "fleet ({affinity}) must be byte-identical to the single loop"
+        );
+        let report = fleet.report().unwrap();
+        assert_eq!(report.aggregate.requests_done, requests.len() as u64);
+        assert_eq!(
+            report.aggregate.ttft.n,
+            requests.len() as u64,
+            "every request records TTFT exactly once fleet-wide"
+        );
+        assert_eq!(report.failovers, 0);
+    }
+}
+
+#[test]
+fn class_affinity_routes_classes_to_their_rendezvous_replicas() {
+    let cfg = fleet_cfg(2, "class");
+    let mut fleet = tiny_fleet(&cfg);
+    for r in two_class_trace() {
+        let id = r.id;
+        let expect = FleetRouter::preferred(&r.class_key(), 2);
+        let landed = fleet.submit(r).unwrap().unwrap();
+        assert_eq!(landed, expect, "request {id} off its affine replica");
+        assert_eq!(fleet.replica_of(id), Some(expect));
+    }
+    assert_eq!(fleet.spills(), 0, "no backpressure configured — pure affinity");
+    fleet.drain().unwrap();
+}
+
+#[test]
+fn replica_death_mid_decode_is_lossless() {
+    let requests = two_class_trace();
+    let reference = single_loop_outputs(requests.clone());
+
+    let cfg = fleet_cfg(2, "class");
+    let mut fleet = tiny_fleet(&cfg);
+    for r in requests.clone() {
+        fleet.submit(r).unwrap().unwrap();
+    }
+    // Step the fleet until request 0 ("tplA", on replica 1) has committed
+    // generated tokens — then kill its replica MID-DECODE. The fleet's
+    // mirror of the committed history is what failover resumes from.
+    let victim_replica = fleet.replica_of(0).unwrap();
+    assert_eq!(victim_replica, 1, "tplA's pinned rendezvous home at N=2");
+    loop {
+        let committed = fleet.committed_of(0).map(<[u32]>::to_vec);
+        match committed {
+            Some(c) if !c.is_empty() => break,
+            Some(_) => {
+                fleet.pump().unwrap();
+            }
+            None => panic!("request 0 finished before the kill — shorten the wait"),
+        }
+    }
+    fleet.kill_replica(victim_replica).unwrap();
+    assert!(fleet.failovers() >= 1, "stranded rows re-entered the router");
+    for r in &requests {
+        if let Some(rep) = fleet.replica_of(r.id) {
+            assert_ne!(rep, victim_replica, "no in-flight row may stay on the dead replica");
+        }
+    }
+    fleet.drain().unwrap();
+
+    assert_eq!(
+        fleet.outputs(),
+        &reference,
+        "mid-decode failover must be byte-identical to an undisturbed run"
+    );
+    // TTFT stays exactly-once and origin-anchored: the victim's sample was
+    // recorded on the dead replica and survives via its final captured
+    // metrics; resumed rows (resume_prefix non-empty) never record again.
+    let report = fleet.report().unwrap();
+    assert_eq!(report.aggregate.ttft.n, requests.len() as u64);
+    assert!(report.replicas[victim_replica].dead);
+}
+
+#[test]
+fn replica_death_mid_prefill_is_lossless() {
+    let requests = two_class_trace();
+    let reference = single_loop_outputs(requests.clone());
+
+    let cfg = fleet_cfg(2, "class");
+    let mut fleet = tiny_fleet(&cfg);
+    for r in requests.clone() {
+        fleet.submit(r).unwrap().unwrap();
+    }
+    // Kill BEFORE any step: every row on replica 1 is still pre-first-token
+    // (nothing committed), so the victims resume as plain re-submissions
+    // and record their one TTFT sample on the surviving replica.
+    assert!(fleet.committed_of(0).unwrap().is_empty());
+    fleet.kill_replica(1).unwrap();
+    assert!(fleet.failovers() >= 1);
+    fleet.drain().unwrap();
+
+    assert_eq!(
+        fleet.outputs(),
+        &reference,
+        "mid-prefill failover must be byte-identical to an undisturbed run"
+    );
+    let report = fleet.report().unwrap();
+    assert_eq!(
+        report.aggregate.ttft.n,
+        requests.len() as u64,
+        "exactly one TTFT sample per request despite the mid-prefill failover"
+    );
+}
+
+#[test]
+fn high_water_backpressure_spills_without_corrupting_outputs() {
+    let requests = two_class_trace();
+    let reference = single_loop_outputs(requests.clone());
+
+    let cfg = ServeConfig { fleet_high_water: 1, ..fleet_cfg(2, "class") };
+    let mut fleet = tiny_fleet(&cfg);
+    // Burst-submit with no stepping in between: the affine targets' queues
+    // hit the high-water mark immediately and later same-class submits
+    // must spill to the other replica.
+    for r in requests.clone() {
+        fleet.submit(r).unwrap().unwrap();
+    }
+    assert!(fleet.spills() > 0, "burst past the high-water mark must spill");
+    fleet.drain().unwrap();
+    assert_eq!(
+        fleet.outputs(),
+        &reference,
+        "spilled requests still generate byte-identical outputs"
+    );
+    let report = fleet.report().unwrap();
+    assert_eq!(report.spills, fleet.spills());
+    assert_eq!(report.aggregate.requests_done, requests.len() as u64);
+}
