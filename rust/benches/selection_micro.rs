@@ -82,7 +82,7 @@ fn main() {
         CostGeometry::for_preset("gptoss-mini").unwrap(),
     );
     let step = cost.target_step(&[99; 36], 16);
-    let per_layer_us = step.total_seconds / 36.0 * 1e6;
+    let per_layer_us = step.seconds() / 36.0 * 1e6;
     println!(
         "\nmemsim H100 layer time at 99 activated experts: {per_layer_us:.0} µs — \
          selection must stay well below this (paper: 'negligible')."

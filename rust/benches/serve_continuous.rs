@@ -98,6 +98,7 @@ struct ModeResult {
     spec_stalled_steps: u64,
     spec_accepted: u64,
     spec_acceptance_rate: f64,
+    spec_depth_mean: f64,
     tokens_prompt: u64,
     prompt_tps: f64,
     mean_activated: f64,
@@ -162,6 +163,7 @@ fn serve_continuous_with(
         spec_stalled_steps: report.metrics.spec_stalled_steps,
         spec_accepted: report.metrics.spec_accepted,
         spec_acceptance_rate: report.metrics.acceptance_rate(),
+        spec_depth_mean: report.metrics.spec_depth.mean(),
         tokens_prompt: report.metrics.tokens_prompt,
         prompt_tps: report.metrics.prompt_tokens_per_s(),
         mean_activated: report.metrics.mean_activated(),
@@ -225,6 +227,7 @@ fn serve_batched(
         spec_stalled_steps: 0,
         spec_accepted: 0,
         spec_acceptance_rate: 0.0,
+        spec_depth_mean: 0.0,
         tokens_prompt: 0,
         prompt_tps: 0.0,
         mean_activated: 0.0,
@@ -704,6 +707,147 @@ fn spec_mixed_phase_scenario() {
     // bench outputs.
     emit_bench("BENCH_spec.json", &json);
     println!("[spec        ] wrote BENCH_spec.json");
+}
+
+/// **Charge-aware speculative depth scenario** (PR 10): the same Poisson
+/// long-prompt mix as the spec scenario, adaptive lookup drafting in both
+/// arms — once with the fixed usefulness threshold (`a^d` vs a constant)
+/// and once with `--spec-charge-aware`, which prices each extra draft
+/// level against the cost ledger's marginal verify charge for the CURRENT
+/// batch. Decode on the tiny preset is memory-bound, so one more padded
+/// verify level costs a few percent of a committed token's value; the
+/// marginal test therefore holds depth where the fixed threshold backs
+/// off, converting the same acceptance EMA into deeper drafts. Depth
+/// choice is scheduling-only (greedy verify under vanilla routing), so
+/// the outputs must be byte-identical — and the charge-aware arm must
+/// then win strictly on OTPS over simulated time. Emits
+/// `BENCH_spec_charge.json`.
+fn spec_charge_scenario() {
+    println!(
+        "\n# charge-aware spec depth — ledger marginal cost vs fixed threshold \
+         ({SPEC_PRESET}, B={SPEC_BATCH}, L_s={SPEC_LEN}, adaptive lookup drafts, \
+         {SPEC_N_REQUESTS} reqs × {SPEC_PROMPT_LEN}-token prompts, {SPEC_MAX_NEW} new)"
+    );
+    let mut model = load_model(SPEC_PRESET);
+    let vocab = model.dims().vocab;
+    let mut cfg = ServeConfig {
+        preset: SPEC_PRESET.into(),
+        policy: PolicyKind::Vanilla,
+        batch_size: SPEC_BATCH,
+        spec_len: SPEC_LEN,
+        spec_draft: SpecDraft::Lookup,
+        spec_adaptive: true,
+        max_new_tokens: SPEC_MAX_NEW,
+        ..Default::default()
+    };
+
+    // Same arrival construction as the spec scenario (window-calibrated
+    // against the fixed-threshold upfront busy time).
+    let mut g = TraceGenerator::new(vocab, SEED + 2);
+    g.arrival_rate = 1.0;
+    let mut arrivals: Vec<(f64, Request)> = g
+        .generate(&TraceDomain::standard_suite(), SPEC_N_REQUESTS)
+        .into_iter()
+        .map(|t| {
+            let mut r =
+                Request::new(t.id, spec_prompt(t.id, vocab as u64), SPEC_MAX_NEW);
+            r.domain = t.domain;
+            (t.arrival_s, r)
+        })
+        .collect();
+    let upfront: Vec<(f64, Request)> =
+        arrivals.iter().map(|(_, r)| (0.0, r.clone())).collect();
+    let busy = serve_continuous(&mut model, &cfg, &upfront).makespan_s;
+    let t_last = arrivals.last().map(|(t, _)| *t).unwrap_or(0.0).max(1e-12);
+    let scale = ARRIVAL_WINDOW_FRAC * busy / t_last;
+    for (t, _) in arrivals.iter_mut() {
+        *t *= scale;
+    }
+
+    let fixed = serve_continuous(&mut model, &cfg, &arrivals);
+    cfg.spec_charge_aware = true;
+    let charge = serve_continuous(&mut model, &cfg, &arrivals);
+
+    let mut table = Table::new(&[
+        "depth control",
+        "tokens",
+        "makespan_s",
+        "otps",
+        "depth_mean",
+        "accept_rate",
+    ]);
+    for (name, r) in [("fixed threshold", &fixed), ("charge-aware", &charge)] {
+        table.row(&[
+            name.to_string(),
+            r.tokens.to_string(),
+            fmt(r.makespan_s, 4),
+            fmt(r.otps(), 1),
+            fmt(r.spec_depth_mean, 3),
+            fmt(r.spec_acceptance_rate, 3),
+        ]);
+    }
+    table.print("serve_continuous — charge-aware vs fixed-threshold depth");
+    println!(
+        "[spec_charge ] charge-aware vs fixed threshold: OTPS {:+.1}%, \
+         depth {:.3} → {:.3}",
+        pct(charge.otps(), fixed.otps()),
+        fixed.spec_depth_mean,
+        charge.spec_depth_mean,
+    );
+
+    assert_eq!(
+        charge.outputs, fixed.outputs,
+        "depth control is scheduling-only under vanilla routing — outputs \
+         must be byte-identical"
+    );
+    assert!(
+        fixed.spec_accepted > 0 && charge.spec_accepted > 0,
+        "lookup drafts never accepted — neither arm has substance"
+    );
+    assert!(
+        charge.spec_depth_mean >= fixed.spec_depth_mean,
+        "the cheap-marginal regime must never draft shallower than the fixed \
+         threshold ({} vs {})",
+        charge.spec_depth_mean,
+        fixed.spec_depth_mean
+    );
+    assert!(
+        charge.otps() > fixed.otps(),
+        "ACCEPTANCE: charge-aware depth must yield strictly higher OTPS than \
+         the fixed usefulness threshold at equal outputs ({} vs {})",
+        charge.otps(),
+        fixed.otps()
+    );
+
+    let json = xshare::util::json::Json::obj(vec![
+        ("scenario", xshare::util::json::Json::str("spec_charge")),
+        ("preset", xshare::util::json::Json::str(SPEC_PRESET)),
+        ("spec_len", xshare::util::json::Json::num(SPEC_LEN as f64)),
+        ("spec_draft", xshare::util::json::Json::str("lookup")),
+        ("requests", xshare::util::json::Json::num(SPEC_N_REQUESTS as f64)),
+        ("tokens_out", xshare::util::json::Json::num(charge.tokens as f64)),
+        ("charge_otps", xshare::util::json::Json::num(charge.otps())),
+        ("fixed_otps", xshare::util::json::Json::num(fixed.otps())),
+        (
+            "otps_gain_pct",
+            xshare::util::json::Json::num(pct(charge.otps(), fixed.otps())),
+        ),
+        (
+            "charge_depth_mean",
+            xshare::util::json::Json::num(charge.spec_depth_mean),
+        ),
+        (
+            "fixed_depth_mean",
+            xshare::util::json::Json::num(fixed.spec_depth_mean),
+        ),
+        (
+            "acceptance_rate",
+            xshare::util::json::Json::num(charge.spec_acceptance_rate),
+        ),
+    ])
+    .dump();
+    emit_bench("BENCH_spec_charge.json", &json);
+    println!("[spec_charge ] wrote BENCH_spec_charge.json");
 }
 
 // Shared-prefix cache scenario (PR 7): two-turn templated traffic on the
@@ -1735,15 +1879,16 @@ fn fleet_scenario(model: &mut MoeModel) {
 
 fn main() {
     // Scenario filter: `cargo bench --bench serve_continuous -- spec`
-    // runs only the mixed-phase speculation scenario, `-- ep` the two
-    // expert-parallel scenarios, `-- prefix` the shared-prefix cache
-    // scenario, `-- prefill_fused` the fused prefill-wave scenario, and
-    // `-- fleet` the fleet-routing scenario (CI executes the filters and
-    // uploads BENCH_spec.json / BENCH_ep_serve.json / BENCH_ep_migrate.json
-    // / BENCH_prefix.json / BENCH_prefill_fused.json / BENCH_fleet.json);
-    // no filter runs everything. `--write-bench <dir>` additionally mirrors
-    // every emitted BENCH_*.json into `<dir>` — the recipe for refreshing
-    // the reference snapshots under `benchmarks/`.
+    // runs only the mixed-phase speculation scenario, `-- spec_charge`
+    // the charge-aware depth scenario, `-- ep` the two expert-parallel
+    // scenarios, `-- prefix` the shared-prefix cache scenario,
+    // `-- prefill_fused` the fused prefill-wave scenario, and `-- fleet`
+    // the fleet-routing scenario (CI executes the filters and uploads
+    // BENCH_spec.json / BENCH_spec_charge.json / BENCH_ep_serve.json /
+    // BENCH_ep_migrate.json / BENCH_prefix.json / BENCH_prefill_fused.json
+    // / BENCH_fleet.json); no filter runs everything. `--write-bench <dir>`
+    // additionally mirrors every emitted BENCH_*.json into `<dir>` — the
+    // recipe for refreshing the reference snapshots under `benchmarks/`.
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut only: Option<String> = None;
     let mut i = 0;
@@ -1763,6 +1908,10 @@ fn main() {
     }
     if only.as_deref() == Some("spec") {
         spec_mixed_phase_scenario();
+        return;
+    }
+    if only.as_deref() == Some("spec_charge") {
+        spec_charge_scenario();
         return;
     }
     if only.as_deref() == Some("ep") {
@@ -1875,6 +2024,7 @@ fn main() {
     ep_migrate_scenario(&mut model);
     admission_sim_scenario();
     spec_mixed_phase_scenario();
+    spec_charge_scenario();
     prefix_shared_cache_scenario();
     fleet_scenario(&mut model);
 }

@@ -72,6 +72,14 @@ pub struct ServeConfig {
     /// by the class's acceptance prior during selection. Off by default
     /// (uniform depth — the legacy behaviour).
     pub spec_adaptive: bool,
+    /// Charge-aware depth (`--spec-charge-aware`): replace the adaptive
+    /// controller's fixed usefulness threshold with ledger-priced
+    /// economics — draft one position deeper while its acceptance-weighted
+    /// expected commit value beats `cost::Ledger::marginal_spec_cost`
+    /// under the last charged batch geometry. Depth choice is
+    /// scheduling-only (byte-identical outputs). Requires
+    /// `--spec-adaptive`. Off by default.
+    pub spec_charge_aware: bool,
     /// Draft source for speculation: the dense draft model or n-gram
     /// lookup over each row's own history.
     pub spec_draft: SpecDraft,
@@ -181,6 +189,7 @@ impl Default for ServeConfig {
             batch_size: 16,
             spec_len: 0,
             spec_adaptive: false,
+            spec_charge_aware: false,
             spec_draft: SpecDraft::Model,
             prefill_chunk: 1,
             chunk_shared_selection: false,
@@ -217,7 +226,8 @@ impl ServeConfig {
         let obj = root.as_obj().context("config root must be an object")?;
 
         let known = [
-            "preset", "policy", "batch_size", "spec_len", "spec_adaptive", "spec_draft",
+            "preset", "policy", "batch_size", "spec_len", "spec_adaptive",
+            "spec_charge_aware", "spec_draft",
             "prefill_chunk", "chunk_shared_selection", "hardware", "admission",
             "max_queue", "footprint_decay",
             "ep_evict", "ep_rebalance", "ep_replica_slack", "ep_migrate_budget",
@@ -247,6 +257,9 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("spec_adaptive") {
             cfg.spec_adaptive = v.as_bool().context("spec_adaptive")?;
+        }
+        if let Some(v) = root.get("spec_charge_aware") {
+            cfg.spec_charge_aware = v.as_bool().context("spec_charge_aware")?;
         }
         if let Some(v) = root.get("spec_draft") {
             cfg.spec_draft = SpecDraft::parse(v.as_str().context("spec_draft")?)
@@ -346,6 +359,9 @@ impl ServeConfig {
         if args.bool("spec-adaptive") {
             self.spec_adaptive = true;
         }
+        if args.bool("spec-charge-aware") {
+            self.spec_charge_aware = true;
+        }
         if let Some(v) = args.get("spec-draft") {
             self.spec_draft = SpecDraft::parse(v).map_err(anyhow::Error::msg)?;
         }
@@ -435,6 +451,13 @@ impl ServeConfig {
         }
         if self.spec_adaptive && self.spec_len == 0 {
             bail!("--spec-adaptive needs speculation on (spec_len ≥ 1)");
+        }
+        if self.spec_charge_aware && !self.spec_adaptive {
+            bail!(
+                "--spec-charge-aware needs --spec-adaptive: charge-aware depth \
+                 replaces the adaptive controller's usefulness threshold, so there \
+                 is no controller to price without it"
+            );
         }
         if self.prefill_chunk == 0 {
             bail!("prefill_chunk must be ≥ 1 (1 = one-token-per-step prefill)");
@@ -673,6 +696,39 @@ mod tests {
         assert_eq!(SpecDraft::Lookup.to_string(), "lookup");
         let bad =
             Args::parse("--spec-adaptive".split_whitespace().map(String::from));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn spec_charge_aware_roundtrip_and_validation() {
+        // default off — the fixed usefulness threshold stays the baseline
+        assert!(!ServeConfig::default().spec_charge_aware);
+
+        let p = write_tmp(
+            "spec_charge.json",
+            r#"{"spec_len":3,"spec_adaptive":true,"spec_charge_aware":true}"#,
+        );
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert!(cfg.spec_charge_aware);
+
+        // charge-aware without the adaptive controller is a config error
+        let bad = write_tmp(
+            "spec_charge_bad.json",
+            r#"{"spec_len":3,"spec_charge_aware":true}"#,
+        );
+        let err = ServeConfig::from_json_file(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("spec-charge-aware"));
+
+        let args = Args::parse(
+            "--spec-len 2 --spec-adaptive --spec-charge-aware"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ServeConfig::default().apply_args(&args).unwrap();
+        assert!(cfg.spec_charge_aware);
+        let bad = Args::parse(
+            "--spec-len 2 --spec-charge-aware".split_whitespace().map(String::from),
+        );
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 

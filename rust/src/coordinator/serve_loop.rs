@@ -166,6 +166,29 @@
 //! harness through [`super::fidelity::compare`]) while the wave metrics
 //! (`prefill_waves`, `prefill_streams_saved`, rows-per-wave,
 //! prompt-tokens/s) report the amortization first-class.
+//!
+//! ## Unified cost ledger & charge-aware speculation (PR 10)
+//!
+//! Every simulated second flows through the [`crate::cost::Ledger`] this
+//! loop owns: [`ServeLoop::charge_step`] / [`ServeLoop::charge_wave`]
+//! assemble typed entries — decode, spec verify, spec draft, prefill
+//! wave, migration drain — and post them. `Ledger::post` and
+//! `Ledger::advance_to` are the ONLY writers to the sim clock;
+//! `metrics.sim_seconds` and the `time_*_s` phase metrics are read-only
+//! mirrors re-assigned after each post, and the migration backlog is
+//! ledger state (a deferred charge drained per step as
+//! `MigrationDrain` time). The cost models are pure pricers returning
+//! [`crate::cost::Charge`] values. On top rides the charge-aware depth
+//! controller (`--spec-charge-aware`, requires `--spec-adaptive`):
+//! `Ledger::marginal_spec_cost` prices one more verify level under the
+//! LAST step's geometry (dense activations or EP selected sets), and
+//! `SpecDepthController::charge_aware_depth` keeps deepening while the
+//! acceptance-weighted value of the extra committed token beats that
+//! marginal charge — replacing the fixed usefulness threshold with the
+//! padded-batch economics the roofline model actually exhibits. Depth
+//! choice is scheduling-only, so outputs stay byte-identical
+//! (`rust/tests/spec_mixed_phase.rs`); exact clock conservation and
+//! refactor bit-identity are pinned in `rust/tests/cost_ledger.rs`.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -182,6 +205,7 @@ use super::prefix_cache::PrefixCache;
 use super::request::{Phase, Request};
 use super::speculative::{effective_batch_scores_ragged, greedy_accept, SpecDepthController};
 use crate::config::{ServeConfig, SpecDraft};
+use crate::cost::{Entry as CostEntry, Ledger, Phase as CostPhase, SpecGeometry};
 use crate::ep::{EpCostModel, Placement};
 use crate::memsim::{CostGeometry, DecodeCostModel, HardwareProfile};
 use crate::metrics::ServeMetrics;
@@ -310,8 +334,13 @@ pub struct ServeLoop<'m> {
     model: &'m mut MoeModel,
     cfg: ServeConfig,
     policy: Box<dyn SelectionPolicy>,
-    cost: DecodeCostModel,
-    ep_cost: EpCostModel,
+    /// The unified cost ledger — the ONLY writer to the sim clock (the
+    /// single-writer contract in `cost/mod.rs`). Owns the pure pricers
+    /// ([`DecodeCostModel`], [`EpCostModel`]), the per-phase second
+    /// attribution and the deferred migration backlog.
+    /// `metrics.sim_seconds` is a read-only mirror of `ledger.clock()`,
+    /// re-assigned after every post.
+    ledger: Ledger,
     batcher: Batcher,
     /// Bounded admission queue + pluggable policy (see
     /// [`super::admission`]).
@@ -336,12 +365,11 @@ pub struct ServeLoop<'m> {
     /// Slot releases since the last adopted (or attempted) placement
     /// rebalance — the `--ep-rebalance N` clock.
     frees_since_rebalance: u64,
-    /// Interconnect seconds of adopted-but-not-yet-drained expert weight
-    /// movement (`--ep-migrate-budget`). Each EP step drains up to its own
-    /// simulated duration from this backlog — migration traffic overlaps
-    /// decoding, so a step at most doubles and the charge never stalls the
-    /// loop outright.
-    migration_backlog_s: f64,
+    /// Geometry of the last charged decode/verify forward — what the
+    /// charge-aware depth controller (`--spec-charge-aware`) prices
+    /// marginal speculation against. `None` until the first shared
+    /// forward charges (cold classes fall back to the fixed threshold).
+    last_geometry: Option<SpecGeometry>,
     /// Shared-prefix KV cache (`--prefix-cache-mb`, see
     /// [`super::prefix_cache`]): releasing rows offer their committed
     /// prefix, admissions whose prompt extends a cached entry restore the
@@ -397,8 +425,7 @@ impl<'m> ServeLoop<'m> {
             model,
             cfg,
             policy,
-            cost,
-            ep_cost: EpCostModel::default(),
+            ledger: Ledger::new(cost, EpCostModel::default()),
             batcher: Batcher::new(1, 1),
             queue: AdmissionQueue::new(AdmissionKind::Fifo, 0),
             tracker: None,
@@ -411,7 +438,7 @@ impl<'m> ServeLoop<'m> {
             forced_depth: None,
             ttft_pending: Vec::new(),
             frees_since_rebalance: 0,
-            migration_backlog_s: 0.0,
+            last_geometry: None,
             prefix_cache: PrefixCache::new(0, 1),
             sequential_prefill_charging: false,
             started: Instant::now(),
@@ -431,7 +458,8 @@ impl<'m> ServeLoop<'m> {
                 .with_decay(self.cfg.footprint_decay)
         });
         self.frees_since_rebalance = 0;
-        self.migration_backlog_s = 0.0;
+        self.ledger.reset();
+        self.last_geometry = None;
         self.prefix_cache = PrefixCache::new(
             self.cfg.prefix_cache_mb * 1024 * 1024,
             self.cfg.prefix_min_tokens,
@@ -533,7 +561,7 @@ impl<'m> ServeLoop<'m> {
         }
         let id = req.id;
         let domain = req.domain.clone();
-        match self.queue.submit(req, self.metrics.sim_seconds) {
+        match self.queue.submit(req, self.ledger.clock()) {
             Ok(()) => {
                 self.domains.insert(id, domain);
                 Ok(())
@@ -575,7 +603,7 @@ impl<'m> ServeLoop<'m> {
         }
         let id = req.id;
         let domain = req.domain.clone();
-        self.queue.requeue(req, submit_sim, deadline_sim, self.metrics.sim_seconds);
+        self.queue.requeue(req, submit_sim, deadline_sim, self.ledger.clock());
         self.domains.insert(id, domain);
         Ok(())
     }
@@ -587,8 +615,11 @@ impl<'m> ServeLoop<'m> {
     /// its TTFT/deadline clocks in that replica's past and report negative
     /// waits relative to the fleet.
     pub fn advance_idle_to(&mut self, t: f64) {
-        if !self.has_work() && t > self.metrics.sim_seconds {
-            self.metrics.sim_seconds = t;
+        if !self.has_work() && t > self.ledger.clock() {
+            // Idle gaps are ledger time too: attributed to Overhead, the
+            // mirror re-assigned like after any other clock write.
+            self.ledger.advance_to(t);
+            self.mirror_ledger();
         }
     }
 
@@ -609,6 +640,12 @@ impl<'m> ServeLoop<'m> {
         &self.metrics
     }
 
+    /// The unified cost ledger (read-only): the authoritative sim clock,
+    /// per-phase second attribution and migration backlog.
+    pub fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
     pub fn config(&self) -> &ServeConfig {
         &self.cfg
     }
@@ -617,7 +654,7 @@ impl<'m> ServeLoop<'m> {
     /// run one phase-partitioned execution cycle over the live rows.
     pub fn step(&mut self) -> Result<StepOutcome> {
         let wall0 = Instant::now();
-        let sim_before = self.metrics.sim_seconds;
+        let sim_before = self.ledger.clock();
         let was_running = self.batcher.running() > 0;
 
         // EP serving levers, before admission sees the queue: rebalance
@@ -699,7 +736,7 @@ impl<'m> ServeLoop<'m> {
         // Sim clock has advanced by this step's cost; TTFT counts it. The
         // slot metadata stays in place after recording — a later eviction
         // still needs the submission clock and deadline.
-        let now = self.metrics.sim_seconds;
+        let now = self.ledger.clock();
         for s in events.first_token_slots {
             let first = match self.ttft_pending[s].as_mut() {
                 Some(p) if !p.recorded => {
@@ -726,7 +763,7 @@ impl<'m> ServeLoop<'m> {
             decode_rows,
             committed: self.metrics.tokens_out - committed_before,
             prefill_tokens,
-            sim_seconds: self.metrics.sim_seconds - sim_before,
+            sim_seconds: self.ledger.clock() - sim_before,
             phases,
             deltas: events.deltas,
             queued: self.queue.len(),
@@ -826,8 +863,9 @@ impl<'m> ServeLoop<'m> {
     /// expected straggler saving over [`MIGRATION_HORIZON_LAYER_FORWARDS`]
     /// beats the interconnect charge for the copies. Adopted plans update
     /// the live placement immediately (routing may use the new replicas at
-    /// once) while their transfer seconds join `migration_backlog_s`, to be
-    /// drained against subsequent step time in [`ServeLoop::charge_step`].
+    /// once) while their transfer seconds join the ledger's migration
+    /// backlog ([`Ledger::defer_migration`]), to be drained against
+    /// subsequent step time in [`ServeLoop::charge_step`].
     fn adopt_migration(&mut self, weights: &[f32], prefetch: bool) -> bool {
         let Some(pl) = self.model.placement.as_ref() else { return false };
         let cap = Placement::residency_cap(
@@ -840,21 +878,22 @@ impl<'m> ServeLoop<'m> {
         else {
             return false;
         };
-        let migrate_s = self.ep_cost.migration_seconds(plan.copies);
+        let migrate_s = self.ledger.ep_pricer().migration_seconds(plan.copies);
         let benefit_s = (plan.expected_before - plan.expected_after)
-            * self.ep_cost.expert_load_s
+            * self.ledger.ep_pricer().expert_load_s
             * MIGRATION_HORIZON_LAYER_FORWARDS;
         if benefit_s <= migrate_s {
             return false; // skew too small / too brief to pay the transfer
         }
         self.metrics.migrations += 1;
         self.metrics.migration_ops.add(plan.ops.len() as f64);
-        self.metrics.migration_bytes += plan.copies as f64 * self.ep_cost.expert_bytes;
+        self.metrics.migration_bytes +=
+            plan.copies as f64 * self.ledger.ep_pricer().expert_bytes;
         self.metrics.rebalance_delta.add(plan.expected_before - plan.expected_after);
         if prefetch {
             self.metrics.prefetches += 1;
         }
-        self.migration_backlog_s += migrate_s;
+        self.ledger.defer_migration(migrate_s);
         self.model.placement = Some(plan.placement);
         true
     }
@@ -929,7 +968,7 @@ impl<'m> ServeLoop<'m> {
             self.batcher.seq(slot).spec_depth().is_none(),
             "evict_slot mid verify cycle"
         );
-        let now = self.metrics.sim_seconds;
+        let now = self.ledger.clock();
         Some(self.preempt(slot, now))
     }
 
@@ -947,17 +986,23 @@ impl<'m> ServeLoop<'m> {
         // not per live row.
         let mut class_depths: BTreeMap<String, usize> = BTreeMap::new();
         for &s in slots {
-            let seq = self.batcher.seq(s);
-            if seq.phase != Phase::Decode {
-                continue;
-            }
-            let class = FootprintTracker::class_key(&seq.req);
+            let (class, req_id, remaining) = {
+                let seq = self.batcher.seq(s);
+                if seq.phase != Phase::Decode {
+                    continue;
+                }
+                (
+                    FootprintTracker::class_key(&seq.req),
+                    seq.req.id,
+                    seq.remaining(),
+                )
+            };
             let mut depth = match self.forced_depth {
                 Some(d) => d,
                 None if self.cfg.spec_adaptive => match class_depths.get(&class).copied() {
                     Some(d) => d,
                     None => {
-                        let d = self.depth_ctl.depth_for(&class);
+                        let d = self.class_depth(&class);
                         class_depths.insert(class.clone(), d);
                         d
                     }
@@ -966,7 +1011,7 @@ impl<'m> ServeLoop<'m> {
             };
             depth = depth.min(self.cfg.spec_len);
             if self.forced_depth.is_none() && self.cfg.spec_adaptive {
-                depth = depth.min(seq.remaining().saturating_sub(1));
+                depth = depth.min(remaining.saturating_sub(1));
             }
             let proposals = match self.cfg.spec_draft {
                 SpecDraft::Model => Vec::new(),
@@ -977,6 +1022,7 @@ impl<'m> ServeLoop<'m> {
                     // the old per-cycle linear rescan, proposal-identical
                     // to `lookup_draft` by the equivalence property in
                     // `speculative.rs`.
+                    let seq = self.batcher.seq(s);
                     debug_assert_eq!(
                         seq.ngram.len(),
                         seq.prompt_idx + seq.generated.len()
@@ -991,13 +1037,47 @@ impl<'m> ServeLoop<'m> {
                 }
             };
             let prior = if self.cfg.spec_adaptive {
-                self.depth_ctl.prior(&class)
+                // Row-blended prior (PR 10 satellite): once this row has
+                // survived enough verify cycles, its own acceptance EMA
+                // blends over the class prior.
+                self.depth_ctl.row_prior(req_id, &class)
             } else {
                 1.0
             };
             plans.push(SpecPlan { slot: s, depth, proposals, class, prior });
         }
         plans
+    }
+
+    /// Consult the depth controller once for `class`: the fixed
+    /// usefulness threshold by default, or — under `--spec-charge-aware`
+    /// with a warm step geometry — the largest depth whose
+    /// acceptance-weighted expected commit gain beats the ledger's
+    /// marginal charge for one more verify level under the CURRENT
+    /// batch. A committed token's value is the plain per-token step cost
+    /// (what a depth-d acceptance saves versus decoding it in its own
+    /// step); cold classes and cold geometry fall back to the
+    /// fixed-threshold path.
+    fn class_depth(&mut self, class: &str) -> usize {
+        if self.cfg.spec_charge_aware {
+            if let Some(geo) = self.last_geometry.clone() {
+                let placement = self.model.placement.as_ref();
+                let plain = self.ledger.plain_step_cost(&geo, placement);
+                let token_value = if geo.riders > 0 {
+                    plain / geo.riders as f64
+                } else {
+                    0.0
+                };
+                let ledger = &self.ledger;
+                return self.depth_ctl.charge_aware_depth(
+                    class,
+                    self.cfg.spec_len,
+                    token_value,
+                    |d| ledger.marginal_spec_cost(d, &geo, placement),
+                );
+            }
+        }
+        self.depth_ctl.depth_for(class)
     }
 
     /// Fill free batch slots from the admission queue, one policy pick at a
@@ -1135,7 +1215,13 @@ impl<'m> ServeLoop<'m> {
         }
         // Every release (finish or eviction) ticks the rebalance clock.
         self.frees_since_rebalance += 1;
-        self.batcher.release(slot)
+        let done = self.batcher.release(slot);
+        // Per-row acceptance state lives for ONE slot occupancy: finish
+        // and eviction alike drop the row's EMA (a resumed row re-warms
+        // from its class prior — its acceptance profile may have changed
+        // with its phase).
+        self.depth_ctl.forget_row(done.req.id);
+        done
     }
 
     /// Release a FINISHED sequence and report its complete generation
@@ -1350,13 +1436,18 @@ impl<'m> ServeLoop<'m> {
                 if self.sequential_prefill_charging {
                     // Pre-PR8 accounting: every invocation pays its own
                     // full per-layer weight stream.
-                    let sim_s =
-                        self.charge_step(&out.activated, &out.selected, n, 0.0);
-                    self.metrics.record_prefill(&out.activated, sim_s, n as u64);
+                    self.charge_step(
+                        &out.activated,
+                        &out.selected,
+                        n,
+                        0.0,
+                        CostPhase::PrefillWave,
+                    );
+                    self.metrics.record_prefill(&out.activated, n as u64);
                 } else {
                     // Activation/token gauges record per invocation; the
                     // round's sim charge lands once below.
-                    self.metrics.record_prefill(&out.activated, 0.0, n as u64);
+                    self.metrics.record_prefill(&out.activated, n as u64);
                     wave_tokens += n;
                     wave_selected.push(out.selected);
                 }
@@ -1379,8 +1470,8 @@ impl<'m> ServeLoop<'m> {
                 // union is the set one shared weight stream must cover,
                 // the wave's token total what it amortizes over.
                 let (acts, sets) = MoeModel::wave_union(&wave_selected);
-                let sim_s = self.charge_wave(&acts, &sets, wave_tokens);
-                self.metrics.record_prefill_wave(issued, sim_s);
+                self.charge_wave(&acts, &sets, wave_tokens);
+                self.metrics.record_prefill_wave(issued);
             }
         }
         for (i, plan) in plans.iter_mut().enumerate() {
@@ -1490,7 +1581,14 @@ impl<'m> ServeLoop<'m> {
             }
         }
 
-        let sim_s = self.charge_step(&out.activated, &out.selected, slots.len(), 0.0);
+        let sim_s = self.charge_step(
+            &out.activated,
+            &out.selected,
+            slots.len(),
+            0.0,
+            CostPhase::Decode,
+        );
+        self.remember_geometry(slots.len(), &out.activated, &out.selected);
         self.metrics.record_step(&out.activated, sim_s, committed);
         self.metrics.tokens_prompt += prompt_consumed;
         Ok(events)
@@ -1791,6 +1889,10 @@ impl<'m> ServeLoop<'m> {
                         let rate = n_acc as f64 / depth as f64;
                         self.metrics.record_spec_accept(&plan.class, rate);
                         self.depth_ctl.observe(&plan.class, depth, n_acc);
+                        // Per-row EMA rides the same observation; it only
+                        // starts speaking after SPEC_ROW_WARMUP cycles.
+                        let row_id = self.batcher.seq(s).req.id;
+                        self.depth_ctl.observe_row(row_id, depth, n_acc);
                     }
                     let seq = self.batcher.seq_mut(s);
                     let id = seq.req.id;
@@ -1832,7 +1934,7 @@ impl<'m> ServeLoop<'m> {
         // from harmless rewrites and cost nothing extra — they are the
         // padding the max-depth charge already covers.
         let draft_seconds = if self.cfg.spec_draft == SpecDraft::Model {
-            self.cost.draft_cost(&depths)
+            self.ledger.pricer().draft_cost(&depths).seconds()
         } else {
             0.0 // lookup drafts are a CPU table scan, not a model forward
         };
@@ -1841,7 +1943,9 @@ impl<'m> ServeLoop<'m> {
             &union_activated,
             riders.len() * (1 + max_d),
             draft_seconds,
+            CostPhase::SpecVerify,
         );
+        self.remember_geometry(riders.len(), &acts, &union_activated);
         self.metrics.record_step(&acts, sim_s, committed_total);
         self.metrics.tokens_prompt += prompt_consumed;
 
@@ -1857,8 +1961,9 @@ impl<'m> ServeLoop<'m> {
         Ok(events)
     }
 
-    /// Simulated cost of one target forward (+ draft seconds) and EP load
-    /// accounting. Returns simulated seconds.
+    /// Assemble and post one target forward's ledger entry (+ draft
+    /// seconds) with EP load accounting. Returns the posted seconds —
+    /// the step's sim delta.
     ///
     /// Under EP every target forward — decode, ragged verify, chunk
     /// prefill — charges per layer through
@@ -1872,25 +1977,40 @@ impl<'m> ServeLoop<'m> {
     /// straggler-exposure integral `∫ MaxLoad dt` (MaxLoad × this
     /// forward's full charge, draft seconds included — the draft runs
     /// inside the same wall interval the straggler bounds).
+    ///
+    /// `phase` attributes the forward itself (Decode / SpecVerify /
+    /// PrefillWave); draft seconds are always [`CostPhase::SpecDraft`]
+    /// and the migration drain always [`CostPhase::MigrationDrain`]. The
+    /// entry accumulates its parts in the exact chronological order the
+    /// pre-ledger code summed them, and [`Ledger::post`] adds ONE total
+    /// to the clock — which is what keeps refactored sim time
+    /// bit-identical (`tests/cost_ledger.rs`).
     fn charge_step(
         &mut self,
         activated: &[usize],
         selected: &[ExpertSet],
         n_tokens: usize,
         draft_seconds: f64,
+        phase: CostPhase,
     ) -> f64 {
-        let mut sim = draft_seconds;
+        let mut entry = CostEntry::new();
+        if draft_seconds > 0.0 {
+            entry.add(CostPhase::SpecDraft, draft_seconds);
+        }
         if let Some(pl) = &self.model.placement {
             let sel_refs: Vec<&ExpertSet> = selected.iter().collect();
-            sim += self.cost.ep_step(pl, &sel_refs, n_tokens, &self.ep_cost);
+            let ep_charge =
+                self.ledger
+                    .pricer()
+                    .ep_step(pl, &sel_refs, n_tokens, self.ledger.ep_pricer());
+            entry.add(phase, ep_charge.seconds());
             // Drain pending migration traffic against this step: the
             // transfer shares the interconnect with serving, so each step
             // absorbs at most its own duration of backlog (a step at most
             // doubles) until the adopted plans are fully paid for.
-            if self.migration_backlog_s > 0.0 {
-                let drain = self.migration_backlog_s.min(sim);
-                sim += drain;
-                self.migration_backlog_s -= drain;
+            let drain = self.ledger.drain_migration(entry.seconds());
+            if drain > 0.0 {
+                entry.add(CostPhase::MigrationDrain, drain);
                 self.metrics.migration_seconds += drain;
             }
             let max_load =
@@ -1899,11 +2019,16 @@ impl<'m> ServeLoop<'m> {
             for sel in selected {
                 self.metrics.record_gpu_loads(&pl.loads(sel));
             }
-            self.metrics.gpu_load_integral += max_load as f64 * sim;
+            self.metrics.gpu_load_integral += max_load as f64 * entry.seconds();
         } else {
-            let scaled = self.cost.scale_activations(activated);
-            sim += self.cost.target_step(&scaled, n_tokens).total_seconds;
+            let scaled = self.ledger.pricer().scale_activations(activated);
+            entry.add(
+                phase,
+                self.ledger.pricer().target_step(&scaled, n_tokens).seconds(),
+            );
         }
+        let sim = self.ledger.post(entry);
+        self.mirror_ledger();
         sim
     }
 
@@ -1913,8 +2038,9 @@ impl<'m> ServeLoop<'m> {
     /// straggler gauges and migration drain apply once per wave instead
     /// of once per row; dense, the [`DecodeCostModel::prefill_wave`]
     /// entry point over the unioned activation counts and the wave's
-    /// total token count. A one-invocation wave charges exactly what the
-    /// sequential path would (union of one = itself).
+    /// total token count, posted as one [`CostPhase::PrefillWave`]
+    /// entry. A one-invocation wave charges exactly what the sequential
+    /// path would (union of one = itself).
     fn charge_wave(
         &mut self,
         activated: &[usize],
@@ -1922,11 +2048,54 @@ impl<'m> ServeLoop<'m> {
         n_tokens: usize,
     ) -> f64 {
         if self.model.placement.is_some() {
-            self.charge_step(activated, selected, n_tokens, 0.0)
+            self.charge_step(activated, selected, n_tokens, 0.0, CostPhase::PrefillWave)
         } else {
-            let scaled = self.cost.scale_activations(activated);
-            self.cost.prefill_wave(&scaled, n_tokens).total_seconds
+            let scaled = self.ledger.pricer().scale_activations(activated);
+            let charge = self.ledger.pricer().prefill_wave(&scaled, n_tokens);
+            let mut entry = CostEntry::new();
+            entry.add(CostPhase::PrefillWave, charge.seconds());
+            let sim = self.ledger.post(entry);
+            self.mirror_ledger();
+            sim
         }
+    }
+
+    /// Mirror the ledger's clock and per-phase totals into the run
+    /// metrics. The metrics are a READ-ONLY view — every write to
+    /// `sim_seconds` and the `time_*_s` fields happens here, by
+    /// assignment from the ledger, immediately after a post (the
+    /// single-writer contract in `cost/mod.rs`).
+    fn mirror_ledger(&mut self) {
+        self.metrics.sim_seconds = self.ledger.clock();
+        self.metrics.time_decode_s = self.ledger.phase_seconds(CostPhase::Decode);
+        self.metrics.time_spec_s = self.ledger.phase_seconds(CostPhase::SpecVerify)
+            + self.ledger.phase_seconds(CostPhase::SpecDraft);
+        self.metrics.time_prefill_s = self.ledger.phase_seconds(CostPhase::PrefillWave);
+        self.metrics.time_migration_s =
+            self.ledger.phase_seconds(CostPhase::MigrationDrain);
+        self.metrics.time_overhead_s = self.ledger.phase_seconds(CostPhase::Overhead);
+    }
+
+    /// Remember the geometry of the shared forward that just charged —
+    /// the batch the charge-aware controller prices marginal depth
+    /// against next step. Only consulted under `--spec-charge-aware`,
+    /// so every other deployment skips the clone.
+    fn remember_geometry(
+        &mut self,
+        riders: usize,
+        activated: &[usize],
+        selected: &[ExpertSet],
+    ) {
+        if !self.cfg.spec_charge_aware {
+            return;
+        }
+        let selected = self.model.placement.is_some().then(|| selected.to_vec());
+        self.last_geometry = Some(SpecGeometry {
+            riders,
+            activated: activated.to_vec(),
+            selected,
+            model_draft: self.cfg.spec_draft == SpecDraft::Model,
+        });
     }
 }
 

@@ -273,6 +273,12 @@ pub const ACCEPT_DECAY: f32 = 0.9;
 /// acceptance observations and stay at 0 forever.
 pub const PROBE_INTERVAL: u64 = 8;
 
+/// Verify cycles a row must survive before its own acceptance EMA is
+/// trusted: below this, a couple of lucky (or unlucky) cycles would
+/// dominate the estimate, so [`SpecDepthController::row_prior`] keeps
+/// reporting the class prior until the row has this many observations.
+pub const SPEC_ROW_WARMUP: u64 = 4;
+
 /// Per-traffic-class adaptive speculation depth.
 ///
 /// Tracks a decayed EMA of each class's per-token acceptance rate (class
@@ -284,10 +290,30 @@ pub const PROBE_INTERVAL: u64 = 8;
 /// start optimistic (full depth — observations only exist if someone
 /// drafts), and collapsed classes probe at depth 1 every
 /// [`PROBE_INTERVAL`] cycles so recovery is possible.
+///
+/// Two refinements layer on the class EMAs:
+///
+/// * **Per-row acceptance EMAs** ([`Self::observe_row`] /
+///   [`Self::row_prior`]): a row that has survived
+///   [`SPEC_ROW_WARMUP`] verify cycles has its own acceptance estimate
+///   blended 50/50 over the class prior, so one atypical request inside a
+///   class (e.g. a highly repetitive row in a low-acceptance domain) gets
+///   a prior that reflects *its* behaviour. Row state is keyed by request
+///   id — never by slot, which is reused — and is dropped at release via
+///   [`Self::forget_row`].
+/// * **Charge-aware depth** ([`Self::charge_aware_depth`]): instead of
+///   the fixed `DEPTH_USEFULNESS` threshold, compare the
+///   acceptance-weighted expected commit value of position `d+1` against
+///   the ledger-priced marginal charge of verifying one extra draft row
+///   under the *current* batch geometry (see
+///   `cost::Ledger::marginal_spec_cost`).
 #[derive(Debug, Default)]
 pub struct SpecDepthController {
     max_depth: usize,
     ema: BTreeMap<String, ClassAcceptance>,
+    /// Per-request acceptance EMAs, keyed by request id (slot indices are
+    /// reused across occupancies and would alias unrelated rows).
+    rows: BTreeMap<u64, RowAcceptance>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -297,13 +323,25 @@ struct ClassAcceptance {
     idle_cycles: u64,
 }
 
+#[derive(Debug, Clone, Copy)]
+struct RowAcceptance {
+    rate: f32,
+    /// Verify cycles observed — the EMA is trusted only after
+    /// [`SPEC_ROW_WARMUP`] of them.
+    commits: u64,
+}
+
 /// Keep drafting position d while the expected marginal commit `a^d`
 /// clears this threshold (draft tokens are cheap, verify slots are not).
 const DEPTH_USEFULNESS: f32 = 0.25;
 
 impl SpecDepthController {
     pub fn new(max_depth: usize) -> SpecDepthController {
-        SpecDepthController { max_depth, ema: BTreeMap::new() }
+        SpecDepthController {
+            max_depth,
+            ema: BTreeMap::new(),
+            rows: BTreeMap::new(),
+        }
     }
 
     /// Smoothed acceptance rate for a class, if it has ever drafted.
@@ -355,6 +393,95 @@ impl SpecDepthController {
             return;
         }
         self.ema.insert(class.to_string(), ClassAcceptance { rate, idle_cycles: 0 });
+    }
+
+    /// Fold one verify cycle's outcome into the *row's own* acceptance
+    /// EMA (the class EMA is updated separately via [`Self::observe`]).
+    pub fn observe_row(&mut self, req_id: u64, proposed: usize, accepted: usize) {
+        if proposed == 0 {
+            return;
+        }
+        let rate = accepted as f32 / proposed as f32;
+        match self.rows.get_mut(&req_id) {
+            Some(r) => {
+                r.rate = ACCEPT_DECAY * r.rate + (1.0 - ACCEPT_DECAY) * rate;
+                r.commits += 1;
+            }
+            None => {
+                self.rows.insert(req_id, RowAcceptance { rate, commits: 1 });
+            }
+        }
+    }
+
+    /// The acceptance prior for a specific row: the class prior until the
+    /// row has survived [`SPEC_ROW_WARMUP`] observed verify cycles, then a
+    /// 50/50 blend of the row's own EMA over the class prior. The blend
+    /// (rather than a full handoff) keeps the estimate anchored when a
+    /// row's local repetitiveness fades back toward class-typical.
+    pub fn row_prior(&self, req_id: u64, class: &str) -> f32 {
+        let class_prior = self.prior(class);
+        match self.rows.get(&req_id) {
+            Some(r) if r.commits >= SPEC_ROW_WARMUP => {
+                0.5 * r.rate + 0.5 * class_prior
+            }
+            _ => class_prior,
+        }
+    }
+
+    /// Drop a row's acceptance state at request release. Request ids are
+    /// unique per trace but per-row EMAs only describe one occupancy, and
+    /// an unbounded map would leak across a long serve run.
+    pub fn forget_row(&mut self, req_id: u64) {
+        self.rows.remove(&req_id);
+    }
+
+    /// Charge-aware depth choice (ROADMAP open item 2): grow depth while
+    /// the acceptance-weighted expected value of the next draft position
+    /// beats its ledger-priced marginal charge.
+    ///
+    /// `token_value` is the sim-seconds one committed token is worth —
+    /// the plain (non-speculative) per-token step cost of the current
+    /// batch, i.e. what the batch would have to spend to produce that
+    /// token without speculation. `marginal(d)` prices verifying draft
+    /// position `d+1` given `d` already-drafted positions (plus the draft
+    /// side for model drafts). Position `d+1` commits with probability
+    /// `a^(d+1)` under geometric acceptance, so we accept the extra depth
+    /// while `a^(d+1) · token_value > marginal(d)`.
+    ///
+    /// In the memory-bound decode regime the marginal verify row is far
+    /// cheaper than a full step (weights stream once for the whole
+    /// batch), so this typically holds depth deeper than the fixed
+    /// [`DEPTH_USEFULNESS`] threshold — the `spec_charge` bench pins the
+    /// resulting OTPS win. Cold classes get the full `cap` (observations
+    /// only exist if someone drafts) and collapsed classes reuse the
+    /// [`PROBE_INTERVAL`] depth-1 probe of [`Self::depth_for`].
+    pub fn charge_aware_depth(
+        &mut self,
+        class: &str,
+        cap: usize,
+        token_value: f64,
+        marginal: impl Fn(usize) -> f64,
+    ) -> usize {
+        let Some(c) = self.ema.get_mut(class) else {
+            return cap;
+        };
+        let mut depth = 0;
+        let mut p = 1.0f32;
+        while depth < cap {
+            p *= c.rate;
+            if (p as f64) * token_value <= marginal(depth) {
+                break;
+            }
+            depth += 1;
+        }
+        if depth == 0 {
+            c.idle_cycles += 1;
+            if c.idle_cycles >= PROBE_INTERVAL {
+                c.idle_cycles = 0;
+                return 1; // probe
+            }
+        }
+        depth
     }
 }
 
@@ -598,6 +725,73 @@ mod tests {
         assert!((1..4).contains(&d), "depth {d} for 50% acceptance");
         // classes are independent
         assert_eq!(m.depth_for("never-seen"), 4);
+    }
+
+    #[test]
+    fn row_prior_blends_over_class_after_warmup() {
+        let mut c = SpecDepthController::new(4);
+        // strong class prior
+        for _ in 0..30 {
+            c.observe("a", 4, 4);
+        }
+        let class_prior = c.prior("a");
+        assert!(class_prior > 0.9);
+        // unknown row: class prior verbatim
+        assert_eq!(c.row_prior(7, "a"), class_prior);
+        // a zero-acceptance row stays on the class prior through warmup …
+        for i in 0..SPEC_ROW_WARMUP {
+            assert_eq!(
+                c.row_prior(7, "a"),
+                class_prior,
+                "row blended before warmup (after {i} commits)"
+            );
+            c.observe_row(7, 4, 0);
+        }
+        // … then the 50/50 blend pulls its prior below the class's
+        let blended = c.row_prior(7, "a");
+        assert!(
+            blended < class_prior && blended >= 0.5 * class_prior - 1e-6,
+            "expected 50/50 blend, got {blended} vs class {class_prior}"
+        );
+        // rows are independent: another row of the class is untouched
+        assert_eq!(c.row_prior(8, "a"), class_prior);
+        // release drops the state; the id falls back to the class prior
+        c.forget_row(7);
+        assert_eq!(c.row_prior(7, "a"), class_prior);
+        // zero-proposal cycles are not observations
+        c.observe_row(9, 0, 0);
+        assert_eq!(c.row_prior(9, "a"), class_prior);
+    }
+
+    #[test]
+    fn charge_aware_depth_trades_value_against_marginal_cost() {
+        let mut c = SpecDepthController::new(4);
+        // cold class: optimistic full cap, regardless of prices
+        assert_eq!(c.charge_aware_depth("a", 3, 1.0, |_| f64::MAX), 3);
+        for _ in 0..30 {
+            c.observe("a", 4, 2); // EMA → 0.5
+        }
+        let a = c.acceptance("a").unwrap();
+        assert!((a - 0.5).abs() < 0.05);
+        // memory-bound regime: marginal row nearly free → hold the cap,
+        // deeper than the fixed-threshold controller would go
+        // (0.5^3 < DEPTH_USEFULNESS=0.25 stops depth_for at 2)
+        assert_eq!(c.charge_aware_depth("a", 4, 1.0, |_| 1e-6), 4);
+        assert!(c.depth_for("a") < 4);
+        // expensive marginal rows collapse the depth to 0 …
+        assert_eq!(c.charge_aware_depth("a", 4, 1.0, |_| 10.0), 0);
+        // mid prices land in between: a^1=0.5 > 0.2, a^2=0.25 > 0.2,
+        // a^3=0.125 <= 0.2 → depth 2
+        assert_eq!(c.charge_aware_depth("a", 4, 1.0, |_| 0.2), 2);
+        // … and a collapsed class still probes at depth 1 eventually
+        let mut saw_probe = false;
+        for _ in 0..=PROBE_INTERVAL {
+            if c.charge_aware_depth("a", 4, 1.0, |_| 10.0) == 1 {
+                saw_probe = true;
+                break;
+            }
+        }
+        assert!(saw_probe, "collapsed class never probed under charge-aware depth");
     }
 
     #[test]

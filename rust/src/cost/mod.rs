@@ -1,0 +1,510 @@
+//! # Unified cost ledger — the single writer to the sim clock.
+//!
+//! Every simulated second this crate charges flows through ONE object:
+//! the [`Ledger`] owned by `coordinator::ServeLoop`. The cost models in
+//! [`crate::memsim`] and [`crate::ep`] are **pure pricers** — they return
+//! [`Charge`] values (a [`StepBreakdown`] tagged with a [`Phase`]) and
+//! never touch a clock. The serve loop assembles each serving step's
+//! charges into an [`Entry`] (verify seconds, draft seconds, migration
+//! drain, …) and posts it; [`Ledger::post`] is the only place sim time
+//! advances, and `ledger.clock()` replaces the scattered
+//! `sim_seconds += …` sites that PRs 1–9 accreted.
+//!
+//! ## Single-writer clock contract
+//!
+//! * `Ledger::post(entry)` and `Ledger::advance_to(t)` are the ONLY
+//!   operations that move the clock. `ServeMetrics::sim_seconds` is a
+//!   read-only **mirror** assigned from `ledger.clock()` after every
+//!   post — nothing else may write it.
+//! * Every posted second carries a [`Phase`] attribution, so per-phase
+//!   totals (`time_decode_s`, `time_spec_s`, `time_prefill_s`,
+//!   `time_migration_s`, `time_overhead_s`) are first-class metrics
+//!   that conserve: the ledger keeps an `attributed` shadow accumulated
+//!   by the *identical* chronological f64 additions as the clock, so
+//!   `clock().to_bits() == attributed().to_bits()` holds **exactly**
+//!   (asserted across policies × spec × EP × fused waves in
+//!   `tests/cost_ledger.rs`), while the per-phase array — a regrouping
+//!   of the same summands — matches to within a few ulps.
+//! * Idle gaps (arrival later than the current clock) go through
+//!   [`Ledger::advance_to`] and are attributed to [`Phase::Overhead`].
+//! * Deferred work is ledger state too: adopted migration plans post
+//!   their transfer seconds into a backlog
+//!   ([`Ledger::defer_migration`]) that subsequent steps drain
+//!   ([`Ledger::drain_migration`]) as [`Phase::MigrationDrain`] time.
+//!
+//! ## Marginal-cost API (charge-aware speculation)
+//!
+//! Because the ledger owns both pricers, it can answer "what would one
+//! more draft level cost *under the current batch*":
+//! [`Ledger::marginal_spec_cost`] prices verify depth `d+1` against `d`
+//! on the last observed step geometry (dense activations or EP selected
+//! sets), plus the draft-side marginal when the draft source is the
+//! dense model. `SpecDepthController::charge_aware_depth` compares that
+//! against the acceptance-weighted value of the extra committed token
+//! (`--spec-charge-aware`); depth choice is scheduling-only, so outputs
+//! stay byte-identical (pinned in `tests/spec_mixed_phase.rs`).
+
+use crate::ep::EpCostModel;
+use crate::ep::Placement;
+use crate::memsim::{DecodeCostModel, StepBreakdown};
+use crate::selection::ExpertSet;
+
+/// Attribution bucket for posted sim time. Every charged second belongs
+/// to exactly one phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Plain decode forwards (no drafting row in the step).
+    Decode,
+    /// Ragged speculative verify forwards.
+    SpecVerify,
+    /// Draft-model sub-steps feeding a verify.
+    SpecDraft,
+    /// Fused (or sequential) prefill-chunk forwards.
+    PrefillWave,
+    /// Migration backlog drained against step time.
+    MigrationDrain,
+    /// Idle gaps (clock advanced to a later arrival) and anything not
+    /// otherwise attributable.
+    Overhead,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] = [
+        Phase::Decode,
+        Phase::SpecVerify,
+        Phase::SpecDraft,
+        Phase::PrefillWave,
+        Phase::MigrationDrain,
+        Phase::Overhead,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Decode => "decode",
+            Phase::SpecVerify => "spec_verify",
+            Phase::SpecDraft => "spec_draft",
+            Phase::PrefillWave => "prefill_wave",
+            Phase::MigrationDrain => "migration_drain",
+            Phase::Overhead => "overhead",
+        }
+    }
+}
+
+/// A priced unit of work: an itemized [`StepBreakdown`] tagged with the
+/// pricer's suggested [`Phase`]. Pricers return these; they carry no
+/// clock side effects. The serve loop decides the *actual* attribution
+/// when it adds the charge to an [`Entry`] (e.g. a decode-priced
+/// forward inside a prefill wave is attributed [`Phase::PrefillWave`]).
+#[derive(Debug, Clone)]
+pub struct Charge {
+    breakdown: StepBreakdown,
+    phase: Phase,
+}
+
+impl Charge {
+    pub fn new(breakdown: StepBreakdown, phase: Phase) -> Self {
+        Charge { breakdown, phase }
+    }
+
+    /// Wrap a bare seconds total (pricers whose models don't itemize,
+    /// e.g. the EP straggler path) — the breakdown carries only
+    /// `total_seconds`.
+    pub fn from_seconds(seconds: f64, phase: Phase) -> Self {
+        Charge {
+            breakdown: StepBreakdown {
+                total_seconds: seconds,
+                ..StepBreakdown::default()
+            },
+            phase,
+        }
+    }
+
+    /// Total priced seconds (the breakdown's roofline total).
+    pub fn seconds(&self) -> f64 {
+        self.breakdown.total_seconds
+    }
+
+    /// The itemized breakdown (bytes, mem/compute/overhead seconds) —
+    /// the one accessor benches report from instead of recomputing
+    /// fields ad hoc.
+    pub fn breakdown(&self) -> &StepBreakdown {
+        &self.breakdown
+    }
+
+    /// The pricer's suggested attribution.
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+}
+
+/// One serving step's worth of charges, accumulated in chronological
+/// add-order. `total` is summed by the SAME f64 addition sequence the
+/// pre-ledger code used (one local accumulator per step), which is what
+/// makes the refactor bit-identical on sim time.
+#[derive(Debug, Clone, Default)]
+pub struct Entry {
+    total: f64,
+    parts: Vec<(Phase, f64)>,
+}
+
+impl Entry {
+    pub fn new() -> Self {
+        Entry::default()
+    }
+
+    /// Add `seconds` attributed to `phase`. Order matters for f64
+    /// bit-identity: add charges in the order the step incurs them.
+    pub fn add(&mut self, phase: Phase, seconds: f64) {
+        self.total += seconds;
+        self.parts.push((phase, seconds));
+    }
+
+    /// Total seconds accumulated so far (chronological sum).
+    pub fn seconds(&self) -> f64 {
+        self.total
+    }
+
+    pub fn parts(&self) -> &[(Phase, f64)] {
+        &self.parts
+    }
+}
+
+/// The geometry of the last charged step — what
+/// [`Ledger::marginal_spec_cost`] prices hypothetical depths against.
+#[derive(Debug, Clone)]
+pub struct SpecGeometry {
+    /// Rows riding the shared forward (batch width of the verify).
+    pub riders: usize,
+    /// Per-layer activated-expert counts (dense charging path).
+    pub activated: Vec<usize>,
+    /// Per-layer selected sets (EP charging path), if `cfg.ep`.
+    pub selected: Option<Vec<ExpertSet>>,
+    /// Whether drafts come from the dense draft model (true) or free
+    /// n-gram lookup (false) — decides the draft-side marginal.
+    pub model_draft: bool,
+}
+
+/// The single writer to the sim clock. Owns the pure pricers
+/// ([`DecodeCostModel`], [`EpCostModel`]), the per-phase second totals,
+/// and the deferred migration backlog. See the module docs for the
+/// contract.
+#[derive(Debug, Clone)]
+pub struct Ledger {
+    clock: f64,
+    /// Shadow of `clock` accumulated by the identical chronological
+    /// additions — `clock.to_bits() == attributed.to_bits()` always.
+    attributed: f64,
+    phase_s: [f64; Phase::ALL.len()],
+    pricer: DecodeCostModel,
+    ep_pricer: EpCostModel,
+    migration_backlog_s: f64,
+}
+
+impl Ledger {
+    pub fn new(pricer: DecodeCostModel, ep_pricer: EpCostModel) -> Self {
+        Ledger {
+            clock: 0.0,
+            attributed: 0.0,
+            phase_s: [0.0; Phase::ALL.len()],
+            pricer,
+            ep_pricer,
+            migration_backlog_s: 0.0,
+        }
+    }
+
+    /// Post one step's entry: the ONLY place (besides
+    /// [`Ledger::advance_to`]) sim time advances. Returns the entry's
+    /// total seconds, for callers that report the step delta.
+    pub fn post(&mut self, entry: Entry) -> f64 {
+        let total = entry.total;
+        self.clock += total;
+        self.attributed += total;
+        for (phase, s) in &entry.parts {
+            self.phase_s[phase.index()] += s;
+        }
+        total
+    }
+
+    /// Advance the clock to an absolute time `t` (idle gap to a later
+    /// arrival). No-op unless `t > clock()`. The gap is attributed to
+    /// [`Phase::Overhead`]; `attributed` is re-synced by assignment so
+    /// the bit-identity invariant survives the jump.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.clock {
+            let gap = t - self.clock;
+            self.clock = t;
+            self.phase_s[Phase::Overhead.index()] += gap;
+            self.attributed = self.clock;
+        }
+    }
+
+    /// Zero all accumulators (clock, attribution, backlog); pricers are
+    /// configuration and survive.
+    pub fn reset(&mut self) {
+        self.clock = 0.0;
+        self.attributed = 0.0;
+        self.phase_s = [0.0; Phase::ALL.len()];
+        self.migration_backlog_s = 0.0;
+    }
+
+    /// Current sim time.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Chronological shadow of the clock — bit-equal by construction.
+    pub fn attributed(&self) -> f64 {
+        self.attributed
+    }
+
+    /// Seconds attributed to one phase so far.
+    pub fn phase_seconds(&self, phase: Phase) -> f64 {
+        self.phase_s[phase.index()]
+    }
+
+    /// The decode/prefill/draft pricer (pure; no clock side effects).
+    pub fn pricer(&self) -> &DecodeCostModel {
+        &self.pricer
+    }
+
+    /// The EP straggler/interconnect pricer.
+    pub fn ep_pricer(&self) -> &EpCostModel {
+        &self.ep_pricer
+    }
+
+    /// Defer migration transfer seconds into the backlog; subsequent
+    /// steps drain it through [`Ledger::drain_migration`].
+    pub fn defer_migration(&mut self, seconds: f64) {
+        self.migration_backlog_s += seconds;
+    }
+
+    /// Outstanding deferred migration seconds.
+    pub fn migration_backlog(&self) -> f64 {
+        self.migration_backlog_s
+    }
+
+    /// Drain up to `upto` seconds of migration backlog (an EP step
+    /// overlaps transfers with at most its own duration). Returns the
+    /// drained amount — the caller adds it to its entry as
+    /// [`Phase::MigrationDrain`].
+    pub fn drain_migration(&mut self, upto: f64) -> f64 {
+        if self.migration_backlog_s <= 0.0 {
+            return 0.0;
+        }
+        let drain = self.migration_backlog_s.min(upto);
+        self.migration_backlog_s -= drain;
+        drain
+    }
+
+    /// Price a verify forward of `riders × (1 + depth)` tokens on the
+    /// given step geometry (dense or EP).
+    fn verify_cost(&self, depth: usize, geo: &SpecGeometry, placement: Option<&Placement>) -> f64 {
+        let n_tokens = geo.riders * (1 + depth);
+        match (placement, &geo.selected) {
+            (Some(pl), Some(sets)) => {
+                let refs: Vec<&ExpertSet> = sets.iter().collect();
+                self.pricer.ep_step(pl, &refs, n_tokens, &self.ep_pricer).seconds()
+            }
+            _ => {
+                if geo.activated.is_empty() {
+                    return 0.0;
+                }
+                let scaled = self.pricer.scale_activations(&geo.activated);
+                self.pricer.target_step(&scaled, n_tokens).seconds()
+            }
+        }
+    }
+
+    /// Cost of a PLAIN decode step over the geometry's riders (depth 0)
+    /// — the per-step value baseline the charge-aware controller divides
+    /// by rider count to price one committed token.
+    pub fn plain_step_cost(&self, geo: &SpecGeometry, placement: Option<&Placement>) -> f64 {
+        self.verify_cost(0, geo, placement)
+    }
+
+    /// Marginal cost of raising every rider's draft depth from `depth`
+    /// to `depth + 1` under the current batch: the verify-side delta
+    /// (wider padded forward) plus, for model drafts, one more uniform
+    /// draft sub-step. In the memory-bound decode regime the weight
+    /// stream is depth-invariant, so this is typically tiny next to a
+    /// committed token's value — exactly the economics the fixed
+    /// usefulness threshold couldn't see.
+    pub fn marginal_spec_cost(
+        &self,
+        depth: usize,
+        geo: &SpecGeometry,
+        placement: Option<&Placement>,
+    ) -> f64 {
+        let mut marginal =
+            self.verify_cost(depth + 1, geo, placement) - self.verify_cost(depth, geo, placement);
+        if geo.model_draft && geo.riders > 0 {
+            let shallow = self.pricer.draft_cost(&vec![depth; geo.riders]).seconds();
+            let deep = self.pricer.draft_cost(&vec![depth + 1; geo.riders]).seconds();
+            marginal += deep - shallow;
+        }
+        marginal.max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::{CostGeometry, HardwareProfile};
+
+    fn ledger() -> Ledger {
+        Ledger::new(
+            DecodeCostModel::new(
+                HardwareProfile::by_name("h100").unwrap(),
+                CostGeometry::for_preset("gptoss-mini").unwrap(),
+            ),
+            EpCostModel::default(),
+        )
+    }
+
+    fn geo(riders: usize) -> SpecGeometry {
+        SpecGeometry {
+            riders,
+            activated: vec![60; 4],
+            selected: None,
+            model_draft: false,
+        }
+    }
+
+    #[test]
+    fn post_accumulates_clock_and_phases_bit_exactly() {
+        let mut l = ledger();
+        let mut e = Entry::new();
+        e.add(Phase::SpecDraft, 0.1);
+        e.add(Phase::SpecVerify, 0.25);
+        e.add(Phase::MigrationDrain, 0.05);
+        let total = e.seconds();
+        assert_eq!(l.post(e), total);
+        let mut e2 = Entry::new();
+        e2.add(Phase::Decode, 0.5);
+        l.post(e2);
+        // the conservation invariant: attributed shadows the clock
+        // through the identical chronological additions
+        assert_eq!(l.clock().to_bits(), l.attributed().to_bits());
+        assert_eq!(l.phase_seconds(Phase::Decode), 0.5);
+        assert_eq!(l.phase_seconds(Phase::SpecDraft), 0.1);
+        assert_eq!(l.phase_seconds(Phase::SpecVerify), 0.25);
+        assert_eq!(l.phase_seconds(Phase::MigrationDrain), 0.05);
+        assert_eq!(l.phase_seconds(Phase::PrefillWave), 0.0);
+        // per-phase totals are a regrouping of the same summands:
+        // equal within float regrouping slack
+        let phase_sum: f64 = Phase::ALL.iter().map(|&p| l.phase_seconds(p)).sum();
+        assert!((phase_sum - l.clock()).abs() <= 1e-12 * l.clock().max(1.0));
+    }
+
+    #[test]
+    fn advance_to_charges_overhead_and_resyncs() {
+        let mut l = ledger();
+        let mut e = Entry::new();
+        e.add(Phase::Decode, 1.0);
+        l.post(e);
+        l.advance_to(0.5); // backwards: no-op
+        assert_eq!(l.clock(), 1.0);
+        assert_eq!(l.phase_seconds(Phase::Overhead), 0.0);
+        l.advance_to(1.75);
+        assert_eq!(l.clock(), 1.75);
+        assert_eq!(l.phase_seconds(Phase::Overhead), 0.75);
+        assert_eq!(l.clock().to_bits(), l.attributed().to_bits());
+    }
+
+    #[test]
+    fn migration_backlog_defers_and_drains_bounded() {
+        let mut l = ledger();
+        l.defer_migration(0.3);
+        l.defer_migration(0.2);
+        assert_eq!(l.migration_backlog(), 0.5);
+        // drain is bounded by the step's own duration
+        assert_eq!(l.drain_migration(0.4), 0.4);
+        assert!((l.migration_backlog() - 0.1).abs() < 1e-15);
+        // and by the remaining backlog
+        let rest = l.drain_migration(10.0);
+        assert!((rest - 0.1).abs() < 1e-15);
+        assert_eq!(l.drain_migration(1.0), 0.0);
+        assert_eq!(l.migration_backlog(), 0.0);
+    }
+
+    #[test]
+    fn reset_zeroes_accumulators_but_keeps_pricers() {
+        let mut l = ledger();
+        let mut e = Entry::new();
+        e.add(Phase::PrefillWave, 2.0);
+        l.post(e);
+        l.defer_migration(0.5);
+        l.reset();
+        assert_eq!(l.clock(), 0.0);
+        assert_eq!(l.attributed(), 0.0);
+        assert_eq!(l.migration_backlog(), 0.0);
+        for p in Phase::ALL {
+            assert_eq!(l.phase_seconds(p), 0.0);
+        }
+        // pricers survive: still able to price a step
+        assert!(l.plain_step_cost(&geo(4), None) > 0.0);
+    }
+
+    #[test]
+    fn charge_accessors_and_from_seconds() {
+        let l = ledger();
+        let scaled = l.pricer().scale_activations(&[60; 4]);
+        let c = l.pricer().target_step(&scaled, 8);
+        assert_eq!(c.phase(), Phase::Decode);
+        assert_eq!(c.seconds(), c.breakdown().total_seconds);
+        assert!(c.breakdown().bytes > 0.0);
+        let bare = Charge::from_seconds(0.125, Phase::MigrationDrain);
+        assert_eq!(bare.seconds(), 0.125);
+        assert_eq!(bare.phase(), Phase::MigrationDrain);
+        assert_eq!(bare.breakdown().bytes, 0.0);
+    }
+
+    #[test]
+    fn marginal_spec_cost_is_small_next_to_a_token_in_mem_bound_decode() {
+        // The charge-aware controller's whole premise: in the
+        // memory-bound regime the weight stream is depth-invariant, so
+        // one more padded verify level costs far less than the plain
+        // per-token step cost it can replace.
+        let l = ledger();
+        let g = geo(4);
+        let plain = l.plain_step_cost(&g, None);
+        let token_value = plain / g.riders as f64;
+        for depth in 0..3 {
+            let m = l.marginal_spec_cost(depth, &g, None);
+            assert!(m >= 0.0);
+            assert!(
+                m < token_value,
+                "depth {depth}: marginal {m} !< token value {token_value}"
+            );
+        }
+    }
+
+    #[test]
+    fn marginal_spec_cost_adds_draft_side_for_model_drafts() {
+        let l = ledger();
+        let mut g = geo(4);
+        let lookup = l.marginal_spec_cost(1, &g, None);
+        g.model_draft = true;
+        let model = l.marginal_spec_cost(1, &g, None);
+        assert!(
+            model > lookup,
+            "model-draft marginal {model} !> lookup marginal {lookup}"
+        );
+    }
+
+    #[test]
+    fn entry_sums_in_add_order() {
+        let mut e = Entry::new();
+        assert_eq!(e.seconds(), 0.0);
+        e.add(Phase::SpecDraft, 0.1);
+        e.add(Phase::SpecVerify, 0.2);
+        // exactly the local-accumulator sequence: (0.0 + 0.1) + 0.2
+        let expect = 0.1f64 + 0.2;
+        assert_eq!(e.seconds().to_bits(), expect.to_bits());
+        assert_eq!(e.parts().len(), 2);
+    }
+}

@@ -33,12 +33,26 @@ pub enum HealthState {
     Dead,
 }
 
+/// Consecutive healthy probes a `Busy` replica must accumulate before it
+/// rejoins rendezvous preference. One good probe after a bad one is often
+/// a queue momentarily dipping under the mark — without hysteresis a
+/// replica hovering at the high-water line flaps Healthy↔Busy on every
+/// probe, and each flap re-routes its whole affine class (defeating the
+/// footprint-sharing the affinity exists for). Recovery therefore takes
+/// `RECOVERY_PROBES` clean probes in a row; any over-mark probe resets
+/// the streak.
+pub const RECOVERY_PROBES: usize = 2;
+
 /// Per-replica health registry + the submission-driven probe clock.
 #[derive(Debug)]
 pub struct HealthTracker {
     probe_every: usize,
     submits: usize,
     states: Vec<HealthState>,
+    /// Consecutive under-mark probes seen by each Busy replica — the
+    /// recovery-hysteresis streak ([`RECOVERY_PROBES`]). Always 0 for
+    /// Healthy/Dead replicas.
+    healthy_streak: Vec<usize>,
 }
 
 impl HealthTracker {
@@ -49,6 +63,7 @@ impl HealthTracker {
             probe_every,
             submits: 0,
             states: vec![HealthState::Healthy; n_replicas],
+            healthy_streak: vec![0; n_replicas],
         }
     }
 
@@ -61,17 +76,28 @@ impl HealthTracker {
     }
 
     /// Fold one probed queue depth into replica `i`'s state. Dead is
-    /// terminal; otherwise Busy iff backpressure is on (`high_water` > 0)
-    /// and the queue has reached the mark.
+    /// terminal. An at/over-mark probe (backpressure on, `high_water` > 0)
+    /// flips to Busy immediately — overload reaction stays one probe fast.
+    /// Recovery is hysteretic: a Busy replica needs [`RECOVERY_PROBES`]
+    /// consecutive under-mark probes before it reads Healthy again, so a
+    /// queue oscillating around the mark cannot flap the routing.
     pub fn observe(&mut self, i: usize, queued: usize, high_water: usize) {
         if self.states[i] == HealthState::Dead {
             return;
         }
-        self.states[i] = if high_water > 0 && queued >= high_water {
-            HealthState::Busy
-        } else {
-            HealthState::Healthy
-        };
+        if high_water > 0 && queued >= high_water {
+            self.states[i] = HealthState::Busy;
+            self.healthy_streak[i] = 0;
+            return;
+        }
+        if self.states[i] == HealthState::Busy {
+            self.healthy_streak[i] += 1;
+            if self.healthy_streak[i] < RECOVERY_PROBES {
+                return; // still Busy: not enough clean probes in a row
+            }
+        }
+        self.states[i] = HealthState::Healthy;
+        self.healthy_streak[i] = 0;
     }
 
     /// Mark replica `i` dead (terminal).
@@ -105,7 +131,11 @@ mod tests {
         let mut h = HealthTracker::new(2, 1);
         h.observe(0, 5, 4);
         assert_eq!(h.state(0), HealthState::Busy);
-        h.observe(0, 3, 4);
+        // recovery is hysteretic: RECOVERY_PROBES consecutive clean probes
+        for k in 0..RECOVERY_PROBES {
+            assert_eq!(h.state(0), HealthState::Busy, "rejoined after {k} probes");
+            h.observe(0, 3, 4);
+        }
         assert_eq!(h.state(0), HealthState::Healthy);
         // high_water 0 = backpressure off: never Busy
         h.observe(0, 1000, 0);
@@ -114,5 +144,33 @@ mod tests {
         h.observe(0, 0, 4);
         assert_eq!(h.state(0), HealthState::Dead, "dead is terminal");
         assert_eq!(h.alive(), 1);
+    }
+
+    #[test]
+    fn busy_recovery_requires_consecutive_clean_probes() {
+        // A queue oscillating under/over the mark never rejoins: every
+        // over-mark probe resets the streak, so alternating good/bad
+        // probes keep the replica Busy indefinitely (no flapping).
+        let mut h = HealthTracker::new(1, 1);
+        h.observe(0, 6, 4);
+        assert_eq!(h.state(0), HealthState::Busy);
+        for _ in 0..8 {
+            h.observe(0, 2, 4); // one clean probe: streak 1 < RECOVERY_PROBES
+            assert_eq!(h.state(0), HealthState::Busy, "flapped on a lone clean probe");
+            h.observe(0, 9, 4); // relapse resets the streak
+            assert_eq!(h.state(0), HealthState::Busy);
+        }
+        // a genuinely drained queue recovers after the full streak …
+        for _ in 0..RECOVERY_PROBES {
+            h.observe(0, 0, 4);
+        }
+        assert_eq!(h.state(0), HealthState::Healthy);
+        // … and overload reaction stays one probe fast after recovery
+        h.observe(0, 4, 4);
+        assert_eq!(h.state(0), HealthState::Busy);
+        // a replica that was never Busy reads Healthy with no warmup
+        let mut fresh = HealthTracker::new(1, 1);
+        fresh.observe(0, 1, 4);
+        assert_eq!(fresh.state(0), HealthState::Healthy);
     }
 }

@@ -325,7 +325,9 @@ fn status_of(core: &ServeLoop<'_>) -> ReplicaStatus {
     ReplicaStatus {
         queued: core.queued(),
         running: core.running(),
-        clock: core.metrics().sim_seconds,
+        // the ledger is the sim clock's single writer; metrics only
+        // mirror it, so status reads the source of truth directly
+        clock: core.ledger().clock(),
     }
 }
 
@@ -345,7 +347,7 @@ fn replica_loop(
         let mut exit = false;
         let result = match cmd {
             Cmd::Submit(req) => {
-                let at = core.metrics().sim_seconds;
+                let at = core.ledger().clock();
                 CmdResult::Submitted(core.submit(req).map(|()| at))
             }
             Cmd::Resubmit { req, submit_sim, deadline_sim } => CmdResult::Submitted(
@@ -354,7 +356,7 @@ fn replica_loop(
             Cmd::RunUntil(t) => {
                 let wave = (|| -> Result<Pumped> {
                     let mut p = Pumped::default();
-                    while core.has_work() && core.metrics().sim_seconds < t {
+                    while core.has_work() && core.ledger().clock() < t {
                         p.absorb(core.step()?);
                     }
                     core.advance_idle_to(t);

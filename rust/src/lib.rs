@@ -22,7 +22,11 @@
 //! * [`fleet`]     — N serve-loop replicas behind a footprint-affine
 //!   router: rendezvous class assignment, queue-depth backpressure,
 //!   health states, lossless failover through the resume contract.
-//! * [`memsim`]    — H100/TPU memory-hierarchy cost model → OTPS estimates.
+//! * [`cost`]      — the unified cost ledger: single writer to the sim
+//!   clock, per-phase second attribution, deferred migration backlog,
+//!   and the marginal-cost API behind charge-aware speculation.
+//! * [`memsim`]    — H100/TPU memory-hierarchy cost model → OTPS estimates
+//!   (pure pricers returning [`cost::Charge`] values).
 //! * [`ep`]        — expert-parallel placement and per-GPU load accounting.
 //! * [`gen`]       — synthetic workload generator (domain-clustered gate
 //!   scores, speculative correlation, request traces).
@@ -34,6 +38,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod cost;
 pub mod ep;
 pub mod fleet;
 pub mod gen;

@@ -23,13 +23,15 @@ use xshare::util::json::Json;
 
 const USAGE: &str = "usage: xshare <serve|run|client|info> [--flags]
   serve  --preset P --policy POL [--batch N] [--spec-len L] [--spec-adaptive]
-         [--spec-draft model|lookup] [--prefill-chunk T] [--admission A]
+         [--spec-charge-aware] [--spec-draft model|lookup] [--prefill-chunk T]
+         [--admission A]
          [--max-queue Q] [--footprint-decay D] [--ep-gpus G] [--ep-evict]
          [--ep-rebalance N] [--prefix-cache-mb MB] [--prefix-min-tokens N]
          [--chunk-shared-selection] [--fleet-replicas N] [--fleet-affinity M]
          [--fleet-high-water Q] [--fleet-probe-every N] [--addr A] [--config F]
   run    --preset P --policy POL --requests N [--batch N] [--spec-len L]
-         [--spec-adaptive] [--spec-draft D] [--prefill-chunk T]
+         [--spec-adaptive] [--spec-charge-aware] [--spec-draft D]
+         [--prefill-chunk T]
          [--admission A] [--ep-gpus G] [--ep-evict] [--ep-rebalance N]
          [--prefix-cache-mb MB] [--prefix-min-tokens N]
          [--chunk-shared-selection] [--seed S]
@@ -40,6 +42,8 @@ policies:  vanilla | batch:<m>:<k0> | spec:<k0>:<m>:<mr> | gpu:<k0>:<mg> |
            lynx:<drop> | skip:<beta> | opp:<k'>
 admission: fifo | priority | edf | footprint   (--max-queue 0 = unbounded)
 spec:      --spec-adaptive adapts per-row draft depth per traffic class;
+           --spec-charge-aware prices depth against the cost ledger's
+           marginal verify charge instead of a fixed threshold;
            --spec-draft lookup drafts by n-gram lookup (no draft model);
            --stream makes the client print a delta line per committed chunk
 ep:        --ep-gpus G [--ep-placement P] deploys expert-parallel; with

@@ -11,8 +11,15 @@
 //! which is the standard roofline treatment of memory-bound decode: the
 //! paper's Figure 7/8 (OTPS vs #activated experts) is a straight consequence
 //! of the bytes term.
+//!
+//! Since PR 10 these models are **pure pricers**: every public pricing
+//! entry point returns a [`Charge`] (an itemized [`StepBreakdown`] tagged
+//! with a suggested [`Phase`]) and has no clock side effects. Sim time
+//! only advances when `coordinator::ServeLoop` posts the charge through
+//! its `cost::Ledger` — the single-writer contract in `cost/mod.rs`.
 
 use super::profiles::{CostGeometry, HardwareProfile};
+use crate::cost::{Charge, Phase};
 use crate::ep::{EpCostModel, Placement};
 use crate::selection::ExpertSet;
 
@@ -38,8 +45,16 @@ impl DecodeCostModel {
     }
 
     /// Latency of one target-model forward over `n_tokens` rows with the
-    /// given per-layer activated-expert counts.
-    pub fn target_step(&self, activated_per_layer: &[usize], n_tokens: usize) -> StepBreakdown {
+    /// given per-layer activated-expert counts. Pure pricer: returns a
+    /// [`Charge`] (suggested phase [`Phase::Decode`]); nothing is posted.
+    pub fn target_step(&self, activated_per_layer: &[usize], n_tokens: usize) -> Charge {
+        Charge::new(
+            self.step_breakdown(activated_per_layer, n_tokens),
+            Phase::Decode,
+        )
+    }
+
+    fn step_breakdown(&self, activated_per_layer: &[usize], n_tokens: usize) -> StepBreakdown {
         assert_eq!(
             activated_per_layer.len(),
             self.geo.n_layers,
@@ -87,12 +102,17 @@ impl DecodeCostModel {
     /// combined set beats N separate full streams' fixed dense bytes and
     /// layer overheads). Charging only; token routing stays row-local and
     /// byte-identical (see the wave contract in `model/moe_model.rs`).
+    /// Pure pricer: same roofline as [`DecodeCostModel::target_step`],
+    /// suggested phase [`Phase::PrefillWave`].
     pub fn prefill_wave(
         &self,
         activated_union_per_layer: &[usize],
         total_tokens: usize,
-    ) -> StepBreakdown {
-        self.target_step(activated_union_per_layer, total_tokens)
+    ) -> Charge {
+        Charge::new(
+            self.step_breakdown(activated_union_per_layer, total_tokens),
+            Phase::PrefillWave,
+        )
     }
 
     /// One draft-model decode step (speculative decoding).
@@ -127,33 +147,37 @@ impl DecodeCostModel {
     /// optimises against: shrinking one row below the max trims only the
     /// (small) width term until the max itself drops and a whole weight
     /// stream disappears. A single row at depth `d` charges exactly what
-    /// uniform `[d]` used to: `d × (draft_step() + row compute)`.
-    pub fn draft_cost(&self, depths: &[usize]) -> f64 {
+    /// uniform `[d]` used to: `d × (draft_step() + row compute)`. Pure
+    /// pricer: suggested phase [`Phase::SpecDraft`].
+    pub fn draft_cost(&self, depths: &[usize]) -> Charge {
         let max_d = depths.iter().copied().max().unwrap_or(0);
         if max_d == 0 {
-            return 0.0;
+            return Charge::from_seconds(0.0, Phase::SpecDraft);
         }
         let stream = self.draft_step();
         if stream == 0.0 {
-            return 0.0; // preset ships no draft model
+            return Charge::from_seconds(0.0, Phase::SpecDraft); // no draft model shipped
         }
         let mut total = 0.0;
         for j in 0..max_d {
             let width = depths.iter().filter(|&&d| d > j).count();
             total += stream + width as f64 * self.draft_row_compute();
         }
-        total
+        Charge::from_seconds(total, Phase::SpecDraft)
     }
 
     /// One EP decode step: per-layer straggler latency from MaxLoad plus
     /// all-to-alls, summed over layers (per-layer selected sets supplied).
+    /// Pure pricer: the straggler model doesn't itemize, so the charge's
+    /// breakdown carries only `total_seconds` (suggested phase
+    /// [`Phase::Decode`]).
     pub fn ep_step(
         &self,
         placement: &Placement,
         selected_per_layer: &[&ExpertSet],
         n_tokens: usize,
         ep_model: &EpCostModel,
-    ) -> f64 {
+    ) -> Charge {
         let toks = crate::ep::uniform_tokens(n_tokens, placement.n_gpus());
         // scale mini layers to full-scale layer count cyclically
         let mut total = self.hw.step_overhead_s;
@@ -163,7 +187,7 @@ impl DecodeCostModel {
                 + self.geo.dense_bytes_per_layer / self.hw.hbm_bw
                 + self.hw.layer_overhead_s;
         }
-        total
+        Charge::from_seconds(total, Phase::Decode)
     }
 
     /// Convenience: simulated OTPS for a homogeneous run.
@@ -190,8 +214,8 @@ mod tests {
     #[test]
     fn step_time_monotone_in_activation() {
         let m = model();
-        let lo = m.target_step(&[30; 36], 16).total_seconds;
-        let hi = m.target_step(&[100; 36], 16).total_seconds;
+        let lo = m.target_step(&[30; 36], 16).seconds();
+        let hi = m.target_step(&[100; 36], 16).seconds();
         assert!(hi > lo);
     }
 
@@ -200,7 +224,8 @@ mod tests {
         // The premise of the whole paper: at moderate batch, memory streaming
         // dominates compute during decode.
         let m = model();
-        let b = m.target_step(&[99; 36], 16);
+        let c = m.target_step(&[99; 36], 16);
+        let b = c.breakdown();
         assert!(
             b.mem_seconds > 5.0 * b.compute_seconds,
             "mem {} vs compute {}",
@@ -215,7 +240,7 @@ mod tests {
         // (E[N_a] formula) → OTPS should land in the paper's ~60-120 band
         // (they report 75-86 baseline OTPS per request-stream at BS=16).
         let m = model();
-        let step = m.target_step(&[99; 36], 16).total_seconds;
+        let step = m.target_step(&[99; 36], 16).seconds();
         let total_otps = 16.0 / step;
         let per_stream = total_otps / 16.0;
         assert!(
@@ -236,7 +261,7 @@ mod tests {
     #[test]
     fn draft_step_much_cheaper_than_target() {
         let m = model();
-        let target = m.target_step(&[99; 36], 16).total_seconds;
+        let target = m.target_step(&[99; 36], 16).seconds();
         let draft = m.draft_step();
         assert!(draft < target / 5.0, "draft {draft} vs target {target}");
         assert!(draft > 0.0);
@@ -253,14 +278,18 @@ mod tests {
         let per_call = m.draft_step();
         // a single drafting row charges the legacy per-stream rate plus
         // one row of compute per sub-step
-        let solo3 = m.draft_cost(&[0, 0, 3, 0]);
+        let solo3 = m.draft_cost(&[0, 0, 3, 0]).seconds();
         assert!(solo3 >= 3.0 * per_call);
-        assert_eq!(solo3, m.draft_cost(&[3]), "parked rows charge nothing");
+        assert_eq!(
+            solo3,
+            m.draft_cost(&[3]).seconds(),
+            "parked rows charge nothing"
+        );
         // stream count is set by the max: equal max depth ⇒ equal stream
         // charge, and the ragged batch costs strictly LESS than uniform
         // because its sub-step widths are smaller (3+2+1 vs 4+4+4 rows)
-        let ragged = m.draft_cost(&[0, 1, 3, 2]);
-        let uniform = m.draft_cost(&[3, 3, 3, 3]);
+        let ragged = m.draft_cost(&[0, 1, 3, 2]).seconds();
+        let uniform = m.draft_cost(&[3, 3, 3, 3]).seconds();
         assert!(
             ragged < uniform,
             "width-insensitive charge: ragged {ragged} !< uniform {uniform}"
@@ -269,14 +298,14 @@ mod tests {
         // a compute-side correction, the stream term dominates
         assert!(uniform - ragged < per_call);
         // shrinking the max drops a whole stream — the dominant saving
-        assert!(m.draft_cost(&[0, 0, 2, 0]) < solo3);
-        assert!(solo3 - m.draft_cost(&[0, 0, 2, 0]) > 0.9 * per_call);
+        assert!(m.draft_cost(&[0, 0, 2, 0]).seconds() < solo3);
+        assert!(solo3 - m.draft_cost(&[0, 0, 2, 0]).seconds() > 0.9 * per_call);
         // widening at fixed max adds only the (small) per-row compute
         assert!(uniform > solo3);
         assert!(uniform - solo3 < 0.5 * per_call);
         // no drafting rows → no draft charge
-        assert_eq!(m.draft_cost(&[0, 0]), 0.0);
-        assert_eq!(m.draft_cost(&[]), 0.0);
+        assert_eq!(m.draft_cost(&[0, 0]).seconds(), 0.0);
+        assert_eq!(m.draft_cost(&[]).seconds(), 0.0);
     }
 
     #[test]
@@ -290,22 +319,22 @@ mod tests {
         let row_a = [30usize; 36];
         let row_b = [40usize; 36];
         let union_disjoint = [70usize; 36];
-        let seq = m.target_step(&row_a, 8).total_seconds + m.target_step(&row_b, 8).total_seconds;
-        let fused = m.prefill_wave(&union_disjoint, 16).total_seconds;
+        let seq = m.target_step(&row_a, 8).seconds() + m.target_step(&row_b, 8).seconds();
+        let fused = m.prefill_wave(&union_disjoint, 16).seconds();
         assert!(fused < seq, "fused {fused} !< sequential {seq}");
 
         // overlapping activations amortize even harder: same experts on
         // both rows ⇒ the union streams HALF the expert bytes of the
         // sequential walk on top of the fixed-cost saving
         let union_overlap = [40usize; 36]; // row_b's experts cover row_a's
-        let fused_overlap = m.prefill_wave(&union_overlap, 16).total_seconds;
+        let fused_overlap = m.prefill_wave(&union_overlap, 16).seconds();
         assert!(fused_overlap < fused);
 
         // a solo wave degenerates to exactly the single-row charge
         let solo = m.prefill_wave(&row_a, 8);
         let single = m.target_step(&row_a, 8);
-        assert_eq!(solo.total_seconds, single.total_seconds);
-        assert_eq!(solo.bytes, single.bytes);
+        assert_eq!(solo.seconds(), single.seconds());
+        assert_eq!(solo.breakdown().bytes, single.breakdown().bytes);
     }
 
     #[test]

@@ -148,8 +148,27 @@ pub struct ServeMetrics {
     pub prefill_tokens_per_step: Summary,
     /// Requests completed.
     pub requests_done: u64,
-    /// Simulated time (memsim) spent, seconds.
+    /// Simulated time (memsim) spent, seconds. The serve loop mirrors this
+    /// from `cost::Ledger::clock()` after every posted charge — the ledger
+    /// is the single writer to the sim clock; nothing else accumulates here
+    /// (the `record_*` helpers deliberately do not touch it).
     pub sim_seconds: f64,
+    /// Per-phase sim-second attribution, mirrored from the cost ledger
+    /// (`cost::Phase`). Per replica these sum to `sim_seconds` (the ledger
+    /// conservation invariant); after a fleet [`ServeMetrics::merge`] they
+    /// sum to the *total* busy seconds across replicas while `sim_seconds`
+    /// holds the makespan — so the sum exceeds the clock by design there.
+    ///
+    /// Decode forwards (plain steps; EP steps).
+    pub time_decode_s: f64,
+    /// Speculative verify forwards plus model-draft forwards.
+    pub time_spec_s: f64,
+    /// Prefill: chunk forwards and fused waves.
+    pub time_prefill_s: f64,
+    /// Migration interconnect backlog drained into step time.
+    pub time_migration_s: f64,
+    /// Idle gap-advances (`ServeLoop::advance_idle_to`).
+    pub time_overhead_s: f64,
     /// Wall-clock spent in PJRT execution, seconds.
     pub wall_seconds: f64,
     /// Decode steps taken.
@@ -281,46 +300,44 @@ impl ServeMetrics {
         ServeMetrics { activated: vec![Summary::default(); n_layers], ..Default::default() }
     }
 
+    /// Record one decode step's counters and its latency sample. `sim_s`
+    /// feeds the per-step latency histogram only — the sim clock itself is
+    /// owned by the cost ledger and mirrored into
+    /// [`ServeMetrics::sim_seconds`] by the serve loop.
     pub fn record_step(&mut self, activated_per_layer: &[usize], sim_s: f64, tokens: u64) {
         assert_eq!(activated_per_layer.len(), self.activated.len());
         for (s, &a) in self.activated.iter_mut().zip(activated_per_layer) {
             s.add(a as f64);
         }
-        self.sim_seconds += sim_s;
         self.step_latency.record_seconds(sim_s);
         self.steps += 1;
         self.tokens_out += tokens;
     }
 
     /// Record one chunked-prefill forward: `prompt_tokens` prompt positions
-    /// advanced in a single target invocation. Contributes simulated time
-    /// and activation summaries like a decode forward but counts toward
+    /// advanced in a single target invocation. Contributes activation
+    /// summaries like a decode forward but counts toward
     /// `tokens_prompt`/`prefill_forwards`, never `tokens_out`/`steps` — and
     /// stays out of `step_latency`, which samples decode forwards (several
     /// fractional chunk entries per serving step would drag the per-step
     /// quantiles low exactly on the prefill-heavy workloads they observe).
-    pub fn record_prefill(
-        &mut self,
-        activated_per_layer: &[usize],
-        sim_s: f64,
-        prompt_tokens: u64,
-    ) {
+    /// The simulated cost is charged on the ledger by the caller, never
+    /// here.
+    pub fn record_prefill(&mut self, activated_per_layer: &[usize], prompt_tokens: u64) {
         assert_eq!(activated_per_layer.len(), self.activated.len());
         for (s, &a) in self.activated.iter_mut().zip(activated_per_layer) {
             s.add(a as f64);
         }
-        self.sim_seconds += sim_s;
         self.prefill_forwards += 1;
         self.tokens_prompt += prompt_tokens;
     }
 
     /// Record one fused prefill wave: `fused_invocations` chunk forwards
-    /// charged as a single amortized pass costing `sim_s`. Rides on top of
-    /// the per-invocation [`ServeMetrics::record_prefill`] calls (which
-    /// carry the token/activation accounting at zero cost each), so the
-    /// wave owns the simulated time and the fusion gauges.
-    pub fn record_prefill_wave(&mut self, fused_invocations: usize, sim_s: f64) {
-        self.sim_seconds += sim_s;
+    /// charged as a single amortized ledger pass. Rides on top of the
+    /// per-invocation [`ServeMetrics::record_prefill`] calls (which carry
+    /// the token/activation accounting), owning only the fusion gauges —
+    /// the wave's simulated cost is posted on the ledger by the caller.
+    pub fn record_prefill_wave(&mut self, fused_invocations: usize) {
         self.prefill_waves += 1;
         self.prefill_rows_per_wave.add(fused_invocations as f64);
         self.prefill_streams_saved += fused_invocations.saturating_sub(1) as u64;
@@ -458,6 +475,11 @@ impl ServeMetrics {
             prefill_tokens_per_step,
             requests_done,
             sim_seconds,
+            time_decode_s,
+            time_spec_s,
+            time_prefill_s,
+            time_migration_s,
+            time_overhead_s,
             wall_seconds,
             steps,
             activated,
@@ -510,6 +532,13 @@ impl ServeMetrics {
         self.prefill_tokens_per_step.merge(prefill_tokens_per_step);
         self.requests_done += requests_done;
         self.sim_seconds = self.sim_seconds.max(*sim_seconds);
+        // phase attribution SUMS across replicas (total busy seconds by
+        // phase), while the clock maxes (makespan) — see the field docs
+        self.time_decode_s += time_decode_s;
+        self.time_spec_s += time_spec_s;
+        self.time_prefill_s += time_prefill_s;
+        self.time_migration_s += time_migration_s;
+        self.time_overhead_s += time_overhead_s;
         self.wall_seconds = self.wall_seconds.max(*wall_seconds);
         self.steps += steps;
         merge_summary_vec(&mut self.activated, activated);
@@ -572,6 +601,11 @@ impl ServeMetrics {
         );
         m.insert("requests_done".into(), Json::num(self.requests_done as f64));
         m.insert("sim_seconds".into(), Json::num(self.sim_seconds));
+        m.insert("time_decode_s".into(), Json::num(self.time_decode_s));
+        m.insert("time_spec_s".into(), Json::num(self.time_spec_s));
+        m.insert("time_prefill_s".into(), Json::num(self.time_prefill_s));
+        m.insert("time_migration_s".into(), Json::num(self.time_migration_s));
+        m.insert("time_overhead_s".into(), Json::num(self.time_overhead_s));
         m.insert("wall_seconds".into(), Json::num(self.wall_seconds));
         m.insert("steps".into(), Json::num(self.steps as f64));
         m.insert("otps".into(), Json::num(self.otps()));
@@ -739,6 +773,7 @@ mod tests {
         let mut m = ServeMetrics::new(2);
         m.record_step(&[10, 20], 0.5, 8);
         m.record_step(&[30, 40], 0.5, 8);
+        m.sim_seconds = 1.0; // ledger mirror (record_step never writes it)
         assert_eq!(m.otps(), 16.0);
         assert_eq!(m.mean_activated(), 25.0);
         assert_eq!(m.steps, 2);
@@ -750,8 +785,9 @@ mod tests {
         // leak into tokens_out, even though prefill forwards advance the
         // sim clock and the activation summaries.
         let mut m = ServeMetrics::new(2);
-        m.record_prefill(&[4, 6], 0.5, 8);
+        m.record_prefill(&[4, 6], 8);
         m.record_step(&[2, 2], 0.5, 3);
+        m.sim_seconds = 1.0; // ledger mirror: prefill + decode charges
         assert_eq!(m.tokens_out, 3);
         assert_eq!(m.tokens_prompt, 8);
         assert_eq!(m.prefill_forwards, 1);
@@ -865,12 +901,13 @@ mod tests {
         let mut m = ServeMetrics::new(2);
         // two invocations ride one wave: per-invocation accounting at zero
         // cost each, the wave owns the fused charge
-        m.record_prefill(&[4, 6], 0.0, 8);
-        m.record_prefill(&[2, 3], 0.0, 5);
-        m.record_prefill_wave(2, 0.5);
+        m.record_prefill(&[4, 6], 8);
+        m.record_prefill(&[2, 3], 5);
+        m.record_prefill_wave(2);
         // a solo wave saves nothing
-        m.record_prefill(&[1, 1], 0.0, 2);
-        m.record_prefill_wave(1, 0.25);
+        m.record_prefill(&[1, 1], 2);
+        m.record_prefill_wave(1);
+        m.sim_seconds = 0.75; // ledger mirror of the two wave charges
         assert_eq!(m.prefill_waves, 2);
         assert_eq!(m.prefill_streams_saved, 1);
         assert!((m.prefill_rows_per_wave.mean() - 1.5).abs() < 1e-12);
@@ -975,6 +1012,7 @@ mod tests {
         // aggregate OTPS is Σ tokens / max clock.
         let mut a = ServeMetrics::new(2);
         a.record_step(&[10, 20], 1.0, 8);
+        a.sim_seconds = 1.0;
         a.record_ttft(0.2, 0, Some(false));
         a.record_queue_wait(0.05);
         a.requests_done = 1;
@@ -983,6 +1021,7 @@ mod tests {
         let mut b = ServeMetrics::new(2);
         b.record_step(&[30, 40], 1.0, 4);
         b.record_step(&[30, 40], 1.0, 4);
+        b.sim_seconds = 2.0;
         b.record_ttft(0.4, 1, Some(true));
         b.requests_done = 2;
         b.wall_seconds = 0.5;
@@ -1016,6 +1055,41 @@ mod tests {
         assert_eq!(a.activated[0].n, 3);
         assert_eq!(a.activated[0].max, 30.0);
         assert_eq!(a.mean_activated(), 25.0);
+    }
+
+    #[test]
+    fn phase_time_fields_sum_in_merge_and_dump() {
+        // Per replica the phase breakdown conserves the clock; the fleet
+        // rollup SUMS phase seconds (total busy time by phase) while the
+        // clock takes the makespan max.
+        let mut a = ServeMetrics::new(1);
+        a.sim_seconds = 1.0;
+        a.time_decode_s = 0.6;
+        a.time_spec_s = 0.25;
+        a.time_prefill_s = 0.1;
+        a.time_migration_s = 0.04;
+        a.time_overhead_s = 0.01;
+        let mut b = ServeMetrics::new(1);
+        b.sim_seconds = 2.0;
+        b.time_decode_s = 1.5;
+        b.time_prefill_s = 0.5;
+        a.merge(&b);
+        assert_eq!(a.sim_seconds, 2.0, "clock is the makespan");
+        assert!((a.time_decode_s - 2.1).abs() < 1e-12);
+        assert!((a.time_spec_s - 0.25).abs() < 1e-12);
+        assert!((a.time_prefill_s - 0.6).abs() < 1e-12);
+        assert!((a.time_migration_s - 0.04).abs() < 1e-12);
+        assert!((a.time_overhead_s - 0.01).abs() < 1e-12);
+        let j = a.to_json();
+        for (key, want) in [
+            ("time_decode_s", a.time_decode_s),
+            ("time_spec_s", a.time_spec_s),
+            ("time_prefill_s", a.time_prefill_s),
+            ("time_migration_s", a.time_migration_s),
+            ("time_overhead_s", a.time_overhead_s),
+        ] {
+            assert_eq!(j.get(key).and_then(|v| v.as_f64()), Some(want), "{key}");
+        }
     }
 
     #[test]

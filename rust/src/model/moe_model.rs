@@ -79,6 +79,13 @@
 //! as decode's continuous batching does — the per-layer set one stream
 //! must cover is the union, its token count the wave's total.
 //!
+//! Since PR 10 the wave charge — like every other charge — is *posted*,
+//! not accumulated in place: the coordinator prices it through the pure
+//! cost models and posts one [`crate::cost::Phase::PrefillWave`]-attributed
+//! entry to the [`crate::cost::Ledger`], the single writer to the sim clock (see
+//! the single-writer contract in `cost/mod.rs`; conservation pinned in
+//! `rust/tests/cost_ledger.rs`).
+//!
 //! With `--chunk-shared-selection` ([`PrefillInput::shared_selection`])
 //! routing itself changes: each layer pools the chunk's per-position
 //! router probs through the modular greedy objective

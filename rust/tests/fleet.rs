@@ -12,7 +12,8 @@
 use xshare::config::ServeConfig;
 use xshare::coordinator::admission::FootprintTracker;
 use xshare::coordinator::{Request, Scheduler};
-use xshare::fleet::{Fleet, FleetRouter};
+use xshare::fleet::health::RECOVERY_PROBES;
+use xshare::fleet::{Fleet, FleetRouter, HealthState, HealthTracker};
 use xshare::model::MoeModel;
 use xshare::runtime::{artifacts_root, Engine, Manifest};
 
@@ -211,6 +212,43 @@ fn replica_death_mid_prefill_is_lossless() {
         requests.len() as u64,
         "exactly one TTFT sample per request despite the mid-prefill failover"
     );
+}
+
+#[test]
+fn busy_recovery_hysteresis_does_not_flap_on_oscillating_queue_depth() {
+    // A replica whose queue depth oscillates around the high-water mark
+    // (the realistic near-saturation pattern: drain one, admit one, …)
+    // must NOT flap Healthy↔Busy on every probe — each flap re-routes the
+    // replica's whole affine class. With recovery hysteresis the state
+    // makes exactly ONE transition (→ Busy) over the whole oscillation,
+    // and rejoins only after RECOVERY_PROBES consecutive clean probes.
+    let high_water = 4;
+    let mut h = HealthTracker::new(2, 1);
+    let mut transitions = 0;
+    let mut prev = h.state(0);
+    for i in 0..64 {
+        // 5, 3, 5, 3, … — alternating at/under the mark every probe
+        let queued = if i % 2 == 0 { high_water + 1 } else { high_water - 1 };
+        h.observe(0, queued, high_water);
+        let now = h.state(0);
+        if now != prev {
+            transitions += 1;
+            prev = now;
+        }
+    }
+    assert_eq!(h.state(0), HealthState::Busy);
+    assert_eq!(
+        transitions, 1,
+        "oscillating queue must cost exactly one Healthy→Busy transition"
+    );
+    // the untouched replica never moved
+    assert_eq!(h.state(1), HealthState::Healthy);
+    // a real drain recovers after the full streak — and not one probe sooner
+    for k in 0..RECOVERY_PROBES {
+        assert_eq!(h.state(0), HealthState::Busy, "rejoined after only {k} probes");
+        h.observe(0, 0, high_water);
+    }
+    assert_eq!(h.state(0), HealthState::Healthy);
 }
 
 #[test]

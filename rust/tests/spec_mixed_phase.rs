@@ -265,6 +265,67 @@ fn prefilling_rows_never_stall_spec_property() {
 }
 
 #[test]
+fn charge_aware_depth_stays_lossless_and_digs_deeper() {
+    // `--spec-charge-aware` swaps the fixed usefulness threshold for the
+    // ledger's marginal-cost test: accept one more draft level whenever
+    // the acceptance-weighted value of the extra committed token beats
+    // the marginal verify charge. On the tiny preset's memory-bound
+    // decode that marginal is tiny next to a token, so at the same
+    // acceptance EMA the charge-aware controller holds depth where the
+    // fixed threshold backs off — strictly deeper (never shallower)
+    // drafting. Depth choice is scheduling-only: outputs must stay
+    // byte-identical to the non-speculative run in BOTH arms.
+    let mut model = tiny_model();
+    let vocab = model.dims().vocab as u64;
+    let requests: Vec<Request> = (0..3)
+        .map(|i| Request::new(i, prompt_of(3 + i as usize, 40 + i, vocab), 24))
+        .collect();
+
+    let (base, _) = run_with(&mut model, cfg(0), &requests, |_| {});
+
+    let mut arm = |charge_aware: bool| {
+        let mut c = cfg(3);
+        c.spec_draft = SpecDraft::Lookup;
+        c.spec_adaptive = true;
+        c.spec_charge_aware = charge_aware;
+        let mut core = ServeLoop::new(&mut model, c).unwrap();
+        for r in &requests {
+            core.submit(r.clone()).unwrap();
+        }
+        core.drain().unwrap();
+        let m = core.metrics().clone();
+        let out = core.report().outputs;
+        assert_eq!(
+            out, base,
+            "charge_aware={charge_aware}: depth scheduling changed tokens"
+        );
+        assert!(m.spec_proposed > 0, "charge_aware={charge_aware}: never proposed");
+        assert!(m.spec_depth.n > 0, "charge_aware={charge_aware}: depth gauge empty");
+        assert!(m.spec_depth.max <= 3.0, "charge_aware={charge_aware}: exceeded cap");
+        m
+    };
+
+    let fixed = arm(false);
+    let charge = arm(true);
+    assert!(
+        charge.spec_depth.mean() >= fixed.spec_depth.mean(),
+        "charge-aware mean depth {:.3} fell below the fixed threshold's {:.3} — \
+         the cheap-marginal regime must never draft shallower",
+        charge.spec_depth.mean(),
+        fixed.spec_depth.mean()
+    );
+    // deeper drafts at the same (lossless) outputs can only shed verify
+    // steps; allow a little slack for EMA-trajectory divergence between
+    // the arms, the strict throughput win is pinned in serve_continuous
+    assert!(
+        charge.sim_seconds <= fixed.sim_seconds * 1.05,
+        "charge-aware sim time {} regressed past fixed-threshold {}",
+        charge.sim_seconds,
+        fixed.sim_seconds
+    );
+}
+
+#[test]
 fn lookup_draft_and_adaptive_depth_stay_lossless() {
     // The new draft source and the adaptive controller change WHICH cycles
     // run at what depth — never the committed tokens (vanilla routing).
